@@ -1,0 +1,33 @@
+//! Figure 2: time per epoch for resnet_small across all device groups.
+//!
+//! Regenerates the figure's series and checks the paper's headline
+//! shapes: sublinear 1g.5gb slowdown, parallel == one, non-MIG edge.
+use migsim::coordinator::matrix::{find, paper_matrix, run_matrix};
+use migsim::report::figures::fig_epoch_time;
+use migsim::simgpu::calibration::Calibration;
+use migsim::util::bench::{bench, section};
+use migsim::workload::spec::WorkloadSize;
+
+fn main() {
+    section("Figure 2 — resnet_small time per epoch");
+    let results = run_matrix(&paper_matrix(1), &Calibration::paper());
+    let fig = fig_epoch_time(&results, WorkloadSize::Small, "fig2_small_epoch_time");
+    println!("{}", fig.text);
+
+    let t7 = find(&results, WorkloadSize::Small, "7g.40gb one").unwrap().mean_epoch_seconds();
+    let t1 = find(&results, WorkloadSize::Small, "1g.5gb one").unwrap().mean_epoch_seconds();
+    let t1p = find(&results, WorkloadSize::Small, "1g.5gb parallel").unwrap().mean_epoch_seconds();
+    let tnm = find(&results, WorkloadSize::Small, "non-MIG").unwrap().mean_epoch_seconds();
+    println!("1g/7g latency ratio      : {:.2}x  (paper: 2.47x; must be sublinear <7x)", t1 / t7);
+    println!("parallel vs one (1g.5gb) : {:+.3}%  (paper: ~0, no interference)", (t1p / t1 - 1.0) * 100.0);
+    println!("non-MIG vs 7g.40gb       : {:+.2}%  (paper: -0.7%)", (tnm / t7 - 1.0) * 100.0);
+    println!("sequential 7x on 7g vs parallel 7x on 1g: {:.2}x (paper: 2.83x)", 7.0 * t7 / t1);
+    assert!(t1 / t7 < 7.0 && t1 / t7 > 1.5);
+    assert!((t1p / t1 - 1.0).abs() < 0.01);
+
+    section("timing");
+    println!("{}", bench("fig2 full regeneration", 1, 5, || {
+        let r = run_matrix(&paper_matrix(1), &Calibration::paper());
+        fig_epoch_time(&r, WorkloadSize::Small, "fig2").csv_rows.len()
+    }));
+}

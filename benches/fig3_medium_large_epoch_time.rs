@@ -1,0 +1,25 @@
+//! Figure 3: time per epoch for resnet_medium and resnet_large.
+use migsim::coordinator::matrix::{find, paper_matrix, run_matrix};
+use migsim::report::figures::fig_epoch_time;
+use migsim::simgpu::calibration::Calibration;
+use migsim::util::bench::{bench, section};
+use migsim::workload::spec::WorkloadSize;
+
+fn main() {
+    let results = run_matrix(&paper_matrix(1), &Calibration::paper());
+    for (w, tag) in [(WorkloadSize::Medium, "3a"), (WorkloadSize::Large, "3b")] {
+        section(&format!("Figure {tag} — resnet_{} time per epoch", w.name()));
+        println!("{}", fig_epoch_time(&results, w, "fig3").text);
+        let t7 = find(&results, w, "7g.40gb one").unwrap().mean_epoch_seconds();
+        let t2p = find(&results, w, "2g.10gb parallel").unwrap().mean_epoch_seconds();
+        // Paper: running 3 sequentially on 7g == running 3 in parallel on 2g.
+        println!("(3 x 7g sequential) / (2g parallel) = {:.2} (paper: ~0.99-1.0)", 3.0 * t7 / t2p);
+        assert!(3.0 * t7 / t2p > 0.6 && 3.0 * t7 / t2p < 1.4);
+        // 1g.5gb cells must be OOM.
+        assert!(!find(&results, w, "1g.5gb one").unwrap().completed());
+    }
+    section("timing");
+    println!("{}", bench("fig3 full regeneration", 1, 5, || {
+        run_matrix(&paper_matrix(1), &Calibration::paper()).len()
+    }));
+}

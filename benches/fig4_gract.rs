@@ -1,0 +1,20 @@
+//! Figure 4: median GRACT across device groups (device + instance level).
+use migsim::coordinator::matrix::{paper_matrix, run_matrix};
+use migsim::report::figures::fig_dcgm;
+use migsim::simgpu::calibration::Calibration;
+use migsim::util::bench::{bench, section};
+use migsim::workload::spec::WorkloadSize;
+
+fn main() {
+    let results = run_matrix(&paper_matrix(1), &Calibration::paper());
+    for w in WorkloadSize::ALL {
+        section(&format!("Figure 4 — GRACT for resnet_{}", w.name()));
+        let fig = fig_dcgm(&results, w, "gract", "fig4_gract");
+        println!("{}", fig.text);
+    }
+    section("timing");
+    println!("{}", bench("fig4 regeneration (all workloads)", 1, 5, || {
+        let r = run_matrix(&paper_matrix(1), &Calibration::paper());
+        WorkloadSize::ALL.iter().map(|w| fig_dcgm(&r, *w, "gract", "x").csv_rows.len()).sum::<usize>()
+    }));
+}

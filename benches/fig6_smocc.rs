@@ -1,0 +1,20 @@
+//! Figure 6: median SMOCC across device groups (device + instance level).
+use migsim::coordinator::matrix::{paper_matrix, run_matrix};
+use migsim::report::figures::fig_dcgm;
+use migsim::simgpu::calibration::Calibration;
+use migsim::util::bench::{bench, section};
+use migsim::workload::spec::WorkloadSize;
+
+fn main() {
+    let results = run_matrix(&paper_matrix(1), &Calibration::paper());
+    for w in WorkloadSize::ALL {
+        section(&format!("Figure 6 — SMOCC for resnet_{}", w.name()));
+        let fig = fig_dcgm(&results, w, "smocc", "fig6_smocc");
+        println!("{}", fig.text);
+    }
+    section("timing");
+    println!("{}", bench("fig6 regeneration (all workloads)", 1, 5, || {
+        let r = run_matrix(&paper_matrix(1), &Calibration::paper());
+        WorkloadSize::ALL.iter().map(|w| fig_dcgm(&r, *w, "smocc", "x").csv_rows.len()).sum::<usize>()
+    }));
+}

@@ -1,0 +1,27 @@
+//! Figure 8: (a) max allocated GPU memory; (b) max aggregate host RES.
+use migsim::coordinator::matrix::{find, paper_matrix, run_matrix};
+use migsim::report::figures::{fig8a_gpu_memory, fig8b_host_memory};
+use migsim::simgpu::calibration::Calibration;
+use migsim::util::bench::{bench, section};
+use migsim::workload::spec::WorkloadSize;
+
+fn main() {
+    let results = run_matrix(&paper_matrix(1), &Calibration::paper());
+    section("Figure 8a — max allocated GPU memory");
+    println!("{}", fig8a_gpu_memory(&results).text);
+    section("Figure 8b — max aggregate host RES");
+    println!("{}", fig8b_host_memory(&results).text);
+
+    // Anchors: small 9.5 / medium 10.4 / large 19.0 GB on the full GPU.
+    for (w, want) in [(WorkloadSize::Small, 9.5), (WorkloadSize::Medium, 10.4), (WorkloadSize::Large, 19.0)] {
+        let r = find(&results, w, "7g.40gb one").unwrap();
+        let gb = r.gpu_memory[0] as f64 / 1e9;
+        println!("{}: {:.1} GB on 7g.40gb (paper {want})", w.name(), gb);
+        assert!((gb - want).abs() / want < 0.02);
+    }
+    section("timing");
+    println!("{}", bench("fig8 regeneration", 1, 5, || {
+        let r = run_matrix(&paper_matrix(1), &Calibration::paper());
+        fig8a_gpu_memory(&r).csv_rows.len() + fig8b_host_memory(&r).csv_rows.len()
+    }));
+}

@@ -1,0 +1,29 @@
+//! Figure 9: (a) aggregate RES over time; (b) aggregate CPU utilization.
+use migsim::coordinator::matrix::{find, paper_matrix, run_matrix};
+use migsim::report::figures::{fig9a_res_over_time, fig9b_cpu};
+use migsim::simgpu::calibration::Calibration;
+use migsim::util::bench::{bench, section};
+use migsim::workload::spec::WorkloadSize;
+
+fn main() {
+    let results = run_matrix(&paper_matrix(1), &Calibration::paper());
+    section("Figure 9a — aggregate RES over epochs (resnet_large)");
+    println!("{}", fig9a_res_over_time().text);
+    section("Figure 9b — average aggregate CPU utilization");
+    println!("{}", fig9b_cpu(&results).text);
+
+    // Shape checks: parallel ~ n x one; smaller instance -> lower CPU%.
+    let m_one = find(&results, WorkloadSize::Medium, "2g.10gb one").unwrap().host.total_cpu_percent();
+    let m_par = find(&results, WorkloadSize::Medium, "2g.10gb parallel").unwrap().host.total_cpu_percent();
+    println!("medium 2g parallel/one = {:.2} (paper: ~3.0)", m_par / m_one);
+    assert!((m_par / m_one - 3.0).abs() < 0.05);
+    let l7 = find(&results, WorkloadSize::Large, "7g.40gb one").unwrap().host.total_cpu_percent();
+    let l2 = find(&results, WorkloadSize::Large, "2g.10gb one").unwrap().host.total_cpu_percent();
+    println!("large 7g {l7:.0}% vs 2g {l2:.0}% (paper: 198% vs 119%)");
+    assert!(l7 > l2);
+    section("timing");
+    println!("{}", bench("fig9 regeneration", 1, 5, || {
+        let r = run_matrix(&paper_matrix(1), &Calibration::paper());
+        fig9b_cpu(&r).csv_rows.len()
+    }));
+}

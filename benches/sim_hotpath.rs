@@ -1,0 +1,36 @@
+//! L3 perf bench: the simulator hot path (kernel timing + step replay).
+//!
+//! Target (DESIGN.md §7): >= 1e6 simulated kernels/s so the full matrix
+//! replays in seconds. Tracked in EXPERIMENTS.md §Perf.
+use migsim::coordinator::matrix::{paper_matrix, run_matrix};
+use migsim::simgpu::calibration::Calibration;
+use migsim::simgpu::engine::{InstanceResources, SimEngine};
+use migsim::simgpu::spec::A100;
+use migsim::util::bench::{bench, black_box, section};
+use migsim::workload::resnet;
+use migsim::workload::spec::WorkloadSize;
+
+fn main() {
+    section("L3 hot path");
+    let engine = SimEngine::new(A100, Calibration::paper());
+    let trace = resnet::step_trace(WorkloadSize::Large);
+    let res = InstanceResources::mig(28, 2);
+
+    let r = bench("run_step (large trace, 873 kernels)", 10, 101, || {
+        black_box(engine.run_step(&trace, res, 0.0)).wall_s
+    });
+    println!("{r}");
+    let kps = trace.kernels.len() as f64 / r.median_s;
+    println!("simulated kernels/s: {:.2}M (target >= 1.0M)", kps / 1e6);
+
+    let r = bench("trace generation (large)", 3, 31, || {
+        black_box(resnet::step_trace(WorkloadSize::Large)).kernels.len()
+    });
+    println!("{r}");
+
+    let r = bench("full paper matrix (27 experiments)", 1, 11, || {
+        run_matrix(&paper_matrix(1), &Calibration::paper()).len()
+    });
+    println!("{r}");
+    assert!(kps >= 1.0e6, "hot path regression: {kps} kernels/s");
+}

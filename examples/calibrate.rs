@@ -1,0 +1,62 @@
+//! Calibration probe: prints sim-vs-paper anchors (internal tool used to
+//! fit Calibration::paper(); kept as an example so the fit is replayable).
+use migsim::coordinator::experiment::{run_experiment, DeviceGroup, ExperimentSpec};
+use migsim::mig::profile::MigProfile::*;
+use migsim::simgpu::calibration::Calibration;
+use migsim::workload::spec::WorkloadSize::{self, *};
+
+fn epoch(w: WorkloadSize, g: DeviceGroup) -> f64 {
+    let r = run_experiment(&ExperimentSpec { workload: w, group: g, replicate: 0, seed: 1 }, &Calibration::paper());
+    r.mean_epoch_seconds()
+}
+
+fn dcgm(w: WorkloadSize, g: DeviceGroup) -> (f64, f64, f64, f64, f64) {
+    let r = run_experiment(&ExperimentSpec { workload: w, group: g, replicate: 0, seed: 1 }, &Calibration::paper());
+    let d = r.dcgm.unwrap();
+    let i = d.instances[0].fields;
+    (i.gract * 100.0, i.smact * 100.0, i.smocc * 100.0, i.drama * 100.0, d.device.fields.gract * 100.0)
+}
+
+fn main() {
+    let one = DeviceGroup::One;
+    println!("== time/epoch anchors ==");
+    let s7 = epoch(Small, one(P7g40gb));
+    let s1 = epoch(Small, one(P1g5gb));
+    let s2 = epoch(Small, one(P2g10gb));
+    let s3 = epoch(Small, one(P3g20gb));
+    let snm = epoch(Small, DeviceGroup::NonMig);
+    println!("small  7g {:7.1}s (paper 16.1)  1g {:7.1}s (39.8)  ratio {:.2} (2.47)", s7, s1, s1/s7);
+    println!("small  2g {:7.1}s (paper ~25.7) 3g {:7.1}s         nonMIG {:7.1}s (-{:.1}% vs 7g, paper -0.7%)", s2, s3, snm, (s7-snm)/s7*100.0);
+    let m7 = epoch(Medium, one(P7g40gb)) / 60.0;
+    let m2 = epoch(Medium, one(P2g10gb)) / 60.0;
+    let mnm = epoch(Medium, DeviceGroup::NonMig) / 60.0;
+    println!("medium 7g {:7.1}m (paper 35.4)  2g {:7.1}m (106.8) ratio {:.2} (3.02)  nonMIG -{:.1}% (2.8%)", m7, m2, m2/m7, (m7-mnm)/m7*100.0);
+    let l7 = epoch(Large, one(P7g40gb)) / 60.0;
+    let l2 = epoch(Large, one(P2g10gb)) / 60.0;
+    let lnm = epoch(Large, DeviceGroup::NonMig) / 60.0;
+    println!("large  7g {:7.1}m (paper ~160)  2g {:7.1}m (~480)  ratio {:.2} (~3.0)  nonMIG -{:.1}% (2.9%)", l7, l2, l2/l7, (l7-lnm)/l7*100.0);
+
+    println!("\n== DCGM anchors (instance-level; gract/smact/smocc/drama | device gract) ==");
+    for (w, wn) in [(Small, "small"), (Medium, "medium"), (Large, "large")] {
+        for (g, gn) in [(one(P7g40gb), "7g one"), (one(P3g20gb), "3g one"), (one(P2g10gb), "2g one"), (one(P1g5gb), "1g one")] {
+            if w != Small && gn == "1g one" { continue; }
+            let (gr, sa, so, dr, dev) = dcgm(w, g);
+            println!("{wn:6} {gn:7}: GRACT {gr:5.1} SMACT {sa:5.1} SMOCC {so:5.1} DRAMA {dr:5.1} | dev {dev:5.1}");
+        }
+    }
+    println!("paper  small: 7g GRACT 71.6 SMACT 40 SMOCC 20.3 | 1g GRACT 90.4 SMACT 75.3 SMOCC 35");
+    println!("paper  med:   7g GRACT 88.6 SMACT 73.4 SMOCC ~45 | 2g GRACT 96.3 SMACT 91.5 SMOCC ~60, DRAMA inst: 2g>3g>7g; dev med 3gpar 52 2gpar 49 7g 44");
+
+    println!("\n== CPU% ==");
+    for (w, wn, groups) in [
+        (Small, "small", vec![(one(P7g40gb), "7g"), (one(P1g5gb), "1g"), (DeviceGroup::Parallel(P1g5gb), "1g par")]),
+        (Medium, "medium", vec![(one(P7g40gb), "7g"), (one(P2g10gb), "2g"), (DeviceGroup::Parallel(P2g10gb), "2g par")]),
+        (Large, "large", vec![(one(P7g40gb), "7g"), (one(P2g10gb), "2g")]),
+    ] {
+        for (g, gn) in groups {
+            let r = run_experiment(&ExperimentSpec { workload: w, group: g, replicate: 0, seed: 1 }, &Calibration::paper());
+            println!("{wn:6} {gn:7}: {:6.0}%", r.host.total_cpu_percent());
+        }
+    }
+    println!("paper: large 7g 198%, large 2g 119%, medium 2g 85%, medium 2g-par 257%, small 1g-par 630%");
+}

@@ -1,0 +1,36 @@
+//! Per-class step breakdown for calibration.
+use migsim::simgpu::calibration::Calibration;
+use migsim::simgpu::engine::InstanceResources;
+use migsim::simgpu::kernel::KernelClass;
+use migsim::simgpu::roofline::time_kernel;
+use migsim::simgpu::spec::A100;
+use migsim::workload::resnet;
+use migsim::workload::spec::WorkloadSize::*;
+
+fn main() {
+    let cal = Calibration::paper();
+    for (w, wn) in [(Small, "small"), (Medium, "medium"), (Large, "large")] {
+        let trace = resnet::step_trace(w);
+        for (sms, mem, rn) in [(98u32, 8u32, "7g"), (28, 2, "2g"), (14, 1, "1g")] {
+            let res = InstanceResources::mig(sms, mem);
+            let mut by_class: std::collections::BTreeMap<&str, (u64, f64, u64)> = Default::default();
+            let mut total = 0.0;
+            let mut smact = 0.0;
+            for k in &trace.kernels {
+                let t = time_kernel(k, res.sms, res.mem_slices, &A100, &cal);
+                let e = by_class.entry(match k.class {
+                    KernelClass::Gemm => "gemm", KernelClass::Elementwise => "elem",
+                    KernelClass::Optimizer => "opt", KernelClass::MemcpyH2D => "h2d" }).or_default();
+                e.0 += 1; e.1 += t.busy_s; e.2 += t.memory_bound as u64;
+                total += t.busy_s;
+                smact += t.busy_s * t.occupancy.sm_active_frac;
+            }
+            let gaps = cal.dispatch_gap_s * trace.kernels.len() as f64 + cal.step_overhead_s;
+            println!("{wn:6} {rn}: busy {:7.2}ms gaps {:5.2}ms wall {:7.2}ms SMACT(busy) {:.2} traffic {:5.2}GB flops {:6.1}GF", 
+                total*1e3, gaps*1e3, (total+gaps)*1e3, smact/total, trace.total_dram_bytes()/1e9, trace.total_flops()/1e9);
+            for (c, (n, b, mb)) in &by_class {
+                println!("        {c:5} n={n:4} busy {:7.2}ms membound {mb:4}", b*1e3);
+            }
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! The paper's motivating use case (§4.1): hyper-parameter tuning on
+//! seven 1g.5gb instances beats running the same seven configurations
+//! sequentially on the full GPU — AND we actually train seven models
+//! with different learning rates through the PJRT runtime.
+use migsim::coordinator::experiment::{run_experiment, DeviceGroup, ExperimentSpec};
+use migsim::mig::profile::MigProfile;
+use migsim::runtime::artifacts::ArtifactStore;
+use migsim::runtime::trainer::{Trainer, TrainerConfig};
+use migsim::simgpu::calibration::Calibration;
+use migsim::util::fmt_duration;
+use migsim::workload::spec::WorkloadSize;
+
+fn main() -> anyhow::Result<()> {
+    // --- Simulated wall-clock comparison (the paper's arithmetic) ----
+    let cal = Calibration::paper();
+    let spec = |group| ExperimentSpec {
+        workload: WorkloadSize::Small,
+        group,
+        replicate: 0,
+        seed: 3,
+    };
+    let full = run_experiment(&spec(DeviceGroup::One(MigProfile::P7g40gb)), &cal);
+    let par = run_experiment(&spec(DeviceGroup::Parallel(MigProfile::P1g5gb)), &cal);
+    let sequential = 7.0 * full.total_seconds;
+    let parallel = par.total_seconds;
+    println!("7 configurations of resnet_small, 30 epochs each:");
+    println!("  sequential on 7g.40gb : {}", fmt_duration(sequential));
+    println!("  parallel on 7x 1g.5gb : {}", fmt_duration(parallel));
+    println!("  speedup               : {:.2}x (paper: 2.83x)\n", sequential / parallel);
+
+    // --- Real sweep: 7 learning rates, tiny budget, real training ----
+    let Ok(store) = ArtifactStore::open_default() else {
+        println!("(skipping real sweep: run `make artifacts` first)");
+        return Ok(());
+    };
+    let lrs = [0.005f32, 0.01, 0.02, 0.04, 0.08, 0.16, 0.32];
+    println!("real LR sweep on the PJRT runtime (3 steps + eval each):");
+    let mut best = (f64::INFINITY, 0.0f32);
+    for (i, &lr) in lrs.iter().enumerate() {
+        let mut t = Trainer::new(
+            store.clone(),
+            TrainerConfig {
+                variant: "small".into(),
+                steps_per_epoch: 3,
+                epochs: 1,
+                val_batches: 2,
+                lr,
+                seed: 100 + i as u64,
+                ..Default::default()
+            },
+        )?;
+        let rec = &t.run()?[0];
+        println!(
+            "  lr {:>5}: train loss {:.4}  val loss {:.4}  val acc {:.3}",
+            lr, rec.train_loss, rec.val_loss, rec.val_acc
+        );
+        if rec.val_loss < best.0 {
+            best = (rec.val_loss, lr);
+        }
+    }
+    println!("best lr by val loss: {}", best.1);
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Partition explorer (paper Fig 1): enumerate every valid partition of
+//! the A100-40GB and demonstrate the placement rules, including the
+//! documented 4g.20gb/3g.20gb incompatibility.
+use migsim::mig::gpu::MigGpu;
+use migsim::mig::placement::PartitionSet;
+use migsim::mig::profile::MigProfile::{self, *};
+
+fn try_set(profiles: &[MigProfile]) {
+    let names: Vec<&str> = profiles.iter().map(|p| p.name()).collect();
+    match PartitionSet::first_fit(profiles) {
+        Some(set) => println!(
+            "  VALID   {:<38} ({} compute, {} memory slices)",
+            names.join(" + "),
+            set.used_compute_slices(),
+            set.used_memory_slices()
+        ),
+        None => println!("  INVALID {}", names.join(" + ")),
+    }
+}
+
+fn main() {
+    println!("Paper §2.1 examples:");
+    try_set(&[P4g20gb, P1g5gb]);
+    try_set(&[P4g20gb, P4g20gb]);
+    try_set(&[P4g20gb, P2g10gb, P1g5gb]);
+    try_set(&[P4g20gb, P3g20gb]); // the documented exception
+    try_set(&[P3g20gb, P1g5gb, P1g5gb, P1g5gb, P1g5gb, P1g5gb]); // Fig 1 caption
+    try_set(&[P3g20gb, P1g5gb, P1g5gb, P1g5gb, P1g5gb]);
+
+    let all = PartitionSet::enumerate_valid_multisets();
+    println!("\nAll {} valid profile multisets:", all.len());
+    for m in &all {
+        let names: Vec<&str> = m.iter().map(|p| p.name()).collect();
+        println!("  {}", names.join(" + "));
+    }
+
+    println!("\nInstance lifecycle (nvidia-smi mig style):");
+    let mut gpu = MigGpu::default();
+    let a = gpu.create_instance(P3g20gb).unwrap();
+    gpu.create_instance(P2g10gb).unwrap();
+    gpu.create_instance(P1g5gb).unwrap();
+    println!("{}", gpu.list());
+    gpu.destroy_instance(a);
+    println!("after destroying GI0:\n{}", gpu.list());
+}

@@ -1,0 +1,48 @@
+//! Quickstart: partition a simulated A100, run one small-workload
+//! experiment in isolation and co-located, and print what the paper's
+//! harness would report.
+//!
+//! Run: `cargo run --release --example quickstart`
+use migsim::coordinator::experiment::{run_experiment, DeviceGroup, ExperimentSpec};
+use migsim::mig::gpu::MigGpu;
+use migsim::mig::profile::MigProfile;
+use migsim::simgpu::calibration::Calibration;
+use migsim::util::fmt_duration;
+use migsim::workload::spec::WorkloadSize;
+
+fn main() {
+    // 1. The MIG partition manager: carve 7x 1g.5gb out of one A100.
+    let mut gpu = MigGpu::default();
+    gpu.create_homogeneous(MigProfile::P1g5gb, 7).expect("7x 1g.5gb fits");
+    println!("{}\n", gpu.list());
+
+    // 2. One experiment: resnet_small on a single 1g.5gb instance.
+    let cal = Calibration::paper();
+    let spec = |group| ExperimentSpec {
+        workload: WorkloadSize::Small,
+        group,
+        replicate: 0,
+        seed: 7,
+    };
+    let one = run_experiment(&spec(DeviceGroup::One(MigProfile::P1g5gb)), &cal);
+    let par = run_experiment(&spec(DeviceGroup::Parallel(MigProfile::P1g5gb)), &cal);
+    let full = run_experiment(&spec(DeviceGroup::One(MigProfile::P7g40gb)), &cal);
+
+    println!("resnet_small, batch 32, 30 epochs:");
+    println!("  7g.40gb one      : {}/epoch", fmt_duration(full.mean_epoch_seconds()));
+    println!("  1g.5gb one       : {}/epoch", fmt_duration(one.mean_epoch_seconds()));
+    println!("  1g.5gb parallel  : {}/epoch x7 models", fmt_duration(par.mean_epoch_seconds()));
+    println!(
+        "  aggregate throughput gain: {:.2}x at {:.2}x per-model latency",
+        par.images_per_second / full.images_per_second,
+        par.mean_epoch_seconds() / full.mean_epoch_seconds(),
+    );
+    if let Some(d) = &par.dcgm {
+        println!(
+            "  device GRACT {:.1}% | SMACT {:.1}% | per-instance GRACT {:.1}%",
+            d.device.fields.gract * 100.0,
+            d.device.fields.smact * 100.0,
+            d.instances[0].fields.gract * 100.0
+        );
+    }
+}

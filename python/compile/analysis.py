@@ -1,0 +1,139 @@
+"""L2 profiling: HLO cost analysis over the AOT artifacts.
+
+The DESIGN.md §7 L2 perf items are verified here, statically, on the
+artifact the Rust runtime actually executes:
+
+* **single fused module** per train step (no per-step retracing — there
+  is exactly one HLO entry computation per artifact);
+* **donated buffers**: the parameter and momentum inputs are aliased to
+  outputs (`input_output_alias`), so XLA updates them in place instead
+  of copying ~3.5 MB per step;
+* **no redundant recompute**: each conv site appears once in fwd and
+  twice in bwd (dgrad+wgrad) — the dot/conv count is a linear function
+  of the model's conv sites, not quadratic.
+
+Usage: ``python -m compile.analysis [--artifacts ../artifacts]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+from collections import Counter
+from dataclasses import dataclass
+
+
+@dataclass
+class HloReport:
+    """Static facts extracted from one HLO text artifact."""
+
+    path: str
+    computations: int
+    entry_instructions: int
+    total_instructions: int
+    opcode_counts: Counter
+    aliased_outputs: int
+    parameter_count: int
+
+    @property
+    def dots(self) -> int:
+        return self.opcode_counts.get("dot", 0)
+
+    @property
+    def convs(self) -> int:
+        return self.opcode_counts.get("convolution", 0)
+
+    @property
+    def fusions(self) -> int:
+        return self.opcode_counts.get("fusion", 0)
+
+
+_OP_RE = re.compile(r"=\s*[a-z0-9\[\],\{\}\s]*?([a-z][a-z0-9-]*)\(")
+_INSTR_RE = re.compile(r"^\s+(%?[\w.-]+)\s*=\s*\S+\s+(\w+)")
+
+
+def analyze(path: str) -> HloReport:
+    """Parse an HLO text file into a report (regex-level parse — we only
+    need opcode histograms and alias/arity facts, not full semantics)."""
+    opcodes: Counter = Counter()
+    computations = 0
+    entry_instructions = 0
+    total = 0
+    in_entry = False
+    params = 0
+    aliased = 0
+    with open(path) as f:
+        for line in f:
+            if line.startswith("HloModule"):
+                # input_output_alias={ {0}: (0, {}, ...), {1}: (1, ...) }
+                aliased = line.count("(")
+            stripped = line.rstrip()
+            if stripped.endswith("{") and ("ENTRY" in stripped or stripped.startswith("%") or stripped.startswith("fused")):
+                computations += 1
+                in_entry = "ENTRY" in stripped
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                op = m.group(2)
+                # normalize: "f32[...]" isn't an opcode; instruction text
+                # is "name = type opcode(...)"
+                opcodes[op] += 1
+                total += 1
+                if in_entry:
+                    entry_instructions += 1
+                if op == "parameter":
+                    params += 1
+    return HloReport(
+        path=path,
+        computations=computations,
+        entry_instructions=entry_instructions,
+        total_instructions=total,
+        opcode_counts=opcodes,
+        aliased_outputs=aliased,
+        parameter_count=params,
+    )
+
+
+def expected_conv_sites(stage_blocks, imagenet_stem: bool) -> int:
+    """Conv sites (stem + 3 per block + 1 projection per stage)."""
+    return 1 + 3 * sum(stage_blocks) + len(stage_blocks)
+
+
+def report_variant(art_dir: str, name: str, manifest: dict) -> dict:
+    v = manifest["variants"][name]
+    train = analyze(os.path.join(art_dir, v["files"]["train_step"]))
+    evals = analyze(os.path.join(art_dir, v["files"]["eval_step"]))
+    sites = expected_conv_sites(v["stage_blocks"], name != "small")
+    out = {
+        "variant": name,
+        "train_instructions": train.total_instructions,
+        "train_dots": train.dots,
+        "train_convs": train.convs,
+        "train_fusions": train.fusions,
+        "train_aliased_outputs": train.aliased_outputs,
+        "eval_instructions": evals.total_instructions,
+        "conv_sites": sites,
+    }
+    # Invariants (also asserted by python/tests/test_artifacts.py):
+    # bwd+fwd conv-ish ops scale linearly in sites: <= 4x sites + head.
+    matmul_like = train.dots + train.convs
+    out["matmul_like"] = matmul_like
+    out["linear_in_sites"] = matmul_like <= 4 * sites + 12
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+    with open(os.path.join(args.artifacts, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name in manifest["variants"]:
+        r = report_variant(args.artifacts, name, manifest)
+        print(json.dumps(r, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""AOT compile path: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+Python runs exactly once (``make artifacts``); the ``migsim`` binary then
+loads ``artifacts/*.hlo.txt`` via the PJRT C API and never touches Python
+again.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model variant this emits:
+
+* ``train_step_<v>.hlo.txt``  (flat_params, flat_mom, x, y, lr)
+                              -> (flat_params', flat_mom', loss, ncorrect)
+* ``eval_step_<v>.hlo.txt``   (flat_params, x, y) -> (loss, ncorrect)
+* ``params_<v>.f32.bin``      initial raveled parameters, little-endian f32
+* ``manifest.json``           shapes + file index, read by rust/src/runtime/artifacts.rs
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True).
+
+    ``return_tuple=True`` so every artifact's result is a single tuple the
+    Rust side unwraps with ``to_tuple()``.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_variant(name: str, out_dir: str, seed: int = 0) -> dict:
+    cfg = M.variant(name)
+    t0 = time.time()
+    flat0, flat_train_step, flat_eval_step = M.flat_apply(cfg, seed)
+    p = int(flat0.shape[0])
+    b, s = cfg.batch_size, cfg.input_size
+
+    spec_params = jax.ShapeDtypeStruct((p,), jnp.float32)
+    spec_x = jax.ShapeDtypeStruct((b, s, s, 3), jnp.float32)
+    spec_y = jax.ShapeDtypeStruct((b,), jnp.int32)
+    spec_lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    # Donating the params/momentum buffers lets XLA update them in place —
+    # the L2 perf item from DESIGN.md §7 (no copy of the full parameter
+    # vector per step on the rust hot path).
+    train_lowered = jax.jit(flat_train_step, donate_argnums=(0, 1)).lower(
+        spec_params, spec_params, spec_x, spec_y, spec_lr
+    )
+    eval_lowered = jax.jit(flat_eval_step).lower(spec_params, spec_x, spec_y)
+
+    files = {}
+    for tag, lowered in (("train_step", train_lowered), ("eval_step", eval_lowered)):
+        text = to_hlo_text(lowered)
+        fname = f"{tag}_{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        files[tag] = fname
+        print(f"  wrote {fname}: {len(text) / 1e6:.2f} MB")
+
+    params_file = f"params_{name}.f32.bin"
+    raw = np.asarray(flat0, dtype="<f4").tobytes()
+    with open(os.path.join(out_dir, params_file), "wb") as f:
+        f.write(raw)
+    files["init_params"] = params_file
+    print(
+        f"  wrote {params_file}: {p} params ({len(raw) / 1e6:.2f} MB), "
+        f"lowering took {time.time() - t0:.1f}s"
+    )
+
+    return {
+        "variant": name,
+        "depth": cfg.depth,
+        "stage_blocks": list(cfg.stage_blocks),
+        "base_width": cfg.base_width,
+        "param_count": p,
+        "batch_size": b,
+        "input_size": s,
+        "num_classes": cfg.num_classes,
+        "seed": seed,
+        "files": files,
+        "params_sha256": hashlib.sha256(raw).hexdigest(),
+    }
+
+
+def full_width_inventory() -> dict:
+    """Parameter counts of the paper's full-width models, for the Rust
+    inventory cross-check (rust/tests/inventory_parity.rs)."""
+    out = {}
+    for name in ("small", "medium", "large"):
+        cfg = M.full_variant(name)
+        out[name] = {
+            "depth": cfg.depth,
+            "param_count": M.param_count(cfg),
+            "stage_blocks": list(cfg.stage_blocks),
+            "base_width": cfg.base_width,
+            "input_size": cfg.input_size,
+            "num_classes": cfg.num_classes,
+        }
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", default="small,medium,large")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "jax_version": jax.__version__,
+        "generator": "python -m compile.aot",
+        "variants": {},
+        "full_width": full_width_inventory(),
+    }
+    for name in args.variants.split(","):
+        name = name.strip()
+        print(f"[aot] lowering variant '{name}' ...", flush=True)
+        manifest["variants"][name] = build_variant(name, args.out_dir, args.seed)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] manifest written to {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

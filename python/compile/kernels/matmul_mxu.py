@@ -1,0 +1,190 @@
+"""L1: Pallas tiled-matmul kernel — the training compute hot-spot.
+
+The paper's workloads are ResNet trainings whose GPU hot-spot is
+convolution executed as implicit GEMM on tensor cores.  Per the
+hardware-adaptation rule we re-express that hot-spot for a TPU-like
+machine instead of porting CUDA threadblock structure:
+
+* tiles are sized for the 128x128 MXU systolic array (bf16/fp32 matmul),
+* ``BlockSpec``s express the HBM->VMEM schedule that the CUDA kernel
+  expressed with threadblocks + shared memory,
+* accumulation is fp32 in a VMEM scratch accumulator across the K grid
+  dimension (double-buffered by the Pallas pipeline machinery).
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel is lowered through the Pallas interpreter into
+plain HLO (see /opt/xla-example/README.md).  Correctness is pinned against
+the pure-jnp oracle in ``ref.py`` by ``python/tests/test_kernel.py``.
+
+VMEM budget (documented for DESIGN.md SPerf): with the default tiles
+(bm, bn, bk) = (128, 128, 128) the kernel holds
+``bm*bk + bk*bn + bm*bn (acc) + bm*bn (out)`` fp32 words
+= 4 * 128*128 * 4 B = 256 KiB per grid step, far inside the ~16 MiB VMEM
+of a TPU core, leaving headroom for the pipeline's double buffers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile sizes.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, k_steps: int):
+    """One (bm, bn) output tile; grid dim 2 walks the K dimension.
+
+    The output block stays resident in VMEM across the K walk (its index
+    map ignores the K grid axis), so it doubles as the fp32 accumulator —
+    zeroed on the first K step, accumulated into on every step.
+    """
+    del k_steps  # part of the schedule contract; the flush is implicit.
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _matmul_impl(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """``x @ y`` via the Pallas MXU kernel, fp32 accumulate.
+
+    Shapes need not be tile-aligned: inputs are zero-padded up to the tile
+    grid and the result is sliced back.  Zero padding is exact for matmul.
+    """
+    if x.ndim != 2 or y.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {y.shape}")
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+
+    # Shrink tiles for small problems so the grid never degenerates and
+    # padding waste stays bounded (important for the 1x1-conv GEMMs of the
+    # small workload whose N is just the channel count).
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = _pad_to(x, mp, kp)
+    yp = _pad_to(y, kp, np_)
+    k_steps = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def _ceil_to(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrapper.
+#
+# The Pallas interpreter has no autodiff rule, so the VJP is supplied
+# explicitly — and, exactly as on real hardware, the backward GEMMs
+# (dX = g @ Yᵀ, dY = Xᵀ @ g) run through the same MXU kernel, which is why
+# the bwd pass of the AOT train step exercises the kernel too.
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    return _matmul_impl(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_impl(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    return _matmul_impl(g, y.T), _matmul_impl(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """Dense layer on top of the Pallas GEMM: ``x @ w (+ b)``.
+
+    Collapses leading batch dims to 2-D, which is how the classifier head
+    and all 1x1 convolutions reach the kernel.
+    """
+    lead = x.shape[:-1]
+    out = matmul(x.reshape((-1, x.shape[-1])), w)
+    if b is not None:
+        out = out + b
+    return out.reshape((*lead, w.shape[-1]))
+
+
+def conv2d_1x1(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """1x1 convolution (NHWC) as a Pallas GEMM — the dominant op count in
+    bottleneck ResNets, hence the hot-spot this kernel accelerates.
+
+    ``w`` has shape (1, 1, cin, cout) or (cin, cout).
+    """
+    if w.ndim == 4:
+        w = w[0, 0]
+    if stride > 1:
+        x = x[:, ::stride, ::stride, :]
+    b, h, wd, c = x.shape
+    out = matmul(x.reshape((b * h * wd, c)), w)
+    return out.reshape((b, h, wd, w.shape[-1]))
+
+
+def conv2d_im2col(
+    x: jax.Array, w: jax.Array, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """Spatial KxK convolution (NHWC, HWIO weights) as im2col + Pallas GEMM.
+
+    ``conv_general_dilated_patches`` materialises the im2col matrix with
+    feature ordering (cin, kh, kw); the weight tensor is transposed to
+    match before the GEMM.
+    """
+    kh, kw, cin, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    b, oh, ow, _ = patches.shape
+    # patches features are ordered (cin, kh, kw) -> reorder w accordingly.
+    wmat = jnp.transpose(w, (2, 0, 1, 3)).reshape((cin * kh * kw, cout))
+    out = matmul(patches.reshape((b * oh * ow, cin * kh * kw)), wmat)
+    return out.reshape((b, oh, ow, cout))

@@ -1,0 +1,42 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is the "obviously correct" formulation (jnp.matmul /
+lax.conv_general_dilated); the Pallas kernels in ``matmul_mxu.py`` must
+match these to numerical tolerance for every shape the model emits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """fp32-accumulated matmul oracle."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def linear_ref(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    out = jnp.matmul(x, w)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def conv2d_ref(
+    x: jax.Array, w: jax.Array, stride: int = 1, padding: str = "SAME"
+) -> jax.Array:
+    """NHWC / HWIO convolution oracle via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv2d_1x1_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    if w.ndim == 2:
+        w = w[None, None]
+    return conv2d_ref(x, w, stride=stride, padding="VALID")

@@ -1,0 +1,87 @@
+"""Artifact-level tests: manifest consistency and the L2 perf invariants
+(DESIGN.md §7) checked against the HLO the Rust runtime executes.
+
+Skipped when `make artifacts` has not been run.
+"""
+
+import hashlib
+import json
+import os
+
+import pytest
+
+from compile import analysis
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_variants(manifest):
+    assert set(manifest["variants"]) == {"small", "medium", "large"}
+    assert set(manifest["full_width"]) == {"small", "medium", "large"}
+
+
+def test_param_files_match_sha_and_count(manifest):
+    for name, v in manifest["variants"].items():
+        path = os.path.join(ART, v["files"]["init_params"])
+        raw = open(path, "rb").read()
+        assert len(raw) == 4 * v["param_count"], name
+        assert hashlib.sha256(raw).hexdigest() == v["params_sha256"], name
+
+
+def test_manifest_matches_model_configs(manifest):
+    for name, v in manifest["variants"].items():
+        cfg = M.variant(name)
+        assert v["depth"] == cfg.depth
+        assert tuple(v["stage_blocks"]) == cfg.stage_blocks
+        assert v["batch_size"] == cfg.batch_size
+        assert v["input_size"] == cfg.input_size
+        assert v["param_count"] == M.param_count(cfg)
+
+
+def test_full_width_counts_match_formula(manifest):
+    for name, fw in manifest["full_width"].items():
+        cfg = M.full_variant(name)
+        assert fw["param_count"] == M.param_count(cfg), name
+        assert fw["depth"] == cfg.depth
+
+
+def test_hlo_artifacts_parse_and_are_single_module(manifest):
+    for name, v in manifest["variants"].items():
+        r = analysis.analyze(os.path.join(ART, v["files"]["train_step"]))
+        assert r.total_instructions > 100, name
+        # One parameter per runtime argument: params, momentum, x, y, lr.
+        assert r.parameter_count >= 5, name
+
+
+def test_donated_buffers_alias_outputs(manifest):
+    """L2 perf invariant: the train step aliases param+momentum inputs
+    to outputs (donate_argnums in aot.py) — no full-vector copy/step."""
+    v = manifest["variants"]["small"]
+    r = analysis.analyze(os.path.join(ART, v["files"]["train_step"]))
+    assert r.aliased_outputs >= 2, "params and momentum must be donated"
+
+
+def test_matmul_like_ops_linear_in_conv_sites(manifest):
+    """No recompute blowup: dot/conv ops scale linearly with conv sites."""
+    for name in manifest["variants"]:
+        rep = analysis.report_variant(ART, name, manifest)
+        assert rep["linear_in_sites"], rep
+
+
+def test_eval_smaller_than_train(manifest):
+    for name, v in manifest["variants"].items():
+        train = os.path.getsize(os.path.join(ART, v["files"]["train_step"]))
+        evalp = os.path.getsize(os.path.join(ART, v["files"]["eval_step"]))
+        assert evalp < train, name

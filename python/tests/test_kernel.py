@@ -1,0 +1,150 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+The CORE correctness signal of the compile path: every GEMM/conv shape
+the model emits must match ``ref.py`` to tight tolerance, including
+non-tile-aligned shapes (padding path) and the custom-VJP backward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import matmul_mxu as K
+from compile.kernels import ref as R
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+RNG = np.random.default_rng(0)
+
+MATMUL_SHAPES = [
+    (8, 8, 8),
+    (32, 64, 10),       # classifier head
+    (128, 128, 128),    # exactly one MXU tile
+    (129, 127, 130),    # off-by-one around a tile
+    (256, 384, 128),    # multi-tile grid
+    (1024, 16, 64),     # skinny K (1x1 conv, small model)
+    (7, 3, 5),          # sub-tile everything
+    (1, 1, 1),
+    (2048, 27, 16),     # im2col stem: K = 3*3*3
+]
+
+
+@pytest.mark.parametrize("m,k,n", MATMUL_SHAPES)
+def test_matmul_matches_ref(m, k, n):
+    x, y = rand(RNG, m, k), rand(RNG, k, n)
+    out = K.matmul(x, y)
+    ref = R.matmul_ref(x, y)
+    # fp32 accumulation order differs between the tiled kernel and the
+    # oracle; tolerance scales with the contraction depth.
+    np.testing.assert_allclose(out, ref, rtol=3e-5 * max(1, k // 64), atol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (128, 128, 128), (64, 16, 32)])
+def test_matmul_tile_invariance(bm, bn, bk):
+    """The result must not depend on the tiling schedule."""
+    x, y = rand(RNG, 96, 72), rand(RNG, 72, 48)
+    out = K._matmul_impl(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(out, R.matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_grid_walk_accumulates():
+    """K-dimension grid walk: k >> bk exercises multi-wave accumulation."""
+    x, y = rand(RNG, 16, 512), rand(RNG, 512, 16)
+    out = K._matmul_impl(x, y, bm=16, bn=16, bk=32)  # 16 K-steps
+    np.testing.assert_allclose(out, R.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_vjp_matches_ref_grads():
+    x, y = rand(RNG, 24, 40), rand(RNG, 40, 12)
+
+    def loss_pallas(x, y):
+        return jnp.sum(K.matmul(x, y) ** 2)
+
+    def loss_ref(x, y):
+        return jnp.sum(jnp.matmul(x, y) ** 2)
+
+    gx, gy = jax.grad(loss_pallas, argnums=(0, 1))(x, y)
+    rx, ry = jax.grad(loss_ref, argnums=(0, 1))(x, y)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gy, ry, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        K._matmul_impl(jnp.ones((2, 3)), jnp.ones((4, 5)))
+    with pytest.raises(ValueError):
+        K._matmul_impl(jnp.ones((2, 3, 4)), jnp.ones((4, 5)))
+
+
+@pytest.mark.parametrize("stride", [1, 2])
+def test_conv1x1_matches_ref(stride):
+    x = rand(RNG, 4, 16, 16, 12)
+    w = rand(RNG, 1, 1, 12, 24)
+    out = K.conv2d_1x1(x, w, stride=stride)
+    ref = R.conv2d_1x1_ref(x, w, stride=stride)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_conv1x1_accepts_2d_weights():
+    x = rand(RNG, 2, 8, 8, 6)
+    w = rand(RNG, 6, 10)
+    out = K.conv2d_1x1(x, w)
+    ref = R.conv2d_1x1_ref(x, w[None, None])
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kh,stride", [(3, 1), (3, 2), (5, 1), (7, 2)])
+def test_conv_im2col_matches_ref(kh, stride):
+    x = rand(RNG, 2, 16, 16, 5)
+    w = rand(RNG, kh, kh, 5, 8)
+    out = K.conv2d_im2col(x, w, stride=stride, padding="SAME")
+    ref = R.conv2d_ref(x, w, stride=stride, padding="SAME")
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_im2col_grad_flows():
+    x = rand(RNG, 1, 8, 8, 3)
+    w = rand(RNG, 3, 3, 3, 4)
+    g = jax.grad(lambda w: jnp.sum(K.conv2d_im2col(x, w) ** 2))(w)
+    r = jax.grad(lambda w: jnp.sum(R.conv2d_ref(x, w) ** 2))(w)
+    np.testing.assert_allclose(g, r, rtol=1e-4, atol=1e-4)
+
+
+def test_linear_bias_broadcast():
+    x = rand(RNG, 5, 7, 11)
+    w, b = rand(RNG, 11, 3), rand(RNG, 3)
+    out = K.linear(x, w, b)
+    assert out.shape == (5, 7, 3)
+    np.testing.assert_allclose(out, R.linear_ref(x, w, b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep over shapes/dtypes (the system prompt's L1 requirement).
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 96),
+        k=st.integers(1, 96),
+        n=st.integers(1, 96),
+        dtype=st.sampled_from([np.float32, np.float64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matmul_hypothesis_sweep(m, k, n, dtype, seed):
+        r = np.random.default_rng(seed)
+        x = r.standard_normal((m, k)).astype(dtype)
+        y = r.standard_normal((k, n)).astype(dtype)
+        out = np.asarray(K.matmul(x, y))
+        ref = x.astype(np.float64) @ y.astype(np.float64)
+        # JAX computes in f32 unless jax_enable_x64 is set, so the f64
+        # case exercises input casting, not extra precision.
+        np.testing.assert_allclose(out, ref, rtol=1e-4 * max(1, k), atol=1e-4)
+
+except ImportError:  # hypothesis not installed — parametrized tests above cover the grid
+    pass

@@ -1,0 +1,151 @@
+"""L2 correctness: ResNet-V2 model shapes, gradients, training signal."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+RNG = np.random.default_rng(1)
+
+
+def tiny_variant(**over):
+    """A 2-stage toy config that traces in milliseconds."""
+    base = dict(
+        name="tiny",
+        stage_blocks=(1, 1),
+        base_width=4,
+        input_size=8,
+        num_classes=5,
+        batch_size=2,
+        imagenet_stem=False,
+        pallas_level=0,
+    )
+    base.update(over)
+    return M.Variant(**base)
+
+
+def batch(cfg):
+    x = RNG.random((cfg.batch_size, cfg.input_size, cfg.input_size, 3), dtype=np.float32)
+    y = RNG.integers(0, cfg.num_classes, cfg.batch_size).astype(np.int32)
+    return x, y
+
+
+def test_depth_formula():
+    assert M.variant("small").depth == 26
+    assert M.variant("medium").depth == 50
+    assert M.variant("large").depth == 152
+    assert M.full_variant("large").depth == 152
+
+
+def test_param_count_matches_init():
+    from jax.flatten_util import ravel_pytree
+
+    for cfg in [tiny_variant(), tiny_variant(imagenet_stem=True, input_size=16)]:
+        params = M.init_params(cfg)
+        flat, _ = ravel_pytree(params)
+        assert flat.shape[0] == M.param_count(cfg)
+
+
+def test_full_width_resnet50_param_count():
+    """Our v2 bottleneck formula must land near the canonical ResNet50V2
+    (keras: 25.6M params with 1000 classes)."""
+    n = M.param_count(M.full_variant("medium"))
+    assert abs(n - 25_613_800) / 25_613_800 < 0.02, n
+
+
+def test_full_width_resnet152_param_count():
+    """ResNet152V2 (keras): 60.4M params."""
+    n = M.param_count(M.full_variant("large"))
+    assert abs(n - 60_380_648) / 60_380_648 < 0.02, n
+
+
+@pytest.mark.parametrize("stem", [False, True])
+def test_forward_shapes(stem):
+    cfg = tiny_variant(imagenet_stem=stem, input_size=16 if stem else 8)
+    params = M.init_params(cfg)
+    x, _ = batch(cfg)
+    logits = M.forward(cfg, params, x)
+    assert logits.shape == (cfg.batch_size, cfg.num_classes)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_pallas_levels_agree():
+    """All pallas_level routings compute the same function."""
+    cfgs = [tiny_variant(pallas_level=lvl) for lvl in (0, 1, 2, 3)]
+    params = M.init_params(cfgs[0])
+    x, _ = batch(cfgs[0])
+    outs = [np.asarray(M.forward(c, params, x)) for c in cfgs]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=5e-4, atol=5e-4)
+
+
+def test_loss_decreases_on_fixed_batch():
+    cfg = tiny_variant()
+    params = M.init_params(cfg)
+    mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+    x, y = batch(cfg)
+    step = jax.jit(lambda p, m, x, y, lr: M.train_step(cfg, p, m, x, y, lr))
+    first = None
+    for _ in range(12):
+        params, mom, loss, _ = step(params, mom, x, y, jnp.float32(0.05))
+        first = first if first is not None else float(loss)
+    assert float(loss) < first * 0.7, (first, float(loss))
+
+
+def test_train_step_ncorrect_bounds():
+    cfg = tiny_variant()
+    params = M.init_params(cfg)
+    mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+    x, y = batch(cfg)
+    _, _, loss, nc = M.train_step(cfg, params, mom, x, y, 0.01)
+    assert 0 <= int(nc) <= cfg.batch_size
+    assert float(loss) > 0
+
+
+def test_flat_apply_round_trip():
+    cfg = tiny_variant()
+    flat0, train, evale = M.flat_apply(cfg, seed=3)
+    x, y = batch(cfg)
+    p, m, loss, nc = train(flat0, jnp.zeros_like(flat0), x, y, jnp.float32(0.1))
+    assert p.shape == flat0.shape == m.shape
+    assert np.isfinite(float(loss))
+    l2, nc2 = evale(p, x, y)
+    assert np.isfinite(float(l2))
+    # One step on a fixed batch must reduce its own loss.
+    assert float(l2) < float(loss)
+
+
+def test_flat_apply_deterministic_seeding():
+    cfg = tiny_variant()
+    a, _, _ = M.flat_apply(cfg, seed=7)
+    b, _, _ = M.flat_apply(cfg, seed=7)
+    c, _, _ = M.flat_apply(cfg, seed=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_eval_step_is_pure():
+    cfg = tiny_variant()
+    params = M.init_params(cfg)
+    x, y = batch(cfg)
+    l1, n1 = M.eval_step(cfg, params, x, y)
+    l2, n2 = M.eval_step(cfg, params, x, y)
+    assert float(l1) == float(l2) and int(n1) == int(n2)
+
+
+def test_gradients_nonzero_everywhere():
+    """Every parameter leaf must receive gradient (architecture wiring)."""
+    cfg = tiny_variant()
+    params = M.init_params(cfg)
+    x, y = batch(cfg)
+    grads = jax.grad(lambda p: M.loss_and_ncorrect(cfg, p, x, y)[0])(params)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert leaves, "no gradient leaves"
+    for g in leaves:
+        assert np.all(np.isfinite(np.asarray(g)))
+    nonzero = sum(bool(np.any(np.asarray(g) != 0)) for g in leaves)
+    assert nonzero >= len(leaves) - 1  # head bias may be zero-grad on step 0

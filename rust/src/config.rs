@@ -1,0 +1,124 @@
+//! Run configuration: JSON settings consumed by the CLI
+//! (`migsim --config run.json ...`) and the examples.
+
+use crate::simgpu::calibration::Calibration;
+use crate::util::json::Json;
+
+/// Top-level configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Config {
+    /// Simulator calibration (defaults to the frozen paper fit).
+    pub calibration: Calibration,
+    /// Replicates per experiment (§3.4: the paper used 2).
+    pub replicates: u32,
+    /// Output directory for figures/CSV.
+    pub out_dir: String,
+    /// Artifact directory for the PJRT runtime.
+    pub artifacts_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            calibration: Calibration::paper(),
+            replicates: 2,
+            out_dir: "results".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    pub fn load(path: &str) -> anyhow::Result<Config> {
+        let data = std::fs::read_to_string(path)?;
+        Self::from_json_str(&data)
+    }
+
+    /// Parse a (possibly partial) JSON config; missing keys keep defaults.
+    pub fn from_json_str(data: &str) -> anyhow::Result<Config> {
+        let j = Json::parse(data).map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let mut c = Config::default();
+        if let Some(v) = j.get("replicates").and_then(Json::as_u32) {
+            c.replicates = v;
+        }
+        if let Some(v) = j.get("out_dir").and_then(Json::as_str) {
+            c.out_dir = v.to_string();
+        }
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            c.artifacts_dir = v.to_string();
+        }
+        if let Some(cal) = j.get("calibration") {
+            let g = |key: &str, d: f64| cal.get(key).and_then(Json::as_f64).unwrap_or(d);
+            let p = Calibration::paper();
+            c.calibration = Calibration {
+                gemm_efficiency: g("gemm_efficiency", p.gemm_efficiency),
+                elementwise_efficiency: g("elementwise_efficiency", p.elementwise_efficiency),
+                bandwidth_efficiency: g("bandwidth_efficiency", p.bandwidth_efficiency),
+                dispatch_gap_s: g("dispatch_gap_s", p.dispatch_gap_s),
+                mem_latency_s: g("mem_latency_s", p.mem_latency_s),
+                step_overhead_s: g("step_overhead_s", p.step_overhead_s),
+                epoch_overhead_s: g("epoch_overhead_s", p.epoch_overhead_s),
+            };
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut cal = Json::obj();
+        cal.set("gemm_efficiency", Json::from_f64(self.calibration.gemm_efficiency))
+            .set(
+                "elementwise_efficiency",
+                Json::from_f64(self.calibration.elementwise_efficiency),
+            )
+            .set(
+                "bandwidth_efficiency",
+                Json::from_f64(self.calibration.bandwidth_efficiency),
+            )
+            .set("dispatch_gap_s", Json::from_f64(self.calibration.dispatch_gap_s))
+            .set("mem_latency_s", Json::from_f64(self.calibration.mem_latency_s))
+            .set("step_overhead_s", Json::from_f64(self.calibration.step_overhead_s))
+            .set("epoch_overhead_s", Json::from_f64(self.calibration.epoch_overhead_s));
+        let mut j = Json::obj();
+        j.set("calibration", cal)
+            .set("replicates", Json::from_u64(self.replicates as u64))
+            .set("out_dir", Json::from_str_val(&self.out_dir))
+            .set("artifacts_dir", Json::from_str_val(&self.artifacts_dir));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_paper_setup() {
+        let c = Config::default();
+        assert_eq!(c.replicates, 2);
+        assert_eq!(c.calibration, Calibration::paper());
+    }
+
+    #[test]
+    fn partial_json_overrides() {
+        let c = Config::from_json_str(r#"{"replicates": 1}"#).unwrap();
+        assert_eq!(c.replicates, 1);
+        assert_eq!(c.out_dir, "results");
+    }
+
+    #[test]
+    fn calibration_override() {
+        let c = Config::from_json_str(r#"{"calibration": {"gemm_efficiency": 0.5}}"#).unwrap();
+        assert_eq!(c.calibration.gemm_efficiency, 0.5);
+        assert_eq!(
+            c.calibration.bandwidth_efficiency,
+            Calibration::paper().bandwidth_efficiency
+        );
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let c = Config::default();
+        let back = Config::from_json_str(&c.to_json().to_string_pretty()).unwrap();
+        assert_eq!(c, back);
+    }
+}

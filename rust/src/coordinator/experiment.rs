@@ -1,0 +1,309 @@
+//! Single-experiment execution: one workload on one device group.
+
+use super::results::{ExperimentResult, RunOutcome};
+use crate::mig::gpu::{MigGpu, MigMode};
+use crate::mig::profile::MigProfile;
+use crate::simgpu::calibration::Calibration;
+use crate::simgpu::engine::{InstanceResources, SimEngine, StepStats};
+use crate::simgpu::spec::A100;
+use crate::telemetry::dcgm;
+use crate::telemetry::host::{HostProcessReport, HostReport};
+use crate::telemetry::recorder::SampleSeries;
+use crate::workload::memory::{GpuMemoryPlan, HostMemoryModel};
+use crate::workload::pipeline::PipelineModel;
+use crate::workload::resnet;
+use crate::workload::spec::{Workload, WorkloadSize};
+
+/// The x-axis of every figure: how the GPU is configured.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceGroup {
+    /// MIG disabled: the whole 108-SM device.
+    NonMig,
+    /// One instance of a profile, rest of the GPU idle.
+    One(MigProfile),
+    /// The maximum homogeneous set of instances, all training.
+    Parallel(MigProfile),
+}
+
+impl DeviceGroup {
+    /// The nine device groups of the study (§3.4): non-MIG, each profile
+    /// "one", and each profile's maximal parallel set where >1 fits.
+    pub fn paper_groups() -> Vec<DeviceGroup> {
+        use MigProfile::*;
+        vec![
+            DeviceGroup::NonMig,
+            DeviceGroup::One(P7g40gb),
+            DeviceGroup::One(P4g20gb),
+            DeviceGroup::One(P3g20gb),
+            DeviceGroup::Parallel(P3g20gb),
+            DeviceGroup::One(P2g10gb),
+            DeviceGroup::Parallel(P2g10gb),
+            DeviceGroup::One(P1g5gb),
+            DeviceGroup::Parallel(P1g5gb),
+        ]
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            DeviceGroup::NonMig => "non-MIG".to_string(),
+            DeviceGroup::One(p) => format!("{} one", p.name()),
+            DeviceGroup::Parallel(p) => format!("{} parallel", p.name()),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DeviceGroup> {
+        if s == "non-MIG" || s == "non-mig" {
+            return Some(DeviceGroup::NonMig);
+        }
+        let (name, kind) = s.split_once(' ')?;
+        let p = MigProfile::parse(name)?;
+        match kind {
+            "one" => Some(DeviceGroup::One(p)),
+            "parallel" => Some(DeviceGroup::Parallel(p)),
+            _ => None,
+        }
+    }
+
+    pub fn profile(&self) -> Option<MigProfile> {
+        match self {
+            DeviceGroup::NonMig => None,
+            DeviceGroup::One(p) | DeviceGroup::Parallel(p) => Some(*p),
+        }
+    }
+
+    /// Co-located training processes in this group.
+    pub fn parallelism(&self) -> u32 {
+        match self {
+            DeviceGroup::NonMig | DeviceGroup::One(_) => 1,
+            DeviceGroup::Parallel(p) => p.max_homogeneous(),
+        }
+    }
+
+    fn resources(&self) -> InstanceResources {
+        match self.profile() {
+            None => InstanceResources::non_mig(&A100),
+            Some(p) => InstanceResources::mig(p.sm_count(), p.memory_slices()),
+        }
+    }
+}
+
+impl std::fmt::Display for DeviceGroup {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// A fully-specified experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub workload: WorkloadSize,
+    pub group: DeviceGroup,
+    pub replicate: u32,
+    pub seed: u64,
+}
+
+/// Run one experiment end to end on the simulator.
+pub fn run_experiment(spec: &ExperimentSpec, cal: &Calibration) -> ExperimentResult {
+    let workload = Workload::paper(spec.workload);
+    let engine = SimEngine::new(A100, *cal);
+    let n = spec.group.parallelism();
+
+    // 1. Partition the GPU (exercises the real MIG manager).
+    let mut gpu = match spec.group {
+        DeviceGroup::NonMig => MigGpu::new(MigMode::Disabled),
+        DeviceGroup::One(p) | DeviceGroup::Parallel(p) => {
+            let mut gpu = MigGpu::new(MigMode::Enabled);
+            if let Err(e) = gpu.create_homogeneous(p, n) {
+                return fail(spec, n, RunOutcome::InvalidPartition(e.to_string()));
+            }
+            gpu
+        }
+    };
+
+    // 2. Admission: the TF memory plan must fit every instance.
+    let plan = GpuMemoryPlan::paper(spec.workload);
+    let capacity = match spec.group.profile() {
+        None => A100.dram_capacity,
+        Some(p) => p.memory_bytes(),
+    };
+    let Some(allocated) = plan.allocate(capacity) else {
+        return fail(
+            spec,
+            n,
+            RunOutcome::OutOfMemory {
+                required: plan.floor_bytes,
+                capacity,
+            },
+        );
+    };
+    for id in gpu.instances().iter().map(|i| i.id).collect::<Vec<_>>() {
+        gpu.instance_mut(id)
+            .unwrap()
+            .alloc(allocated)
+            .expect("admission check guarantees fit");
+    }
+
+    // 3. Per-process steady-state step on this instance size.
+    let trace = resnet::step_trace_cached(spec.workload);
+    let res = spec.group.resources();
+    let pipeline = PipelineModel::paper(spec.workload);
+    let gpu_only = engine.run_step(&trace, res, 0.0);
+    let input_wait = pipeline.input_wait_s(gpu_only.wall_s);
+
+    // 4. Accumulate a full run per process. MIG isolation => processes
+    //    are independent; `colocation::run_group` (used by the CLI path)
+    //    executes them concurrently and asserts bitwise equality.
+    let steps = workload.steps_per_epoch();
+    let epoch: StepStats = engine.run_epoch(&trace, res, steps, input_wait);
+    let run: StepStats = epoch.scaled(workload.epochs as f64);
+
+    // Per-instance DCGM sampling jitter (the paper's 90.2–90.5% style
+    // ranges across homogeneous instances).
+    let per_instance: Vec<StepStats> = (0..n)
+        .map(|i| {
+            let mut s = run;
+            let jitter = SampleSeries::sample_steady(1.0, 60.0, 1.0, spec.seed ^ i as u64)
+                .samples[0]; // one jitter factor per instance
+            s.busy_s *= jitter.clamp(0.985, 1.015);
+            s.smact_integral *= jitter.clamp(0.985, 1.015);
+            s
+        })
+        .collect();
+
+    let dcgm_report = dcgm::device_report(&engine, spec.group.profile(), &per_instance);
+
+    // 5. Host model.
+    let host_mem = HostMemoryModel::paper(spec.workload);
+    let epoch_secs = epoch.wall_s;
+    let step_wall = epoch.wall_s / steps as f64;
+    let host = HostReport {
+        processes: (0..n)
+            .map(|_| HostProcessReport {
+                cpu_percent: pipeline.cpu_percent(step_wall, trace.kernels.len() as u64),
+                max_res_bytes: host_mem.max_res_bytes(workload.epochs),
+            })
+            .collect(),
+    };
+
+    let total = run.wall_s;
+    let images = workload.train_images as f64 * workload.epochs as f64 * n as f64;
+    ExperimentResult {
+        workload: spec.workload.name().to_string(),
+        device_group: spec.group.label(),
+        replicate: spec.replicate,
+        outcome: RunOutcome::Completed,
+        parallelism: n,
+        epoch_seconds: vec![epoch_secs; n as usize],
+        total_seconds: total,
+        dcgm: Some(dcgm_report),
+        gpu_memory: vec![allocated; n as usize],
+        host,
+        images_per_second: images / total,
+    }
+}
+
+fn fail(spec: &ExperimentSpec, n: u32, outcome: RunOutcome) -> ExperimentResult {
+    ExperimentResult {
+        workload: spec.workload.name().to_string(),
+        device_group: spec.group.label(),
+        replicate: spec.replicate,
+        outcome,
+        parallelism: n,
+        epoch_seconds: vec![],
+        total_seconds: 0.0,
+        dcgm: None,
+        gpu_memory: vec![],
+        host: HostReport::default(),
+        images_per_second: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(w: WorkloadSize, g: DeviceGroup) -> ExperimentResult {
+        run_experiment(
+            &ExperimentSpec {
+                workload: w,
+                group: g,
+                replicate: 0,
+                seed: 42,
+            },
+            &Calibration::paper(),
+        )
+    }
+
+    #[test]
+    fn small_completes_everywhere() {
+        for g in DeviceGroup::paper_groups() {
+            let r = run(WorkloadSize::Small, g);
+            assert!(r.completed(), "{g}: {:?}", r.outcome);
+            assert_eq!(r.epoch_seconds.len(), g.parallelism() as usize);
+        }
+    }
+
+    #[test]
+    fn medium_large_oom_on_1g() {
+        for w in [WorkloadSize::Medium, WorkloadSize::Large] {
+            let r = run(w, DeviceGroup::One(MigProfile::P1g5gb));
+            assert!(matches!(r.outcome, RunOutcome::OutOfMemory { .. }), "{w}");
+        }
+    }
+
+    #[test]
+    fn smaller_instances_are_slower_but_sublinear_for_small() {
+        let t7 = run(WorkloadSize::Small, DeviceGroup::One(MigProfile::P7g40gb)).mean_epoch_seconds();
+        let t1 = run(WorkloadSize::Small, DeviceGroup::One(MigProfile::P1g5gb)).mean_epoch_seconds();
+        let ratio = t1 / t7;
+        assert!(ratio > 1.5 && ratio < 4.5, "small 1g/7g = {ratio}");
+    }
+
+    #[test]
+    fn parallel_equals_one_per_instance() {
+        // The no-interference headline: parallel == isolated on the same
+        // profile, to float precision.
+        for w in [WorkloadSize::Small, WorkloadSize::Medium] {
+            let one = run(w, DeviceGroup::One(MigProfile::P2g10gb)).mean_epoch_seconds();
+            let par = run(w, DeviceGroup::Parallel(MigProfile::P2g10gb));
+            for &e in &par.epoch_seconds {
+                assert!((e - one).abs() / one < 1e-9, "{w}: {e} vs {one}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_mig_faster_than_7g() {
+        for w in WorkloadSize::ALL {
+            let nm = run(w, DeviceGroup::NonMig).mean_epoch_seconds();
+            let m7 = run(w, DeviceGroup::One(MigProfile::P7g40gb)).mean_epoch_seconds();
+            assert!(nm < m7, "{w}: non-MIG {nm} !< 7g {m7}");
+            let gain = (m7 - nm) / m7;
+            assert!(gain < 0.10, "{w}: non-MIG gain {gain} too large");
+        }
+    }
+
+    #[test]
+    fn throughput_gain_for_small_parallel() {
+        // ~3x aggregate throughput from 7x 1g.5gb vs one 7g.40gb.
+        let one = run(WorkloadSize::Small, DeviceGroup::One(MigProfile::P7g40gb));
+        let par = run(WorkloadSize::Small, DeviceGroup::Parallel(MigProfile::P1g5gb));
+        let gain = par.images_per_second / one.images_per_second;
+        assert!(gain > 1.8 && gain < 4.5, "throughput gain {gain}");
+    }
+
+    #[test]
+    fn gpu_memory_matches_plan() {
+        let r = run(WorkloadSize::Large, DeviceGroup::One(MigProfile::P2g10gb));
+        assert!(r.completed());
+        let gb = r.gpu_memory[0] as f64 / 1e9;
+        assert!((9.0..10.0).contains(&gb), "{gb}");
+    }
+
+    #[test]
+    fn labels_round_trip() {
+        for g in DeviceGroup::paper_groups() {
+            assert_eq!(DeviceGroup::parse(&g.label()), Some(g), "{g}");
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! The full experiment matrix of §3.4: 3 workloads x 9 device groups,
+//! each replicated twice.
+
+use super::experiment::{run_experiment, DeviceGroup, ExperimentSpec};
+use super::results::ExperimentResult;
+use crate::simgpu::calibration::Calibration;
+use crate::workload::spec::WorkloadSize;
+
+/// All experiment specs of the paper, in reporting order.
+pub fn paper_matrix(replicates: u32) -> Vec<ExperimentSpec> {
+    let mut specs = Vec::new();
+    for workload in WorkloadSize::ALL {
+        for group in DeviceGroup::paper_groups() {
+            for replicate in 0..replicates {
+                specs.push(ExperimentSpec {
+                    workload,
+                    group,
+                    replicate,
+                    seed: 0x5EED ^ (replicate as u64) << 32,
+                });
+            }
+        }
+    }
+    specs
+}
+
+/// Run a list of experiments sequentially (the simulator itself models
+/// co-location; experiments were sequential in the paper too).
+pub fn run_matrix(specs: &[ExperimentSpec], cal: &Calibration) -> Vec<ExperimentResult> {
+    specs.iter().map(|s| run_experiment(s, cal)).collect()
+}
+
+/// Select the first completed replicate for (workload, group-label).
+pub fn find<'a>(
+    results: &'a [ExperimentResult],
+    workload: WorkloadSize,
+    label: &str,
+) -> Option<&'a ExperimentResult> {
+    results
+        .iter()
+        .find(|r| r.workload == workload.name() && r.device_group == label)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_shape() {
+        let specs = paper_matrix(2);
+        // 3 workloads x 9 groups x 2 replicates.
+        assert_eq!(specs.len(), 54);
+    }
+
+    #[test]
+    fn replicates_agree() {
+        // §5.2: replicated runs show "very similar or nearly identical"
+        // results — in the simulator they are deterministic up to the
+        // DCGM sampling jitter; epoch times must be identical.
+        let specs = paper_matrix(2);
+        let results = run_matrix(&specs, &Calibration::paper());
+        for pair in results.chunks(2) {
+            if pair[0].completed() {
+                assert_eq!(
+                    pair[0].epoch_seconds, pair[1].epoch_seconds,
+                    "{} {}",
+                    pair[0].workload, pair[0].device_group
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oom_cells_match_paper() {
+        let specs = paper_matrix(1);
+        let results = run_matrix(&specs, &Calibration::paper());
+        let failed: Vec<String> = results
+            .iter()
+            .filter(|r| !r.completed())
+            .map(|r| format!("{} {}", r.workload, r.device_group))
+            .collect();
+        // Exactly the medium/large on 1g.5gb cells (one + parallel).
+        assert_eq!(failed.len(), 4, "{failed:?}");
+        for f in &failed {
+            assert!(f.contains("1g.5gb"), "{f}");
+            assert!(f.starts_with("medium") || f.starts_with("large"), "{f}");
+        }
+    }
+
+    #[test]
+    fn find_locates_cells() {
+        let results = run_matrix(&paper_matrix(1), &Calibration::paper());
+        assert!(find(&results, WorkloadSize::Small, "non-MIG").is_some());
+        assert!(find(&results, WorkloadSize::Small, "8g.80gb one").is_none());
+    }
+}

@@ -1,0 +1,21 @@
+//! The experiment coordinator — the paper's methodology (§3.4) as code.
+//!
+//! * [`experiment`] — device groups, single-experiment execution
+//!   (partition the GPU, admission-check memory, run all co-located
+//!   trainings, collect DCGM/smi/host reports).
+//! * [`matrix`] — the full §3.4 run matrix with replication.
+//! * [`colocation`] — the co-location scheduler driving N simulated
+//!   training processes concurrently (tokio) with deterministic results.
+//! * [`planner`] — heterogeneous-partition reconfiguration planner
+//!   (the paper's §6 future work; Tan et al.-style scheduling).
+//! * [`results`] — serializable result records consumed by `report`.
+
+pub mod colocation;
+pub mod experiment;
+pub mod matrix;
+pub mod planner;
+pub mod results;
+
+pub use experiment::{run_experiment, DeviceGroup, ExperimentSpec};
+pub use matrix::{paper_matrix, run_matrix};
+pub use results::{ExperimentResult, RunOutcome};

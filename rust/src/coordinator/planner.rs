@@ -1,0 +1,246 @@
+//! MIG reconfiguration planner — the paper's future work, implemented.
+//!
+//! §6: "an investigation of more asymmetrical / heterogeneous instances
+//! and workloads would be important"; §2.2.2 cites Tan et al.'s
+//! reconfigurable-machine-scheduling system. This module closes the
+//! loop: given a *mix* of training jobs, it searches every valid A100
+//! partition (heterogeneous included), assigns jobs to instances, and
+//! returns the configuration that maximizes aggregate throughput (or
+//! minimizes makespan), honoring each job's memory floor.
+
+use crate::mig::placement::PartitionSet;
+use crate::mig::profile::MigProfile;
+use crate::simgpu::calibration::Calibration;
+use crate::simgpu::engine::{InstanceResources, SimEngine};
+use crate::simgpu::spec::A100;
+use crate::workload::memory::GpuMemoryPlan;
+use crate::workload::pipeline::PipelineModel;
+use crate::workload::resnet;
+use crate::workload::spec::{Workload, WorkloadSize};
+
+/// One training job in the mix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Job {
+    pub workload: WorkloadSize,
+}
+
+/// A planned assignment of one job to one instance profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Assignment {
+    pub job: Job,
+    pub profile: MigProfile,
+    /// Steady-state images/second for this job on this instance.
+    pub images_per_second: f64,
+}
+
+/// A complete plan: a valid partition plus job assignments.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub profiles: Vec<MigProfile>,
+    pub assignments: Vec<Assignment>,
+    /// Aggregate images/second across all placed jobs.
+    pub total_throughput: f64,
+    /// Jobs that could not be placed (more jobs than instances, or no
+    /// instance large enough for the job's memory floor).
+    pub unplaced: usize,
+}
+
+/// Steady-state throughput of `workload` on one instance of `profile`,
+/// or `None` if the memory floor does not fit (the OOM boundary).
+pub fn throughput(workload: WorkloadSize, profile: MigProfile, cal: &Calibration) -> Option<f64> {
+    GpuMemoryPlan::paper(workload).allocate(profile.memory_bytes())?;
+    let w = Workload::paper(workload);
+    let engine = SimEngine::new(A100, *cal);
+    let trace = resnet::step_trace_cached(workload);
+    let res = InstanceResources::mig(profile.sm_count(), profile.memory_slices());
+    let gpu_only = engine.run_step(trace, res, 0.0);
+    let wait = PipelineModel::paper(workload).input_wait_s(gpu_only.wall_s);
+    let step = engine.run_step(trace, res, wait).wall_s;
+    Some(w.batch_size as f64 / step)
+}
+
+/// Find the throughput-optimal plan for a job mix.
+///
+/// Search space: every valid profile multiset (≤ 7 instances — small on
+/// the A100), jobs greedily matched to instances by best marginal
+/// throughput. Exhaustive over partitions, greedy over assignment —
+/// optimal assignment for identical-throughput-curve jobs, near-optimal
+/// in general (documented trade-off).
+pub fn plan(jobs: &[Job], cal: &Calibration) -> Plan {
+    let mut best: Option<Plan> = None;
+    for profiles in PartitionSet::enumerate_valid_multisets() {
+        let candidate = assign(jobs, &profiles, cal);
+        let better = match &best {
+            None => true,
+            Some(b) => {
+                (candidate.unplaced, -candidate.total_throughput)
+                    < (b.unplaced, -b.total_throughput)
+            }
+        };
+        if better {
+            best = Some(candidate);
+        }
+    }
+    best.expect("at least one valid partition exists")
+}
+
+/// Assignment of jobs to a fixed partition: most-constrained job first
+/// (fewest feasible free slots — memory floors make big jobs scarce in
+/// options), each placed on its best-throughput feasible slot. This
+/// reserves large instances for jobs that need them before fast small
+/// jobs grab everything.
+fn assign(jobs: &[Job], profiles: &[MigProfile], cal: &Calibration) -> Plan {
+    let mut free: Vec<MigProfile> = profiles.to_vec();
+    let mut remaining: Vec<Job> = jobs.to_vec();
+    let mut assignments = Vec::new();
+
+    loop {
+        // For each remaining job: (feasible slot count, best slot, tput).
+        let mut choice: Option<(usize, usize, usize, f64)> = None; // (feasible, job, slot, tput)
+        for (ji, job) in remaining.iter().enumerate() {
+            let mut feasible = 0usize;
+            let mut best_slot: Option<(usize, f64)> = None;
+            for (si, profile) in free.iter().enumerate() {
+                if let Some(t) = throughput(job.workload, *profile, cal) {
+                    feasible += 1;
+                    if best_slot.map(|(_, bt)| t > bt).unwrap_or(true) {
+                        best_slot = Some((si, t));
+                    }
+                }
+            }
+            if let Some((si, t)) = best_slot {
+                let cand = (feasible, ji, si, t);
+                let better = match choice {
+                    None => true,
+                    // Most-constrained first; tie-break on throughput.
+                    Some((cf, _, _, ct)) => feasible < cf || (feasible == cf && t > ct),
+                };
+                if better {
+                    choice = Some(cand);
+                }
+            }
+        }
+        let Some((_, ji, si, t)) = choice else { break };
+        assignments.push(Assignment {
+            job: remaining.remove(ji),
+            profile: free.remove(si),
+            images_per_second: t,
+        });
+    }
+
+    Plan {
+        profiles: profiles.to_vec(),
+        total_throughput: assignments.iter().map(|a| a.images_per_second).sum(),
+        unplaced: remaining.len(),
+        assignments,
+    }
+}
+
+impl Plan {
+    /// Human-readable summary for the CLI.
+    pub fn describe(&self) -> String {
+        let names: Vec<&str> = self.profiles.iter().map(|p| p.name()).collect();
+        let mut out = format!(
+            "partition: {} | aggregate {:.1} img/s | {} unplaced\n",
+            names.join(" + "),
+            self.total_throughput,
+            self.unplaced
+        );
+        for a in &self.assignments {
+            out.push_str(&format!(
+                "  {} -> {:<8} {:>8.1} img/s\n",
+                a.job.workload,
+                a.profile.name(),
+                a.images_per_second
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use MigProfile::*;
+
+    fn jobs(spec: &[(WorkloadSize, usize)]) -> Vec<Job> {
+        spec.iter()
+            .flat_map(|&(w, n)| std::iter::repeat_n(Job { workload: w }, n))
+            .collect()
+    }
+
+    #[test]
+    fn seven_small_jobs_get_seven_singles() {
+        // The paper's hyper-parameter-tuning scenario: the planner must
+        // discover the 7x 1g.5gb configuration by itself.
+        let p = plan(&jobs(&[(WorkloadSize::Small, 7)]), &Calibration::paper());
+        assert_eq!(p.unplaced, 0);
+        assert_eq!(p.profiles, vec![P1g5gb; 7], "{}", p.describe());
+    }
+
+    #[test]
+    fn one_large_job_gets_the_full_gpu() {
+        let p = plan(&jobs(&[(WorkloadSize::Large, 1)]), &Calibration::paper());
+        assert_eq!(p.unplaced, 0);
+        assert_eq!(p.assignments[0].profile, P7g40gb, "{}", p.describe());
+    }
+
+    #[test]
+    fn memory_floor_respected() {
+        // Medium cannot run on 1g.5gb: the planner must never assign it
+        // there even when the mix pressures for small instances.
+        assert!(throughput(WorkloadSize::Medium, P1g5gb, &Calibration::paper()).is_none());
+        // 1 medium + 5 small: six instances max when one must be
+        // >= 2g.10gb (7 jobs would necessarily strand one).
+        let p = plan(
+            &jobs(&[(WorkloadSize::Medium, 1), (WorkloadSize::Small, 5)]),
+            &Calibration::paper(),
+        );
+        let placed_medium = p
+            .assignments
+            .iter()
+            .find(|a| a.job.workload == WorkloadSize::Medium)
+            .expect("medium must be placed");
+        assert!(
+            placed_medium.profile.memory_bytes() >= 10_000_000_000,
+            "{}",
+            p.describe()
+        );
+        assert_eq!(p.unplaced, 0, "{}", p.describe());
+    }
+
+    #[test]
+    fn heterogeneous_mix_uses_heterogeneous_partition() {
+        // One medium + several small: the best plan is asymmetric —
+        // something the paper's homogeneous study could not measure.
+        let p = plan(
+            &jobs(&[(WorkloadSize::Medium, 1), (WorkloadSize::Small, 3)]),
+            &Calibration::paper(),
+        );
+        assert_eq!(p.unplaced, 0);
+        let distinct: std::collections::BTreeSet<_> = p.profiles.iter().collect();
+        assert!(distinct.len() > 1, "expected heterogeneous: {}", p.describe());
+    }
+
+    #[test]
+    fn plan_beats_naive_full_gpu_for_small_mix() {
+        // Aggregate throughput of the planned partition must beat
+        // running jobs sequentially on the whole GPU.
+        let cal = Calibration::paper();
+        let p = plan(&jobs(&[(WorkloadSize::Small, 7)]), &cal);
+        let solo = throughput(WorkloadSize::Small, P7g40gb, &cal).unwrap();
+        assert!(
+            p.total_throughput > 1.5 * solo,
+            "planned {:.1} vs solo {:.1}",
+            p.total_throughput,
+            solo
+        );
+    }
+
+    #[test]
+    fn more_jobs_than_slots_reports_unplaced() {
+        let p = plan(&jobs(&[(WorkloadSize::Small, 9)]), &Calibration::paper());
+        assert_eq!(p.unplaced, 2);
+        assert_eq!(p.assignments.len(), 7);
+    }
+}

@@ -1,0 +1,163 @@
+//! Result records for experiments — everything the figures need.
+
+use crate::telemetry::dcgm::DcgmReport;
+use crate::telemetry::host::HostReport;
+use crate::util::json::Json;
+
+/// Why an experiment produced no training results.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RunOutcome {
+    /// Completed all epochs.
+    Completed,
+    /// The framework aborted at startup: model does not fit the instance
+    /// (the paper's medium/large on 1g.5gb).
+    OutOfMemory { required: u64, capacity: u64 },
+    /// The requested partition is not constructible on the A100.
+    InvalidPartition(String),
+}
+
+/// Full record of one experiment (one workload on one device group).
+#[derive(Debug, Clone)]
+pub struct ExperimentResult {
+    pub workload: String,
+    pub device_group: String,
+    pub replicate: u32,
+    pub outcome: RunOutcome,
+    /// Number of co-located training processes.
+    pub parallelism: u32,
+    /// Seconds per epoch, per process (homogeneous => near-identical).
+    pub epoch_seconds: Vec<f64>,
+    /// Total wall time of the experiment (s).
+    pub total_seconds: f64,
+    /// DCGM activity report (medians over the run).
+    pub dcgm: Option<DcgmReport>,
+    /// Allocated GPU memory per process (bytes).
+    pub gpu_memory: Vec<u64>,
+    /// Host CPU/RES report.
+    pub host: HostReport,
+    /// Throughput in images/second aggregated over processes.
+    pub images_per_second: f64,
+}
+
+impl ExperimentResult {
+    /// Serialize to JSON (in-tree module; no serde offline).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        let mut outcome = Json::obj();
+        match &self.outcome {
+            RunOutcome::Completed => {
+                outcome.set("kind", Json::from_str_val("completed"));
+            }
+            RunOutcome::OutOfMemory { required, capacity } => {
+                outcome
+                    .set("kind", Json::from_str_val("oom"))
+                    .set("required", Json::from_u64(*required))
+                    .set("capacity", Json::from_u64(*capacity));
+            }
+            RunOutcome::InvalidPartition(msg) => {
+                outcome
+                    .set("kind", Json::from_str_val("invalid_partition"))
+                    .set("message", Json::from_str_val(msg));
+            }
+        }
+        j.set("workload", Json::from_str_val(&self.workload))
+            .set("device_group", Json::from_str_val(&self.device_group))
+            .set("replicate", Json::from_u64(self.replicate as u64))
+            .set("outcome", outcome)
+            .set("parallelism", Json::from_u64(self.parallelism as u64))
+            .set(
+                "epoch_seconds",
+                Json::Arr(self.epoch_seconds.iter().map(|&s| Json::from_f64(s)).collect()),
+            )
+            .set("total_seconds", Json::from_f64(self.total_seconds))
+            .set(
+                "gpu_memory",
+                Json::Arr(self.gpu_memory.iter().map(|&b| Json::from_u64(b)).collect()),
+            )
+            .set("images_per_second", Json::from_f64(self.images_per_second))
+            .set(
+                "host_cpu_percent",
+                Json::from_f64(self.host.total_cpu_percent()),
+            )
+            .set("host_res_bytes", Json::from_u64(self.host.total_res_bytes()));
+        if let Some(d) = &self.dcgm {
+            let mut dj = Json::obj();
+            let fields = |f: &crate::telemetry::dcgm::DcgmFields| {
+                let mut o = Json::obj();
+                o.set("gract", Json::from_f64(f.gract))
+                    .set("smact", Json::from_f64(f.smact))
+                    .set("smocc", Json::from_f64(f.smocc))
+                    .set("drama", Json::from_f64(f.drama));
+                o
+            };
+            dj.set("device", fields(&d.device.fields))
+                .set(
+                    "instances",
+                    Json::Arr(d.instances.iter().map(|i| fields(&i.fields)).collect()),
+                )
+                .set("unavailable", Json::Bool(d.unavailable));
+            j.set("dcgm", dj);
+        }
+        j
+    }
+
+
+    pub fn mean_epoch_seconds(&self) -> f64 {
+        if self.epoch_seconds.is_empty() {
+            return f64::NAN;
+        }
+        self.epoch_seconds.iter().sum::<f64>() / self.epoch_seconds.len() as f64
+    }
+
+    pub fn completed(&self) -> bool {
+        self.outcome == RunOutcome::Completed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_json_renders_outcome_and_fields() {
+        let r = ExperimentResult {
+            workload: "medium".into(),
+            device_group: "1g.5gb one".into(),
+            replicate: 0,
+            outcome: RunOutcome::OutOfMemory {
+                required: 5_400_000_000,
+                capacity: 5_000_000_000,
+            },
+            parallelism: 1,
+            epoch_seconds: vec![],
+            total_seconds: 0.0,
+            dcgm: None,
+            gpu_memory: vec![],
+            host: HostReport::default(),
+            images_per_second: 0.0,
+        };
+        let j = r.to_json();
+        assert_eq!(j.at(&["outcome", "kind"]).unwrap().as_str(), Some("oom"));
+        assert_eq!(j.get("workload").unwrap().as_str(), Some("medium"));
+        let text = j.to_string_pretty();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn mean_epoch_seconds_empty_is_nan() {
+        let r = ExperimentResult {
+            workload: "small".into(),
+            device_group: "x".into(),
+            replicate: 0,
+            outcome: RunOutcome::Completed,
+            parallelism: 1,
+            epoch_seconds: vec![],
+            total_seconds: 0.0,
+            dcgm: None,
+            gpu_memory: vec![],
+            host: HostReport::default(),
+            images_per_second: 0.0,
+        };
+        assert!(r.mean_epoch_seconds().is_nan());
+    }
+}

@@ -1,0 +1,29 @@
+//! # MIG-Sim
+//!
+//! Reproduction of **"An Analysis of Collocation on GPUs for Deep Learning
+//! Training"** (Robroek, Kaas, Paleykov, Tözün; 2022) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the experiment coordinator, the MIG partition
+//!   manager, a calibrated occupancy-aware A100 simulator, and a DCGM-style
+//!   telemetry stack. No Python anywhere on this path.
+//! * **L2/L1 (python/compile)** — ResNet-V2 fwd/bwd in JAX with the GEMM
+//!   hot-spot as a Pallas kernel, AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **runtime** — loads those artifacts via the PJRT C API (`xla` crate)
+//!   and drives real training steps for the accuracy/loss experiments.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod mig;
+pub mod report;
+pub mod runtime;
+pub mod simgpu;
+pub mod telemetry;
+pub mod util;
+pub mod workload;
+
+pub use mig::profile::MigProfile;
+pub use workload::spec::WorkloadSize;

@@ -1,0 +1,213 @@
+//! `migsim` — CLI for the MIG collocation study reproduction.
+//!
+//! Subcommands:
+//! * `partition` — explore/validate MIG partitions (paper Fig 1 rules).
+//! * `run`       — run one experiment (workload x device group).
+//! * `matrix`    — run the full §3.4 matrix and dump results JSON.
+//! * `figures`   — regenerate every paper figure from the matrix.
+//! * `train`     — real training via the PJRT runtime (Fig 10 / E2E).
+
+use migsim::config::Config;
+use migsim::coordinator::experiment::{run_experiment, DeviceGroup, ExperimentSpec};
+use migsim::coordinator::matrix::{paper_matrix, run_matrix};
+use migsim::mig::gpu::MigGpu;
+use migsim::mig::placement::PartitionSet;
+use migsim::mig::profile::MigProfile;
+use migsim::report::figures;
+use migsim::runtime::artifacts::ArtifactStore;
+use migsim::runtime::trainer::{Trainer, TrainerConfig};
+use migsim::util::cli::Args;
+use migsim::util::fmt_duration;
+use migsim::util::json::Json;
+use migsim::workload::spec::WorkloadSize;
+
+const USAGE: &str = "\
+migsim — MIG collocation study reproduction (Rust + JAX + Pallas)
+
+USAGE: migsim [--config cfg.json] SUBCOMMAND [flags]
+
+SUBCOMMANDS
+  partition [--profiles 3g.20gb,2g.10gb] [--enumerate]
+      Validate a profile multiset against the A100 placement rules, or
+      enumerate every valid partition.
+  run --workload small|medium|large --group '<group>'
+      Run one experiment; groups: 'non-MIG', '<profile> one',
+      '<profile> parallel'. Prints the result JSON.
+  matrix [--out results/matrix.json] [--replicates N]
+      Run the full paper matrix (3 workloads x 9 device groups).
+  figures [--out results] [--print]
+      Regenerate every paper figure (CSV + ASCII).
+  train [--variant small] [--steps-per-epoch 25] [--epochs 4]
+        [--lr 0.05] [--noise 0.45] [--out records.json]
+      REAL training through the PJRT runtime on AOT artifacts.
+  plan --jobs small,small,medium
+      Heterogeneous-partition planner: best MIG configuration for a
+      mix of training jobs (the paper's future work).
+";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let config = match args.flag("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::default(),
+    };
+
+    match args.subcommand.as_deref() {
+        Some("partition") => cmd_partition(&args),
+        Some("run") => cmd_run(&args, &config),
+        Some("matrix") => cmd_matrix(&args, &config),
+        Some("figures") => cmd_figures(&args, &config),
+        Some("train") => cmd_train(&args, &config),
+        Some("plan") => cmd_plan(&args, &config),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_partition(args: &Args) -> anyhow::Result<()> {
+    if args.has("enumerate") {
+        let all = PartitionSet::enumerate_valid_multisets();
+        println!("{} valid partition multisets on the A100-40GB:", all.len());
+        for m in all {
+            let names: Vec<&str> = m.iter().map(|p| p.name()).collect();
+            println!("  {}", names.join(" + "));
+        }
+        return Ok(());
+    }
+    let list = args.flag_or("profiles", "1g.5gb");
+    let parsed: Option<Vec<MigProfile>> =
+        list.split(',').map(|s| MigProfile::parse(s.trim())).collect();
+    let Some(parsed) = parsed else {
+        anyhow::bail!("unknown profile in '{list}'");
+    };
+    match PartitionSet::first_fit(&parsed) {
+        Some(set) => {
+            let mut gpu = MigGpu::default();
+            for p in set.placements {
+                gpu.create_instance(p.profile)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+            }
+            println!("VALID partition:\n{}", gpu.list());
+        }
+        None => println!("INVALID: '{list}' cannot coexist on the A100-40GB"),
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args, config: &Config) -> anyhow::Result<()> {
+    let workload = args.flag_or("workload", "small");
+    let group = args.flag_or("group", "non-MIG");
+    let w = WorkloadSize::parse(&workload)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload '{workload}'"))?;
+    let g = DeviceGroup::parse(&group)
+        .ok_or_else(|| anyhow::anyhow!("unknown device group '{group}'"))?;
+    let r = run_experiment(
+        &ExperimentSpec {
+            workload: w,
+            group: g,
+            replicate: 0,
+            seed: 0x5EED,
+        },
+        &config.calibration,
+    );
+    println!("{}", r.to_json().to_string_pretty());
+    Ok(())
+}
+
+fn cmd_matrix(args: &Args, config: &Config) -> anyhow::Result<()> {
+    let out = args.flag_or("out", "results/matrix.json");
+    let replicates = args.flag_parse("replicates", config.replicates)?;
+    let specs = paper_matrix(replicates);
+    let t0 = std::time::Instant::now();
+    let results = run_matrix(&specs, &config.calibration);
+    let sim_hours: f64 = results.iter().map(|r| r.total_seconds).sum::<f64>() / 3600.0;
+    if let Some(parent) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let json = Json::Arr(results.iter().map(|r| r.to_json()).collect());
+    std::fs::write(&out, json.to_string_pretty())?;
+    println!(
+        "{} experiments | {:.1} simulated hours (paper: ~135 h per replicate set) | {:.3} s host time | -> {out}",
+        results.len(),
+        sim_hours,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args, config: &Config) -> anyhow::Result<()> {
+    let out = args.flag_or("out", &config.out_dir);
+    let results = run_matrix(&paper_matrix(1), &config.calibration);
+    let out_dir = std::path::PathBuf::from(&out);
+    std::fs::create_dir_all(&out_dir)?;
+    for fig in figures::all_figures(&results) {
+        fig.write_csv(&out_dir)?;
+        if args.has("print") {
+            println!("{}", fig.text);
+        } else {
+            println!("wrote {}/{}.csv", out, fig.id);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args, config: &Config) -> anyhow::Result<()> {
+    use migsim::coordinator::planner::{plan, Job};
+    let list = args.flag_or("jobs", "small,small,small,small,small,small,small");
+    let jobs: Option<Vec<Job>> = list
+        .split(',')
+        .map(|s| WorkloadSize::parse(s.trim()).map(|workload| Job { workload }))
+        .collect();
+    let Some(jobs) = jobs else {
+        anyhow::bail!("unknown workload in '{list}'");
+    };
+    let p = plan(&jobs, &config.calibration);
+    print!("{}", p.describe());
+    Ok(())
+}
+
+fn cmd_train(args: &Args, config: &Config) -> anyhow::Result<()> {
+    let variant = args.flag_or("variant", "small");
+    let store =
+        ArtifactStore::open(&config.artifacts_dir).or_else(|_| ArtifactStore::open_default())?;
+    let mut trainer = Trainer::new(
+        store,
+        TrainerConfig {
+            variant: variant.clone(),
+            steps_per_epoch: args.flag_parse("steps-per-epoch", 25u64)?,
+            epochs: args.flag_parse("epochs", 4u32)?,
+            lr: args.flag_parse("lr", 0.05f32)?,
+            noise: args.flag_parse("noise", 0.45f32)?,
+            val_batches: args.flag_parse("val-batches", 4u64)?,
+            ..TrainerConfig::default()
+        },
+    )?;
+    println!(
+        "training variant '{}' ({} params) on PJRT-cpu ...",
+        variant,
+        trainer.manifest().param_count,
+    );
+    let records = trainer.run()?;
+    for r in &records {
+        println!(
+            "epoch {:>2}: loss {:.4} acc {:.3} | val loss {:.4} val acc {:.3} | host {}",
+            r.epoch,
+            r.train_loss,
+            r.train_acc,
+            r.val_loss,
+            r.val_acc,
+            fmt_duration(r.host_secs)
+        );
+    }
+    if let Some(path) = args.flag("out") {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let json = Json::Arr(records.iter().map(|r| r.to_json()).collect());
+        std::fs::write(path, json.to_string_pretty())?;
+        println!("records -> {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! The A30-24GB MIG model — the A100's lower-spec sibling (paper §2.1:
+//! "The amount and types of the combinations of partitions across the
+//! A30 and A100 versions vary, the latter supporting more profiles").
+//!
+//! The A30 exposes 4 compute slices and 4 memory slices of 6 GB; its
+//! profile set is strictly smaller (no 3g/7g-class shapes), which this
+//! module makes concrete so the partition explorer can contrast the two
+//! devices.
+
+/// A30 compute slices.
+pub const A30_COMPUTE_SLICES: u32 = 4;
+/// A30 memory slices.
+pub const A30_MEMORY_SLICES: u32 = 4;
+/// Bytes per A30 memory slice (6 GB).
+pub const A30_MEMORY_SLICE_BYTES: u64 = 6_000_000_000;
+/// SMs per A30 compute slice (56 SMs / 4 slices).
+pub const A30_SMS_PER_SLICE: u32 = 14;
+
+/// The A30's MIG profiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum A30Profile {
+    /// 1 compute slice, 6 GB. Max 4 concurrent.
+    P1g6gb,
+    /// 2 compute slices, 12 GB. Max 2 concurrent.
+    P2g12gb,
+    /// The whole MIG-mode A30.
+    P4g24gb,
+}
+
+impl A30Profile {
+    pub const ALL: [A30Profile; 3] = [A30Profile::P1g6gb, A30Profile::P2g12gb, A30Profile::P4g24gb];
+
+    pub fn compute_slices(self) -> u32 {
+        match self {
+            A30Profile::P1g6gb => 1,
+            A30Profile::P2g12gb => 2,
+            A30Profile::P4g24gb => 4,
+        }
+    }
+
+    pub fn memory_slices(self) -> u32 {
+        self.compute_slices() // A30 slices are symmetric
+    }
+
+    pub fn memory_bytes(self) -> u64 {
+        self.memory_slices() as u64 * A30_MEMORY_SLICE_BYTES
+    }
+
+    pub fn sm_count(self) -> u32 {
+        self.compute_slices() * A30_SMS_PER_SLICE
+    }
+
+    pub fn max_homogeneous(self) -> u32 {
+        A30_COMPUTE_SLICES / self.compute_slices()
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            A30Profile::P1g6gb => "1g.6gb",
+            A30Profile::P2g12gb => "2g.12gb",
+            A30Profile::P4g24gb => "4g.24gb",
+        }
+    }
+}
+
+/// Is a multiset of A30 profiles placeable? (Slice budget; the A30 has
+/// no asymmetric-profile exceptions.)
+pub fn a30_fits(profiles: &[A30Profile]) -> bool {
+    let compute: u32 = profiles.iter().map(|p| p.compute_slices()).sum();
+    let memory: u32 = profiles.iter().map(|p| p.memory_slices()).sum();
+    compute <= A30_COMPUTE_SLICES && memory <= A30_MEMORY_SLICES
+}
+
+/// Count of distinct valid A30 partitions (for the explorer's
+/// A100-vs-A30 comparison).
+pub fn a30_valid_multisets() -> Vec<Vec<A30Profile>> {
+    let mut out = Vec::new();
+    for n4 in 0..=1u32 {
+        for n2 in 0..=2u32 {
+            for n1 in 0..=4u32 {
+                if n4 + n2 + n1 == 0 {
+                    continue;
+                }
+                let mut set = Vec::new();
+                set.extend(std::iter::repeat_n(A30Profile::P4g24gb, n4 as usize));
+                set.extend(std::iter::repeat_n(A30Profile::P2g12gb, n2 as usize));
+                set.extend(std::iter::repeat_n(A30Profile::P1g6gb, n1 as usize));
+                if a30_fits(&set) {
+                    out.push(set);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use A30Profile::*;
+
+    #[test]
+    fn capacity_is_24gb() {
+        assert_eq!(P4g24gb.memory_bytes(), 24_000_000_000);
+        assert_eq!(P1g6gb.memory_bytes(), 6_000_000_000);
+    }
+
+    #[test]
+    fn homogeneous_maxima() {
+        assert_eq!(P1g6gb.max_homogeneous(), 4);
+        assert_eq!(P2g12gb.max_homogeneous(), 2);
+        assert_eq!(P4g24gb.max_homogeneous(), 1);
+    }
+
+    #[test]
+    fn fits_respects_budget() {
+        assert!(a30_fits(&[P2g12gb, P2g12gb]));
+        assert!(a30_fits(&[P2g12gb, P1g6gb, P1g6gb]));
+        assert!(!a30_fits(&[P4g24gb, P1g6gb]));
+        assert!(!a30_fits(&[P2g12gb, P2g12gb, P1g6gb]));
+    }
+
+    #[test]
+    fn fewer_partitions_than_a100() {
+        // The paper's point: the A100 supports more combinations.
+        let a30 = a30_valid_multisets().len();
+        let a100 = crate::mig::placement::PartitionSet::enumerate_valid_multisets().len();
+        assert!(a30 < a100, "A30 {a30} !< A100 {a100}");
+        assert!(a30 >= 8, "A30 should still have several: {a30}");
+    }
+
+    #[test]
+    fn medium_workload_fits_1g_on_a30_but_not_a100() {
+        // 6 GB slice vs 5 GB slice: the paper's medium OOM boundary
+        // (floor ~5.3 GB) sits exactly between the two devices.
+        use crate::workload::memory::GpuMemoryPlan;
+        use crate::workload::spec::WorkloadSize;
+        let plan = GpuMemoryPlan::paper(WorkloadSize::Medium);
+        assert!(plan.allocate(P1g6gb.memory_bytes()).is_some());
+        assert!(plan.allocate(5_000_000_000).is_none());
+    }
+}

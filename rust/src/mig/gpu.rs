@@ -1,0 +1,213 @@
+//! The MIG-capable GPU: instance lifecycle + nvidia-smi-style listing.
+
+use super::instance::{GpuInstance, InstanceId};
+use super::placement::{PartitionSet, Placement, PlacementError};
+use super::profile::{MigProfile, NON_MIG_SMS};
+
+/// MIG mode of the device. Non-MIG mode exposes all 108 SMs as a single
+/// device; MIG mode exposes 98 SMs across up to 7 instances.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigMode {
+    Disabled,
+    Enabled,
+}
+
+/// One simulated A100-40GB.
+#[derive(Debug, Clone)]
+pub struct MigGpu {
+    pub mode: MigMode,
+    instances: Vec<GpuInstance>,
+    next_id: u32,
+}
+
+impl Default for MigGpu {
+    fn default() -> Self {
+        Self::new(MigMode::Enabled)
+    }
+}
+
+impl MigGpu {
+    pub fn new(mode: MigMode) -> Self {
+        Self {
+            mode,
+            instances: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    /// SMs visible to a single workload occupying the whole device.
+    pub fn device_sms(&self) -> u32 {
+        match self.mode {
+            MigMode::Disabled => NON_MIG_SMS,
+            MigMode::Enabled => MigProfile::P7g40gb.sm_count(),
+        }
+    }
+
+    pub fn instances(&self) -> &[GpuInstance] {
+        &self.instances
+    }
+
+    pub fn instance(&self, id: InstanceId) -> Option<&GpuInstance> {
+        self.instances.iter().find(|i| i.id == id)
+    }
+
+    pub fn instance_mut(&mut self, id: InstanceId) -> Option<&mut GpuInstance> {
+        self.instances.iter_mut().find(|i| i.id == id)
+    }
+
+    /// Create an instance at the first free allowed placement of `profile`
+    /// (what `nvidia-smi mig -cgi` does).
+    pub fn create_instance(&mut self, profile: MigProfile) -> Result<InstanceId, PlacementError> {
+        if self.mode == MigMode::Disabled {
+            // Creating a GI implicitly requires MIG mode; model as a
+            // disallowed placement of the requested profile.
+            return Err(PlacementError::DisallowedPlacement(Placement::new(
+                profile, u32::MAX, u32::MAX,
+            )));
+        }
+        let mut last_err = None;
+        for &(cs, ms) in profile.placements() {
+            let cand = Placement::new(profile, cs, ms);
+            let mut set: Vec<Placement> = self.instances.iter().map(|i| i.placement).collect();
+            set.push(cand);
+            match PartitionSet::new(set).validate() {
+                Ok(()) => {
+                    let id = InstanceId(self.next_id);
+                    self.next_id += 1;
+                    self.instances.push(GpuInstance::new(id, cand));
+                    return Ok(id);
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.unwrap_or(PlacementError::DisallowedPlacement(Placement::new(
+            profile, u32::MAX, u32::MAX,
+        ))))
+    }
+
+    /// Create `count` homogeneous instances or none (atomic, like the
+    /// paper's per-experiment reconfiguration).
+    pub fn create_homogeneous(
+        &mut self,
+        profile: MigProfile,
+        count: u32,
+    ) -> Result<Vec<InstanceId>, PlacementError> {
+        let snapshot = self.clone();
+        let mut ids = Vec::with_capacity(count as usize);
+        for _ in 0..count {
+            match self.create_instance(profile) {
+                Ok(id) => ids.push(id),
+                Err(e) => {
+                    *self = snapshot;
+                    return Err(e);
+                }
+            }
+        }
+        Ok(ids)
+    }
+
+    pub fn destroy_instance(&mut self, id: InstanceId) -> bool {
+        let before = self.instances.len();
+        self.instances.retain(|i| i.id != id);
+        self.instances.len() != before
+    }
+
+    pub fn destroy_all(&mut self) {
+        self.instances.clear();
+    }
+
+    /// Current partition as a `PartitionSet` (always valid by construction).
+    pub fn partition(&self) -> PartitionSet {
+        PartitionSet::new(self.instances.iter().map(|i| i.placement).collect())
+    }
+
+    /// `nvidia-smi mig -lgi`-style listing.
+    pub fn list(&self) -> String {
+        let mut out = String::from(
+            "+----+----------+------------+------------+----------------+\n\
+             | GI | Profile  | SMs        | Memory     | Placement      |\n\
+             +----+----------+------------+------------+----------------+\n",
+        );
+        for i in &self.instances {
+            out.push_str(&format!(
+                "| {:>2} | {:<8} | {:>3} SMs    | {:>5.1} GB   | c{} m{}          |\n",
+                i.id.0,
+                i.profile().name(),
+                i.sm_count(),
+                i.memory_bytes() as f64 / 1e9,
+                i.placement.compute_start,
+                i.placement.memory_start,
+            ));
+        }
+        out.push_str("+----+----------+------------+------------+----------------+");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use MigProfile::*;
+
+    #[test]
+    fn create_seven_singles() {
+        let mut gpu = MigGpu::default();
+        let ids = gpu.create_homogeneous(P1g5gb, 7).unwrap();
+        assert_eq!(ids.len(), 7);
+        assert!(gpu.create_instance(P1g5gb).is_err());
+    }
+
+    #[test]
+    fn atomic_homogeneous_failure_rolls_back() {
+        let mut gpu = MigGpu::default();
+        gpu.create_instance(P3g20gb).unwrap();
+        // Requesting 2x 3g.20gb more must fail AND leave only the original.
+        assert!(gpu.create_homogeneous(P3g20gb, 2).is_err());
+        assert_eq!(gpu.instances().len(), 1);
+    }
+
+    #[test]
+    fn conflict_4g_3g() {
+        let mut gpu = MigGpu::default();
+        gpu.create_instance(P4g20gb).unwrap();
+        assert!(matches!(
+            gpu.create_instance(P3g20gb),
+            Err(PlacementError::ProfileConflict(_, _))
+        ));
+    }
+
+    #[test]
+    fn non_mig_mode_rejects_instances_and_has_more_sms() {
+        let mut gpu = MigGpu::new(MigMode::Disabled);
+        assert!(gpu.create_instance(P1g5gb).is_err());
+        assert_eq!(gpu.device_sms(), 108);
+        assert_eq!(MigGpu::default().device_sms(), 98);
+    }
+
+    #[test]
+    fn destroy_frees_placement() {
+        let mut gpu = MigGpu::default();
+        let id = gpu.create_instance(P7g40gb).unwrap();
+        assert!(gpu.create_instance(P1g5gb).is_err());
+        assert!(gpu.destroy_instance(id));
+        assert!(gpu.create_instance(P1g5gb).is_ok());
+        assert!(!gpu.destroy_instance(id)); // double destroy is a no-op
+    }
+
+    #[test]
+    fn listing_contains_profiles() {
+        let mut gpu = MigGpu::default();
+        gpu.create_homogeneous(P2g10gb, 3).unwrap();
+        let l = gpu.list();
+        assert_eq!(l.matches("2g.10gb").count(), 3);
+    }
+
+    #[test]
+    fn partition_always_valid() {
+        let mut gpu = MigGpu::default();
+        gpu.create_instance(P3g20gb).unwrap();
+        gpu.create_instance(P2g10gb).unwrap();
+        gpu.create_instance(P1g5gb).unwrap();
+        assert!(gpu.partition().is_valid());
+    }
+}

@@ -1,0 +1,123 @@
+//! GPU instances: a profile bound to a placement, with a stable identity.
+
+use super::placement::Placement;
+use super::profile::MigProfile;
+
+/// Identifier of a GPU instance within one simulated GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstanceId(pub u32);
+
+impl std::fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GI{}", self.0)
+    }
+}
+
+/// A live MIG GPU instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuInstance {
+    pub id: InstanceId,
+    pub placement: Placement,
+    /// Bytes currently allocated on the instance's framebuffer.
+    pub allocated_bytes: u64,
+}
+
+impl GpuInstance {
+    pub fn new(id: InstanceId, placement: Placement) -> Self {
+        Self {
+            id,
+            placement,
+            allocated_bytes: 0,
+        }
+    }
+
+    pub fn profile(&self) -> MigProfile {
+        self.placement.profile
+    }
+
+    pub fn sm_count(&self) -> u32 {
+        self.profile().sm_count()
+    }
+
+    pub fn memory_bytes(&self) -> u64 {
+        self.profile().memory_bytes()
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.memory_bytes().saturating_sub(self.allocated_bytes)
+    }
+
+    /// Allocate framebuffer memory; fails like cudaMalloc on exhaustion.
+    pub fn alloc(&mut self, bytes: u64) -> Result<(), OutOfMemory> {
+        if bytes > self.free_bytes() {
+            return Err(OutOfMemory {
+                requested: bytes,
+                free: self.free_bytes(),
+                capacity: self.memory_bytes(),
+            });
+        }
+        self.allocated_bytes += bytes;
+        Ok(())
+    }
+
+    pub fn free(&mut self, bytes: u64) {
+        self.allocated_bytes = self.allocated_bytes.saturating_sub(bytes);
+    }
+}
+
+/// The failure mode the paper hits for medium/large on 1g.5gb
+/// ("resulted in an out-of-memory error", §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OutOfMemory {
+    pub requested: u64,
+    pub free: u64,
+    pub capacity: u64,
+}
+
+impl std::fmt::Display for OutOfMemory {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "out of memory: requested {} B, free {} B of {} B",
+            self.requested, self.free, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for OutOfMemory {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::profile::MigProfile::*;
+
+    fn inst(p: MigProfile) -> GpuInstance {
+        let placement = Placement::new(p, p.placements()[0].0, p.placements()[0].1);
+        GpuInstance::new(InstanceId(0), placement)
+    }
+
+    #[test]
+    fn alloc_and_free() {
+        let mut gi = inst(P1g5gb);
+        gi.alloc(4_700_000_000).unwrap(); // resnet_small fits in 4.7 GB
+        assert_eq!(gi.free_bytes(), 300_000_000);
+        gi.free(4_700_000_000);
+        assert_eq!(gi.allocated_bytes, 0);
+    }
+
+    #[test]
+    fn medium_workload_ooms_on_1g5gb() {
+        // The paper's medium model wants ~10.4 GB given room, minimum
+        // beyond 5 GB -> OOM on the smallest instance.
+        let mut gi = inst(P1g5gb);
+        let err = gi.alloc(5_400_000_000).unwrap_err();
+        assert_eq!(err.capacity, 5_000_000_000);
+    }
+
+    #[test]
+    fn free_is_saturating() {
+        let mut gi = inst(P2g10gb);
+        gi.free(1);
+        assert_eq!(gi.allocated_bytes, 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Multi-Instance GPU (MIG) partition manager.
+//!
+//! Implements the A100-40GB MIG model exactly as described in §2.1 of the
+//! paper (and NVIDIA's MIG user guide): the GPU exposes **7 compute
+//! slices** (plus one reduced slice reserved for overhead) and **8 memory
+//! slices** of 5 GB each; profiles combine slices into GPU instances, and
+//! only certain placements of those profiles may coexist (paper Fig. 1:
+//! "horizontals can overlap, verticals cannot").
+
+pub mod a30;
+pub mod gpu;
+pub mod instance;
+pub mod placement;
+pub mod profile;
+
+pub use gpu::MigGpu;
+pub use instance::GpuInstance;
+pub use placement::{PartitionSet, Placement};
+pub use profile::MigProfile;

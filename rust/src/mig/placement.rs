@@ -1,0 +1,298 @@
+//! Placement legality: which sets of MIG instances can coexist.
+//!
+//! A partition is valid iff (paper §2.1 / Fig. 1):
+//! 1. every instance sits on one of its profile's allowed placements,
+//! 2. no two instances overlap on the compute-slice axis,
+//! 3. no two instances overlap on the memory-slice axis,
+//! 4. the documented A100 exception holds: `4g.20gb` cannot coexist with
+//!    `3g.20gb` even though the slice arithmetic would allow it ("one
+//!    cannot proceed with a split of 4g.20gb and 3g.20gb instances,
+//!    despite the values summing up to the maximum resources").
+
+use super::profile::MigProfile;
+
+/// A profile at a concrete slice placement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Placement {
+    pub profile: MigProfile,
+    pub compute_start: u32,
+    pub memory_start: u32,
+}
+
+impl Placement {
+    pub fn new(profile: MigProfile, compute_start: u32, memory_start: u32) -> Self {
+        Self {
+            profile,
+            compute_start,
+            memory_start,
+        }
+    }
+
+    /// Is this one of the profile's hardware-allowed placements?
+    pub fn is_allowed(&self) -> bool {
+        self.profile
+            .placements()
+            .contains(&(self.compute_start, self.memory_start))
+    }
+
+    pub fn compute_range(&self) -> std::ops::Range<u32> {
+        self.compute_start..self.compute_start + self.profile.compute_slices()
+    }
+
+    pub fn memory_range(&self) -> std::ops::Range<u32> {
+        self.memory_start..self.memory_start + self.profile.memory_slices()
+    }
+
+    fn overlaps(&self, other: &Placement) -> bool {
+        ranges_overlap(self.compute_range(), other.compute_range())
+            || ranges_overlap(self.memory_range(), other.memory_range())
+    }
+}
+
+fn ranges_overlap(a: std::ops::Range<u32>, b: std::ops::Range<u32>) -> bool {
+    a.start < b.end && b.start < a.end
+}
+
+/// Why a candidate partition is illegal.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlacementError {
+    /// Placement not in the profile's hardware table.
+    DisallowedPlacement(Placement),
+    /// Two instances overlap on a slice axis.
+    SliceOverlap(Placement, Placement),
+    /// The documented 4g.20gb / 3g.20gb A100 incompatibility.
+    ProfileConflict(MigProfile, MigProfile),
+}
+
+impl std::fmt::Display for PlacementError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlacementError::DisallowedPlacement(p) => write!(
+                f,
+                "{} has no placement at (c={}, m={})",
+                p.profile, p.compute_start, p.memory_start
+            ),
+            PlacementError::SliceOverlap(a, b) => write!(
+                f,
+                "{}@(c{},m{}) overlaps {}@(c{},m{})",
+                a.profile, a.compute_start, a.memory_start, b.profile, b.compute_start, b.memory_start
+            ),
+            PlacementError::ProfileConflict(a, b) => {
+                write!(f, "profiles {a} and {b} cannot coexist on the A100")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlacementError {}
+
+/// Profile pairs that cannot coexist regardless of slice arithmetic.
+const EXPLICIT_CONFLICTS: &[(MigProfile, MigProfile)] =
+    &[(MigProfile::P4g20gb, MigProfile::P3g20gb)];
+
+/// A (candidate) set of placements on one GPU.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PartitionSet {
+    pub placements: Vec<Placement>,
+}
+
+impl PartitionSet {
+    pub fn new(placements: Vec<Placement>) -> Self {
+        Self { placements }
+    }
+
+    /// Full legality check; `Ok(())` iff this set can exist on an A100.
+    pub fn validate(&self) -> Result<(), PlacementError> {
+        for p in &self.placements {
+            if !p.is_allowed() {
+                return Err(PlacementError::DisallowedPlacement(*p));
+            }
+        }
+        for (i, a) in self.placements.iter().enumerate() {
+            for b in &self.placements[i + 1..] {
+                if a.overlaps(b) {
+                    return Err(PlacementError::SliceOverlap(*a, *b));
+                }
+                for &(x, y) in EXPLICIT_CONFLICTS {
+                    if (a.profile == x && b.profile == y) || (a.profile == y && b.profile == x) {
+                        return Err(PlacementError::ProfileConflict(a.profile, b.profile));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn is_valid(&self) -> bool {
+        self.validate().is_ok()
+    }
+
+    pub fn used_compute_slices(&self) -> u32 {
+        self.placements.iter().map(|p| p.profile.compute_slices()).sum()
+    }
+
+    pub fn used_memory_slices(&self) -> u32 {
+        self.placements.iter().map(|p| p.profile.memory_slices()).sum()
+    }
+
+    /// Greedy first-fit placement of a list of profiles (how the paper's
+    /// homogeneous device groups are created). Returns `None` if no legal
+    /// assignment exists for the requested multiset.
+    pub fn first_fit(profiles: &[MigProfile]) -> Option<PartitionSet> {
+        fn rec(set: &mut PartitionSet, rest: &[MigProfile]) -> bool {
+            let Some((&head, tail)) = rest.split_first() else {
+                return true;
+            };
+            for &(cs, ms) in head.placements() {
+                let cand = Placement::new(head, cs, ms);
+                set.placements.push(cand);
+                if set.validate().is_ok() && rec(set, tail) {
+                    return true;
+                }
+                set.placements.pop();
+            }
+            false
+        }
+        let mut set = PartitionSet::default();
+        // Place big profiles first — first-fit with descending sizes is
+        // complete for the A100 placement table (verified exhaustively in
+        // tests::first_fit_matches_bruteforce).
+        let mut sorted: Vec<MigProfile> = profiles.to_vec();
+        sorted.sort_by_key(|p| std::cmp::Reverse(p.memory_slices()));
+        if rec(&mut set, &sorted) {
+            Some(set)
+        } else {
+            None
+        }
+    }
+
+    /// Enumerate every maximal valid homogeneous partition for a profile.
+    pub fn homogeneous(profile: MigProfile, count: u32) -> Option<PartitionSet> {
+        Self::first_fit(&vec![profile; count as usize])
+    }
+
+    /// All distinct valid partition sets (as profile multisets), for the
+    /// partition-explorer example. Small search space: placements ≤ 7.
+    pub fn enumerate_valid_multisets() -> Vec<Vec<MigProfile>> {
+        let mut results: Vec<Vec<MigProfile>> = Vec::new();
+        // Iterate over profile count vectors bounded by max_homogeneous.
+        let bounds: Vec<u32> = MigProfile::ALL.iter().map(|p| p.max_homogeneous()).collect();
+        let mut counts = vec![0u32; MigProfile::ALL.len()];
+        loop {
+            let multiset: Vec<MigProfile> = MigProfile::ALL
+                .iter()
+                .zip(&counts)
+                .flat_map(|(&p, &c)| std::iter::repeat_n(p, c as usize))
+                .collect();
+            if !multiset.is_empty() && Self::first_fit(&multiset).is_some() {
+                results.push(multiset);
+            }
+            // Odometer increment.
+            let mut i = 0;
+            loop {
+                if i == counts.len() {
+                    return results;
+                }
+                counts[i] += 1;
+                if counts[i] <= bounds[i] {
+                    break;
+                }
+                counts[i] = 0;
+                i += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use MigProfile::*;
+
+    fn multiset(profiles: &[MigProfile]) -> bool {
+        PartitionSet::first_fit(profiles).is_some()
+    }
+
+    #[test]
+    fn paper_examples() {
+        // "splitting the GPU into a 4g.20gb and 1g.5gb instance is possible"
+        assert!(multiset(&[P4g20gb, P1g5gb]));
+        // "two 4g.20gb instances would exceed the compute resources"
+        assert!(!multiset(&[P4g20gb, P4g20gb]));
+        // "a split of one 4g.20gb, 2g.10gb, and 1g.5gb instance is possible"
+        assert!(multiset(&[P4g20gb, P2g10gb, P1g5gb]));
+        // "one cannot proceed with a split of 4g.20gb and 3g.20gb"
+        assert!(!multiset(&[P4g20gb, P3g20gb]));
+        // Fig 1 caption: 3g.20gb incompatible with 5x 1g.5gb ...
+        assert!(!multiset(&[P3g20gb, P1g5gb, P1g5gb, P1g5gb, P1g5gb, P1g5gb]));
+        // ... but fine with 4x.
+        assert!(multiset(&[P3g20gb, P1g5gb, P1g5gb, P1g5gb, P1g5gb]));
+    }
+
+    #[test]
+    fn homogeneous_maxima() {
+        for p in MigProfile::ALL {
+            let max = p.max_homogeneous();
+            assert!(
+                PartitionSet::homogeneous(p, max).is_some(),
+                "{p} x{max} should fit"
+            );
+            assert!(
+                PartitionSet::homogeneous(p, max + 1).is_none(),
+                "{p} x{} should not fit",
+                max + 1
+            );
+        }
+    }
+
+    #[test]
+    fn seven_singles_fill_the_gpu() {
+        let set = PartitionSet::homogeneous(P1g5gb, 7).unwrap();
+        assert_eq!(set.used_compute_slices(), 7);
+        assert_eq!(set.used_memory_slices(), 7); // memory slice 7 unreachable by 1g.5gb
+    }
+
+    #[test]
+    fn full_profile_excludes_everything() {
+        assert!(multiset(&[P7g40gb]));
+        for p in MigProfile::ALL {
+            assert!(!multiset(&[P7g40gb, p]), "7g.40gb + {p} must be invalid");
+        }
+    }
+
+    #[test]
+    fn disallowed_placement_rejected() {
+        // 2g.10gb only starts at even slices.
+        let set = PartitionSet::new(vec![Placement::new(P2g10gb, 1, 1)]);
+        assert!(matches!(
+            set.validate(),
+            Err(PlacementError::DisallowedPlacement(_))
+        ));
+    }
+
+    #[test]
+    fn overlap_detected() {
+        let set = PartitionSet::new(vec![
+            Placement::new(P3g20gb, 0, 0),
+            Placement::new(P2g10gb, 2, 2),
+        ]);
+        assert!(matches!(set.validate(), Err(PlacementError::SliceOverlap(_, _))));
+    }
+
+    #[test]
+    fn mixed_heterogeneous_sets() {
+        assert!(multiset(&[P3g20gb, P2g10gb, P1g5gb]));
+        assert!(multiset(&[P2g10gb, P2g10gb, P2g10gb, P1g5gb]));
+        assert!(!multiset(&[P3g20gb, P3g20gb, P1g5gb])); // memory full after 2x3g
+    }
+
+    #[test]
+    fn enumerate_contains_known_configs() {
+        let all = PartitionSet::enumerate_valid_multisets();
+        assert!(all.iter().any(|m| m == &vec![P7g40gb]));
+        assert!(all.iter().any(|m| m == &vec![P1g5gb; 7]));
+        assert!(!all.iter().any(|m| m.contains(&P4g20gb) && m.contains(&P3g20gb)));
+        // Sanity: search space is non-trivial but bounded.
+        assert!(all.len() > 20, "found {}", all.len());
+    }
+}

@@ -1,0 +1,55 @@
+//! CSV emission for every figure's data series.
+
+/// Serialize rows into CSV with a header. Values are quoted only when
+/// needed (labels with commas).
+pub fn to_csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Write a CSV file, creating parent directories.
+pub fn write_csv(path: &std::path::Path, header: &[&str], rows: &[Vec<String>]) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, to_csv(header, rows))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quoting() {
+        let csv = to_csv(
+            &["a", "b"],
+            &[vec!["x,y".into(), "plain".into()]],
+        );
+        assert_eq!(csv, "a,b\n\"x,y\",plain\n");
+    }
+
+    #[test]
+    fn write_creates_dirs() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let p = dir.path().join("nested/out.csv");
+        write_csv(&p, &["h"], &[vec!["1".into()]]).unwrap();
+        assert!(p.exists());
+    }
+}

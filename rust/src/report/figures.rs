@@ -1,0 +1,413 @@
+//! One generator per paper figure. Each returns a rendered ASCII block
+//! plus CSV rows, produced from a set of `ExperimentResult`s (Figs 2–9)
+//! or real training records (Fig 10).
+
+use super::{csv, render};
+use crate::coordinator::matrix::find;
+use crate::coordinator::results::ExperimentResult;
+use crate::runtime::trainer::EpochRecord;
+use crate::workload::spec::WorkloadSize;
+
+/// A regenerated figure: its id, rendered text, CSV header and rows.
+#[derive(Debug, Clone)]
+pub struct Figure {
+    pub id: String,
+    pub text: String,
+    pub csv_header: Vec<&'static str>,
+    pub csv_rows: Vec<Vec<String>>,
+}
+
+impl Figure {
+    pub fn write_csv(&self, out_dir: &std::path::Path) -> anyhow::Result<()> {
+        csv::write_csv(
+            &out_dir.join(format!("{}.csv", self.id)),
+            &self.csv_header,
+            &self.csv_rows,
+        )
+    }
+}
+
+fn group_order() -> Vec<&'static str> {
+    vec![
+        "non-MIG",
+        "7g.40gb one",
+        "4g.20gb one",
+        "3g.20gb one",
+        "3g.20gb parallel",
+        "2g.10gb one",
+        "2g.10gb parallel",
+        "1g.5gb one",
+        "1g.5gb parallel",
+    ]
+}
+
+/// Figures 2 & 3: time per epoch per device group.
+pub fn fig_epoch_time(results: &[ExperimentResult], workload: WorkloadSize, id: &str) -> Figure {
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for label in group_order() {
+        if let Some(r) = find(results, workload, label) {
+            if r.completed() {
+                rows.push((label.to_string(), r.mean_epoch_seconds()));
+                csv_rows.push(vec![
+                    label.to_string(),
+                    format!("{:.2}", r.mean_epoch_seconds()),
+                    r.parallelism.to_string(),
+                ]);
+            } else {
+                csv_rows.push(vec![label.to_string(), "OOM".into(), r.parallelism.to_string()]);
+            }
+        }
+    }
+    Figure {
+        id: id.to_string(),
+        text: render::bar_chart(
+            &format!("Time per epoch — resnet_{} (s)", workload.name()),
+            &rows,
+            "s/epoch",
+        ),
+        csv_header: vec!["device_group", "seconds_per_epoch", "parallelism"],
+        csv_rows,
+    }
+}
+
+/// Figures 4–7: a DCGM metric at device and instance level.
+pub fn fig_dcgm(
+    results: &[ExperimentResult],
+    workload: WorkloadSize,
+    metric: &str,
+    id: &str,
+) -> Figure {
+    let get = |r: &ExperimentResult, instance: bool| -> Option<f64> {
+        let d = r.dcgm.as_ref()?;
+        if d.unavailable {
+            return None; // the paper's 4g.20gb DCGM gap
+        }
+        let f = if instance {
+            d.instances.first()?.fields
+        } else {
+            d.device.fields
+        };
+        Some(match metric {
+            "gract" => f.gract,
+            "smact" => f.smact,
+            "smocc" => f.smocc,
+            "drama" => f.drama,
+            _ => unreachable!("unknown metric {metric}"),
+        })
+    };
+
+    let mut device_rows = Vec::new();
+    let mut instance_rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for label in group_order() {
+        let Some(r) = find(results, workload, label) else { continue };
+        if !r.completed() {
+            continue;
+        }
+        match (get(r, false), get(r, true)) {
+            (Some(dev), Some(inst)) => {
+                device_rows.push((label.to_string(), dev * 100.0));
+                instance_rows.push((label.to_string(), inst * 100.0));
+                csv_rows.push(vec![
+                    label.to_string(),
+                    format!("{:.1}", dev * 100.0),
+                    format!("{:.1}", inst * 100.0),
+                ]);
+            }
+            _ => {
+                // DCGM unavailable (4g.20gb): row present, empty values.
+                csv_rows.push(vec![label.to_string(), String::new(), String::new()]);
+            }
+        }
+    }
+    let mut text = render::bar_chart(
+        &format!(
+            "Median {} — resnet_{} (device level, %)",
+            metric.to_uppercase(),
+            workload.name()
+        ),
+        &device_rows,
+        "%",
+    );
+    text.push_str(&render::bar_chart(
+        &format!(
+            "Median {} — resnet_{} (instance level, %)",
+            metric.to_uppercase(),
+            workload.name()
+        ),
+        &instance_rows,
+        "%",
+    ));
+    Figure {
+        id: id.to_string(),
+        text,
+        csv_header: vec!["device_group", "device_pct", "instance_pct"],
+        csv_rows,
+    }
+}
+
+/// Figure 8a: maximum allocated GPU memory per experiment.
+pub fn fig8a_gpu_memory(results: &[ExperimentResult]) -> Figure {
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for w in WorkloadSize::ALL {
+        for label in group_order() {
+            let Some(r) = find(results, w, label) else { continue };
+            let label_full = format!("{} {}", w.name(), label);
+            if r.completed() {
+                let per = r.gpu_memory[0] as f64 / 1e9;
+                rows.push((label_full.clone(), per * r.parallelism as f64));
+                csv_rows.push(vec![
+                    w.name().into(),
+                    label.into(),
+                    format!("{per:.1}"),
+                    format!("{:.1}", per * r.parallelism as f64),
+                ]);
+            } else {
+                csv_rows.push(vec![w.name().into(), label.into(), "OOM".into(), "OOM".into()]);
+            }
+        }
+    }
+    Figure {
+        id: "fig8a_gpu_memory".into(),
+        text: render::bar_chart("Max allocated GPU memory (GB, aggregate)", &rows, "GB"),
+        csv_header: vec!["workload", "device_group", "per_process_gb", "aggregate_gb"],
+        csv_rows,
+    }
+}
+
+/// Figure 8b: maximum aggregate host RES per experiment.
+pub fn fig8b_host_memory(results: &[ExperimentResult]) -> Figure {
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for w in WorkloadSize::ALL {
+        for label in group_order() {
+            let Some(r) = find(results, w, label) else { continue };
+            if !r.completed() {
+                continue;
+            }
+            let total = r.host.total_res_bytes() as f64 / 1e9;
+            rows.push((format!("{} {}", w.name(), label), total));
+            csv_rows.push(vec![w.name().into(), label.into(), format!("{total:.1}")]);
+        }
+    }
+    Figure {
+        id: "fig8b_host_memory".into(),
+        text: render::bar_chart("Max aggregate host RES (GB)", &rows, "GB"),
+        csv_header: vec!["workload", "device_group", "aggregate_res_gb"],
+        csv_rows,
+    }
+}
+
+/// Figure 9a: aggregate RES over time (epochs) for resnet_large.
+pub fn fig9a_res_over_time() -> Figure {
+    use crate::telemetry::host::res_series;
+    use crate::workload::memory::HostMemoryModel;
+    let m = HostMemoryModel::paper(WorkloadSize::Large);
+    let mut csv_rows = Vec::new();
+    let mut table_rows = Vec::new();
+    for (n_procs, label) in [(1u32, "7g.40gb one"), (2, "3g.20gb parallel"), (3, "2g.10gb parallel")] {
+        for (epoch, res) in res_series(&m, 5).iter().enumerate() {
+            let agg = *res as f64 * n_procs as f64 / 1e9;
+            csv_rows.push(vec![
+                label.into(),
+                epoch.to_string(),
+                format!("{agg:.1}"),
+            ]);
+            table_rows.push(vec![label.into(), epoch.to_string(), format!("{agg:.1}")]);
+        }
+    }
+    Figure {
+        id: "fig9a_res_over_time".into(),
+        text: render::table(
+            "Aggregate RES over epochs — resnet_large (GB)",
+            &["device_group", "epoch", "aggregate_res_gb"],
+            &table_rows,
+        ),
+        csv_header: vec!["device_group", "epoch", "aggregate_res_gb"],
+        csv_rows,
+    }
+}
+
+/// Figure 9b: average aggregate CPU utilization per experiment.
+pub fn fig9b_cpu(results: &[ExperimentResult]) -> Figure {
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for w in WorkloadSize::ALL {
+        for label in group_order() {
+            let Some(r) = find(results, w, label) else { continue };
+            if !r.completed() {
+                continue;
+            }
+            let pct = r.host.total_cpu_percent();
+            rows.push((format!("{} {}", w.name(), label), pct));
+            csv_rows.push(vec![w.name().into(), label.into(), format!("{pct:.0}")]);
+        }
+    }
+    Figure {
+        id: "fig9b_cpu".into(),
+        text: render::bar_chart("Average aggregate CPU utilization (%)", &rows, "%"),
+        csv_header: vec!["workload", "device_group", "cpu_percent"],
+        csv_rows,
+    }
+}
+
+/// Figure 10: training/validation accuracy over (simulated) time, from
+/// REAL training records produced by the PJRT runtime. `sim_epoch_s`
+/// maps record epochs onto the simulated wall clock of each instance.
+pub fn fig10_accuracy(
+    records_big: &[EpochRecord],
+    records_small: &[EpochRecord],
+    big_label: &str,
+    small_label: &str,
+    sim_epoch_big_s: f64,
+    sim_epoch_small_s: f64,
+    id: &str,
+) -> Figure {
+    let mut csv_rows = Vec::new();
+    let mut table_rows = Vec::new();
+    for (label, records, epoch_s) in [
+        (big_label, records_big, sim_epoch_big_s),
+        (small_label, records_small, sim_epoch_small_s),
+    ] {
+        for r in records {
+            let t = (r.epoch + 1) as f64 * epoch_s;
+            csv_rows.push(vec![
+                label.to_string(),
+                format!("{t:.1}"),
+                format!("{:.4}", r.train_acc),
+                format!("{:.4}", r.val_acc),
+                format!("{:.4}", r.train_loss),
+                format!("{:.4}", r.val_loss),
+            ]);
+            table_rows.push(vec![
+                label.to_string(),
+                format!("{t:.0}s"),
+                format!("{:.3}", r.train_acc),
+                format!("{:.3}", r.val_acc),
+            ]);
+        }
+    }
+    Figure {
+        id: id.to_string(),
+        text: render::table(
+            "Accuracy vs simulated time (real training via PJRT)",
+            &["instance", "sim_time", "train_acc", "val_acc"],
+            &table_rows,
+        ),
+        csv_header: vec!["instance", "sim_seconds", "train_acc", "val_acc", "train_loss", "val_loss"],
+        csv_rows,
+    }
+}
+
+/// The §4 headline summary: throughput + latency-penalty table.
+pub fn summary_table(results: &[ExperimentResult]) -> Figure {
+    let mut rows = Vec::new();
+    for w in WorkloadSize::ALL {
+        let full = find(results, w, "7g.40gb one");
+        let par1 = find(results, w, "1g.5gb parallel");
+        let par2 = find(results, w, "2g.10gb parallel");
+        if let Some(full) = full {
+            let base = full.mean_epoch_seconds();
+            for (name, par) in [("1g.5gb parallel", par1), ("2g.10gb parallel", par2)] {
+                if let Some(p) = par.filter(|p| p.completed()) {
+                    rows.push(vec![
+                        w.name().into(),
+                        name.into(),
+                        format!("{:.2}x", p.mean_epoch_seconds() / base),
+                        format!("{:.2}x", p.images_per_second / full.images_per_second),
+                    ]);
+                }
+            }
+        }
+    }
+    Figure {
+        id: "summary".into(),
+        text: render::table(
+            "Headline: latency penalty & aggregate throughput vs 7g.40gb one",
+            &["workload", "parallel group", "latency penalty", "throughput gain"],
+            &rows,
+        ),
+        csv_header: vec!["workload", "parallel_group", "latency_penalty", "throughput_gain"],
+        csv_rows: rows,
+    }
+}
+
+/// All figures that derive from the experiment matrix (Fig 10 needs the
+/// runtime and is produced by `examples/end_to_end_training.rs`).
+pub fn all_figures(results: &[ExperimentResult]) -> Vec<Figure> {
+    let mut figs = vec![
+        fig_epoch_time(results, WorkloadSize::Small, "fig2_small_epoch_time"),
+        fig_epoch_time(results, WorkloadSize::Medium, "fig3a_medium_epoch_time"),
+        fig_epoch_time(results, WorkloadSize::Large, "fig3b_large_epoch_time"),
+    ];
+    for (metric, fig) in [("gract", "fig4"), ("smact", "fig5"), ("smocc", "fig6"), ("drama", "fig7")] {
+        for w in WorkloadSize::ALL {
+            figs.push(fig_dcgm(results, w, metric, &format!("{fig}_{metric}_{}", w.name())));
+        }
+    }
+    figs.push(fig8a_gpu_memory(results));
+    figs.push(fig8b_host_memory(results));
+    figs.push(fig9a_res_over_time());
+    figs.push(fig9b_cpu(results));
+    figs.push(summary_table(results));
+    figs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::matrix::{paper_matrix, run_matrix};
+    use crate::simgpu::calibration::Calibration;
+
+    fn results() -> Vec<ExperimentResult> {
+        run_matrix(&paper_matrix(1), &Calibration::paper())
+    }
+
+    #[test]
+    fn all_figures_render() {
+        let rs = results();
+        let figs = all_figures(&rs);
+        // 3 epoch-time + 4 metrics x 3 workloads + 8a + 8b + 9a + 9b + summary.
+        assert_eq!(figs.len(), 3 + 12 + 5);
+        for f in &figs {
+            assert!(!f.text.is_empty(), "{}", f.id);
+            assert!(!f.csv_rows.is_empty(), "{}", f.id);
+        }
+    }
+
+    #[test]
+    fn fig2_contains_oom_free_small_rows() {
+        let rs = results();
+        let f = fig_epoch_time(&rs, WorkloadSize::Small, "fig2");
+        assert_eq!(f.csv_rows.len(), 9);
+        assert!(f.csv_rows.iter().all(|r| r[1] != "OOM"));
+    }
+
+    #[test]
+    fn fig3_marks_oom_cells() {
+        let rs = results();
+        let f = fig_epoch_time(&rs, WorkloadSize::Medium, "fig3a");
+        let ooms: Vec<_> = f.csv_rows.iter().filter(|r| r[1] == "OOM").collect();
+        assert_eq!(ooms.len(), 2); // 1g.5gb one + parallel
+    }
+
+    #[test]
+    fn dcgm_figures_skip_4g(/* the paper's DCGM gap */) {
+        let rs = results();
+        let f = fig_dcgm(&rs, WorkloadSize::Small, "gract", "fig4");
+        let row = f.csv_rows.iter().find(|r| r[0] == "4g.20gb one").unwrap();
+        assert!(row[1].is_empty());
+    }
+
+    #[test]
+    fn csv_write_all(/* smoke the file path */) {
+        let rs = results();
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        for f in all_figures(&rs) {
+            f.write_csv(dir.path()).unwrap();
+        }
+        assert!(dir.path().join("fig2_small_epoch_time.csv").exists());
+    }
+}

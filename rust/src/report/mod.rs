@@ -1,0 +1,8 @@
+//! Figure regeneration: every table and figure of the paper's evaluation
+//! as ASCII charts + CSV, from simulator results.
+
+pub mod csv;
+pub mod figures;
+pub mod render;
+
+pub use figures::all_figures;

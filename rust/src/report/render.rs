@@ -1,0 +1,84 @@
+//! Minimal ASCII chart rendering for terminal figure output.
+
+/// Render a horizontal bar chart. `rows` are (label, value); `fmt` turns
+/// a value into its printed form.
+pub fn bar_chart(title: &str, rows: &[(String, f64)], unit: &str) -> String {
+    let mut out = format!("== {title} ==\n");
+    let max = rows
+        .iter()
+        .map(|(_, v)| *v)
+        .fold(0.0_f64, f64::max)
+        .max(1e-12);
+    let width = 48usize;
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    for (label, value) in rows {
+        let n = ((value / max) * width as f64).round() as usize;
+        let bar: String = std::iter::repeat_n('█', n.min(width)).collect();
+        out.push_str(&format!(
+            "{label:<label_w$} | {bar:<width$} {value:>10.2} {unit}\n"
+        ));
+    }
+    out
+}
+
+/// Render a simple multi-series line plot as rows of (x, series values).
+pub fn table(title: &str, header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = format!("== {title} ==\n");
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:<w$}", w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bars_scale_to_max() {
+        let s = bar_chart(
+            "t",
+            &[("a".into(), 1.0), ("b".into(), 2.0)],
+            "s",
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert!(lines[1].matches('█').count() < lines[2].matches('█').count());
+    }
+
+    #[test]
+    fn empty_chart_no_panic() {
+        let s = bar_chart("t", &[], "s");
+        assert!(s.contains("== t =="));
+    }
+
+    #[test]
+    fn table_aligns() {
+        let s = table(
+            "t",
+            &["name", "v"],
+            &[vec!["x".into(), "1".into()], vec!["longer".into(), "2".into()]],
+        );
+        assert!(s.contains("longer"));
+    }
+}

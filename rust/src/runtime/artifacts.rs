@@ -1,0 +1,258 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parsed with the in-tree JSON module.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Files emitted for one model variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantFiles {
+    pub train_step: String,
+    pub eval_step: String,
+    pub init_params: String,
+}
+
+/// Per-variant metadata from `manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantManifest {
+    pub variant: String,
+    pub depth: u32,
+    pub stage_blocks: Vec<u32>,
+    pub base_width: u32,
+    pub param_count: u64,
+    pub batch_size: u32,
+    pub input_size: u32,
+    pub num_classes: u32,
+    pub files: VariantFiles,
+    pub params_sha256: String,
+}
+
+/// Full-width (paper-scale) model facts for the inventory parity test.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FullWidthInfo {
+    pub depth: u32,
+    pub param_count: u64,
+    pub stage_blocks: Vec<u32>,
+    pub base_width: u32,
+    pub input_size: u32,
+    pub num_classes: u32,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub jax_version: String,
+    pub variants: BTreeMap<String, VariantManifest>,
+    pub full_width: BTreeMap<String, FullWidthInfo>,
+}
+
+fn req<'a>(j: &'a Json, key: &str, ctx: &str) -> anyhow::Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| anyhow::anyhow!("manifest: missing '{key}' in {ctx}"))
+}
+
+fn req_u64(j: &Json, key: &str, ctx: &str) -> anyhow::Result<u64> {
+    req(j, key, ctx)?
+        .as_u64()
+        .ok_or_else(|| anyhow::anyhow!("manifest: '{key}' in {ctx} not an integer"))
+}
+
+fn req_str(j: &Json, key: &str, ctx: &str) -> anyhow::Result<String> {
+    Ok(req(j, key, ctx)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("manifest: '{key}' in {ctx} not a string"))?
+        .to_string())
+}
+
+fn u32_list(j: &Json, key: &str, ctx: &str) -> anyhow::Result<Vec<u32>> {
+    req(j, key, ctx)?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("manifest: '{key}' in {ctx} not an array"))?
+        .iter()
+        .map(|v| {
+            v.as_u32()
+                .ok_or_else(|| anyhow::anyhow!("manifest: '{key}' element not u32"))
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(data: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(data).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut variants = BTreeMap::new();
+        for (name, v) in req(&j, "variants", "root")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest: 'variants' not an object"))?
+        {
+            let files = req(v, "files", name)?;
+            variants.insert(
+                name.clone(),
+                VariantManifest {
+                    variant: req_str(v, "variant", name)?,
+                    depth: req_u64(v, "depth", name)? as u32,
+                    stage_blocks: u32_list(v, "stage_blocks", name)?,
+                    base_width: req_u64(v, "base_width", name)? as u32,
+                    param_count: req_u64(v, "param_count", name)?,
+                    batch_size: req_u64(v, "batch_size", name)? as u32,
+                    input_size: req_u64(v, "input_size", name)? as u32,
+                    num_classes: req_u64(v, "num_classes", name)? as u32,
+                    files: VariantFiles {
+                        train_step: req_str(files, "train_step", name)?,
+                        eval_step: req_str(files, "eval_step", name)?,
+                        init_params: req_str(files, "init_params", name)?,
+                    },
+                    params_sha256: req_str(v, "params_sha256", name)?,
+                },
+            );
+        }
+        let mut full_width = BTreeMap::new();
+        if let Some(fw) = j.get("full_width").and_then(Json::as_obj) {
+            for (name, v) in fw {
+                full_width.insert(
+                    name.clone(),
+                    FullWidthInfo {
+                        depth: req_u64(v, "depth", name)? as u32,
+                        param_count: req_u64(v, "param_count", name)?,
+                        stage_blocks: u32_list(v, "stage_blocks", name)?,
+                        base_width: req_u64(v, "base_width", name)? as u32,
+                        input_size: req_u64(v, "input_size", name)? as u32,
+                        num_classes: req_u64(v, "num_classes", name)? as u32,
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            jax_version: req_str(&j, "jax_version", "root")?,
+            variants,
+            full_width,
+        })
+    }
+}
+
+/// The on-disk artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl ArtifactStore {
+    /// Open `dir` and parse its manifest.
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {}: {e} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&data)?;
+        Ok(Self { dir, manifest })
+    }
+
+    /// Default location relative to the repo root / current dir.
+    pub fn open_default() -> anyhow::Result<Self> {
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            if Path::new(cand).join("manifest.json").exists() {
+                return Self::open(cand);
+            }
+        }
+        Self::open("artifacts")
+    }
+
+    pub fn variant(&self, name: &str) -> anyhow::Result<&VariantManifest> {
+        self.manifest
+            .variants
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("variant '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Load the initial raveled parameter vector (little-endian f32).
+    pub fn load_init_params(&self, v: &VariantManifest) -> anyhow::Result<Vec<f32>> {
+        let raw = std::fs::read(self.dir.join(&v.files.init_params))?;
+        anyhow::ensure!(
+            raw.len() == v.param_count as usize * 4,
+            "param file size {} != 4 * {}",
+            raw.len(),
+            v.param_count
+        );
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tempdir::TempDir;
+
+    fn fake_manifest_json() -> String {
+        r#"{
+          "jax_version": "0.8.2",
+          "generator": "test",
+          "variants": {
+            "small": {
+              "variant": "small", "depth": 26, "stage_blocks": [2,2,2,2],
+              "base_width": 16, "param_count": 2, "batch_size": 32,
+              "input_size": 32, "num_classes": 10, "seed": 0,
+              "files": {"train_step": "t.hlo.txt", "eval_step": "e.hlo.txt",
+                        "init_params": "p.bin"},
+              "params_sha256": "x"
+            }
+          },
+          "full_width": {
+            "small": {"depth": 26, "param_count": 100, "stage_blocks": [2,2,2,2],
+                      "base_width": 64, "input_size": 32, "num_classes": 10}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_and_load_params() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(dir.path().join("manifest.json"), fake_manifest_json()).unwrap();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&1.5f32.to_le_bytes());
+        bytes.extend_from_slice(&(-2.0f32).to_le_bytes());
+        std::fs::write(dir.path().join("p.bin"), &bytes).unwrap();
+
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        let v = store.variant("small").unwrap();
+        assert_eq!(v.depth, 26);
+        assert_eq!(v.stage_blocks, vec![2, 2, 2, 2]);
+        let p = store.load_init_params(v).unwrap();
+        assert_eq!(p, vec![1.5, -2.0]);
+        assert!(store.variant("huge").is_err());
+        assert_eq!(store.manifest.full_width["small"].param_count, 100);
+    }
+
+    #[test]
+    fn param_size_mismatch_rejected() {
+        let dir = TempDir::new().unwrap();
+        std::fs::write(dir.path().join("manifest.json"), fake_manifest_json()).unwrap();
+        std::fs::write(dir.path().join("p.bin"), [0u8; 7]).unwrap();
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        let v = store.variant("small").unwrap().clone();
+        assert!(store.load_init_params(&v).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let err = ArtifactStore::open("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn missing_key_reported() {
+        let err = Manifest::parse(r#"{"variants": {"x": {"depth": 1}}}"#).unwrap_err();
+        assert!(err.to_string().contains("missing"), "{err}");
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and run real training
+//! steps from Rust — Python is never on this path.
+//!
+//! * [`artifacts`] — `artifacts/manifest.json` index + initial parameters.
+//! * [`pjrt`] — thin wrapper over the `xla` crate (PJRT CPU client).
+//! * [`prefetch`] — bounded-queue batch prefetching (the Rust mirror of
+//!   the paper's `ImageDataGenerator(workers, max_queue_size)`).
+//! * [`trainer`] — the training loop: feeds prefetched batches through
+//!   the compiled `train_step`/`eval_step` executables and records loss
+//!   / accuracy trajectories (Fig 10 and the E2E example).
+
+pub mod artifacts;
+pub mod pjrt;
+pub mod prefetch;
+pub mod trainer;
+
+pub use artifacts::{ArtifactStore, VariantManifest};
+pub use pjrt::PjrtRuntime;
+pub use trainer::{EpochRecord, Trainer, TrainerConfig};

@@ -1,0 +1,111 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `execute`. Executables are compiled once per
+//! artifact and cached; the train loop runs `execute` only.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled-executable cache on one PJRT client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime")
+            .field("platform", &self.platform())
+            .field("cached_executables", &self.executables.len())
+            .finish()
+    }
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Self {
+            client,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an HLO text artifact, memoised by path.
+    pub fn load_hlo(&mut self, path: impl AsRef<Path>) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        let key = path.as_ref().display().to_string();
+        if !self.executables.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(&key)
+                .map_err(|e| anyhow::anyhow!("parse HLO text {key}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {key}: {e}"))?;
+            self.executables.insert(key.clone(), exe);
+        }
+        Ok(&self.executables[&key])
+    }
+
+    /// Copy a host f32 slice into a device buffer of the given shape.
+    pub fn to_device(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("h2d: {e}"))
+    }
+
+    /// Copy a host i32 slice into a device buffer of the given shape.
+    pub fn to_device_i32(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow::anyhow!("h2d: {e}"))
+    }
+
+    /// Execute with device-resident inputs; returns the flat output
+    /// buffer list (PJRT untuples `return_tuple=True` results, but we
+    /// also handle a single tuple buffer defensively).
+    pub fn execute(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::PjRtBuffer],
+    ) -> anyhow::Result<Vec<xla::PjRtBuffer>> {
+        let out = exe
+            .execute_b(args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let row = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("execute returned no replica outputs"))?;
+        Ok(row)
+    }
+
+    /// Read a scalar f32 result from an output buffer (possibly a tuple
+    /// element literal).
+    pub fn scalar_f32(buf: &xla::PjRtBuffer) -> anyhow::Result<f32> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("d2h: {e}"))?;
+        Ok(lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("scalar: {e}"))?[0])
+    }
+
+    /// Read a scalar i32 result.
+    pub fn scalar_i32(buf: &xla::PjRtBuffer) -> anyhow::Result<i32> {
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("d2h: {e}"))?;
+        Ok(lit
+            .to_vec::<i32>()
+            .map_err(|e| anyhow::anyhow!("scalar: {e}"))?[0])
+    }
+}

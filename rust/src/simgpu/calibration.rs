@@ -1,0 +1,72 @@
+//! Calibration constants for the A100 simulator.
+//!
+//! Methodology (DESIGN.md §5): the *absolute* anchors below are fit once
+//! against two numbers the paper reports — 16.1 s/epoch for resnet_small
+//! on `7g.40gb` and 35.4 min/epoch for resnet_medium on `7g.40gb` — and
+//! then frozen. Every ratio, ordering and crossover in EXPERIMENTS.md
+//! (the actual reproduction targets) emerges from the occupancy/roofline
+//! model, not from these constants.
+
+
+/// Tunable efficiency factors of the simulated device + framework stack.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    /// Achievable fraction of tensor-core peak for implicit-GEMM convs.
+    /// cuDNN on A100 sustains 35–55 % of TF32 peak on ResNet-sized
+    /// convolutions; TF2.7's kernel mix lands near the low end.
+    pub gemm_efficiency: f64,
+    /// Achievable fraction of fp32 peak for elementwise/BN kernels (they
+    /// are effectively memory bound; this bounds the compute leg only).
+    pub elementwise_efficiency: f64,
+    /// Achievable fraction of peak DRAM bandwidth (STREAM-style).
+    pub bandwidth_efficiency: f64,
+    /// Host-side gap between kernels in seconds (TF op dispatch + launch
+    /// submit). Scales the GRACT idle share of short-kernel workloads.
+    pub dispatch_gap_s: f64,
+    /// Extra per-kernel DRAM access latency per *missing* memory-slice
+    /// share: an instance with s of 8 slices sees fewer interleaved HBM
+    /// channels, so each kernel pays `mem_latency_s * (8/s - 1)` of
+    /// additional latency. This is the second mechanism (besides wave
+    /// quantization) behind the paper's sublinear small-instance
+    /// slowdown (1g.5gb only 2.47x slower on 1/7 the resources).
+    pub mem_latency_s: f64,
+    /// Fixed per-step framework overhead (s): Python loop iteration,
+    /// `tf.data` hand-off, gradient-tape bookkeeping.
+    pub step_overhead_s: f64,
+    /// Fixed per-epoch overhead (s): shuffle, progress bar, callbacks.
+    pub epoch_overhead_s: f64,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Self {
+            gemm_efficiency: 0.60,
+            elementwise_efficiency: 0.10,
+            bandwidth_efficiency: 0.82,
+            dispatch_gap_s: 16.0e-6,
+            mem_latency_s: 1.5e-6,
+            step_overhead_s: 550.0e-6,
+            epoch_overhead_s: 1.2,
+        }
+    }
+}
+
+impl Calibration {
+    /// Calibration used by all experiments (frozen after the fit).
+    pub fn paper() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_in_physical_range() {
+        let c = Calibration::default();
+        assert!(c.gemm_efficiency > 0.0 && c.gemm_efficiency < 1.0);
+        assert!(c.bandwidth_efficiency > 0.5 && c.bandwidth_efficiency <= 1.0);
+        assert!(c.dispatch_gap_s > 0.0 && c.dispatch_gap_s < 1e-3);
+    }
+}

@@ -1,0 +1,136 @@
+//! Kernel descriptors and step traces.
+//!
+//! A [`KernelDesc`] is the unit of simulated GPU work: one CUDA-style
+//! kernel launch with a grid of thread blocks, a FLOP count and a DRAM
+//! byte count. [`crate::workload::resnet`] derives one trace per training
+//! step from the exact layer inventory of the paper's models.
+
+
+/// What functional role a kernel plays — determines which pipe (tensor
+/// core vs CUDA core) its FLOPs run on and its occupancy profile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelClass {
+    /// Implicit-GEMM convolution / dense layer (tensor-core pipe).
+    Gemm,
+    /// Elementwise / batch-norm / reduction (CUDA-core pipe, memory bound).
+    Elementwise,
+    /// Optimizer update sweep over parameters (memory bound).
+    Optimizer,
+    /// Host-to-device input copy (PCIe/NVLink staged through DRAM).
+    MemcpyH2D,
+}
+
+/// One simulated kernel launch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDesc {
+    /// Interned layer label (e.g. "s2.b3.conv2.wgrad") — diagnostics only.
+    pub name: &'static str,
+    pub class: KernelClass,
+    /// Floating-point operations performed by the whole grid.
+    pub flops: f64,
+    /// Bytes moved to/from DRAM by the whole grid (post-L2 estimate).
+    pub dram_bytes: f64,
+    /// Thread blocks in the launch grid.
+    pub grid_blocks: u64,
+    /// Warps per thread block (threads / 32).
+    pub warps_per_block: u32,
+    /// Max co-resident blocks per SM (register/smem occupancy limit).
+    pub blocks_per_sm: u32,
+    /// Shape-dependent achievable-efficiency scale on the compute leg
+    /// (tensor-core tiles starve on small GEMM rows; 1.0 = full).
+    pub arith_scale: f64,
+}
+
+impl KernelDesc {
+    /// Sanity: a kernel must do *something* and be launchable.
+    pub fn is_well_formed(&self) -> bool {
+        self.grid_blocks > 0
+            && self.warps_per_block > 0
+            && self.blocks_per_sm > 0
+            && self.flops >= 0.0
+            && self.dram_bytes >= 0.0
+            && (self.flops > 0.0 || self.dram_bytes > 0.0)
+    }
+
+    /// Arithmetic intensity (FLOP/byte) — drives roofline classification.
+    pub fn intensity(&self) -> f64 {
+        if self.dram_bytes == 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops / self.dram_bytes
+        }
+    }
+}
+
+/// The kernel sequence of one training step (fwd + bwd + optimizer),
+/// replayed for every batch of the simulated run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StepTrace {
+    pub kernels: Vec<KernelDesc>,
+}
+
+impl StepTrace {
+    pub fn total_flops(&self) -> f64 {
+        self.kernels.iter().map(|k| k.flops).sum()
+    }
+
+    pub fn total_dram_bytes(&self) -> f64 {
+        self.kernels.iter().map(|k| k.dram_bytes).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.kernels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kernels.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gemm() -> KernelDesc {
+        KernelDesc {
+            name: "test.gemm",
+            class: KernelClass::Gemm,
+            flops: 1e9,
+            dram_bytes: 1e6,
+            grid_blocks: 64,
+            warps_per_block: 8,
+            blocks_per_sm: 2,
+            arith_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn well_formedness() {
+        assert!(gemm().is_well_formed());
+        let mut k = gemm();
+        k.grid_blocks = 0;
+        assert!(!k.is_well_formed());
+        let mut k = gemm();
+        k.flops = 0.0;
+        k.dram_bytes = 0.0;
+        assert!(!k.is_well_formed());
+    }
+
+    #[test]
+    fn intensity() {
+        assert!((gemm().intensity() - 1000.0).abs() < 1e-9);
+        let mut k = gemm();
+        k.dram_bytes = 0.0;
+        assert!(k.intensity().is_infinite());
+    }
+
+    #[test]
+    fn trace_totals() {
+        let t = StepTrace {
+            kernels: vec![gemm(), gemm()],
+        };
+        assert_eq!(t.total_flops(), 2e9);
+        assert_eq!(t.total_dram_bytes(), 2e6);
+        assert_eq!(t.len(), 2);
+    }
+}

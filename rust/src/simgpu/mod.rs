@@ -1,0 +1,28 @@
+//! Occupancy-aware A100 simulator — the hardware substrate the paper's
+//! study runs on (substitution for the real DGX Station A100, DESIGN.md §1).
+//!
+//! The model is kernel-grained: a training step is a trace of GPU kernels
+//! (produced from exact ResNet layer inventories in [`crate::workload`]);
+//! each kernel is timed with a roofline bounded by *effective* SMs — the
+//! SMs a kernel can actually occupy given its grid size and per-SM block
+//! occupancy. This is the mechanism behind every headline result of the
+//! paper:
+//!
+//! * small workloads launch small grids → big instances run mostly empty
+//!   SMs → sublinear slowdown on small instances (Fig 2) and low
+//!   SMACT/SMOCC on `7g.40gb` (Figs 5, 6);
+//! * MIG instances own disjoint slices → zero interference (Fig 2/3);
+//! * MIG mode hides 10 of 108 SMs → non-MIG is 0.7–2.9 % faster (§4.1).
+
+pub mod calibration;
+pub mod engine;
+pub mod kernel;
+pub mod mps;
+pub mod occupancy;
+pub mod roofline;
+pub mod spec;
+pub mod timeslice;
+
+pub use engine::{InstanceResources, SimEngine, StepStats};
+pub use kernel::{KernelClass, KernelDesc, StepTrace};
+pub use spec::A100;

@@ -1,0 +1,112 @@
+//! Baseline co-location strategy: **CUDA MPS-style spatial sharing**.
+//!
+//! MPS lets processes submit kernels into one shared context so they can
+//! run concurrently, but — unlike MIG — without SM, L2 or bandwidth
+//! isolation. We model each of `n` identical co-runners as receiving a
+//! fair share of SMs while contending for the full-device bandwidth with
+//! a contention inflation on the memory leg. This sits between
+//! time-slicing (worst) and MIG (no interference) in the ablation bench.
+
+use super::engine::{InstanceResources, SimEngine, StepStats};
+use super::kernel::StepTrace;
+use super::roofline::time_kernel;
+
+/// Extra queueing inflation on the memory roofline leg when `n` uncoordinated
+/// clients share the DRAM controllers (measured MPS behaviour is a few
+/// percent per added client for bandwidth-heavy mixes).
+pub const BW_CONTENTION_PER_CLIENT: f64 = 0.05;
+
+/// Simulate one process's step under `n_procs`-way MPS sharing.
+pub fn mps_step(
+    engine: &SimEngine,
+    trace: &StepTrace,
+    n_procs: u32,
+    input_wait_s: f64,
+) -> StepStats {
+    let n = n_procs.max(1);
+    // Fair SM share, full bandwidth *capacity* but contended.
+    let sms = (engine.spec.sm_count / n).max(1);
+    let res = InstanceResources {
+        sms,
+        mem_slices: engine.spec.memory_slices,
+        mig: false, // MPS shares one non-MIG context
+    };
+    let contention = 1.0 + BW_CONTENTION_PER_CLIENT * (n - 1) as f64;
+
+    let mut s = StepStats::default();
+    for k in &trace.kernels {
+        let t = time_kernel(k, res.sms, res.mem_slices, &engine.spec, &engine.cal);
+        // Memory-bound kernels pay the contention inflation; with n
+        // clients the *per-client* bandwidth is also 1/n on average.
+        let busy = if t.memory_bound {
+            t.busy_s * contention * n as f64
+        } else {
+            t.busy_s * (1.0 + 0.5 * BW_CONTENTION_PER_CLIENT * (n - 1) as f64)
+        };
+        s.busy_s += busy;
+        s.smact_integral += busy * t.occupancy.sm_active_frac;
+        s.smocc_integral += busy * t.occupancy.warp_frac;
+        s.dram_bytes += t.dram_bytes;
+        s.flops += k.flops;
+    }
+    s.kernels = trace.kernels.len() as u64;
+    s.wall_s = s.busy_s
+        + engine.cal.dispatch_gap_s * trace.kernels.len() as f64
+        + engine.cal.step_overhead_s
+        + input_wait_s;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::calibration::Calibration;
+    use crate::simgpu::kernel::{KernelClass, KernelDesc};
+    use crate::simgpu::spec::A100;
+
+    fn trace(grid: u64) -> StepTrace {
+        StepTrace {
+            kernels: (0..40)
+                .map(|_| KernelDesc {
+                    name: "k",
+                    class: KernelClass::Gemm,
+                    flops: 2e9,
+                    dram_bytes: 6e6,
+                    grid_blocks: grid,
+                    warps_per_block: 8,
+                    blocks_per_sm: 2,
+                    arith_scale: 1.0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn solo_mps_close_to_isolated() {
+        let e = SimEngine::new(A100, Calibration::default());
+        let iso = e.run_step(&trace(400), InstanceResources::non_mig(&A100), 0.0);
+        let mps = mps_step(&e, &trace(400), 1, 0.0);
+        assert!((mps.wall_s / iso.wall_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mps_degrades_with_clients_but_less_than_timeslicing() {
+        let e = SimEngine::new(A100, Calibration::default());
+        let solo = mps_step(&e, &trace(400), 1, 0.0).wall_s;
+        let n = 3;
+        let shared = mps_step(&e, &trace(400), n, 0.0).wall_s;
+        let ts = super::super::timeslice::timeslice_step(&e, &trace(400), n, 0.0).wall_s;
+        assert!(shared > solo, "sharing must cost something");
+        assert!(shared < ts, "MPS must beat time-slicing");
+    }
+
+    #[test]
+    fn small_grids_suffer_less_from_sm_split() {
+        // A 30-block kernel can't use 108 SMs anyway — splitting SMs 3
+        // ways barely hurts it; a 3000-block kernel slows ~3x.
+        let e = SimEngine::new(A100, Calibration::default());
+        let small_ratio = mps_step(&e, &trace(30), 3, 0.0).wall_s / mps_step(&e, &trace(30), 1, 0.0).wall_s;
+        let big_ratio = mps_step(&e, &trace(3000), 3, 0.0).wall_s / mps_step(&e, &trace(3000), 1, 0.0).wall_s;
+        assert!(small_ratio < big_ratio);
+    }
+}

@@ -1,0 +1,156 @@
+//! SM occupancy model — how many SMs a kernel *actually* keeps busy.
+//!
+//! This is the mechanism behind the paper's central observation: there is
+//! no 1:1 relationship between instance size and training time (§4.1),
+//! because small workloads launch grids with too few blocks to fill 98
+//! SMs, while a 14-SM instance stays nearly full.
+
+use super::kernel::KernelDesc;
+use super::spec::GpuSpec;
+
+/// Execution shape of one kernel on an instance with `sms` SMs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Occupancy {
+    /// Number of full+partial waves needed to drain the grid.
+    pub waves: u64,
+    /// Time-averaged fraction of SMs with >= 1 resident block (SMACT
+    /// contribution of this kernel while it runs).
+    pub sm_active_frac: f64,
+    /// Time-averaged fraction of block *slots* filled (throughput scale:
+    /// compute time divides by `slot_frac * sms`).
+    pub slot_frac: f64,
+    /// Time-averaged resident warps per SM / max warps (SMOCC
+    /// contribution of this kernel while it runs).
+    pub warp_frac: f64,
+}
+
+/// Compute the occupancy of `kernel` on `sms` SMs.
+///
+/// The grid drains in waves of `sms * blocks_per_sm` blocks. Full waves
+/// keep every SM busy at full block occupancy; the final partial wave
+/// spreads its `r` remaining blocks across `ceil(r / blocks_per_sm)` SMs
+/// (the driver packs blocks onto as few SMs as needed once the grid is
+/// nearly drained — the tail effect).
+#[inline]
+pub fn occupancy(kernel: &KernelDesc, sms: u32, spec: &GpuSpec) -> Occupancy {
+    let sms = sms.max(1) as u64;
+    let bps = kernel.blocks_per_sm.max(1) as u64;
+    let slots_per_wave = sms * bps;
+    let g = kernel.grid_blocks.max(1);
+
+    let full_waves = g / slots_per_wave;
+    let rem = g % slots_per_wave;
+    let waves = full_waves + (rem > 0) as u64;
+
+    // Per-wave accounting. Every wave is assumed to take ~equal time
+    // (blocks of one kernel are uniform).
+    let mut active_sum = 0.0; // Σ over waves of active-SM fraction
+    let mut slot_sum = 0.0; // Σ over waves of filled-slot fraction
+    let mut warp_sum = 0.0; // Σ over waves of resident-warp fraction
+    let warps_per_sm_full = (bps * kernel.warps_per_block as u64) as f64;
+    let max_warps = spec.max_warps_per_sm as f64;
+
+    if full_waves > 0 {
+        let f = full_waves as f64;
+        active_sum += f * 1.0;
+        slot_sum += f * 1.0;
+        warp_sum += f * (warps_per_sm_full / max_warps).min(1.0);
+    }
+    if rem > 0 {
+        let sms_used = rem.div_ceil(bps).min(sms) as f64;
+        active_sum += sms_used / sms as f64;
+        slot_sum += rem as f64 / slots_per_wave as f64;
+        // Tail blocks still run at `bps` per active SM (roughly).
+        let warps_per_active_sm =
+            (rem as f64 / sms_used) * kernel.warps_per_block as f64;
+        warp_sum += (sms_used / sms as f64) * (warps_per_active_sm / max_warps).min(1.0);
+    }
+
+    let w = waves as f64;
+    Occupancy {
+        waves,
+        sm_active_frac: active_sum / w,
+        slot_frac: slot_sum / w,
+        warp_frac: warp_sum / w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::kernel::KernelClass;
+    use crate::simgpu::spec::A100;
+
+    fn k(grid: u64, bps: u32, warps: u32) -> KernelDesc {
+        KernelDesc {
+            name: "t",
+            class: KernelClass::Gemm,
+            flops: 1.0,
+            dram_bytes: 1.0,
+            grid_blocks: grid,
+            warps_per_block: warps,
+            blocks_per_sm: bps,
+            arith_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn exact_fill_is_perfect() {
+        // 98 SMs * 2 blocks = 196 blocks fill exactly.
+        let o = occupancy(&k(196, 2, 8), 98, &A100);
+        assert_eq!(o.waves, 1);
+        assert_eq!(o.sm_active_frac, 1.0);
+        assert_eq!(o.slot_frac, 1.0);
+    }
+
+    #[test]
+    fn tiny_grid_starves_big_instance() {
+        // 14 blocks on 98 SMs: 14% of SMs active.
+        let o = occupancy(&k(14, 1, 8), 98, &A100);
+        assert_eq!(o.waves, 1);
+        assert!((o.sm_active_frac - 14.0 / 98.0).abs() < 1e-12);
+        // Same grid on a 14-SM instance: fully active.
+        let o1 = occupancy(&k(14, 1, 8), 14, &A100);
+        assert_eq!(o1.sm_active_frac, 1.0);
+    }
+
+    #[test]
+    fn tail_wave_dilutes_utilization() {
+        // 197 blocks on 98 SMs x 2: one full wave + 1 tail block.
+        let o = occupancy(&k(197, 2, 8), 98, &A100);
+        assert_eq!(o.waves, 2);
+        assert!(o.slot_frac < 1.0 && o.slot_frac > 0.5);
+        assert!(o.sm_active_frac < 1.0);
+    }
+
+    #[test]
+    fn more_sms_never_lowers_throughput_scale() {
+        // slot_frac * sms (effective parallelism) must be monotone in sms.
+        let kd = k(1000, 2, 8);
+        let mut last = 0.0;
+        for sms in [7, 14, 28, 42, 56, 98, 108] {
+            let o = occupancy(&kd, sms, &A100);
+            let eff = o.slot_frac * sms as f64;
+            assert!(
+                eff >= last - 1e-9,
+                "eff {eff} < {last} at {sms} SMs"
+            );
+            last = eff;
+        }
+    }
+
+    #[test]
+    fn warp_frac_bounded() {
+        for grid in [1, 13, 196, 1000, 100_000] {
+            let o = occupancy(&k(grid, 4, 16), 98, &A100);
+            assert!(o.warp_frac > 0.0 && o.warp_frac <= 1.0);
+        }
+    }
+
+    #[test]
+    fn huge_grid_saturates() {
+        let o = occupancy(&k(1_000_000, 2, 8), 98, &A100);
+        assert!(o.sm_active_frac > 0.999);
+        assert!(o.slot_frac > 0.999);
+    }
+}

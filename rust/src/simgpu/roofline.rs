@@ -1,0 +1,134 @@
+//! Roofline timing of a single kernel on a GPU instance.
+
+use super::calibration::Calibration;
+use super::kernel::{KernelClass, KernelDesc};
+use super::occupancy::{occupancy, Occupancy};
+use super::spec::GpuSpec;
+
+/// Timed execution of one kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelTiming {
+    /// Kernel busy time on the instance (s), excluding dispatch gaps.
+    pub busy_s: f64,
+    /// Whether the memory side of the roofline bound this kernel.
+    pub memory_bound: bool,
+    pub occupancy: Occupancy,
+    /// DRAM bytes (carried through for DRAMA accounting).
+    pub dram_bytes: f64,
+}
+
+/// Time `kernel` on an instance with `sms` SMs and `mem_slices` memory
+/// slices (of `spec.memory_slices`).
+///
+/// `t_compute` scales with the *effective* parallelism `slot_frac * sms`
+/// from the occupancy model, times the per-class peak and a calibrated
+/// achievable-efficiency factor. `t_memory` scales with the instance's
+/// bandwidth share. The kernel takes the max of the two plus the fixed
+/// launch cost.
+#[inline]
+pub fn time_kernel(
+    kernel: &KernelDesc,
+    sms: u32,
+    mem_slices: u32,
+    spec: &GpuSpec,
+    cal: &Calibration,
+) -> KernelTiming {
+    debug_assert!(kernel.is_well_formed(), "malformed kernel {kernel:?}");
+    let occ = occupancy(kernel, sms, spec);
+
+    let (peak_per_sm, eff) = match kernel.class {
+        KernelClass::Gemm => (spec.tc_flops_per_sm, cal.gemm_efficiency),
+        KernelClass::Elementwise => (spec.fp32_flops_per_sm, cal.elementwise_efficiency),
+        KernelClass::Optimizer => (spec.fp32_flops_per_sm, cal.elementwise_efficiency),
+        KernelClass::MemcpyH2D => (spec.fp32_flops_per_sm, 1.0),
+    };
+
+    let eff_parallel_sms = (occ.slot_frac * sms as f64).max(1e-9);
+    let t_compute =
+        kernel.flops / (peak_per_sm * eff * kernel.arith_scale.clamp(0.001, 1.0) * eff_parallel_sms);
+
+    let bw = spec.instance_bw(mem_slices) * cal.bandwidth_efficiency;
+    let t_memory = kernel.dram_bytes / bw;
+
+    let channel_penalty =
+        cal.mem_latency_s * (spec.memory_slices as f64 / mem_slices.max(1) as f64 - 1.0);
+    let busy = t_compute.max(t_memory) + spec.kernel_launch_s + channel_penalty;
+    KernelTiming {
+        busy_s: busy,
+        memory_bound: t_memory > t_compute,
+        occupancy: occ,
+        dram_bytes: kernel.dram_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::calibration::Calibration;
+    use crate::simgpu::spec::A100;
+
+    fn gemm(flops: f64, grid: u64) -> KernelDesc {
+        KernelDesc {
+            name: "g",
+            class: KernelClass::Gemm,
+            flops,
+            dram_bytes: 1e6,
+            grid_blocks: grid,
+            warps_per_block: 8,
+            blocks_per_sm: 2,
+            arith_scale: 1.0,
+        }
+    }
+
+    #[test]
+    fn more_sms_never_slower() {
+        let cal = Calibration::default();
+        let k = gemm(5e9, 2000);
+        let mut last = f64::INFINITY;
+        for sms in [14, 28, 42, 56, 98, 108] {
+            let t = time_kernel(&k, sms, 8, &A100, &cal).busy_s;
+            assert!(t <= last + 1e-12, "{t} > {last} at {sms} SMs");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn small_grid_insensitive_to_sms() {
+        // A 14-block kernel cannot use more than 14 SMs: 14 -> 98 SMs
+        // must give (nearly) identical time. This is the Fig 2 mechanism.
+        let cal = Calibration::default();
+        let k = gemm(1e9, 14);
+        // Same memory share on both so only the SM axis varies.
+        let t14 = time_kernel(&k, 14, 8, &A100, &cal).busy_s;
+        let t98 = time_kernel(&k, 98, 8, &A100, &cal).busy_s;
+        assert!((t14 - t98).abs() / t14 < 1e-6);
+    }
+
+    #[test]
+    fn memory_bound_detection() {
+        let cal = Calibration::default();
+        let k = KernelDesc {
+            name: "bn",
+            class: KernelClass::Elementwise,
+            flops: 1e6,
+            dram_bytes: 1e9,
+            grid_blocks: 10_000,
+            warps_per_block: 8,
+            blocks_per_sm: 8,
+            arith_scale: 1.0,
+        };
+        let t = time_kernel(&k, 98, 8, &A100, &cal);
+        assert!(t.memory_bound);
+        // Halving memory slices roughly doubles time for memory-bound work.
+        let t4 = time_kernel(&k, 98, 4, &A100, &cal);
+        assert!((t4.busy_s / t.busy_s - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn launch_overhead_floors_tiny_kernels() {
+        let cal = Calibration::default();
+        let k = gemm(1.0, 1);
+        let t = time_kernel(&k, 98, 8, &A100, &cal);
+        assert!(t.busy_s >= A100.kernel_launch_s);
+    }
+}

@@ -1,0 +1,78 @@
+//! A100-SXM4-40GB hardware constants (NVIDIA A100 whitepaper + DGX
+//! Station A100 datasheet, the testbed of paper §3.1).
+
+/// The simulated device.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuSpec {
+    /// Physical SMs on the die (non-MIG mode exposes all of them).
+    pub sm_count: u32,
+    /// SMs exposed in MIG mode (7 slices x 14; one reduced slice is
+    /// reserved for overhead — paper §2.1).
+    pub mig_sm_count: u32,
+    /// Peak dense FP32 tensor-core (TF32) FLOP/s per SM. 156 TFLOP/s
+    /// device-wide / 108 SMs. TF2 on Ampere uses TF32 tensor cores for
+    /// conv/GEMM by default, which is what the paper trained with.
+    pub tc_flops_per_sm: f64,
+    /// Peak classic FP32 FLOP/s per SM (19.5 TFLOP/s / 108) — elementwise,
+    /// batch-norm and optimizer kernels run on the CUDA cores.
+    pub fp32_flops_per_sm: f64,
+    /// HBM2e bandwidth, bytes/s, whole device (1555 GB/s).
+    pub dram_bw: f64,
+    /// Memory slices (8 on the A100-40GB) — bandwidth and framebuffer
+    /// partition along this axis in MIG mode.
+    pub memory_slices: u32,
+    /// Framebuffer capacity in bytes (40 GB).
+    pub dram_capacity: u64,
+    /// Maximum resident warps per SM (64 on Ampere).
+    pub max_warps_per_sm: u32,
+    /// Fixed device-side cost of launching one kernel (s).
+    pub kernel_launch_s: f64,
+    /// Host-side dispatch gap between consecutive kernels (s): framework
+    /// op dispatch + driver submit. Dominates GRACT idle time for the
+    /// small workload (DESIGN.md §5).
+    pub dispatch_gap_s: f64,
+}
+
+/// The A100 as configured in the DGX Station A100.
+pub const A100: GpuSpec = GpuSpec {
+    sm_count: 108,
+    mig_sm_count: 98,
+    tc_flops_per_sm: 156.0e12 / 108.0,
+    fp32_flops_per_sm: 19.5e12 / 108.0,
+    dram_bw: 1555.0e9,
+    memory_slices: 8,
+    dram_capacity: 40_000_000_000,
+    max_warps_per_sm: 64,
+    kernel_launch_s: 8.0e-6,
+    dispatch_gap_s: 16.0e-6,
+}; // dispatch_gap_s is a calibration anchor — see calibration.rs.
+
+impl GpuSpec {
+    /// Bandwidth available to an instance owning `mem_slices` slices.
+    pub fn instance_bw(&self, mem_slices: u32) -> f64 {
+        self.dram_bw * mem_slices as f64 / self.memory_slices as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn whole_device_peaks() {
+        assert!((A100.tc_flops_per_sm * 108.0 - 156.0e12).abs() < 1e6);
+        assert!((A100.fp32_flops_per_sm * 108.0 - 19.5e12).abs() < 1e6);
+    }
+
+    #[test]
+    fn instance_bandwidth_partitions_linearly() {
+        assert_eq!(A100.instance_bw(8), A100.dram_bw);
+        assert!((A100.instance_bw(1) - A100.dram_bw / 8.0).abs() < 1.0);
+        assert!((A100.instance_bw(4) - A100.dram_bw / 2.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn mig_mode_costs_sms() {
+        assert_eq!(A100.sm_count - A100.mig_sm_count, 10);
+    }
+}

@@ -1,0 +1,125 @@
+//! Baseline co-location strategy: **default CUDA time-slicing**.
+//!
+//! The paper's headline claim is that MIG co-location is interference-
+//! free. To make that claim falsifiable in the reproduction, we also
+//! implement what the A100 does *without* MIG when several processes
+//! share it: the driver time-slices the whole GPU between contexts at
+//! kernel granularity, with a context-switch penalty and full cache/DRAM
+//! contention. The ablation bench (`benches/ablations.rs`) contrasts the
+//! two — MIG shows flat per-instance step times as co-runners are added,
+//! time-slicing degrades superlinearly.
+
+use super::calibration::Calibration;
+use super::engine::{InstanceResources, SimEngine, StepStats};
+use super::kernel::StepTrace;
+use super::spec::GpuSpec;
+
+/// Context-switch cost when the driver rotates between processes (s).
+/// Ampere context switch + cold L2 refill for ResNet-sized working sets.
+pub const CONTEXT_SWITCH_S: f64 = 80.0e-6;
+
+/// Cold-cache throughput penalty right after a context switch, applied
+/// to each process's kernel time under time-slicing.
+pub const COLD_CACHE_PENALTY: f64 = 0.07;
+
+/// Simulate `n_procs` identical workloads time-sharing the whole GPU.
+///
+/// Each process's *own* step takes the isolated step time plus a cold-
+/// cache penalty; between its kernels, other processes' kernels (and
+/// context switches) occupy the device, so the per-process step wall
+/// time is ~`n_procs` x isolated plus switching overhead — the
+/// interference MIG eliminates.
+pub fn timeslice_step(
+    engine: &SimEngine,
+    trace: &StepTrace,
+    n_procs: u32,
+    input_wait_s: f64,
+) -> StepStats {
+    let res = InstanceResources::non_mig(&engine.spec);
+    let mut own = engine.run_step(trace, res, input_wait_s);
+    let n = n_procs.max(1) as f64;
+
+    // Cold-cache inflation of this process's busy time.
+    let penalty = if n_procs > 1 { 1.0 + COLD_CACHE_PENALTY } else { 1.0 };
+    let own_busy = own.busy_s * penalty;
+
+    // Device time consumed by co-runners + context switches while this
+    // process waits. Round-robin at kernel granularity: per own kernel,
+    // (n-1) foreign kernels + n context switches.
+    let foreign = (n - 1.0) * own_busy;
+    let switches = if n_procs > 1 {
+        n * CONTEXT_SWITCH_S * trace.kernels.len() as f64
+    } else {
+        0.0
+    };
+
+    own.busy_s = own_busy;
+    own.wall_s += (own_busy - own.busy_s / penalty) + foreign + switches;
+    // wall = own wall (with inflated busy) + foreign + switches
+    own
+}
+
+/// Per-process slowdown factor vs running alone on the full device.
+pub fn interference_factor(
+    spec: &GpuSpec,
+    cal: &Calibration,
+    trace: &StepTrace,
+    n_procs: u32,
+) -> f64 {
+    let engine = SimEngine::new(*spec, *cal);
+    let alone = engine
+        .run_step(trace, InstanceResources::non_mig(spec), 0.0)
+        .wall_s;
+    let shared = timeslice_step(&engine, trace, n_procs, 0.0).wall_s;
+    shared / alone
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::kernel::{KernelClass, KernelDesc};
+    use crate::simgpu::spec::A100;
+
+    fn trace() -> StepTrace {
+        StepTrace {
+            kernels: (0..60)
+                .map(|_| KernelDesc {
+                    name: "k",
+                    class: KernelClass::Gemm,
+                    flops: 2e9,
+                    dram_bytes: 4e6,
+                    grid_blocks: 400,
+                    warps_per_block: 8,
+                    blocks_per_sm: 2,
+                    arith_scale: 1.0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn single_process_matches_isolated() {
+        let f = interference_factor(&A100, &Calibration::default(), &trace(), 1);
+        assert!((f - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interference_exceeds_fair_share() {
+        // Time-slicing N processes must be *worse* than Nx (the MIG
+        // contrast): switching + cold caches are pure loss.
+        for n in [2u32, 3, 7] {
+            let f = interference_factor(&A100, &Calibration::default(), &trace(), n);
+            assert!(f > n as f64, "n={n}: factor {f} <= fair share");
+        }
+    }
+
+    #[test]
+    fn interference_monotone_in_procs() {
+        let mut last = 0.0;
+        for n in 1..=7 {
+            let f = interference_factor(&A100, &Calibration::default(), &trace(), n);
+            assert!(f > last);
+            last = f;
+        }
+    }
+}

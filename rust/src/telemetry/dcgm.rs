@@ -1,0 +1,203 @@
+//! DCGM metric computation: GRACT, SMACT, SMOCC, DRAMA at instance and
+//! device level (paper §3.2.2).
+//!
+//! Device-level values weight each instance by its slice share of the
+//! device (compute slices / 7 for the activity metrics, memory slices /
+//! 8 for DRAMA); slices not covered by any instance contribute zero —
+//! exactly the "homogeneous device groups leave resources idle" effect
+//! the paper discusses for `2g.10gb parallel` (6/7 compute slices used).
+
+use crate::mig::profile::{MigProfile, COMPUTE_SLICES, MEMORY_SLICES};
+use crate::simgpu::engine::{SimEngine, StepStats};
+
+/// The four DCGM fields the paper tracks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DcgmFields {
+    pub gract: f64,
+    pub smact: f64,
+    pub smocc: f64,
+    pub drama: f64,
+}
+
+/// Instance-level metric report.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstanceLevel {
+    pub profile: MigProfile,
+    pub fields: DcgmFields,
+}
+
+/// Device-level metric report for a device group.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceLevel {
+    pub fields: DcgmFields,
+}
+
+/// Full report for one experiment (one device group).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DcgmReport {
+    pub instances: Vec<InstanceLevel>,
+    pub device: DeviceLevel,
+    /// DCGM could not query this profile (the paper's 4g.20gb gap, §5.3).
+    pub unavailable: bool,
+}
+
+/// Compute instance-level fields from an accumulated activity account.
+pub fn instance_fields(engine: &SimEngine, stats: &StepStats, mem_slices: u32) -> DcgmFields {
+    DcgmFields {
+        gract: SimEngine::gract(stats),
+        smact: SimEngine::smact(stats),
+        smocc: SimEngine::smocc(stats),
+        drama: engine.drama(stats, mem_slices),
+    }
+}
+
+/// Aggregate homogeneous instances into the device-level view.
+///
+/// `non_mig` reports the same values at both levels (the paper includes
+/// device values in both charts for the non-MIG baseline).
+pub fn device_report(
+    engine: &SimEngine,
+    profile: Option<MigProfile>,
+    per_instance: &[StepStats],
+) -> DcgmReport {
+    match profile {
+        None => {
+            // Non-MIG: one process on the whole device.
+            let s = &per_instance[0];
+            let fields = instance_fields(engine, s, MEMORY_SLICES);
+            DcgmReport {
+                instances: vec![InstanceLevel {
+                    profile: MigProfile::P7g40gb,
+                    fields,
+                }],
+                device: DeviceLevel { fields },
+                unavailable: false,
+            }
+        }
+        Some(p) => {
+            let instances: Vec<InstanceLevel> = per_instance
+                .iter()
+                .map(|s| InstanceLevel {
+                    profile: p,
+                    fields: instance_fields(engine, s, p.memory_slices()),
+                })
+                .collect();
+            let cweight = p.compute_slices() as f64 / COMPUTE_SLICES as f64;
+            let mweight = p.memory_slices() as f64 / MEMORY_SLICES as f64;
+            let device = DeviceLevel {
+                fields: DcgmFields {
+                    gract: instances.iter().map(|i| i.fields.gract * cweight).sum(),
+                    smact: instances.iter().map(|i| i.fields.smact * cweight).sum(),
+                    smocc: instances.iter().map(|i| i.fields.smocc * cweight).sum(),
+                    drama: instances.iter().map(|i| i.fields.drama * mweight).sum(),
+                },
+            };
+            DcgmReport {
+                instances,
+                device,
+                // §3.4/§5.3: "we do not report GPU metrics derived from
+                // DCGM for 4g.20gb due to DCGM not reporting anything".
+                unavailable: p == MigProfile::P4g20gb,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::calibration::Calibration;
+    use crate::simgpu::engine::InstanceResources;
+    use crate::simgpu::kernel::{KernelClass, KernelDesc, StepTrace};
+    use crate::simgpu::spec::A100;
+
+    fn engine() -> SimEngine {
+        SimEngine::new(A100, Calibration::default())
+    }
+
+    fn stats(sms: u32, mem: u32) -> StepStats {
+        let trace = StepTrace {
+            kernels: (0..40)
+                .map(|_| KernelDesc {
+                    name: "k",
+                    class: KernelClass::Gemm,
+                    flops: 1e9,
+                    dram_bytes: 5e6,
+                    grid_blocks: 120,
+                    warps_per_block: 8,
+                    blocks_per_sm: 2,
+                    arith_scale: 1.0,
+                })
+                .collect(),
+        };
+        engine().run_step(&trace, InstanceResources::mig(sms, mem), 0.0)
+    }
+
+    #[test]
+    fn device_weighting_by_slices() {
+        // 7x 1g.5gb: device GRACT == instance GRACT (all 7/7 slices used).
+        let e = engine();
+        let per: Vec<StepStats> = (0..7).map(|_| stats(14, 1)).collect();
+        let r = device_report(&e, Some(MigProfile::P1g5gb), &per);
+        assert!((r.device.fields.gract - r.instances[0].fields.gract).abs() < 1e-9);
+
+        // 3x 2g.10gb: device = instance * 6/7 (one slice idle).
+        let per: Vec<StepStats> = (0..3).map(|_| stats(28, 2)).collect();
+        let r = device_report(&e, Some(MigProfile::P2g10gb), &per);
+        let expect = r.instances[0].fields.gract * 6.0 / 7.0;
+        assert!((r.device.fields.gract - expect).abs() < 1e-9);
+
+        // 1x 1g.5gb: device = instance / 7 for SMACT, / 8 for DRAMA.
+        let r = device_report(&e, Some(MigProfile::P1g5gb), &[stats(14, 1)]);
+        assert!((r.device.fields.smact - r.instances[0].fields.smact / 7.0).abs() < 1e-9);
+        assert!((r.device.fields.drama - r.instances[0].fields.drama / 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_mig_same_at_both_levels() {
+        let e = engine();
+        let r = device_report(&e, None, &[stats(108, 8)]);
+        assert_eq!(r.device.fields.gract, r.instances[0].fields.gract);
+        assert!(!r.unavailable);
+    }
+
+    #[test]
+    fn four_g_flagged_unavailable() {
+        let e = engine();
+        let r = device_report(&e, Some(MigProfile::P4g20gb), &[stats(56, 4)]);
+        assert!(r.unavailable);
+        // Values still computed internally (the hardware ran fine; only
+        // the DCGM query failed in the paper).
+        assert!(r.device.fields.gract > 0.0);
+    }
+
+    #[test]
+    fn fields_in_unit_interval() {
+        let e = engine();
+        for (sms, mem, p) in [
+            (14u32, 1u32, MigProfile::P1g5gb),
+            (28, 2, MigProfile::P2g10gb),
+            (42, 4, MigProfile::P3g20gb),
+            (98, 8, MigProfile::P7g40gb),
+        ] {
+            let r = device_report(&e, Some(p), &[stats(sms, mem)]);
+            for f in [
+                r.device.fields.gract,
+                r.device.fields.smact,
+                r.device.fields.smocc,
+                r.device.fields.drama,
+            ] {
+                assert!((0.0..=1.0).contains(&f), "{p}: {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn smact_ordering_small_grids() {
+        // Same small-grid work: 1g instance must show higher SMACT than 7g.
+        let e = engine();
+        let r1 = device_report(&e, Some(MigProfile::P1g5gb), &[stats(14, 1)]);
+        let r7 = device_report(&e, Some(MigProfile::P7g40gb), &[stats(98, 8)]);
+        assert!(r1.instances[0].fields.smact > r7.instances[0].fields.smact);
+    }
+}

@@ -1,0 +1,82 @@
+//! Host-side metrics: process CPU% and resident memory, `top`-style
+//! (paper §3.2.3). The DGX Station A100 has 128 logical cores, so the
+//! aggregate ceiling is 12,800%.
+
+
+/// Logical cores of the AMD EPYC 7742 host (64c/128t).
+pub const HOST_LOGICAL_CORES: u32 = 128;
+/// Maximum aggregate CPU percentage `top` can report.
+pub const MAX_CPU_PERCENT: f64 = 100.0 * HOST_LOGICAL_CORES as f64;
+
+/// One process's host footprint over a run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostProcessReport {
+    /// Average aggregate CPU utilization, `top` percent.
+    pub cpu_percent: f64,
+    /// Maximum resident memory (RES) over the run, bytes.
+    pub max_res_bytes: u64,
+}
+
+/// Aggregate host report across co-located training processes.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HostReport {
+    pub processes: Vec<HostProcessReport>,
+}
+
+impl HostReport {
+    /// Sum of per-process CPU%, clamped to the machine ceiling.
+    pub fn total_cpu_percent(&self) -> f64 {
+        self.processes
+            .iter()
+            .map(|p| p.cpu_percent)
+            .sum::<f64>()
+            .min(MAX_CPU_PERCENT)
+    }
+
+    /// Aggregate RES across processes (Fig 8b bars for parallel runs).
+    pub fn total_res_bytes(&self) -> u64 {
+        self.processes.iter().map(|p| p.max_res_bytes).sum()
+    }
+}
+
+/// RES time series over epochs for Fig 9a.
+pub fn res_series(model: &crate::workload::memory::HostMemoryModel, epochs: u32) -> Vec<u64> {
+    (0..=epochs).map(|e| model.res_bytes(e)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::memory::HostMemoryModel;
+    use crate::workload::spec::WorkloadSize;
+
+    #[test]
+    fn totals_sum_processes() {
+        let r = HostReport {
+            processes: vec![
+                HostProcessReport { cpu_percent: 90.0, max_res_bytes: 7_000_000_000 },
+                HostProcessReport { cpu_percent: 90.0, max_res_bytes: 7_000_000_000 },
+            ],
+        };
+        assert_eq!(r.total_cpu_percent(), 180.0);
+        assert_eq!(r.total_res_bytes(), 14_000_000_000);
+    }
+
+    #[test]
+    fn cpu_clamped_to_128_cores() {
+        let r = HostReport {
+            processes: vec![HostProcessReport { cpu_percent: 20_000.0, max_res_bytes: 0 }],
+        };
+        assert_eq!(r.total_cpu_percent(), 12_800.0);
+    }
+
+    #[test]
+    fn res_series_monotone_until_cap() {
+        let m = HostMemoryModel::paper(WorkloadSize::Large);
+        let s = res_series(&m, 5);
+        assert_eq!(s.len(), 6);
+        for w in s.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+}

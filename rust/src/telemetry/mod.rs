@@ -1,0 +1,20 @@
+//! DCGM-style telemetry stack (paper §3.2).
+//!
+//! The paper collects GRACT / SMACT / SMOCC / DRAMA via DCGM, GPU memory
+//! via nvidia-smi (DCGM doesn't report it; nvidia-smi can't see MIG
+//! instances — §3.2.2), and CPU/RES via `top`. We reproduce the same
+//! split: [`dcgm`] computes the four activity metrics from simulator
+//! activity accounts, [`smi`] reports allocated GPU memory, [`host`]
+//! reports CPU% and RES, [`recorder`] emulates the periodic sampler
+//! (including the end-of-run zero-sample quirk that made the paper use
+//! medians — §5.3), and [`stats`] provides the median machinery.
+
+pub mod dcgm;
+pub mod host;
+pub mod recorder;
+pub mod replication;
+pub mod smi;
+pub mod stats;
+
+pub use dcgm::{DcgmReport, DeviceLevel, InstanceLevel};
+pub use recorder::SampleSeries;

@@ -1,0 +1,83 @@
+//! Periodic metric sampler emulation.
+//!
+//! DCGM samples each field on an interval; the paper observed trailing
+//! zero samples at run end and occasional tool terminations (§5.3) and
+//! therefore reports **medians**. The recorder reproduces that sampling
+//! discipline so the same robustness reasoning applies here.
+
+use super::stats;
+use crate::util::rng::Rng;
+
+/// A sampled time series of one metric.
+#[derive(Debug, Clone, Default)]
+pub struct SampleSeries {
+    pub samples: Vec<f64>,
+}
+
+impl SampleSeries {
+    /// Sample a steady-state metric `value` over `run_s` seconds at
+    /// `interval_s`, with small jitter and the end-of-run zero quirk.
+    pub fn sample_steady(value: f64, run_s: f64, interval_s: f64, seed: u64) -> SampleSeries {
+        let mut rng = Rng::new(seed);
+        let n = ((run_s / interval_s) as usize).max(1);
+        let mut samples = Vec::with_capacity(n + 2);
+        for _ in 0..n {
+            // ±1.5% sampling jitter around steady state.
+            let jitter = 1.0 + 0.015 * (rng.next_f64() * 2.0 - 1.0);
+            samples.push((value * jitter).clamp(0.0, 1.0));
+        }
+        // §5.3: "the last few seconds of a workload execution reported
+        // zero values" — two trailing zeros.
+        samples.push(0.0);
+        samples.push(0.0);
+        SampleSeries { samples }
+    }
+
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_recovers_steady_value() {
+        let s = SampleSeries::sample_steady(0.75, 600.0, 1.0, 3);
+        assert!((s.median() - 0.75).abs() < 0.02, "{}", s.median());
+        // Mean is dragged down by the zero tail (why the paper uses medians).
+        assert!(s.mean() < s.median());
+    }
+
+    #[test]
+    fn short_runs_still_sample() {
+        let s = SampleSeries::sample_steady(0.5, 0.5, 1.0, 1);
+        assert!(s.len() >= 3);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = SampleSeries::sample_steady(0.6, 100.0, 1.0, 9);
+        let b = SampleSeries::sample_steady(0.6, 100.0, 1.0, 9);
+        assert_eq!(a.samples, b.samples);
+    }
+
+    #[test]
+    fn values_clamped_to_unit() {
+        let s = SampleSeries::sample_steady(0.999, 100.0, 1.0, 5);
+        assert!(s.samples.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

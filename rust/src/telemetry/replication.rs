@@ -1,0 +1,191 @@
+//! Replication handling (paper §3.4, §4, §5.2–5.3).
+//!
+//! The paper ran every experiment twice; on four occasions DCGM
+//! "was unexpectedly terminated", leaving partial data, and the authors
+//! substituted the replicate's complete data after checking the two
+//! runs were "very similar or nearly identical". This module implements
+//! that methodology: detect incomplete metric collections, verify
+//! replicate agreement, and produce the merged report set.
+
+use crate::coordinator::results::ExperimentResult;
+
+/// Outcome of merging an experiment's replicated runs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MergeOutcome {
+    /// Primary run had complete data; used as-is.
+    Primary,
+    /// Primary DCGM data was missing/partial; the replicate substituted
+    /// (the paper's 3g.20gb-one / non-MIG large-workload cases).
+    SubstitutedFromReplicate,
+    /// Both runs incomplete — reported as a collection gap (4g.20gb).
+    Unavailable,
+}
+
+/// Relative tolerance for declaring two replicates "nearly identical"
+/// (paper §5.2). Epoch times and DCGM medians must agree within this.
+pub const REPLICATE_TOLERANCE: f64 = 0.05;
+
+/// Do two replicates agree closely enough to substitute one for the
+/// other (the check the paper describes doing before splicing data)?
+pub fn replicates_agree(a: &ExperimentResult, b: &ExperimentResult) -> bool {
+    if a.completed() != b.completed() {
+        return false;
+    }
+    if !a.completed() {
+        return true; // both failed the same way (OOM cells)
+    }
+    let ta = a.mean_epoch_seconds();
+    let tb = b.mean_epoch_seconds();
+    if ((ta - tb) / ta).abs() > REPLICATE_TOLERANCE {
+        return false;
+    }
+    match (&a.dcgm, &b.dcgm) {
+        (Some(da), Some(db)) if !da.unavailable && !db.unavailable => {
+            let fa = da.device.fields;
+            let fb = db.device.fields;
+            for (x, y) in [
+                (fa.gract, fb.gract),
+                (fa.smact, fb.smact),
+                (fa.smocc, fb.smocc),
+                (fa.drama, fb.drama),
+            ] {
+                let scale = x.abs().max(1e-9);
+                if ((x - y) / scale).abs() > REPLICATE_TOLERANCE {
+                    return false;
+                }
+            }
+            true
+        }
+        _ => true, // no comparable DCGM data — agreement is on timings only
+    }
+}
+
+/// Is an experiment's metric collection complete (DCGM present and
+/// queryable)?
+pub fn dcgm_complete(r: &ExperimentResult) -> bool {
+    r.dcgm.as_ref().map(|d| !d.unavailable).unwrap_or(false)
+}
+
+/// Merge a primary run with its replicate following the paper's §4
+/// procedure. Returns the chosen result and how it was chosen.
+pub fn merge<'a>(
+    primary: &'a ExperimentResult,
+    replicate: &'a ExperimentResult,
+) -> (&'a ExperimentResult, MergeOutcome) {
+    if dcgm_complete(primary) || !primary.completed() {
+        return (primary, MergeOutcome::Primary);
+    }
+    if dcgm_complete(replicate) && replicates_agree(primary, replicate) {
+        return (replicate, MergeOutcome::SubstitutedFromReplicate);
+    }
+    (primary, MergeOutcome::Unavailable)
+}
+
+/// Merge whole result sets pairwise (`results` ordered as produced by
+/// `paper_matrix(2)`: primary/replicate interleaved).
+pub fn merge_replicated(results: &[ExperimentResult]) -> Vec<(ExperimentResult, MergeOutcome)> {
+    results
+        .chunks(2)
+        .map(|pair| {
+            if pair.len() == 2 {
+                let (chosen, outcome) = merge(&pair[0], &pair[1]);
+                (chosen.clone(), outcome)
+            } else {
+                (pair[0].clone(), MergeOutcome::Primary)
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::{run_experiment, DeviceGroup, ExperimentSpec};
+    use crate::coordinator::matrix::{paper_matrix, run_matrix};
+    use crate::mig::profile::MigProfile;
+    use crate::simgpu::calibration::Calibration;
+    use crate::workload::spec::WorkloadSize;
+
+    fn run(seed: u64, group: DeviceGroup) -> ExperimentResult {
+        run_experiment(
+            &ExperimentSpec {
+                workload: WorkloadSize::Small,
+                group,
+                replicate: 0,
+                seed,
+            },
+            &Calibration::paper(),
+        )
+    }
+
+    #[test]
+    fn replicates_of_same_experiment_agree() {
+        let a = run(1, DeviceGroup::One(MigProfile::P2g10gb));
+        let b = run(2, DeviceGroup::One(MigProfile::P2g10gb));
+        assert!(replicates_agree(&a, &b));
+    }
+
+    #[test]
+    fn different_groups_do_not_agree() {
+        let a = run(1, DeviceGroup::One(MigProfile::P7g40gb));
+        let b = run(1, DeviceGroup::One(MigProfile::P1g5gb));
+        assert!(!replicates_agree(&a, &b));
+    }
+
+    #[test]
+    fn substitution_on_dcgm_loss() {
+        // Simulate the paper's DCGM termination: strip the primary's
+        // DCGM report; the replicate must substitute.
+        let mut primary = run(1, DeviceGroup::One(MigProfile::P3g20gb));
+        let replicate = run(2, DeviceGroup::One(MigProfile::P3g20gb));
+        primary.dcgm = None;
+        let (chosen, outcome) = merge(&primary, &replicate);
+        assert_eq!(outcome, MergeOutcome::SubstitutedFromReplicate);
+        assert!(dcgm_complete(chosen));
+    }
+
+    #[test]
+    fn four_g_stays_unavailable_even_with_replicate() {
+        // The 4g.20gb DCGM gap hit BOTH runs in the paper — no
+        // substitution possible.
+        let a = run(1, DeviceGroup::One(MigProfile::P4g20gb));
+        let b = run(2, DeviceGroup::One(MigProfile::P4g20gb));
+        assert!(!dcgm_complete(&a) && !dcgm_complete(&b));
+        let (_, outcome) = merge(&a, &b);
+        assert_eq!(outcome, MergeOutcome::Unavailable);
+    }
+
+    #[test]
+    fn oom_cells_merge_as_primary() {
+        let a = run(1, DeviceGroup::One(MigProfile::P1g5gb)); // small fits
+        assert!(a.completed());
+        let m = run_experiment(
+            &ExperimentSpec {
+                workload: WorkloadSize::Medium,
+                group: DeviceGroup::One(MigProfile::P1g5gb),
+                replicate: 0,
+                seed: 1,
+            },
+            &Calibration::paper(),
+        );
+        let (chosen, outcome) = merge(&m, &m);
+        assert_eq!(outcome, MergeOutcome::Primary);
+        assert!(!chosen.completed());
+    }
+
+    #[test]
+    fn full_matrix_merges_pairwise() {
+        let results = run_matrix(&paper_matrix(2), &Calibration::paper());
+        let merged = merge_replicated(&results);
+        assert_eq!(merged.len(), 27);
+        // Completed non-4g cells resolve to Primary; 4g cells to
+        // Unavailable; OOM cells to Primary.
+        for (r, outcome) in &merged {
+            if r.device_group.contains("4g.20gb") && r.completed() {
+                assert_eq!(*outcome, MergeOutcome::Unavailable, "{}", r.device_group);
+            } else {
+                assert_eq!(*outcome, MergeOutcome::Primary, "{} {}", r.workload, r.device_group);
+            }
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! nvidia-smi-style GPU memory reporting (paper §3.2.2: "nvidia-smi does
+//! not provide measurements with MIG instances and dcgm does not measure
+//! GPU memory used" — memory comes from this separate path).
+
+use crate::mig::gpu::MigGpu;
+
+/// Memory report of one device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryReport {
+    /// Allocated bytes per live instance, in instance order.
+    pub per_instance: Vec<u64>,
+    /// Total allocated on the device.
+    pub total: u64,
+    /// Device capacity.
+    pub capacity: u64,
+}
+
+/// Snapshot the framebuffer allocation state of a simulated GPU.
+pub fn memory_report(gpu: &MigGpu) -> MemoryReport {
+    let per_instance: Vec<u64> = gpu.instances().iter().map(|i| i.allocated_bytes).collect();
+    MemoryReport {
+        total: per_instance.iter().sum(),
+        per_instance,
+        capacity: 40_000_000_000,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mig::profile::MigProfile;
+
+    #[test]
+    fn parallel_allocations_sum() {
+        // Fig 8a: "training n models in parallel simply uses n times as
+        // much GPU memory as training a single model".
+        let mut gpu = MigGpu::default();
+        let ids = gpu.create_homogeneous(MigProfile::P3g20gb, 2).unwrap();
+        for id in &ids {
+            gpu.instance_mut(*id).unwrap().alloc(10_400_000_000).unwrap();
+        }
+        let r = memory_report(&gpu);
+        assert_eq!(r.per_instance, vec![10_400_000_000, 10_400_000_000]);
+        assert_eq!(r.total, 2 * 10_400_000_000);
+        assert!(r.total <= r.capacity);
+    }
+
+    #[test]
+    fn empty_device() {
+        let r = memory_report(&MigGpu::default());
+        assert_eq!(r.total, 0);
+        assert!(r.per_instance.is_empty());
+    }
+}

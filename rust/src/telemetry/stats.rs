@@ -1,0 +1,86 @@
+//! Summary statistics for metric sample series.
+
+/// Median of a slice (interpolated for even lengths). Returns 0 for
+/// empty input (DCGM reports nothing — the 4g.20gb case).
+pub fn median(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+pub fn min(values: &[f64]) -> f64 {
+    values.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(values: &[f64]) -> f64 {
+    values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Five-number-ish summary used by report tables.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub median: f64,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+pub fn summarize(values: &[f64]) -> Summary {
+    Summary {
+        median: median(values),
+        mean: mean(values),
+        min: if values.is_empty() { 0.0 } else { min(values) },
+        max: if values.is_empty() { 0.0 } else { max(values) },
+        n: values.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even_empty() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(median(&[7.0]), 7.0);
+    }
+
+    #[test]
+    fn median_robust_to_zero_tail() {
+        // The paper's rationale for medians (§5.3): trailing zero
+        // samples must not move the reported value much.
+        let clean: Vec<f64> = vec![0.9; 100];
+        let mut dirty = clean.clone();
+        dirty.extend([0.0; 5]);
+        assert_eq!(median(&clean), median(&dirty));
+        // While the mean visibly drops.
+        assert!(mean(&dirty) < mean(&clean));
+    }
+
+    #[test]
+    fn summary_fields() {
+        let s = summarize(&[1.0, 2.0, 3.0, 10.0]);
+        assert_eq!(s.median, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 10.0);
+        assert_eq!(s.n, 4);
+    }
+}

@@ -1,0 +1,101 @@
+//! Minimal benchmarking harness (offline substitute for `criterion`).
+//!
+//! Each `benches/*.rs` binary uses this to (a) print the regenerated
+//! figure series (the reproduction artifact) and (b) time the code that
+//! produces it with warmup + median-of-N statistics.
+
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub iters: u32,
+}
+
+impl std::fmt::Display for BenchResult {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let scale = |s: f64| -> String {
+            if s < 1e-6 {
+                format!("{:.1} ns", s * 1e9)
+            } else if s < 1e-3 {
+                format!("{:.2} µs", s * 1e6)
+            } else if s < 1.0 {
+                format!("{:.2} ms", s * 1e3)
+            } else {
+                format!("{:.3} s", s)
+            }
+        };
+        write!(
+            f,
+            "{:<44} median {:>10}  (min {:>10}, max {:>10}, n={})",
+            self.name,
+            scale(self.median_s),
+            scale(self.min_s),
+            scale(self.max_s),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs.
+/// The closure's return value is black-boxed to keep the optimizer
+/// honest.
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        median_s: samples[samples.len() / 2],
+        min_s: samples[0],
+        max_s: *samples.last().unwrap(),
+        iters,
+    }
+}
+
+/// Optimization barrier (std::hint::black_box wrapper, kept here so the
+/// bench API is self-contained).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_ordered_stats() {
+        let r = bench("noop", 2, 11, || 42);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.max_s);
+        assert_eq!(r.iters, 11);
+    }
+
+    #[test]
+    fn display_scales_units() {
+        let r = BenchResult {
+            name: "x".into(),
+            median_s: 2.5e-3,
+            min_s: 1e-7,
+            max_s: 2.0,
+            iters: 3,
+        };
+        let s = r.to_string();
+        assert!(s.contains("ms") && s.contains("ns") && s.contains("s"));
+    }
+}

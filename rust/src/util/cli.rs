@@ -1,0 +1,112 @@
+//! Minimal CLI argument parser (offline substitute for `clap`):
+//! `program SUBCOMMAND --flag value --switch positional`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of arguments (without the program name).
+    /// `--key value` becomes a flag unless `value` starts with `--` (then
+    /// `key` is a switch). A trailing `--key` is a switch.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let items: Vec<String> = args.into_iter().collect();
+        let mut i = 0;
+        while i < items.len() {
+            let a = &items[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let next_is_value = items
+                    .get(i + 1)
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false);
+                if next_is_value {
+                    out.flags.insert(key.to_string(), items[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.switches.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                if out.subcommand.is_none() && out.positional.is_empty() && out.flags.is_empty() {
+                    out.subcommand = Some(a.clone());
+                } else {
+                    out.positional.push(a.clone());
+                }
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag_or(&self, key: &str, default: &str) -> String {
+        self.flag(key).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T> {
+        match self.flag(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for --{key}: '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = args("run --workload small --group non-MIG");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.flag("workload"), Some("small"));
+        assert_eq!(a.flag("group"), Some("non-MIG"));
+    }
+
+    #[test]
+    fn switches_vs_flags() {
+        let a = args("figures --print --out results");
+        assert!(a.has("print"));
+        assert_eq!(a.flag("out"), Some("results"));
+        assert!(!a.has("out"));
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = args("partition --enumerate");
+        assert!(a.has("enumerate"));
+    }
+
+    #[test]
+    fn typed_flags() {
+        let a = args("train --epochs 7");
+        assert_eq!(a.flag_parse("epochs", 4u32).unwrap(), 7);
+        assert_eq!(a.flag_parse("lr", 0.05f32).unwrap(), 0.05);
+        assert!(args("train --epochs x").flag_parse("epochs", 4u32).is_err());
+    }
+}

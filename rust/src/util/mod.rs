@@ -1,0 +1,99 @@
+//! Small shared utilities: deterministic RNG, float helpers, byte/time
+//! formatting. No external deps — reproducibility of simulated runs must
+//! not depend on crate-version RNG drift.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tempdir;
+
+/// Relative-tolerance float comparison used across tests and calibration.
+pub fn approx_eq(a: f64, b: f64, rel: f64) -> bool {
+    if a == b {
+        return true;
+    }
+    let scale = a.abs().max(b.abs()).max(1e-12);
+    (a - b).abs() / scale <= rel
+}
+
+/// `a / b` that maps 0/0 to 0 (metric algebra convenience).
+pub fn safe_div(a: f64, b: f64) -> f64 {
+    if b == 0.0 {
+        0.0
+    } else {
+        a / b
+    }
+}
+
+/// Pretty seconds: "16.1 s", "35.4 min", "2.2 h".
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 120.0 {
+        format!("{secs:.1} s")
+    } else if secs < 7200.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else {
+        format!("{:.2} h", secs / 3600.0)
+    }
+}
+
+/// Pretty bytes: "9.5 GB".
+pub fn fmt_bytes(bytes: u64) -> String {
+    const GB: f64 = 1e9;
+    const MB: f64 = 1e6;
+    let b = bytes as f64;
+    if b >= GB {
+        format!("{:.1} GB", b / GB)
+    } else if b >= MB {
+        format!("{:.1} MB", b / MB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Ceiling division for positive integers.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn approx_eq_basics() {
+        assert!(approx_eq(1.0, 1.0, 0.0));
+        assert!(approx_eq(100.0, 101.0, 0.02));
+        assert!(!approx_eq(100.0, 110.0, 0.02));
+        assert!(approx_eq(0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn safe_div_zero() {
+        assert_eq!(safe_div(1.0, 2.0), 0.5);
+        assert_eq!(safe_div(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert_eq!(fmt_duration(16.1), "16.1 s");
+        assert_eq!(fmt_duration(35.4 * 60.0), "35.4 min");
+        assert_eq!(fmt_duration(135.0 * 3600.0), "135.00 h");
+    }
+
+    #[test]
+    fn fmt_bytes_ranges() {
+        assert_eq!(fmt_bytes(9_500_000_000), "9.5 GB");
+        assert_eq!(fmt_bytes(12_600_000), "12.6 MB");
+        assert_eq!(fmt_bytes(100), "100 B");
+    }
+
+    #[test]
+    fn ceil_div_exact_and_remainder() {
+        assert_eq!(ceil_div(10, 5), 2);
+        assert_eq!(ceil_div(11, 5), 3);
+        assert_eq!(ceil_div(1, 7), 1);
+    }
+}

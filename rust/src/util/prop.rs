@@ -1,0 +1,68 @@
+//! Tiny property-testing harness (offline substitute for `proptest`).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from
+//! `gen` and asserts `prop`; on failure it reports the failing case and
+//! its draw index so the case can be replayed deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` generated inputs; panics with the failing
+/// input's debug representation on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: u32,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        assert!(
+            prop(&input),
+            "property failed at case {case} (seed {seed}): {input:?}"
+        );
+    }
+}
+
+/// Like [`forall`] but the property returns `Result` with a reason.
+pub fn forall_ok<T: std::fmt::Debug, E: std::fmt::Display>(
+    seed: u64,
+    cases: u32,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), E>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(e) = prop(&input) {
+            panic!("property failed at case {case} (seed {seed}): {input:?}: {e}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        forall(1, 100, |r| r.below(100), |&x| x < 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_case() {
+        forall(1, 100, |r| r.below(100), |&x| x < 50);
+    }
+
+    #[test]
+    fn forall_ok_reports_reason() {
+        forall_ok(2, 10, |r| r.below(5), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+}

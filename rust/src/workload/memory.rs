@@ -1,0 +1,195 @@
+//! Memory models: TensorFlow's GPU memory plan and the host RES model.
+//!
+//! GPU side (Fig 8a): with `allow_growth`-style allocation disabled-
+//! pool-grab disabled (the paper disables the grab-everything default),
+//! TF allocates a *preferred* working set when room allows, shrinks when
+//! the instance is smaller, and OOMs below a hard floor. The preferred /
+//! floor values are empirical TF2.7 behaviour calibrated to Fig 8a —
+//! they are framework properties, not derivable from the architecture
+//! (cuDNN workspace autotuning dominates them); the *structure*
+//! (adaptivity, n-fold parallel scaling, OOM boundary) is the model.
+//!
+//! Host side (Figs 8b, 9a): RES = base runtime + resident dataset +
+//! prefetch queue + a per-epoch allocator growth the paper observed
+//! ("between one and two additional gigabytes ... per epoch").
+
+use super::resnet::{Inventory, ModelConfig};
+use super::spec::{Workload, WorkloadSize};
+
+/// GPU memory plan of one training process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuMemoryPlan {
+    /// Bytes TF allocates when the device has headroom (Fig 8a plateau).
+    pub preferred_bytes: u64,
+    /// Below this the process aborts with OOM.
+    pub floor_bytes: u64,
+}
+
+/// Fraction of instance memory actually allocatable (context + reserves).
+pub const USABLE_FRACTION: f64 = 0.95;
+
+impl GpuMemoryPlan {
+    /// Plan for a paper workload. Preferred sets match Fig 8a; floors are
+    /// bounded below by the model's own arithmetic (params*4 states +
+    /// activations) plus the cuDNN workspace class the paper's runs used.
+    pub fn paper(size: WorkloadSize) -> GpuMemoryPlan {
+        let inv = Inventory::build(&ModelConfig::paper(size));
+        let model_min = inv.config.param_count() * 4 * 3 + inv.activation_bytes();
+        let (preferred, empirical_floor) = match size {
+            WorkloadSize::Small => (9_500_000_000, 4_400_000_000),
+            WorkloadSize::Medium => (10_400_000_000, 5_300_000_000),
+            WorkloadSize::Large => (19_000_000_000, 9_400_000_000),
+        };
+        GpuMemoryPlan {
+            preferred_bytes: preferred,
+            floor_bytes: empirical_floor.max(model_min),
+        }
+    }
+
+    /// Bytes actually allocated on an instance with `capacity` bytes, or
+    /// `None` for the paper's OOM crash (medium/large on 1g.5gb).
+    pub fn allocate(&self, capacity: u64) -> Option<u64> {
+        let usable = (capacity as f64 * USABLE_FRACTION) as u64;
+        if self.floor_bytes > usable {
+            return None;
+        }
+        Some(self.preferred_bytes.min(usable))
+    }
+}
+
+/// Host resident-memory (RES) model for one training process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostMemoryModel {
+    /// TF + CUDA + Python baseline RES.
+    pub base_bytes: u64,
+    /// Dataset resident in RAM (CIFAR path) — 0 when streaming.
+    pub dataset_bytes: u64,
+    /// Prefetch queue: max_queue_size batches of decoded images.
+    pub queue_bytes: u64,
+    /// Allocator growth per epoch (paper Fig 9a: 1–2 GB/epoch/model).
+    pub growth_per_epoch: u64,
+    /// Growth saturates here (glibc arenas stop expanding once steady).
+    pub growth_cap: u64,
+}
+
+impl HostMemoryModel {
+    pub fn paper(size: WorkloadSize) -> HostMemoryModel {
+        let w = Workload::paper(size);
+        let queue_bytes = w.max_queue_size as u64 * w.batch_bytes();
+        match size {
+            // 7.1 GB max observed: 3.3 base + 1.5 dataset-in-RAM + growth.
+            WorkloadSize::Small => HostMemoryModel {
+                base_bytes: 3_300_000_000,
+                dataset_bytes: w.dataset_bytes(),
+                queue_bytes: 0,
+                growth_per_epoch: 1_200_000_000,
+                growth_cap: 2_300_000_000,
+            },
+            // 5.4 GB max: streaming keeps the working set small.
+            WorkloadSize::Medium => HostMemoryModel {
+                base_bytes: 3_300_000_000,
+                dataset_bytes: 0,
+                queue_bytes,
+                growth_per_epoch: 1_500_000_000,
+                growth_cap: 2_000_000_000,
+            },
+            // 12.6 GB max: 16 workers + big queue + strong growth.
+            WorkloadSize::Large => HostMemoryModel {
+                base_bytes: 4_100_000_000,
+                dataset_bytes: 0,
+                queue_bytes,
+                growth_per_epoch: 1_600_000_000,
+                growth_cap: 8_200_000_000,
+            },
+        }
+    }
+
+    /// RES after `epochs_done` epochs (Fig 9a time series).
+    pub fn res_bytes(&self, epochs_done: u32) -> u64 {
+        self.base_bytes
+            + self.dataset_bytes
+            + self.queue_bytes
+            + (self.growth_per_epoch * epochs_done as u64).min(self.growth_cap)
+    }
+
+    /// Maximum RES over a run of `epochs` epochs (Fig 8b bars).
+    pub fn max_res_bytes(&self, epochs: u32) -> u64 {
+        self.res_bytes(epochs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8a_preferred_on_full_gpu() {
+        // 40 GB available: all three take their preferred allocation.
+        for (size, want) in [
+            (WorkloadSize::Small, 9.5e9),
+            (WorkloadSize::Medium, 10.4e9),
+            (WorkloadSize::Large, 19.0e9),
+        ] {
+            let got = GpuMemoryPlan::paper(size).allocate(40_000_000_000).unwrap();
+            assert!((got as f64 - want).abs() / want < 0.01, "{size}: {got}");
+        }
+    }
+
+    #[test]
+    fn fig8a_adaptive_shrink() {
+        // Large on 2g.10gb (10 GB): paper reports 9.9 GB ~ usable cap.
+        let large = GpuMemoryPlan::paper(WorkloadSize::Large);
+        let got = large.allocate(10_000_000_000).unwrap();
+        assert!((got as f64 - 9.5e9).abs() / 9.5e9 < 0.05, "{got}");
+        // Small on 1g.5gb (5 GB): paper reports 4.7 GB.
+        let small = GpuMemoryPlan::paper(WorkloadSize::Small);
+        let got = small.allocate(5_000_000_000).unwrap();
+        assert!((got as f64 - 4.75e9).abs() / 4.75e9 < 0.05, "{got}");
+    }
+
+    #[test]
+    fn medium_large_oom_on_1g5gb() {
+        assert!(GpuMemoryPlan::paper(WorkloadSize::Medium)
+            .allocate(5_000_000_000)
+            .is_none());
+        assert!(GpuMemoryPlan::paper(WorkloadSize::Large)
+            .allocate(5_000_000_000)
+            .is_none());
+        // But small survives.
+        assert!(GpuMemoryPlan::paper(WorkloadSize::Small)
+            .allocate(5_000_000_000)
+            .is_some());
+    }
+
+    #[test]
+    fn fig8b_max_res() {
+        // small 7.1 GB @30 epochs, medium 5.4 GB @5, large 12.6 GB @5.
+        let small = HostMemoryModel::paper(WorkloadSize::Small).max_res_bytes(30) as f64;
+        assert!((small - 7.1e9).abs() / 7.1e9 < 0.05, "{small}");
+        let medium = HostMemoryModel::paper(WorkloadSize::Medium).max_res_bytes(5) as f64;
+        assert!((medium - 5.4e9).abs() / 5.4e9 < 0.06, "{medium}");
+        let large = HostMemoryModel::paper(WorkloadSize::Large).max_res_bytes(5) as f64;
+        assert!((large - 12.6e9).abs() / 12.6e9 < 0.05, "{large}");
+    }
+
+    #[test]
+    fn res_grows_one_to_two_gb_per_epoch_early() {
+        // Fig 9a behaviour before the cap.
+        for size in WorkloadSize::ALL {
+            let m = HostMemoryModel::paper(size);
+            let delta = m.res_bytes(1) - m.res_bytes(0);
+            assert!(
+                (1.0e9..=2.0e9).contains(&(delta as f64)),
+                "{size}: {delta}"
+            );
+        }
+    }
+
+    #[test]
+    fn seven_small_models_need_about_48gb() {
+        // §4.3.1: "running seven in parallel ... uses 48.7 GB".
+        let one = HostMemoryModel::paper(WorkloadSize::Small).max_res_bytes(30);
+        let seven = 7 * one;
+        assert!((seven as f64 - 48.7e9).abs() / 48.7e9 < 0.06, "{seven}");
+    }
+}

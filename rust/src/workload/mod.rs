@@ -1,0 +1,21 @@
+//! Workload models: the paper's three training workloads (§3.3).
+//!
+//! * [`spec`] — workload sizes, datasets, epochs, pipeline settings.
+//! * [`resnet`] — exact layer-by-layer FLOP/byte/grid inventories of
+//!   ResNet26V2 / ResNet50V2 / ResNet152V2 at the paper's image sizes,
+//!   turned into per-step kernel traces for the simulator.
+//! * [`pipeline`] — the `ImageDataGenerator` host input pipeline
+//!   (workers / max_queue_size) and its CPU cost model.
+//! * [`memory`] — the TensorFlow GPU memory plan (adaptive allocation,
+//!   OOM floors) and host RES model.
+//! * [`dataset`] — synthetic dataset generators for the *real* training
+//!   runs driven through the PJRT runtime.
+
+pub mod dataset;
+pub mod memory;
+pub mod pipeline;
+pub mod resnet;
+pub mod spec;
+
+pub use resnet::ModelConfig;
+pub use spec::{Workload, WorkloadSize};

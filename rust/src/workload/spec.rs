@@ -1,0 +1,158 @@
+//! Workload definitions (paper §3.3, §3.4).
+
+
+/// The three workload sizes of the study.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum WorkloadSize {
+    /// resnet_small: ResNet26V2 on CIFAR-10 (in-memory).
+    Small,
+    /// resnet_medium: ResNet50V2 on ImageNet64x64 (streamed, workers=1).
+    Medium,
+    /// resnet_large: ResNet152V2 on ImageNet-224 (streamed, workers=16).
+    Large,
+}
+
+impl WorkloadSize {
+    pub const ALL: [WorkloadSize; 3] = [WorkloadSize::Small, WorkloadSize::Medium, WorkloadSize::Large];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadSize::Small => "small",
+            WorkloadSize::Medium => "medium",
+            WorkloadSize::Large => "large",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|w| w.name() == s)
+    }
+}
+
+impl std::fmt::Display for WorkloadSize {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Full workload description: model + dataset + training schedule +
+/// input pipeline configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Workload {
+    pub size: WorkloadSize,
+    /// Images in the training split actually iterated per epoch.
+    pub train_images: u64,
+    /// Images in the validation split (evaluated after each epoch).
+    pub val_images: u64,
+    pub image_size: u32,
+    pub num_classes: u32,
+    pub batch_size: u32,
+    pub epochs: u32,
+    /// Whole dataset resident in RAM (CIFAR) vs streamed from disk.
+    pub in_memory: bool,
+    /// `ImageDataGenerator` workers (paper: 1 medium, 16 large).
+    pub workers: u32,
+    /// `max_queue_size` prefetch depth (paper: 10 medium, 20 large).
+    pub max_queue_size: u32,
+}
+
+impl Workload {
+    /// The paper's exact configurations (§3.3, §3.4).
+    pub fn paper(size: WorkloadSize) -> Workload {
+        match size {
+            // CIFAR-10: 50k train images, 90/10 train/val split, 30 epochs.
+            WorkloadSize::Small => Workload {
+                size,
+                train_images: 45_000,
+                val_images: 5_000,
+                image_size: 32,
+                num_classes: 10,
+                batch_size: 32,
+                epochs: 30,
+                in_memory: true,
+                workers: 0, // no generator threads; data already in RAM
+                max_queue_size: 0,
+            },
+            // ImageNet64x64: 1,281,167 train images, 5 epochs.
+            WorkloadSize::Medium => Workload {
+                size,
+                train_images: 1_281_167,
+                val_images: 50_000,
+                image_size: 64,
+                num_classes: 1_000,
+                batch_size: 32,
+                epochs: 5,
+                in_memory: false,
+                workers: 1,
+                max_queue_size: 10,
+            },
+            // ImageNet-2012 resized to 224x224, 5 epochs.
+            WorkloadSize::Large => Workload {
+                size,
+                train_images: 1_281_167,
+                val_images: 50_000,
+                image_size: 224,
+                num_classes: 1_000,
+                batch_size: 32,
+                epochs: 5,
+                in_memory: false,
+                workers: 16,
+                max_queue_size: 20,
+            },
+        }
+    }
+
+    /// Optimizer steps per training epoch.
+    pub fn steps_per_epoch(&self) -> u64 {
+        self.train_images / self.batch_size as u64
+    }
+
+    /// Bytes of one input batch on the device (NHWC f32).
+    pub fn batch_bytes(&self) -> u64 {
+        self.batch_size as u64 * self.image_size as u64 * self.image_size as u64 * 3 * 4
+    }
+
+    /// Raw dataset footprint if held in memory (the paper's ~1.5 GB
+    /// CIFAR estimate uses 8 bytes/value; we model the same arithmetic).
+    pub fn dataset_bytes(&self) -> u64 {
+        (self.train_images + self.val_images)
+            * self.image_size as u64
+            * self.image_size as u64
+            * 3
+            * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_schedules() {
+        let s = Workload::paper(WorkloadSize::Small);
+        assert_eq!(s.epochs, 30);
+        assert_eq!(s.steps_per_epoch(), 1406);
+        let m = Workload::paper(WorkloadSize::Medium);
+        assert_eq!(m.epochs, 5);
+        assert_eq!(m.steps_per_epoch(), 40_036);
+        let l = Workload::paper(WorkloadSize::Large);
+        assert_eq!(l.workers, 16);
+        assert_eq!(l.max_queue_size, 20);
+    }
+
+    #[test]
+    fn cifar_fits_in_memory_estimate() {
+        // Paper: "approximately ... 1.5 GB of memory" for all 60k images
+        // (50k train+val here plus 10k test it doesn't iterate).
+        let s = Workload::paper(WorkloadSize::Small);
+        let total_60k = 60_000u64 * 32 * 32 * 3 * 8;
+        assert!(s.in_memory);
+        assert!((total_60k as f64 - 1.5e9).abs() / 1.5e9 < 0.05);
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for w in WorkloadSize::ALL {
+            assert_eq!(WorkloadSize::parse(w.name()), Some(w));
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Inventory parity: the Rust layer inventory (rust/src/workload/resnet.rs)
+//! must agree with the Python model (python/compile/model.py) on the
+//! full-width paper architectures — parameter counts and topology are
+//! computed independently in both languages and compared through
+//! `artifacts/manifest.json`.
+
+use migsim::runtime::artifacts::ArtifactStore;
+use migsim::workload::resnet::ModelConfig;
+use migsim::workload::spec::WorkloadSize;
+
+fn store() -> Option<ArtifactStore> {
+    ArtifactStore::open_default().ok()
+}
+
+#[test]
+fn full_width_param_counts_match_python() {
+    let Some(store) = store() else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    for w in WorkloadSize::ALL {
+        let rust = ModelConfig::paper(w);
+        let Some(py) = store.manifest.full_width.get(w.name()) else {
+            panic!("manifest missing full_width entry for {w}");
+        };
+        assert_eq!(rust.depth(), py.depth, "{w}: depth");
+        assert_eq!(
+            rust.stage_blocks, py.stage_blocks,
+            "{w}: stage blocks"
+        );
+        // Python counts the full-width config at its own input size /
+        // class count; the architectures must agree exactly.
+        assert_eq!(
+            rust.param_count(),
+            py.param_count,
+            "{w}: param count rust={} python={}",
+            rust.param_count(),
+            py.param_count
+        );
+    }
+}
+
+#[test]
+fn trainable_variants_have_same_topology() {
+    let Some(store) = store() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    for w in WorkloadSize::ALL {
+        let rust = ModelConfig::paper(w);
+        let Some(v) = store.manifest.variants.get(w.name()) else {
+            continue; // variant not compiled in this artifact set
+        };
+        assert_eq!(rust.depth(), v.depth, "{w}: depth mismatch");
+        assert_eq!(rust.stage_blocks, v.stage_blocks, "{w}: stage blocks");
+    }
+}
+
+#[test]
+fn init_params_match_manifest_count() {
+    let Some(store) = store() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    for v in store.manifest.variants.values() {
+        let params = store.load_init_params(v).expect("readable params");
+        assert_eq!(params.len() as u64, v.param_count, "{}", v.variant);
+        assert!(
+            params.iter().all(|p| p.is_finite()),
+            "{}: non-finite init params",
+            v.variant
+        );
+        // He-init: roughly zero-mean.
+        let mean: f64 = params.iter().map(|&p| p as f64).sum::<f64>() / params.len() as f64;
+        assert!(mean.abs() < 0.05, "{}: init mean {mean}", v.variant);
+    }
+}

@@ -1,0 +1,141 @@
+//! Integration: the full §3.4 experiment matrix and every figure
+//! generator, end to end, with the paper's qualitative findings asserted
+//! at the integration level.
+
+use migsim::coordinator::matrix::{find, paper_matrix, run_matrix};
+use migsim::report::figures;
+use migsim::simgpu::calibration::Calibration;
+use migsim::util::tempdir::TempDir;
+use migsim::workload::spec::WorkloadSize;
+
+fn results() -> Vec<migsim::coordinator::results::ExperimentResult> {
+    run_matrix(&paper_matrix(1), &Calibration::paper())
+}
+
+#[test]
+fn matrix_covers_paper_grid() {
+    let r = results();
+    assert_eq!(r.len(), 27); // 3 workloads x 9 device groups
+    // The paper's ~135 hours for its full (non-replicated) run: ours
+    // must land in the same order of magnitude.
+    let sim_hours: f64 = r.iter().map(|x| x.total_seconds).sum::<f64>() / 3600.0;
+    assert!(
+        (30.0..400.0).contains(&sim_hours),
+        "simulated total {sim_hours} h vs paper ~135 h"
+    );
+}
+
+#[test]
+fn headline_small_throughput_gain() {
+    // "leading to ~3 times the throughput" (abstract).
+    let r = results();
+    let one = find(&r, WorkloadSize::Small, "7g.40gb one").unwrap();
+    let par = find(&r, WorkloadSize::Small, "1g.5gb parallel").unwrap();
+    let gain = par.images_per_second / one.images_per_second;
+    assert!((1.5..4.5).contains(&gain), "throughput gain {gain}");
+    // Latency penalty stays well under the 7x resource ratio.
+    let penalty = par.mean_epoch_seconds() / one.mean_epoch_seconds();
+    assert!(penalty < 5.0, "latency penalty {penalty}");
+}
+
+#[test]
+fn headline_no_interference_everywhere() {
+    let r = results();
+    for w in WorkloadSize::ALL {
+        for profile in ["3g.20gb", "2g.10gb", "1g.5gb"] {
+            let one = find(&r, w, &format!("{profile} one"));
+            let par = find(&r, w, &format!("{profile} parallel"));
+            if let (Some(one), Some(par)) = (one, par) {
+                if one.completed() && par.completed() {
+                    let a = one.mean_epoch_seconds();
+                    let b = par.mean_epoch_seconds();
+                    assert!(
+                        ((a - b) / a).abs() < 1e-9,
+                        "{w} {profile}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn headline_medium_large_no_throughput_benefit() {
+    // §5.1: "we do not observe any throughput increase associated with
+    // the parallel runs over the isolated run for the medium and large".
+    let r = results();
+    for w in [WorkloadSize::Medium, WorkloadSize::Large] {
+        let one = find(&r, w, "7g.40gb one").unwrap();
+        let par = find(&r, w, "2g.10gb parallel").unwrap();
+        let gain = par.images_per_second / one.images_per_second;
+        assert!(
+            (0.6..1.4).contains(&gain),
+            "{w}: parallel 'gain' {gain} should be ~1"
+        );
+    }
+}
+
+#[test]
+fn dcgm_orderings_match_paper() {
+    let r = results();
+    let inst = |w, label: &str, field: fn(&migsim::telemetry::dcgm::DcgmFields) -> f64| {
+        let d = find(&r, w, label).unwrap().dcgm.as_ref().unwrap();
+        field(&d.instances[0].fields)
+    };
+    // Fewer slices => higher instance-level activity, every workload.
+    for w in WorkloadSize::ALL {
+        let labels: &[&str] = if w == WorkloadSize::Small {
+            &["7g.40gb one", "3g.20gb one", "2g.10gb one", "1g.5gb one"]
+        } else {
+            &["7g.40gb one", "3g.20gb one", "2g.10gb one"]
+        };
+        for pair in labels.windows(2) {
+            let a = inst(w, pair[0], |f| f.gract);
+            let b = inst(w, pair[1], |f| f.gract);
+            assert!(b > a, "{w}: GRACT {} !> {} ({} vs {})", pair[1], pair[0], b, a);
+            let a = inst(w, pair[0], |f| f.smact);
+            let b = inst(w, pair[1], |f| f.smact);
+            assert!(b > a, "{w}: SMACT ordering");
+        }
+    }
+    // DRAMA instance ordering 2g > 3g > 7g (Fig 7).
+    for w in WorkloadSize::ALL {
+        let d2 = inst(w, "2g.10gb one", |f| f.drama);
+        let d3 = inst(w, "3g.20gb one", |f| f.drama);
+        let d7 = inst(w, "7g.40gb one", |f| f.drama);
+        assert!(d2 > d3 && d3 > d7, "{w}: DRAMA ordering {d2} {d3} {d7}");
+    }
+    // Small workload on 7g is the classic underutilization case:
+    // SMACT below the DCGM 'ineffective' 50% line (paper: 40%).
+    assert!(inst(WorkloadSize::Small, "7g.40gb one", |f| f.smact) < 0.5);
+    // Medium/large on small instances run hot (paper: >70%).
+    assert!(inst(WorkloadSize::Large, "2g.10gb one", |f| f.smact) > 0.7);
+}
+
+#[test]
+fn all_figures_write_csv() {
+    let r = results();
+    let dir = TempDir::new().unwrap();
+    let figs = figures::all_figures(&r);
+    assert_eq!(figs.len(), 20);
+    for f in &figs {
+        f.write_csv(dir.path()).unwrap();
+        let path = dir.path().join(format!("{}.csv", f.id));
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.lines().count() >= 2, "{}: empty CSV", f.id);
+    }
+}
+
+#[test]
+fn non_mig_beats_7g_for_all_workloads() {
+    let r = results();
+    for w in WorkloadSize::ALL {
+        let nm = find(&r, w, "non-MIG").unwrap().mean_epoch_seconds();
+        let m7 = find(&r, w, "7g.40gb one").unwrap().mean_epoch_seconds();
+        let gain = (m7 - nm) / m7;
+        assert!(
+            (0.0..0.08).contains(&gain),
+            "{w}: non-MIG gain {gain} outside paper band (0.7-2.9%)"
+        );
+    }
+}

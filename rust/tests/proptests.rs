@@ -1,0 +1,253 @@
+//! Property-based tests (in-tree harness: `migsim::util::prop`) on the
+//! coordinator/simulator invariants called out in DESIGN.md §6.
+
+use migsim::coordinator::colocation::run_group;
+use migsim::mig::gpu::MigGpu;
+use migsim::mig::placement::PartitionSet;
+use migsim::mig::profile::{MigProfile, COMPUTE_SLICES, MEMORY_SLICES};
+use migsim::simgpu::calibration::Calibration;
+use migsim::simgpu::engine::{InstanceResources, SimEngine};
+use migsim::simgpu::kernel::{KernelClass, KernelDesc, StepTrace};
+use migsim::simgpu::spec::A100;
+use migsim::telemetry::dcgm;
+use migsim::util::prop::{forall, forall_ok};
+use migsim::util::rng::Rng;
+
+fn random_multiset(rng: &mut Rng) -> Vec<MigProfile> {
+    let n = 1 + rng.below(7) as usize;
+    (0..n)
+        .map(|_| MigProfile::ALL[rng.below(5) as usize])
+        .collect()
+}
+
+fn random_kernel(rng: &mut Rng) -> KernelDesc {
+    KernelDesc {
+        name: "prop",
+        class: match rng.below(3) {
+            0 => KernelClass::Gemm,
+            1 => KernelClass::Elementwise,
+            _ => KernelClass::Optimizer,
+        },
+        flops: 1e6 + rng.next_f64() * 5e9,
+        dram_bytes: 1e4 + rng.next_f64() * 5e8,
+        grid_blocks: 1 + rng.below(4000),
+        warps_per_block: 1 + rng.below(16) as u32,
+        blocks_per_sm: 1 + rng.below(8) as u32,
+        arith_scale: 0.05 + rng.next_f64() * 0.95,
+    }
+}
+
+fn random_trace(rng: &mut Rng) -> StepTrace {
+    let n = 1 + rng.below(80) as usize;
+    StepTrace {
+        kernels: (0..n).map(|_| random_kernel(rng)).collect(),
+    }
+}
+
+/// (i) Any partition the first-fit placer accepts respects the slice
+/// budget and full pairwise legality.
+#[test]
+fn prop_accepted_partitions_respect_slice_budget() {
+    forall_ok(0xA11, 500, random_multiset, |profiles| {
+        match PartitionSet::first_fit(profiles) {
+            None => Ok(()),
+            Some(set) => {
+                if set.used_compute_slices() > COMPUTE_SLICES {
+                    return Err(format!("compute overflow: {set:?}"));
+                }
+                if set.used_memory_slices() > MEMORY_SLICES {
+                    return Err(format!("memory overflow: {set:?}"));
+                }
+                set.validate().map_err(|e| e.to_string())
+            }
+        }
+    });
+}
+
+/// (i-b) The incremental GPU manager and the batch placer agree on
+/// feasibility for homogeneous requests.
+#[test]
+fn prop_gpu_manager_matches_batch_placer() {
+    forall(0xB22, 300, random_multiset, |profiles| {
+        let batch = PartitionSet::first_fit(profiles).is_some();
+        // Incremental creation sorted big-first (the placer's order).
+        let mut sorted = profiles.clone();
+        sorted.sort_by_key(|p| std::cmp::Reverse(p.memory_slices()));
+        let mut gpu = MigGpu::default();
+        let incremental = sorted.iter().all(|&p| gpu.create_instance(p).is_ok());
+        // Incremental first-fit can only succeed if batch placement can.
+        !incremental || batch
+    });
+}
+
+/// (ii) Co-located MIG runs are step-for-step identical to isolation.
+#[test]
+fn prop_colocation_isolation() {
+    forall_ok(0xC33, 25, random_trace, |trace| {
+        let cal = Calibration::paper();
+        let res = InstanceResources::mig(14, 1);
+        let engine = SimEngine::new(A100, cal);
+        let isolated = engine.run_epoch(trace, res, 5, 0.0);
+        let (group, _) = run_group(trace, res, 7, 1, 5, 0.0, cal);
+        for (i, s) in group.iter().enumerate() {
+            if s.wall_s != isolated.wall_s {
+                return Err(format!("process {i}: {} != {}", s.wall_s, isolated.wall_s));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (iii) More SMs never increase step time (same memory share).
+#[test]
+fn prop_more_sms_never_slower() {
+    forall_ok(0xD44, 200, random_trace, |trace| {
+        let engine = SimEngine::new(A100, Calibration::paper());
+        let mut last = f64::INFINITY;
+        for sms in [14u32, 28, 42, 56, 98] {
+            let t = engine
+                .run_step(trace, InstanceResources::mig(sms, 8), 0.0)
+                .wall_s;
+            if t > last * (1.0 + 1e-12) {
+                return Err(format!("{sms} SMs slower: {t} > {last}"));
+            }
+            last = t;
+        }
+        Ok(())
+    });
+}
+
+/// (iii-b) More memory slices never increase step time (same SMs).
+#[test]
+fn prop_more_bandwidth_never_slower() {
+    forall_ok(0xD55, 200, random_trace, |trace| {
+        let engine = SimEngine::new(A100, Calibration::paper());
+        let mut last = f64::INFINITY;
+        for mem in [1u32, 2, 4, 8] {
+            let t = engine
+                .run_step(trace, InstanceResources::mig(98, mem), 0.0)
+                .wall_s;
+            if t > last * (1.0 + 1e-12) {
+                return Err(format!("{mem} slices slower: {t} > {last}"));
+            }
+            last = t;
+        }
+        Ok(())
+    });
+}
+
+/// (iv) Device-level DCGM fields equal instance values weighted by
+/// slice share, for every profile and any activity account.
+#[test]
+fn prop_device_metric_algebra() {
+    forall_ok(0xE66, 100, random_trace, |trace| {
+        let engine = SimEngine::new(A100, Calibration::paper());
+        for p in MigProfile::ALL {
+            let res = InstanceResources::mig(p.sm_count(), p.memory_slices());
+            let n = p.max_homogeneous();
+            let per: Vec<_> = (0..n).map(|_| engine.run_step(trace, res, 0.0)).collect();
+            let report = dcgm::device_report(&engine, Some(p), &per);
+            let cw = p.compute_slices() as f64 / COMPUTE_SLICES as f64;
+            let expect: f64 = report.instances.iter().map(|i| i.fields.gract * cw).sum();
+            if (report.device.fields.gract - expect).abs() > 1e-12 {
+                return Err(format!("{p}: device {} != {expect}", report.device.fields.gract));
+            }
+            // All fields bounded.
+            for f in [
+                report.device.fields.gract,
+                report.device.fields.smact,
+                report.device.fields.smocc,
+                report.device.fields.drama,
+            ] {
+                if !(0.0..=1.0 + 1e-9).contains(&f) {
+                    return Err(format!("{p}: field out of range {f}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (v) Scheduler conservation: every (process, epoch) event occurs
+/// exactly once, regardless of thread interleaving.
+#[test]
+fn prop_scheduler_conservation() {
+    forall_ok(0xF77, 30, |rng| (1 + rng.below(7) as u32, 1 + rng.below(4) as u32), |&(n, epochs)| {
+        let trace = StepTrace {
+            kernels: vec![KernelDesc {
+                name: "k",
+                class: KernelClass::Gemm,
+                flops: 1e8,
+                dram_bytes: 1e6,
+                grid_blocks: 64,
+                warps_per_block: 8,
+                blocks_per_sm: 2,
+                arith_scale: 1.0,
+            }],
+        };
+        let (stats, log) = run_group(
+            &trace,
+            InstanceResources::mig(14, 1),
+            n,
+            epochs,
+            3,
+            0.0,
+            Calibration::paper(),
+        );
+        if stats.len() != n as usize {
+            return Err(format!("lost processes: {}", stats.len()));
+        }
+        if log.len() != (n * epochs) as usize {
+            return Err(format!("event count {} != {}", log.len(), n * epochs));
+        }
+        for p in 0..n {
+            for e in 0..epochs {
+                let count = log.iter().filter(|ev| ev.process == p && ev.epoch == e).count();
+                if count != 1 {
+                    return Err(format!("({p},{e}) occurred {count} times"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Wave-quantization sanity: step time is monotone non-increasing in
+/// SM count AND the marginal benefit shrinks (diminishing returns) for
+/// small-grid traces — the Fig 2 mechanism, property-tested.
+#[test]
+fn prop_diminishing_returns_for_small_grids() {
+    forall_ok(
+        0xAB8,
+        100,
+        |rng| {
+            let n = 5 + rng.below(40) as usize;
+            StepTrace {
+                kernels: (0..n)
+                    .map(|_| {
+                        let mut k = random_kernel(rng);
+                        k.grid_blocks = 1 + rng.below(120); // small grids
+                        k
+                    })
+                    .collect(),
+            }
+        },
+        |trace| {
+            let engine = SimEngine::new(A100, Calibration::paper());
+            let t = |sms| {
+                engine
+                    .run_step(trace, InstanceResources::mig(sms, 8), 0.0)
+                    .wall_s
+            };
+            let (t14, t56, t98) = (t(14), t(56), t(98));
+            let gain_low = t14 / t56; // 4x the SMs
+            let gain_high = t56 / t98; // 1.75x the SMs
+            if gain_high > gain_low + 1e-9 {
+                return Err(format!(
+                    "returns must diminish: 14->56 {gain_low}, 56->98 {gain_high}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
