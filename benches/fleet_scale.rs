@@ -1,0 +1,54 @@
+//! Fleet-simulator scaling benchmark: a 10k-job trace on a 16-GPU
+//! fleet must stay interactive — the event loop is O(events log events)
+//! with memoized rates, so host time is decoupled from simulated time.
+
+use migsim::cluster::fleet::{FleetConfig, FleetSim};
+use migsim::cluster::policy::PolicyKind;
+use migsim::cluster::trace::{poisson_trace, TraceConfig};
+use migsim::simgpu::calibration::Calibration;
+use migsim::util::bench::{bench, section};
+use migsim::util::fmt_duration;
+
+fn main() {
+    section("cluster fleet scaling");
+    let cal = Calibration::paper();
+    let trace = poisson_trace(&TraceConfig {
+        jobs: 10_000,
+        mean_interarrival_s: 2.0,
+        mix: [0.6, 0.3, 0.1],
+        epochs: Some(1),
+        seed: migsim::util::rng::resolve_seed(None),
+    });
+
+    for kind in [PolicyKind::Mps, PolicyKind::MigStatic, PolicyKind::MigDynamic] {
+        let r = bench(&format!("10k jobs / 16 GPUs / {}", kind.name()), 1, 5, || {
+            let config = FleetConfig {
+                a100s: 16,
+                a30s: 0,
+                ..FleetConfig::default()
+            };
+            let sim = FleetSim::new(config, kind.build(&cal, 7, None), cal, &trace);
+            let m = sim.run();
+            assert_eq!(m.finished() + m.rejected() + m.unserved(), 10_000);
+            m.makespan_s
+        });
+        println!("{r}");
+        let jobs_per_s = 10_000.0 / r.median_s;
+        println!("  scheduled jobs/s (host): {jobs_per_s:.0}");
+    }
+
+    // One full report for the record.
+    let config = FleetConfig {
+        a100s: 16,
+        a30s: 0,
+        ..FleetConfig::default()
+    };
+    let m = FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace).run();
+    println!(
+        "\nmps reference: {} finished | simulated makespan {} | {:.1} img/s",
+        m.finished(),
+        fmt_duration(m.makespan_s),
+        m.aggregate_images_per_second()
+    );
+    assert!(m.finished() > 9_000, "most jobs must finish: {}", m.finished());
+}

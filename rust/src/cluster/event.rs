@@ -1,0 +1,150 @@
+//! The discrete-event timeline: a binary-heap priority queue of
+//! simulation events ordered by (time, insertion sequence).
+//!
+//! The sequence number makes the ordering *total* and deterministic:
+//! two events at the same simulated instant pop in the order they were
+//! pushed, so a fleet run is bit-reproducible for a fixed seed
+//! regardless of how many events collide on a timestamp.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Identifier of a job within one fleet run (index into the job table).
+pub type JobId = usize;
+
+/// What happens when an event fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A job enters the admission queue.
+    Arrival(JobId),
+    /// A placed job completes its final step. `gen` must match the
+    /// job's current generation — rate changes (co-runner churn)
+    /// reschedule completion, leaving stale finish events in the heap
+    /// that are dropped on pop.
+    Finish { job: JobId, gen: u64 },
+    /// A drained GPU finishes reconfiguring to a new MIG partition.
+    Repartition { gpu: usize },
+}
+
+/// One scheduled event.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub time_s: f64,
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+// Ordered for a max-heap: "greatest" = earliest time, then lowest seq.
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .time_s
+            .total_cmp(&self.time_s)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+/// The event heap.
+#[derive(Debug, Default)]
+pub struct Timeline {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline::default()
+    }
+
+    /// Schedule `kind` at absolute simulated time `time_s`.
+    pub fn push(&mut self, time_s: f64, kind: EventKind) {
+        debug_assert!(time_s.is_finite(), "event time must be finite: {time_s}");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { time_s, seq, kind });
+    }
+
+    /// Next event in (time, insertion) order.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut t = Timeline::new();
+        t.push(3.0, EventKind::Arrival(3));
+        t.push(1.0, EventKind::Arrival(1));
+        t.push(2.0, EventKind::Arrival(2));
+        let order: Vec<f64> = std::iter::from_fn(|| t.pop()).map(|e| e.time_s).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut t = Timeline::new();
+        for id in 0..10 {
+            t.push(5.0, EventKind::Arrival(id));
+        }
+        let ids: Vec<JobId> = std::iter::from_fn(|| t.pop())
+            .map(|e| match e.kind {
+                EventKind::Arrival(id) => id,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut t = Timeline::new();
+        t.push(10.0, EventKind::Arrival(0));
+        t.push(1.0, EventKind::Arrival(1));
+        assert_eq!(t.pop().unwrap().time_s, 1.0);
+        t.push(4.0, EventKind::Repartition { gpu: 0 });
+        t.push(4.0, EventKind::Finish { job: 2, gen: 0 });
+        // Same time: repartition was pushed first, so it pops first.
+        assert!(matches!(t.pop().unwrap().kind, EventKind::Repartition { .. }));
+        assert!(matches!(t.pop().unwrap().kind, EventKind::Finish { .. }));
+        assert_eq!(t.pop().unwrap().time_s, 10.0);
+        assert!(t.pop().is_none());
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn len_tracks_contents() {
+        let mut t = Timeline::new();
+        assert_eq!(t.len(), 0);
+        t.push(1.0, EventKind::Arrival(0));
+        t.push(2.0, EventKind::Arrival(1));
+        assert_eq!(t.len(), 2);
+        t.pop();
+        assert_eq!(t.len(), 1);
+    }
+}

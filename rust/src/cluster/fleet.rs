@@ -1,0 +1,847 @@
+//! The fleet simulator: a deterministic discrete-event loop placing a
+//! stream of training jobs onto many simulated GPUs.
+//!
+//! Mechanics shared by every policy:
+//!
+//! * **Events** — job arrivals, job finishes and GPU repartitions on a
+//!   binary-heap timeline ([`super::event`]). Finish events carry a
+//!   generation number: whenever a job's service rate changes (a
+//!   co-runner joins or leaves its GPU), the stale event is superseded
+//!   and dropped on pop.
+//! * **Rates** — a placed job executes `steps_per_epoch x epochs`
+//!   training steps; the per-step wall time comes from the calibrated
+//!   per-GPU engines (`simgpu::engine` for MIG instances,
+//!   `simgpu::mps` / `simgpu::timeslice` for whole-GPU sharing),
+//!   including the input-pipeline wait. Rates are memoized — a fleet
+//!   run touches only a handful of distinct (workload, resources,
+//!   co-runner) combinations no matter how many jobs flow through.
+//! * **Telemetry** — every rate interval accrues the job's per-step
+//!   activity account onto its GPU, so the run ends with per-GPU
+//!   GRACT/SMACT/SMOCC/DRAMA via [`crate::telemetry::dcgm`].
+//!
+//! Determinism: all state lives in `Vec`s/`BTreeMap`s, event ties break
+//! by insertion order, and the only randomness is the seeded arrival
+//! trace — a fixed `--seed` reproduces a run bit-for-bit.
+
+use super::event::{EventKind, JobId, Timeline};
+use super::metrics::{FleetMetrics, GpuRecord, JobOutcome, JobRecord};
+use super::policy::{Decision, FleetView, GpuView, SchedulingPolicy, ShareModel};
+use super::queue::JobQueue;
+use super::trace::JobSpec;
+use crate::mig::a30::A30Profile;
+use crate::mig::profile::MigProfile;
+use crate::simgpu::calibration::Calibration;
+use crate::simgpu::engine::{InstanceResources, SimEngine, StepStats};
+use crate::simgpu::mps::mps_step;
+use crate::simgpu::spec::{GpuSpec, A100, A30};
+use crate::simgpu::timeslice::timeslice_step;
+use crate::telemetry::dcgm;
+use crate::workload::memory::GpuMemoryPlan;
+use crate::workload::pipeline::PipelineModel;
+use crate::workload::resnet;
+use crate::workload::spec::{Workload, WorkloadSize};
+use std::collections::BTreeMap;
+
+/// Device model of one fleet GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum GpuKind {
+    A100,
+    A30,
+}
+
+impl GpuKind {
+    pub fn spec(self) -> GpuSpec {
+        match self {
+            GpuKind::A100 => A100,
+            GpuKind::A30 => A30,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GpuKind::A100 => "A100",
+            GpuKind::A30 => "A30",
+        }
+    }
+
+    /// Framebuffer of the device's biggest MIG instance.
+    pub fn largest_instance_bytes(self) -> u64 {
+        match self {
+            GpuKind::A100 => MigProfile::P7g40gb.memory_bytes(),
+            GpuKind::A30 => A30Profile::P4g24gb.memory_bytes(),
+        }
+    }
+}
+
+/// One MIG instance shape, unifying A100 and A30 profiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InstanceShape {
+    pub name: &'static str,
+    pub sms: u32,
+    /// Memory slices of the owning device (A100: of 8, A30: of 4).
+    pub mem_slices: u32,
+    pub memory_bytes: u64,
+}
+
+impl InstanceShape {
+    pub fn a100(p: MigProfile) -> InstanceShape {
+        InstanceShape {
+            name: p.name(),
+            sms: p.sm_count(),
+            mem_slices: p.memory_slices(),
+            memory_bytes: p.memory_bytes(),
+        }
+    }
+
+    pub fn a30(p: A30Profile) -> InstanceShape {
+        InstanceShape {
+            name: p.name(),
+            sms: p.sm_count(),
+            mem_slices: p.memory_slices(),
+            memory_bytes: p.memory_bytes(),
+        }
+    }
+}
+
+/// Fleet composition and timing knobs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetConfig {
+    pub a100s: u32,
+    pub a30s: u32,
+    /// Wall time a MIG repartition keeps a GPU offline (drain + nvml
+    /// reconfigure; NVIDIA quotes seconds).
+    pub repartition_s: f64,
+    /// Trace seed, carried into the report for reproducibility.
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            a100s: 8,
+            a30s: 0,
+            repartition_s: 2.0,
+            seed: crate::util::rng::DEFAULT_SEED,
+        }
+    }
+}
+
+/// How a placed job consumes its device — the rate-cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum RateMode {
+    /// Isolated MIG instance.
+    Slot { sms: u32, mem_slices: u32 },
+    /// `n`-way MPS spatial sharing of the whole device.
+    Mps { n: u32 },
+    /// `n`-way kernel-granularity time-slicing of the whole device.
+    TimeSlice { n: u32 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct RateKey {
+    kind: GpuKind,
+    workload: WorkloadSize,
+    mode: RateMode,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    shape: InstanceShape,
+    job: Option<JobId>,
+}
+
+#[derive(Debug, Clone)]
+struct GpuState {
+    kind: GpuKind,
+    /// MIG instances (empty in shared mode).
+    partition: Vec<Slot>,
+    /// Whole-GPU co-runners (shared mode).
+    residents: Vec<JobId>,
+    repartitioning: bool,
+    pending_partition: Vec<InstanceShape>,
+    /// Accumulated activity account for telemetry.
+    accum: StepStats,
+    last_update: f64,
+    jobs_served: u32,
+}
+
+#[derive(Debug, Clone)]
+struct JobState {
+    spec: JobSpec,
+    floor_bytes: u64,
+    /// Steps (plus epoch-overhead equivalents) left to execute.
+    remaining_steps: f64,
+    /// Per-step activity at the current placement (zero until placed).
+    per_step: StepStats,
+    /// Fraction of the device's compute the placement owns — the
+    /// weight its activity carries in the per-GPU telemetry account
+    /// (mirrors `dcgm::device_report`'s compute-slice weighting).
+    device_frac: f64,
+    gpu: Option<usize>,
+    slot: Option<usize>,
+    gen: u64,
+    start_s: Option<f64>,
+    finish_s: Option<f64>,
+    rejected: Option<String>,
+}
+
+/// The discrete-event fleet simulator.
+pub struct FleetSim {
+    config: FleetConfig,
+    cal: Calibration,
+    policy: Box<dyn SchedulingPolicy>,
+    share_model: Option<ShareModel>,
+    gpus: Vec<GpuState>,
+    jobs: Vec<JobState>,
+    queue: JobQueue,
+    timeline: Timeline,
+    now: f64,
+    rate_cache: BTreeMap<RateKey, StepStats>,
+}
+
+impl FleetSim {
+    /// Build a fleet of `config.a100s` A100s followed by `config.a30s`
+    /// A30s, partitioned per the policy. `trace` ids must be dense
+    /// (0..n in order) — `cluster::trace` generators guarantee it.
+    pub fn new(
+        config: FleetConfig,
+        policy: Box<dyn SchedulingPolicy>,
+        cal: Calibration,
+        trace: &[JobSpec],
+    ) -> FleetSim {
+        let share_model = policy.share_model();
+        let kinds = std::iter::repeat_n(GpuKind::A100, config.a100s as usize)
+            .chain(std::iter::repeat_n(GpuKind::A30, config.a30s as usize));
+        let gpus: Vec<GpuState> = kinds
+            .map(|kind| GpuState {
+                kind,
+                partition: policy
+                    .initial_partition(kind)
+                    .into_iter()
+                    .map(|shape| Slot { shape, job: None })
+                    .collect(),
+                residents: Vec::new(),
+                repartitioning: false,
+                pending_partition: Vec::new(),
+                accum: StepStats::default(),
+                last_update: 0.0,
+                jobs_served: 0,
+            })
+            .collect();
+        assert!(!gpus.is_empty(), "fleet needs at least one GPU");
+        let jobs: Vec<JobState> = trace
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                assert_eq!(spec.id, i, "trace ids must be dense and ordered");
+                let w = Workload::paper(spec.workload);
+                JobState {
+                    spec: *spec,
+                    floor_bytes: GpuMemoryPlan::paper(spec.workload).floor_bytes,
+                    remaining_steps: (w.steps_per_epoch() * spec.epochs as u64) as f64,
+                    per_step: StepStats::default(),
+                    device_frac: 0.0,
+                    gpu: None,
+                    slot: None,
+                    gen: 0,
+                    start_s: None,
+                    finish_s: None,
+                    rejected: None,
+                }
+            })
+            .collect();
+        FleetSim {
+            config,
+            cal,
+            policy,
+            share_model,
+            gpus,
+            jobs,
+            queue: JobQueue::new(),
+            timeline: Timeline::new(),
+            now: 0.0,
+            rate_cache: BTreeMap::new(),
+        }
+    }
+
+    /// Run the whole trace to completion and aggregate fleet metrics.
+    pub fn run(mut self) -> FleetMetrics {
+        for job in &self.jobs {
+            self.timeline.push(job.spec.arrival_s, EventKind::Arrival(job.spec.id));
+        }
+        while let Some(event) = self.timeline.pop() {
+            self.now = event.time_s;
+            match event.kind {
+                EventKind::Arrival(id) => {
+                    self.queue.push(id);
+                    self.try_place();
+                }
+                EventKind::Finish { job, gen } => self.handle_finish(job, gen),
+                EventKind::Repartition { gpu } => self.handle_repartition(gpu),
+            }
+        }
+        self.collect_metrics()
+    }
+
+    // -- event handlers ------------------------------------------------
+
+    fn handle_finish(&mut self, id: JobId, gen: u64) {
+        {
+            let j = &self.jobs[id];
+            // Stale (superseded) finish events are dropped here.
+            if j.gen != gen || j.finish_s.is_some() || j.gpu.is_none() {
+                return;
+            }
+        }
+        let gi = self.jobs[id].gpu.expect("running job has a GPU");
+        self.update_gpu(gi);
+        let slot = {
+            let j = &mut self.jobs[id];
+            j.finish_s = Some(self.now);
+            j.remaining_steps = 0.0;
+            j.slot.take()
+        };
+        self.gpus[gi].jobs_served += 1;
+        match slot {
+            Some(si) => self.gpus[gi].partition[si].job = None,
+            None => {
+                self.gpus[gi].residents.retain(|&r| r != id);
+                if !self.gpus[gi].residents.is_empty() {
+                    // Survivors speed up: fewer co-runners.
+                    self.reschedule_residents(gi);
+                }
+            }
+        }
+        self.try_place();
+    }
+
+    fn handle_repartition(&mut self, gi: usize) {
+        self.update_gpu(gi);
+        let g = &mut self.gpus[gi];
+        debug_assert!(g.repartitioning && self.share_model.is_none());
+        g.partition = g
+            .pending_partition
+            .drain(..)
+            .map(|shape| Slot { shape, job: None })
+            .collect();
+        g.repartitioning = false;
+        self.try_place();
+    }
+
+    // -- placement -----------------------------------------------------
+
+    /// Place head-of-queue jobs until the head must wait (strict FIFO).
+    ///
+    /// Fully drained GPUs are first offered to the policy for
+    /// reconfiguration (MigDynamic's drain-and-repartition): with a
+    /// backlog of small jobs, a GPU that empties gets rebuilt as
+    /// 7x 1g.5gb *before* the next placement locks its layout in.
+    fn try_place(&mut self) {
+        self.maybe_repartition_idle_gpus();
+        loop {
+            let Some(head) = self.queue.head() else { break };
+            let workload = self.jobs[head].spec.workload;
+            let view = self.view();
+            match self.policy.place(workload, &view) {
+                Decision::Slot { gpu, slot } => {
+                    assert!(self.share_model.is_none(), "Slot decision from a shared policy");
+                    self.queue.pop();
+                    self.place_slot(head, gpu, slot);
+                }
+                Decision::Share { gpu } => {
+                    assert!(self.share_model.is_some(), "Share decision from a MIG policy");
+                    self.queue.pop();
+                    self.place_share(head, gpu);
+                }
+                Decision::Reject(reason) => {
+                    self.queue.pop();
+                    self.jobs[head].rejected = Some(reason);
+                }
+                Decision::Wait => break,
+            }
+        }
+    }
+
+    /// Offer every fully drained GPU to the policy for reconfiguration
+    /// whenever jobs wait (MigDynamic; no-op elsewhere). This runs
+    /// *before* placement on purpose: the planner's objective includes
+    /// per-job service rates, so rebuilding an idle GPU for the waiting
+    /// mix usually beats placing the head into a stale layout even
+    /// though it costs `repartition_s` of downtime — and the
+    /// `desired == current` guard below stops thrash once the layout
+    /// matches the queue.
+    fn maybe_repartition_idle_gpus(&mut self) {
+        if self.share_model.is_some() || self.queue.is_empty() {
+            return;
+        }
+        let waiting: Vec<WorkloadSize> = self
+            .queue
+            .iter()
+            .map(|id| self.jobs[id].spec.workload)
+            .collect();
+        for gi in 0..self.gpus.len() {
+            let g = &self.gpus[gi];
+            if g.repartitioning || !self.gpu_idle(gi) {
+                continue;
+            }
+            let Some(desired) = self.policy.repartition(g.kind, &waiting) else {
+                continue;
+            };
+            let current: Vec<InstanceShape> = g.partition.iter().map(|s| s.shape).collect();
+            if desired == current {
+                continue;
+            }
+            let g = &mut self.gpus[gi];
+            g.repartitioning = true;
+            g.pending_partition = desired;
+            self.timeline
+                .push(self.now + self.config.repartition_s, EventKind::Repartition { gpu: gi });
+        }
+    }
+
+    fn place_slot(&mut self, id: JobId, gi: usize, si: usize) {
+        self.update_gpu(gi);
+        let kind = self.gpus[gi].kind;
+        let shape = self.gpus[gi].partition[si].shape;
+        debug_assert!(self.gpus[gi].partition[si].job.is_none());
+        let workload = self.jobs[id].spec.workload;
+        let stats = self.per_step(
+            kind,
+            workload,
+            RateMode::Slot {
+                sms: shape.sms,
+                mem_slices: shape.mem_slices,
+            },
+        );
+        self.gpus[gi].partition[si].job = Some(id);
+        // Compute-slice weight, as in dcgm::device_report: a lone busy
+        // 2g.10gb instance makes the device 2/7 active, not 100%.
+        let frac = shape.sms as f64 / kind.spec().mig_sm_count as f64;
+        self.jobs[id].device_frac = frac.min(1.0);
+        self.start_job(id, gi, Some(si), stats);
+    }
+
+    fn place_share(&mut self, id: JobId, gi: usize) {
+        self.update_gpu(gi);
+        self.gpus[gi].residents.push(id);
+        self.jobs[id].gpu = Some(gi);
+        // Every co-runner's rate changes (n grew), the new job included.
+        self.reschedule_residents(gi);
+    }
+
+    /// Recompute rates and finish events for all co-runners of `gi`.
+    /// Assumes `update_gpu(gi)` already ran at `self.now`.
+    fn reschedule_residents(&mut self, gi: usize) {
+        let kind = self.gpus[gi].kind;
+        let n = self.gpus[gi].residents.len() as u32;
+        let model = self.share_model.expect("shared-mode GPU");
+        let ids: Vec<JobId> = self.gpus[gi].residents.clone();
+        // Device share of one co-runner: MPS splits the SMs spatially;
+        // time-slicing runs each client on the whole device in turn
+        // (its busy integral is already device-exclusive time).
+        let frac = match model {
+            ShareModel::Mps => {
+                let spec = kind.spec();
+                (spec.sm_count / n.max(1)).max(1) as f64 / spec.sm_count as f64
+            }
+            ShareModel::TimeSlice => 1.0,
+        };
+        for id in ids {
+            let workload = self.jobs[id].spec.workload;
+            let mode = match model {
+                ShareModel::Mps => RateMode::Mps { n },
+                ShareModel::TimeSlice => RateMode::TimeSlice { n },
+            };
+            let stats = self.per_step(kind, workload, mode);
+            self.jobs[id].device_frac = frac;
+            self.start_job(id, gi, None, stats);
+        }
+    }
+
+    /// Commit a (re)placement: record start, apply the new rate, bump
+    /// the generation and schedule the (new) finish event.
+    fn start_job(&mut self, id: JobId, gi: usize, slot: Option<usize>, stats: StepStats) {
+        let j = &mut self.jobs[id];
+        j.gpu = Some(gi);
+        j.slot = slot;
+        if j.start_s.is_none() {
+            j.start_s = Some(self.now);
+            // Fold the fixed per-epoch framework overhead in as
+            // equivalent steps at the placement-time rate (exact for
+            // MIG slots, whose rate never changes; a negligible
+            // approximation under co-runner churn).
+            j.remaining_steps += j.spec.epochs as f64 * self.cal.epoch_overhead_s / stats.wall_s;
+        }
+        j.per_step = stats;
+        j.gen += 1;
+        let finish = self.now + j.remaining_steps * stats.wall_s;
+        let gen = j.gen;
+        self.timeline.push(finish, EventKind::Finish { job: id, gen });
+    }
+
+    // -- accounting ----------------------------------------------------
+
+    /// Advance GPU `gi`'s running jobs from `last_update` to `now`:
+    /// decrement remaining work and accrue the telemetry account.
+    fn update_gpu(&mut self, gi: usize) {
+        let dt = self.now - self.gpus[gi].last_update;
+        self.gpus[gi].last_update = self.now;
+        if dt <= 0.0 {
+            return;
+        }
+        let running: Vec<JobId> = self.running_jobs(gi);
+        let mut accrued = StepStats::default();
+        for id in running {
+            let j = &mut self.jobs[id];
+            if j.per_step.wall_s <= 0.0 {
+                continue;
+            }
+            let steps = (dt / j.per_step.wall_s).min(j.remaining_steps);
+            j.remaining_steps -= steps;
+            // Activity weighted by the placement's compute share of the
+            // device (DRAM bytes stay unweighted: device-level DRAMA
+            // divides by full-device bandwidth, which already encodes
+            // the memory-slice share).
+            let mut contrib = j.per_step.scaled(steps);
+            contrib.busy_s *= j.device_frac;
+            contrib.smact_integral *= j.device_frac;
+            contrib.smocc_integral *= j.device_frac;
+            accrued.merge(&contrib);
+        }
+        // `merge` also sums wall_s; the GPU account's denominator is
+        // the run's elapsed time, set once at collection.
+        self.gpus[gi].accum.merge(&accrued);
+    }
+
+    fn running_jobs(&self, gi: usize) -> Vec<JobId> {
+        let g = &self.gpus[gi];
+        g.partition
+            .iter()
+            .filter_map(|s| s.job)
+            .chain(g.residents.iter().copied())
+            .collect()
+    }
+
+    fn gpu_idle(&self, gi: usize) -> bool {
+        self.running_jobs(gi).is_empty()
+    }
+
+    fn view(&self) -> FleetView {
+        FleetView {
+            gpus: self
+                .gpus
+                .iter()
+                .map(|g| GpuView {
+                    kind: g.kind,
+                    repartitioning: g.repartitioning,
+                    slots: g.partition.iter().map(|s| (s.shape, s.job.is_some())).collect(),
+                    residents: g.residents.len(),
+                    resident_floor_bytes: g
+                        .residents
+                        .iter()
+                        .map(|&id| self.jobs[id].floor_bytes)
+                        .sum(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Per-step activity of `workload` under `mode` on a `kind` device,
+    /// memoized — the whole run touches only a handful of keys.
+    fn per_step(&mut self, kind: GpuKind, workload: WorkloadSize, mode: RateMode) -> StepStats {
+        let key = RateKey { kind, workload, mode };
+        if let Some(s) = self.rate_cache.get(&key) {
+            return *s;
+        }
+        let engine = SimEngine::new(kind.spec(), self.cal);
+        let trace = resnet::step_trace_cached(workload);
+        let pipeline = PipelineModel::paper(workload);
+        let stats = match mode {
+            RateMode::Slot { sms, mem_slices } => {
+                let res = InstanceResources::mig(sms, mem_slices);
+                let dry = engine.run_step(trace, res, 0.0);
+                engine.run_step(trace, res, pipeline.input_wait_s(dry.wall_s))
+            }
+            RateMode::Mps { n } => {
+                let dry = mps_step(&engine, trace, n, 0.0);
+                mps_step(&engine, trace, n, pipeline.input_wait_s(dry.wall_s))
+            }
+            RateMode::TimeSlice { n } => {
+                let dry = timeslice_step(&engine, trace, n, 0.0);
+                timeslice_step(&engine, trace, n, pipeline.input_wait_s(dry.wall_s))
+            }
+        };
+        self.rate_cache.insert(key, stats);
+        stats
+    }
+
+    // -- reporting -----------------------------------------------------
+
+    fn collect_metrics(mut self) -> FleetMetrics {
+        for gi in 0..self.gpus.len() {
+            self.update_gpu(gi);
+        }
+        let elapsed = self.now;
+        let jobs: Vec<JobRecord> = self
+            .jobs
+            .iter()
+            .map(|j| {
+                let outcome = if j.finish_s.is_some() {
+                    JobOutcome::Finished
+                } else if let Some(reason) = &j.rejected {
+                    JobOutcome::Rejected(reason.clone())
+                } else {
+                    JobOutcome::Unserved
+                };
+                JobRecord {
+                    spec: j.spec,
+                    start_s: j.start_s,
+                    finish_s: j.finish_s,
+                    gpu: j.gpu,
+                    outcome,
+                }
+            })
+            .collect();
+        let gpus: Vec<GpuRecord> = self
+            .gpus
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                let spec = g.kind.spec();
+                let engine = SimEngine::new(spec, self.cal);
+                let mut account = g.accum;
+                account.wall_s = elapsed;
+                let f = dcgm::instance_fields(&engine, &account, spec.memory_slices);
+                // Whole-GPU sharing sums co-runner busy integrals, so
+                // cap at the physical 1.0 (concurrent engines).
+                let fields = dcgm::DcgmFields {
+                    gract: f.gract.min(1.0),
+                    smact: f.smact.min(1.0),
+                    smocc: f.smocc.min(1.0),
+                    drama: f.drama.min(1.0),
+                };
+                GpuRecord {
+                    gpu: gi,
+                    kind: g.kind.name(),
+                    jobs_served: g.jobs_served,
+                    fields,
+                }
+            })
+            .collect();
+        FleetMetrics {
+            policy: self.policy.name().to_string(),
+            seed: self.config.seed,
+            makespan_s: elapsed,
+            peak_queue: self.queue.peak_len(),
+            jobs,
+            gpus,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::policy::{Exclusive, MigStatic, Mps, PolicyKind, TimeSlice};
+    use crate::cluster::trace::{poisson_trace, TraceConfig};
+
+    fn cal() -> Calibration {
+        Calibration::paper()
+    }
+
+    fn small_trace(jobs: u32, gap_s: f64) -> Vec<JobSpec> {
+        poisson_trace(&TraceConfig {
+            jobs,
+            mean_interarrival_s: gap_s,
+            mix: [1.0, 0.0, 0.0],
+            epochs: Some(1),
+            seed: 42,
+        })
+    }
+
+    fn run(policy: Box<dyn SchedulingPolicy>, trace: &[JobSpec], gpus: u32) -> FleetMetrics {
+        let config = FleetConfig {
+            a100s: gpus,
+            a30s: 0,
+            ..FleetConfig::default()
+        };
+        FleetSim::new(config, policy, cal(), trace).run()
+    }
+
+    #[test]
+    fn all_jobs_finish_on_an_uncontended_fleet() {
+        // Arrivals far apart: every job should run alone and finish.
+        let trace = small_trace(10, 1e6);
+        let m = run(Box::new(Exclusive), &trace, 2);
+        assert_eq!(m.finished(), 10);
+        assert_eq!(m.rejected(), 0);
+        // No queueing when the fleet is idle at every arrival.
+        assert!(m.mean_wait_s() < 1e-9, "wait {}", m.mean_wait_s());
+    }
+
+    #[test]
+    fn exclusive_queues_under_saturation() {
+        let trace = small_trace(20, 0.001);
+        let m = run(Box::new(Exclusive), &trace, 2);
+        assert_eq!(m.finished(), 20);
+        assert!(m.mean_wait_s() > 0.0);
+        assert!(m.peak_queue >= 10, "peak {}", m.peak_queue);
+    }
+
+    #[test]
+    fn mps_concurrency_beats_exclusive_throughput() {
+        let trace = small_trace(28, 0.001);
+        let ex = run(Box::new(Exclusive), &trace, 2);
+        let mps = run(Box::new(Mps { cap: 7 }), &trace, 2);
+        assert_eq!(mps.finished(), 28);
+        assert!(
+            mps.aggregate_images_per_second() > ex.aggregate_images_per_second(),
+            "mps {} !> exclusive {}",
+            mps.aggregate_images_per_second(),
+            ex.aggregate_images_per_second()
+        );
+        // And it finishes the backlog sooner.
+        assert!(mps.makespan_s < ex.makespan_s);
+    }
+
+    #[test]
+    fn mig_static_isolates_corunners() {
+        // On 3x 2g.10gb, three co-located jobs run at the isolated
+        // 2g rate: the 4th-28th queue behind them.
+        let trace = small_trace(6, 0.001);
+        let m = run(Box::new(MigStatic::new(None, None)), &trace, 1);
+        assert_eq!(m.finished(), 6);
+        // Two waves of three: identical service times per wave.
+        let jcts: Vec<f64> = m.jobs.iter().filter_map(|j| j.jct_s()).collect();
+        assert_eq!(jcts.len(), 6);
+    }
+
+    #[test]
+    fn static_partition_that_never_fits_rejects() {
+        let mut trace = small_trace(2, 10.0);
+        trace[1].workload = WorkloadSize::Large; // floor 9.4 GB
+        let policy = MigStatic::new(Some(vec![MigProfile::P1g5gb; 7]), None);
+        let m = run(Box::new(policy), &trace, 1);
+        assert_eq!(m.finished(), 1);
+        assert_eq!(m.rejected(), 1);
+        let r = m.jobs.iter().find(|j| matches!(j.outcome, JobOutcome::Rejected(_))).unwrap();
+        assert_eq!(r.spec.workload, WorkloadSize::Large);
+    }
+
+    #[test]
+    fn oversized_job_waits_for_memory_not_corunner_cap() {
+        // 8 large jobs, one A100, MPS cap 7: memory admits only 4
+        // at once (4 x 9.4 GB floors within the 38 GB usable), so the
+        // rest wait in queue — never OOM-placed.
+        let mut trace = small_trace(8, 0.001);
+        for j in &mut trace {
+            j.workload = WorkloadSize::Large;
+            j.epochs = 1;
+        }
+        let m = run(Box::new(Mps { cap: 7 }), &trace, 1);
+        assert_eq!(m.finished(), 8);
+        assert_eq!(m.rejected(), 0);
+        // The 5th arrival had to wait for a finish.
+        assert!(m.peak_queue >= 4, "peak {}", m.peak_queue);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let trace = small_trace(30, 0.5);
+        for kind in PolicyKind::ALL {
+            let a = run(kind.build(&cal(), 7, None), &trace, 2);
+            let b = run(kind.build(&cal(), 7, None), &trace, 2);
+            assert_eq!(
+                a.to_json().to_string_pretty(),
+                b.to_json().to_string_pretty(),
+                "{kind} not deterministic"
+            );
+        }
+    }
+
+    #[test]
+    fn timeslice_slower_than_mps_on_same_trace() {
+        let trace = small_trace(14, 0.001);
+        let mps = run(Box::new(Mps { cap: 7 }), &trace, 1);
+        let ts = run(Box::new(TimeSlice { cap: 7 }), &trace, 1);
+        assert_eq!(mps.finished(), 14);
+        assert_eq!(ts.finished(), 14);
+        assert!(mps.makespan_s < ts.makespan_s);
+    }
+
+    #[test]
+    fn telemetry_fields_stay_in_unit_range() {
+        let trace = small_trace(20, 0.001);
+        let m = run(Box::new(Mps { cap: 7 }), &trace, 2);
+        for g in &m.gpus {
+            for v in [g.fields.gract, g.fields.smact, g.fields.smocc, g.fields.drama] {
+                assert!((0.0..=1.0).contains(&v), "gpu {}: {v}", g.gpu);
+            }
+        }
+        // A saturated MPS fleet keeps its GPUs busy.
+        assert!(m.gpus.iter().any(|g| g.fields.gract > 0.5));
+    }
+
+    #[test]
+    fn mig_gract_weighted_by_compute_share() {
+        // One small job alone in a 2g.10gb slot: the device is at most
+        // 2/7 compute-active, and the report must say so (matching
+        // dcgm::device_report semantics, not a saturated 1.0).
+        let trace = small_trace(1, 1.0);
+        let m = run(Box::new(MigStatic::new(None, None)), &trace, 1);
+        assert_eq!(m.finished(), 1);
+        let g = &m.gpus[0];
+        assert!(
+            (0.05..0.35).contains(&g.fields.gract),
+            "gract {} should reflect the 28/98-SM share",
+            g.fields.gract
+        );
+    }
+
+    #[test]
+    fn a30_fleet_runs_and_is_slower_than_a100() {
+        // Medium is bandwidth-heavy (traffic factor 28): the A30's
+        // 933 GB/s vs 1555 GB/s shows directly in the makespan.
+        let mut trace = small_trace(6, 0.001);
+        for j in &mut trace {
+            j.workload = WorkloadSize::Medium;
+        }
+        let a100 = run(Box::new(Exclusive), &trace, 1);
+        let config = FleetConfig {
+            a100s: 0,
+            a30s: 1,
+            ..FleetConfig::default()
+        };
+        let a30 = FleetSim::new(config, Box::new(Exclusive), cal(), &trace).run();
+        assert_eq!(a30.finished(), 6);
+        assert!(a30.makespan_s > a100.makespan_s);
+    }
+
+    #[test]
+    fn mig_dynamic_large_head_behind_small_flood_never_deadlocks() {
+        // Regression: planner's throughput optimum for the waiting mix
+        // (7x 1g.5gb) strands a large head job; the head-feasibility
+        // guard in MigDynamic::repartition must keep the queue moving.
+        let mut trace = small_trace(8, 0.001);
+        trace[0].workload = WorkloadSize::Large;
+        let m = run(PolicyKind::MigDynamic.build(&cal(), 7, None), &trace, 1);
+        assert_eq!(m.unserved(), 0, "{}", m.summary());
+        assert_eq!(m.finished(), 8);
+    }
+
+    #[test]
+    fn mig_dynamic_repartitions_to_seven_singles() {
+        // A flood of small jobs should trigger a repartition away from
+        // the 3x 2g.10gb default toward 7x 1g.5gb, lifting concurrency.
+        let trace = small_trace(40, 0.001);
+        let dynamic = run(PolicyKind::MigDynamic.build(&cal(), 7, None), &trace, 1);
+        let static_ = run(PolicyKind::MigStatic.build(&cal(), 7, None), &trace, 1);
+        assert_eq!(dynamic.finished(), 40);
+        assert!(
+            dynamic.aggregate_images_per_second() > static_.aggregate_images_per_second(),
+            "dynamic {} !> static {}",
+            dynamic.aggregate_images_per_second(),
+            static_.aggregate_images_per_second()
+        );
+    }
+}

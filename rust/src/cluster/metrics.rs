@@ -1,0 +1,296 @@
+//! Fleet-level metric aggregation: queue wait, job completion time,
+//! makespan, aggregate throughput, and per-GPU DCGM-style activity.
+
+use super::trace::JobSpec;
+use crate::telemetry::dcgm::DcgmFields;
+use crate::util::json::Json;
+use crate::util::safe_div;
+
+/// Terminal state of a job after the run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobOutcome {
+    /// Ran to completion.
+    Finished,
+    /// Admission control refused it (memory floor can never fit).
+    Rejected(String),
+    /// Still queued when the event stream drained (trace ended while
+    /// the job waited — only possible for never-placeable backlogs).
+    Unserved,
+}
+
+impl JobOutcome {
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobOutcome::Finished => "finished",
+            JobOutcome::Rejected(_) => "rejected",
+            JobOutcome::Unserved => "unserved",
+        }
+    }
+}
+
+/// Per-job record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobRecord {
+    pub spec: JobSpec,
+    pub start_s: Option<f64>,
+    pub finish_s: Option<f64>,
+    pub gpu: Option<usize>,
+    pub outcome: JobOutcome,
+}
+
+impl JobRecord {
+    /// Queue wait: placement minus arrival.
+    pub fn wait_s(&self) -> Option<f64> {
+        self.start_s.map(|s| s - self.spec.arrival_s)
+    }
+
+    /// Job completion time: finish minus arrival (queue wait included).
+    pub fn jct_s(&self) -> Option<f64> {
+        self.finish_s.map(|f| f - self.spec.arrival_s)
+    }
+}
+
+/// Per-GPU record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuRecord {
+    pub gpu: usize,
+    pub kind: &'static str,
+    pub jobs_served: u32,
+    /// GRACT/SMACT/SMOCC/DRAMA over the whole run.
+    pub fields: DcgmFields,
+}
+
+/// Everything a fleet run reports.
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    pub policy: String,
+    pub seed: u64,
+    /// Last event time: the whole stream is served by here.
+    pub makespan_s: f64,
+    /// Admission-queue high-water mark.
+    pub peak_queue: usize,
+    pub jobs: Vec<JobRecord>,
+    pub gpus: Vec<GpuRecord>,
+}
+
+/// `p`-th percentile (0-100) of a sample, nearest-rank on the sorted
+/// list. Returns 0 for an empty sample.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+impl FleetMetrics {
+    pub fn finished(&self) -> usize {
+        self.jobs.iter().filter(|j| j.outcome == JobOutcome::Finished).count()
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.jobs
+            .iter()
+            .filter(|j| matches!(j.outcome, JobOutcome::Rejected(_)))
+            .count()
+    }
+
+    pub fn unserved(&self) -> usize {
+        self.jobs.iter().filter(|j| j.outcome == JobOutcome::Unserved).count()
+    }
+
+    /// Images trained by finished jobs.
+    pub fn total_images(&self) -> f64 {
+        self.jobs
+            .iter()
+            .filter(|j| j.outcome == JobOutcome::Finished)
+            .map(|j| j.spec.images())
+            .sum()
+    }
+
+    /// Fleet throughput: images trained per second of makespan — the
+    /// figure of merit the policy ranking is stated in.
+    pub fn aggregate_images_per_second(&self) -> f64 {
+        safe_div(self.total_images(), self.makespan_s)
+    }
+
+    fn waits(&self) -> Vec<f64> {
+        self.jobs.iter().filter_map(|j| j.wait_s()).collect()
+    }
+
+    fn jcts(&self) -> Vec<f64> {
+        self.jobs.iter().filter_map(|j| j.jct_s()).collect()
+    }
+
+    pub fn mean_wait_s(&self) -> f64 {
+        let w = self.waits();
+        safe_div(w.iter().sum(), w.len() as f64)
+    }
+
+    pub fn p50_jct_s(&self) -> f64 {
+        percentile(&self.jcts(), 50.0)
+    }
+
+    pub fn p95_jct_s(&self) -> f64 {
+        percentile(&self.jcts(), 95.0)
+    }
+
+    /// Mean of the per-GPU GRACT medians-equivalent (activity over the
+    /// whole run) — the fleet utilization headline.
+    pub fn mean_gract(&self) -> f64 {
+        let vals: Vec<f64> = self.gpus.iter().map(|g| g.fields.gract).collect();
+        safe_div(vals.iter().sum(), vals.len() as f64)
+    }
+
+    /// Summary JSON (per-GPU detail included; per-job detail goes to
+    /// CSV — see `report::fleet`).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("policy", Json::from_str_val(&self.policy))
+            .set("seed", Json::from_u64(self.seed))
+            .set("gpus", Json::from_u64(self.gpus.len() as u64))
+            .set("jobs", Json::from_u64(self.jobs.len() as u64))
+            .set("finished", Json::from_u64(self.finished() as u64))
+            .set("rejected", Json::from_u64(self.rejected() as u64))
+            .set("unserved", Json::from_u64(self.unserved() as u64))
+            .set("makespan_s", Json::from_f64(self.makespan_s))
+            .set("peak_queue", Json::from_u64(self.peak_queue as u64))
+            .set("mean_wait_s", Json::from_f64(self.mean_wait_s()))
+            .set("p50_jct_s", Json::from_f64(self.p50_jct_s()))
+            .set("p95_jct_s", Json::from_f64(self.p95_jct_s()))
+            .set("total_images", Json::from_f64(self.total_images()))
+            .set(
+                "aggregate_images_per_second",
+                Json::from_f64(self.aggregate_images_per_second()),
+            )
+            .set("mean_gract", Json::from_f64(self.mean_gract()));
+        let specs: Vec<JobSpec> = self.jobs.iter().map(|j| j.spec).collect();
+        j.set("trace", super::trace::trace_summary_json(&specs));
+        let gpus: Vec<Json> = self
+            .gpus
+            .iter()
+            .map(|g| {
+                let mut o = Json::obj();
+                o.set("gpu", Json::from_u64(g.gpu as u64))
+                    .set("kind", Json::from_str_val(g.kind))
+                    .set("jobs_served", Json::from_u64(g.jobs_served as u64))
+                    .set("gract", Json::from_f64(g.fields.gract))
+                    .set("smact", Json::from_f64(g.fields.smact))
+                    .set("smocc", Json::from_f64(g.fields.smocc))
+                    .set("drama", Json::from_f64(g.fields.drama));
+                o
+            })
+            .collect();
+        j.set("per_gpu", Json::Arr(gpus));
+        j
+    }
+
+    /// One human-readable line for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<12} {} jobs: {} finished, {} rejected, {} unserved | makespan {} | wait μ {} | JCT p50 {} p95 {} | {:.1} img/s | GRACT μ {:.2}",
+            self.policy,
+            self.jobs.len(),
+            self.finished(),
+            self.rejected(),
+            self.unserved(),
+            crate::util::fmt_duration(self.makespan_s),
+            crate::util::fmt_duration(self.mean_wait_s()),
+            crate::util::fmt_duration(self.p50_jct_s()),
+            crate::util::fmt_duration(self.p95_jct_s()),
+            self.aggregate_images_per_second(),
+            self.mean_gract(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::spec::WorkloadSize;
+
+    fn record(id: usize, arrival: f64, start: f64, finish: f64) -> JobRecord {
+        JobRecord {
+            spec: JobSpec {
+                id,
+                arrival_s: arrival,
+                workload: WorkloadSize::Small,
+                epochs: 1,
+            },
+            start_s: Some(start),
+            finish_s: Some(finish),
+            gpu: Some(0),
+            outcome: JobOutcome::Finished,
+        }
+    }
+
+    fn metrics(jobs: Vec<JobRecord>) -> FleetMetrics {
+        FleetMetrics {
+            policy: "test".into(),
+            seed: 1,
+            makespan_s: 100.0,
+            peak_queue: 2,
+            jobs,
+            gpus: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn wait_and_jct() {
+        let r = record(0, 10.0, 15.0, 40.0);
+        assert_eq!(r.wait_s(), Some(5.0));
+        assert_eq!(r.jct_s(), Some(30.0));
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert!((percentile(&v, 50.0) - 50.0).abs() <= 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn counts_and_throughput() {
+        let mut jobs = vec![record(0, 0.0, 0.0, 50.0), record(1, 0.0, 10.0, 60.0)];
+        jobs.push(JobRecord {
+            outcome: JobOutcome::Rejected("too big".into()),
+            start_s: None,
+            finish_s: None,
+            ..record(2, 0.0, 0.0, 0.0)
+        });
+        let m = metrics(jobs);
+        assert_eq!(m.finished(), 2);
+        assert_eq!(m.rejected(), 1);
+        assert_eq!(m.unserved(), 0);
+        // 2 finished small 1-epoch jobs: 2 x 1406 x 32 images / 100 s.
+        let expect = 2.0 * (1406 * 32) as f64 / 100.0;
+        assert!((m.aggregate_images_per_second() - expect).abs() < 1e-9);
+        assert_eq!(m.mean_wait_s(), 5.0);
+    }
+
+    #[test]
+    fn json_is_parseable_and_complete() {
+        let m = metrics(vec![record(0, 0.0, 1.0, 2.0)]);
+        let j = m.to_json();
+        let text = j.to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("finished").unwrap().as_u64(), Some(1));
+        assert_eq!(back.get("policy").unwrap().as_str(), Some("test"));
+        assert!(back.get("aggregate_images_per_second").unwrap().as_f64().is_some());
+        // Trace composition rides along in the summary.
+        assert_eq!(back.at(&["trace", "small"]).unwrap().as_u64(), Some(1));
+        assert_eq!(back.at(&["trace", "jobs"]).unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn summary_line_mentions_policy_and_counts() {
+        let m = metrics(vec![record(0, 0.0, 1.0, 2.0)]);
+        let s = m.summary();
+        assert!(s.contains("test"));
+        assert!(s.contains("1 finished"));
+    }
+}

@@ -1,0 +1,60 @@
+//! Cluster-scale collocation scheduling — a deterministic discrete-event
+//! simulator for a fleet of MIG-capable GPUs serving a stream of
+//! training jobs.
+//!
+//! The paper answers "which collocation mode is best?" for a *single*
+//! A100. This subsystem asks the follow-up that MISO (arXiv 2207.11428)
+//! and "Optimal Workload Placement on Multi-Instance GPUs"
+//! (arXiv 2409.06646) study: how do MIG, MPS and time-slicing compare
+//! when **many** GPUs serve a continuous stream of heterogeneous
+//! training jobs?
+//!
+//! # Event model
+//!
+//! A run is a binary-heap timeline ([`event::Timeline`]) of three event
+//! kinds: **job arrival** (from a Poisson stream or a CSV trace file,
+//! [`trace`]), **job finish** (scheduled from the job's calibrated
+//! per-step rate; superseded and rescheduled whenever the job's
+//! co-runner count changes), and **GPU repartition** (a drained GPU
+//! coming back with a new MIG layout). Ties pop in insertion order, so
+//! a run is bit-reproducible for a fixed `--seed`.
+//!
+//! Jobs wait in a strict-FIFO admission queue ([`queue`]); placement is
+//! guarded by the paper's §4 memory model — a job is never placed where
+//! its TensorFlow memory floor does not fit (it queues instead), and a
+//! job that can *never* fit under the active policy is rejected.
+//!
+//! # Policies ([`policy::SchedulingPolicy`])
+//!
+//! | policy        | sharing                      | notes |
+//! |---------------|------------------------------|-------|
+//! | `exclusive`   | 1 job / GPU, MIG off         | cluster baseline |
+//! | `mps`         | ≤ cap co-runners, one context| bandwidth-contention model |
+//! | `timeslice`   | ≤ cap co-runners, round-robin| context-switch + cold caches |
+//! | `mig-static`  | fixed MIG partition          | best-fit into free instances |
+//! | `mig-dynamic` | drain-and-repartition        | layouts from `coordinator::planner` |
+//!
+//! # Metrics and usage
+//!
+//! [`fleet::FleetSim::run`] returns [`metrics::FleetMetrics`]: queue
+//! wait, JCT percentiles, makespan, aggregate images/s, and per-GPU
+//! GRACT/SMACT/SMOCC/DRAMA via the [`crate::telemetry`] stack. Export
+//! goes through `report::fleet` (summary JSON + per-job/per-GPU CSV).
+//!
+//! CLI: `migsim fleet --gpus 8 --jobs 1000 --policy mps --seed 42`;
+//! see `examples/fleet_sim.rs` for an all-policy comparison and
+//! `benches/fleet_scale.rs` for the 10k-job scaling benchmark.
+
+pub mod event;
+pub mod fleet;
+pub mod metrics;
+pub mod policy;
+pub mod queue;
+pub mod trace;
+
+pub use event::{Event, EventKind, JobId, Timeline};
+pub use fleet::{FleetConfig, FleetSim, GpuKind, InstanceShape};
+pub use metrics::{FleetMetrics, GpuRecord, JobOutcome, JobRecord};
+pub use policy::{Decision, FleetView, PolicyKind, SchedulingPolicy, ShareModel};
+pub use queue::JobQueue;
+pub use trace::{poisson_trace, JobSpec, TraceConfig};

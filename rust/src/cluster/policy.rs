@@ -1,0 +1,619 @@
+//! Placement policies — the paper's collocation modes lifted to fleet
+//! scale behind the [`SchedulingPolicy`] trait.
+//!
+//! Each policy answers one question: *given the current fleet state,
+//! where does the head-of-queue job go?* The fleet mechanics (rates,
+//! event bookkeeping, telemetry) are shared; only the placement
+//! decision and the sharing model differ:
+//!
+//! * [`Exclusive`] — one job per GPU, whole device (the paper's
+//!   non-MIG baseline; the 1-job-per-GPU cluster default).
+//! * [`Mps`] — up to `cap` co-runners share the whole GPU through one
+//!   CUDA context (bandwidth-contention model from `simgpu::mps`).
+//! * [`TimeSlice`] — up to `cap` co-runners rotate at kernel
+//!   granularity with context-switch + cold-cache costs.
+//! * [`MigStatic`] — every GPU carries a fixed MIG partition; jobs are
+//!   best-fit into free instances whose memory floor fits.
+//! * [`MigDynamic`] — like static, but a fully drained GPU is
+//!   re-partitioned for the waiting mix via `coordinator::planner`.
+//!
+//! Admission control (the paper's §4 OOM boundary) is part of every
+//! decision: a job is never placed where its TensorFlow memory floor
+//! does not fit — it *waits* instead; a job whose floor can never fit
+//! under the active policy is rejected outright.
+
+use super::fleet::{GpuKind, InstanceShape};
+use crate::coordinator::planner;
+use crate::mig::a30::A30Profile;
+use crate::mig::profile::MigProfile;
+use crate::simgpu::calibration::Calibration;
+use crate::workload::memory::{GpuMemoryPlan, USABLE_FRACTION};
+use crate::workload::spec::WorkloadSize;
+
+/// Where the head-of-queue job goes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Decision {
+    /// Place into MIG instance `slot` of GPU `gpu`.
+    Slot { gpu: usize, slot: usize },
+    /// Join GPU `gpu` as a whole-device co-runner.
+    Share { gpu: usize },
+    /// Nothing fits right now; stay queued (head-of-line).
+    Wait,
+    /// Can never run under this policy on this fleet.
+    Reject(String),
+}
+
+/// How whole-GPU co-runners interfere (policies without MIG slots).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShareModel {
+    /// MPS spatial sharing (SM split + bandwidth contention).
+    Mps,
+    /// Default CUDA time-slicing (round-robin + cold caches).
+    TimeSlice,
+}
+
+/// Read-only per-GPU state a policy decides over.
+#[derive(Debug, Clone)]
+pub struct GpuView {
+    pub kind: GpuKind,
+    /// GPU is mid-reconfiguration; nothing can be placed on it.
+    pub repartitioning: bool,
+    /// MIG instances as (shape, occupied) — empty in shared mode.
+    pub slots: Vec<(InstanceShape, bool)>,
+    /// Whole-GPU co-runners currently resident (shared mode).
+    pub residents: usize,
+    /// Sum of the residents' memory floors (shared mode admission).
+    pub resident_floor_bytes: u64,
+}
+
+/// Read-only fleet snapshot.
+#[derive(Debug, Clone, Default)]
+pub struct FleetView {
+    pub gpus: Vec<GpuView>,
+}
+
+/// The TF memory floor of a workload (below it the process OOMs).
+pub fn floor_bytes(w: WorkloadSize) -> u64 {
+    GpuMemoryPlan::paper(w).floor_bytes
+}
+
+/// Allocatable fraction of a capacity (context + reserves excluded).
+pub fn usable_bytes(capacity: u64) -> u64 {
+    (capacity as f64 * USABLE_FRACTION) as u64
+}
+
+/// Does the workload's memory plan fit an instance of `bytes` capacity?
+fn fits_instance(w: WorkloadSize, bytes: u64) -> bool {
+    GpuMemoryPlan::paper(w).allocate(bytes).is_some()
+}
+
+/// A fleet-scale placement policy.
+pub trait SchedulingPolicy {
+    /// CLI / report name.
+    fn name(&self) -> &'static str;
+
+    /// `Some` => whole-GPU sharing with this interference model;
+    /// `None` => MIG instances (the partition carries the isolation).
+    fn share_model(&self) -> Option<ShareModel>;
+
+    /// The MIG partition each GPU starts with (empty in shared mode).
+    fn initial_partition(&self, kind: GpuKind) -> Vec<InstanceShape>;
+
+    /// Decide where the head-of-queue job of `workload` goes.
+    fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision;
+
+    /// Offer a new partition for a fully drained GPU given the waiting
+    /// workloads (head first). `None` = keep the current partition.
+    fn repartition(&self, _kind: GpuKind, _waiting: &[WorkloadSize]) -> Option<Vec<InstanceShape>> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared-GPU policies
+// ---------------------------------------------------------------------
+
+/// Shared-mode placement: least-loaded GPU with room under `cap`
+/// co-runners whose aggregate memory floors still fit. Deterministic
+/// tie-break on the lowest GPU index.
+fn shared_place(cap: u32, workload: WorkloadSize, view: &FleetView) -> Decision {
+    let need = floor_bytes(workload);
+    let mut best: Option<(usize, usize)> = None; // (residents, gpu)
+    let mut ever_fits = false;
+    for (gi, g) in view.gpus.iter().enumerate() {
+        if need <= usable_bytes(g.kind.spec().dram_capacity) {
+            ever_fits = true;
+        } else {
+            continue;
+        }
+        if g.repartitioning || g.residents >= cap as usize {
+            continue;
+        }
+        if g.resident_floor_bytes + need > usable_bytes(g.kind.spec().dram_capacity) {
+            continue;
+        }
+        if best.map(|(r, _)| g.residents < r).unwrap_or(true) {
+            best = Some((g.residents, gi));
+        }
+    }
+    match best {
+        Some((_, gi)) => Decision::Share { gpu: gi },
+        None if ever_fits => Decision::Wait,
+        None => Decision::Reject(format!(
+            "memory floor {} exceeds every GPU in the fleet",
+            crate::util::fmt_bytes(need)
+        )),
+    }
+}
+
+/// One job per GPU, MIG disabled — the cluster baseline.
+pub struct Exclusive;
+
+impl SchedulingPolicy for Exclusive {
+    fn name(&self) -> &'static str {
+        "exclusive"
+    }
+
+    fn share_model(&self) -> Option<ShareModel> {
+        // A single co-runner under the MPS model is exactly the
+        // isolated non-MIG device (see `simgpu::mps` tests).
+        Some(ShareModel::Mps)
+    }
+
+    fn initial_partition(&self, _kind: GpuKind) -> Vec<InstanceShape> {
+        Vec::new()
+    }
+
+    fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision {
+        shared_place(1, workload, view)
+    }
+}
+
+/// MPS spatial sharing with at most `cap` co-runners per GPU.
+pub struct Mps {
+    pub cap: u32,
+}
+
+impl SchedulingPolicy for Mps {
+    fn name(&self) -> &'static str {
+        "mps"
+    }
+
+    fn share_model(&self) -> Option<ShareModel> {
+        Some(ShareModel::Mps)
+    }
+
+    fn initial_partition(&self, _kind: GpuKind) -> Vec<InstanceShape> {
+        Vec::new()
+    }
+
+    fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision {
+        shared_place(self.cap, workload, view)
+    }
+}
+
+/// Default CUDA time-slicing with at most `cap` co-runners per GPU.
+pub struct TimeSlice {
+    pub cap: u32,
+}
+
+impl SchedulingPolicy for TimeSlice {
+    fn name(&self) -> &'static str {
+        "timeslice"
+    }
+
+    fn share_model(&self) -> Option<ShareModel> {
+        Some(ShareModel::TimeSlice)
+    }
+
+    fn initial_partition(&self, _kind: GpuKind) -> Vec<InstanceShape> {
+        Vec::new()
+    }
+
+    fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision {
+        shared_place(self.cap, workload, view)
+    }
+}
+
+// ---------------------------------------------------------------------
+// MIG policies
+// ---------------------------------------------------------------------
+
+/// Best-fit over free MIG slots: the smallest free instance whose
+/// memory fits, tie-broken on (gpu, slot) index for determinism.
+fn slot_place(workload: WorkloadSize, view: &FleetView) -> Option<Decision> {
+    let mut best: Option<(u64, usize, usize)> = None;
+    for (gi, g) in view.gpus.iter().enumerate() {
+        if g.repartitioning {
+            continue;
+        }
+        for (si, (shape, occupied)) in g.slots.iter().enumerate() {
+            if *occupied || !fits_instance(workload, shape.memory_bytes) {
+                continue;
+            }
+            let key = (shape.memory_bytes, gi, si);
+            if best.map(|b| key < b).unwrap_or(true) {
+                best = Some(key);
+            }
+        }
+    }
+    best.map(|(_, gpu, slot)| Decision::Slot { gpu, slot })
+}
+
+/// Fixed MIG partitions: each A100 carries `a100`, each A30 `a30`.
+pub struct MigStatic {
+    pub a100: Vec<MigProfile>,
+    pub a30: Vec<A30Profile>,
+}
+
+/// Default A100 static partition: 3x 2g.10gb — the largest homogeneous
+/// set that still fits every paper workload's memory floor.
+pub fn default_a100_partition() -> Vec<MigProfile> {
+    vec![MigProfile::P2g10gb; 3]
+}
+
+/// Default A30 static partition: 2x 2g.12gb.
+pub fn default_a30_partition() -> Vec<A30Profile> {
+    vec![A30Profile::P2g12gb; 2]
+}
+
+impl MigStatic {
+    pub fn new(a100: Option<Vec<MigProfile>>, a30: Option<Vec<A30Profile>>) -> MigStatic {
+        MigStatic {
+            a100: a100.unwrap_or_else(default_a100_partition),
+            a30: a30.unwrap_or_else(default_a30_partition),
+        }
+    }
+}
+
+impl SchedulingPolicy for MigStatic {
+    fn name(&self) -> &'static str {
+        "mig-static"
+    }
+
+    fn share_model(&self) -> Option<ShareModel> {
+        None
+    }
+
+    fn initial_partition(&self, kind: GpuKind) -> Vec<InstanceShape> {
+        match kind {
+            GpuKind::A100 => self.a100.iter().map(|&p| InstanceShape::a100(p)).collect(),
+            GpuKind::A30 => self.a30.iter().map(|&p| InstanceShape::a30(p)).collect(),
+        }
+    }
+
+    fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision {
+        if let Some(d) = slot_place(workload, view) {
+            return d;
+        }
+        // The partition never changes: if no shape anywhere could hold
+        // the job, waiting is futile — reject (admission control).
+        let ever_fits = view.gpus.iter().flat_map(|g| &g.slots).any(|(shape, _)| {
+            fits_instance(workload, shape.memory_bytes)
+        });
+        if ever_fits {
+            Decision::Wait
+        } else {
+            Decision::Reject(format!(
+                "memory floor {} fits no instance of the static partition",
+                crate::util::fmt_bytes(floor_bytes(workload))
+            ))
+        }
+    }
+}
+
+/// Planner-driven repartitioning: drained GPUs are reconfigured for the
+/// waiting mix via the exhaustive partition search in
+/// [`crate::coordinator::planner`] (A100) or the best homogeneous A30
+/// layout for the head job.
+pub struct MigDynamic {
+    pub cal: Calibration,
+}
+
+impl SchedulingPolicy for MigDynamic {
+    fn name(&self) -> &'static str {
+        "mig-dynamic"
+    }
+
+    fn share_model(&self) -> Option<ShareModel> {
+        None
+    }
+
+    fn initial_partition(&self, kind: GpuKind) -> Vec<InstanceShape> {
+        // Start like the static default; the first drain adapts it.
+        match kind {
+            GpuKind::A100 => default_a100_partition().iter().map(|&p| InstanceShape::a100(p)).collect(),
+            GpuKind::A30 => default_a30_partition().iter().map(|&p| InstanceShape::a30(p)).collect(),
+        }
+    }
+
+    fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision {
+        if let Some(d) = slot_place(workload, view) {
+            return d;
+        }
+        // Unlike the static policy, a repartition can always create the
+        // device's biggest instance — only jobs too big even for that
+        // are rejected.
+        let ever_fits = view.gpus.iter().any(|g| {
+            fits_instance(workload, g.kind.largest_instance_bytes())
+        });
+        if ever_fits {
+            Decision::Wait
+        } else {
+            Decision::Reject(format!(
+                "memory floor {} exceeds the largest instance of every GPU",
+                crate::util::fmt_bytes(floor_bytes(workload))
+            ))
+        }
+    }
+
+    fn repartition(&self, kind: GpuKind, waiting: &[WorkloadSize]) -> Option<Vec<InstanceShape>> {
+        if waiting.is_empty() {
+            return None;
+        }
+        match kind {
+            GpuKind::A100 => {
+                let jobs: Vec<planner::Job> = waiting
+                    .iter()
+                    .take(7)
+                    .map(|&w| planner::Job { workload: w })
+                    .collect();
+                let mut profiles = planner::best_partition(&jobs, &self.cal);
+                // Strict-FIFO guard: the aggregate-throughput optimum can
+                // strand the head job (e.g. a large head behind six
+                // smalls loses to 7x 1g.5gb), which would deadlock the
+                // queue against an idle GPU. If the head does not fit
+                // the proposal, partition for the head alone instead —
+                // the next drain re-plans for whatever then waits.
+                let head = waiting[0];
+                if !profiles.iter().any(|&p| fits_instance(head, p.memory_bytes())) {
+                    profiles =
+                        planner::best_partition(&[planner::Job { workload: head }], &self.cal);
+                }
+                Some(profiles.iter().map(|&p| InstanceShape::a100(p)).collect())
+            }
+            GpuKind::A30 => {
+                // Smallest profile the head job fits, replicated.
+                let head = waiting[0];
+                let p = A30Profile::ALL
+                    .iter()
+                    .copied()
+                    .find(|p| fits_instance(head, p.memory_bytes()))?;
+                Some(vec![InstanceShape::a30(p); p.max_homogeneous() as usize])
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// CLI-facing policy selection
+// ---------------------------------------------------------------------
+
+/// The five policies, parseable from the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    Exclusive,
+    Mps,
+    TimeSlice,
+    MigStatic,
+    MigDynamic,
+}
+
+impl PolicyKind {
+    pub const ALL: [PolicyKind; 5] = [
+        PolicyKind::Exclusive,
+        PolicyKind::Mps,
+        PolicyKind::TimeSlice,
+        PolicyKind::MigStatic,
+        PolicyKind::MigDynamic,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Exclusive => "exclusive",
+            PolicyKind::Mps => "mps",
+            PolicyKind::TimeSlice => "timeslice",
+            PolicyKind::MigStatic => "mig-static",
+            PolicyKind::MigDynamic => "mig-dynamic",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        Self::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// Build the policy object. `cap` bounds shared-mode co-runners;
+    /// `a100_partition` overrides the static default (MIG policies).
+    pub fn build(
+        self,
+        cal: &Calibration,
+        cap: u32,
+        a100_partition: Option<Vec<MigProfile>>,
+    ) -> Box<dyn SchedulingPolicy> {
+        match self {
+            PolicyKind::Exclusive => Box::new(Exclusive),
+            PolicyKind::Mps => Box::new(Mps { cap }),
+            PolicyKind::TimeSlice => Box::new(TimeSlice { cap }),
+            PolicyKind::MigStatic => Box::new(MigStatic::new(a100_partition, None)),
+            PolicyKind::MigDynamic => Box::new(MigDynamic { cal: *cal }),
+        }
+    }
+}
+
+impl std::fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shared_view(residents: &[usize]) -> FleetView {
+        FleetView {
+            gpus: residents
+                .iter()
+                .map(|&r| GpuView {
+                    kind: GpuKind::A100,
+                    repartitioning: false,
+                    slots: Vec::new(),
+                    residents: r,
+                    resident_floor_bytes: r as u64 * floor_bytes(WorkloadSize::Small),
+                })
+                .collect(),
+        }
+    }
+
+    fn mig_view(slots: &[(MigProfile, bool)]) -> FleetView {
+        FleetView {
+            gpus: vec![GpuView {
+                kind: GpuKind::A100,
+                repartitioning: false,
+                slots: slots.iter().map(|&(p, o)| (InstanceShape::a100(p), o)).collect(),
+                residents: 0,
+                resident_floor_bytes: 0,
+            }],
+        }
+    }
+
+    #[test]
+    fn mps_picks_least_loaded() {
+        let p = Mps { cap: 7 };
+        let d = p.place(WorkloadSize::Small, &shared_view(&[3, 1, 2]));
+        assert_eq!(d, Decision::Share { gpu: 1 });
+    }
+
+    #[test]
+    fn mps_respects_cap_and_waits() {
+        let p = Mps { cap: 2 };
+        let d = p.place(WorkloadSize::Small, &shared_view(&[2, 2]));
+        assert_eq!(d, Decision::Wait);
+    }
+
+    #[test]
+    fn shared_memory_admission_queues_not_ooms() {
+        // Four large jobs (floor 9.4 GB) fill 37.6 of the 38 GB usable:
+        // a fifth must wait even though the co-runner cap has room.
+        let p = Mps { cap: 7 };
+        let four_large = FleetView {
+            gpus: vec![GpuView {
+                kind: GpuKind::A100,
+                repartitioning: false,
+                slots: Vec::new(),
+                residents: 4,
+                resident_floor_bytes: 4 * floor_bytes(WorkloadSize::Large),
+            }],
+        };
+        assert_eq!(p.place(WorkloadSize::Large, &four_large), Decision::Wait);
+        // But a small job (4.4 GB floor) would not fit either: 37.6+4.4 > 38.
+        assert_eq!(p.place(WorkloadSize::Small, &four_large), Decision::Wait);
+    }
+
+    #[test]
+    fn exclusive_one_job_per_gpu() {
+        let p = Exclusive;
+        assert_eq!(
+            p.place(WorkloadSize::Large, &shared_view(&[1, 0])),
+            Decision::Share { gpu: 1 }
+        );
+        assert_eq!(p.place(WorkloadSize::Large, &shared_view(&[1, 1])), Decision::Wait);
+    }
+
+    #[test]
+    fn mig_static_best_fits_smallest_feasible_slot() {
+        use MigProfile::*;
+        let p = MigStatic::new(None, None);
+        // Small fits 1g.5gb: prefer it over the free 3g.20gb.
+        let v = mig_view(&[(P3g20gb, false), (P1g5gb, false)]);
+        assert_eq!(p.place(WorkloadSize::Small, &v), Decision::Slot { gpu: 0, slot: 1 });
+        // Medium does not fit 1g.5gb: the 3g.20gb slot wins.
+        assert_eq!(p.place(WorkloadSize::Medium, &v), Decision::Slot { gpu: 0, slot: 0 });
+    }
+
+    #[test]
+    fn mig_static_waits_for_feasible_slot_instead_of_oom() {
+        use MigProfile::*;
+        let p = MigStatic::new(None, None);
+        // Only free slot is 1g.5gb; medium's floor needs >= 2g.10gb.
+        // Queued, not OOM-placed (the §4 admission boundary).
+        let v = mig_view(&[(P2g10gb, true), (P1g5gb, false)]);
+        assert_eq!(p.place(WorkloadSize::Medium, &v), Decision::Wait);
+    }
+
+    #[test]
+    fn mig_static_rejects_never_fitting_jobs() {
+        use MigProfile::*;
+        let p = MigStatic::new(Some(vec![P1g5gb; 7]), None);
+        let v = mig_view(&[(P1g5gb, false), (P1g5gb, false)]);
+        assert!(matches!(
+            p.place(WorkloadSize::Large, &v),
+            Decision::Reject(_)
+        ));
+    }
+
+    #[test]
+    fn mig_dynamic_waits_where_static_rejects() {
+        use MigProfile::*;
+        let cal = Calibration::paper();
+        let p = MigDynamic { cal };
+        // Current partition is all-1g, but a repartition could build a
+        // 7g.40gb — the large job waits instead of being rejected.
+        let v = mig_view(&[(P1g5gb, false), (P1g5gb, false)]);
+        assert_eq!(p.place(WorkloadSize::Large, &v), Decision::Wait);
+    }
+
+    #[test]
+    fn mig_dynamic_repartitions_for_small_flood() {
+        let cal = Calibration::paper();
+        let p = MigDynamic { cal };
+        let waiting = vec![WorkloadSize::Small; 9];
+        let shapes = p.repartition(GpuKind::A100, &waiting).unwrap();
+        // The planner's known answer for 7 small jobs: 7x 1g.5gb.
+        assert_eq!(shapes.len(), 7);
+        assert!(shapes.iter().all(|s| s.name == "1g.5gb"));
+        assert!(p.repartition(GpuKind::A100, &[]).is_none());
+    }
+
+    #[test]
+    fn repartition_never_strands_the_fifo_head() {
+        // Aggregate-throughput optimum for [large, 6x small] is
+        // 7x 1g.5gb — which the large head cannot use. The policy must
+        // fall back to a head-feasible layout or the queue deadlocks.
+        let cal = Calibration::paper();
+        let p = MigDynamic { cal };
+        let mut waiting = vec![WorkloadSize::Large];
+        waiting.extend(std::iter::repeat_n(WorkloadSize::Small, 6));
+        let shapes = p.repartition(GpuKind::A100, &waiting).unwrap();
+        assert!(
+            shapes.iter().any(|s| fits_instance(WorkloadSize::Large, s.memory_bytes)),
+            "head must fit the proposed partition: {shapes:?}"
+        );
+    }
+
+    #[test]
+    fn a30_repartition_homogeneous_for_head() {
+        let cal = Calibration::paper();
+        let p = MigDynamic { cal };
+        let shapes = p.repartition(GpuKind::A30, &[WorkloadSize::Medium]).unwrap();
+        // Medium floor (5.3 GB) fits the 6 GB A30 slice: 4x 1g.6gb.
+        assert_eq!(shapes.len(), 4);
+        assert!(shapes.iter().all(|s| s.name == "1g.6gb"));
+    }
+
+    #[test]
+    fn policy_kind_round_trip() {
+        for k in PolicyKind::ALL {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("fifo"), None);
+    }
+
+    #[test]
+    fn repartitioning_gpus_are_skipped() {
+        let p = Mps { cap: 7 };
+        let mut v = shared_view(&[0]);
+        v.gpus[0].repartitioning = true;
+        assert_eq!(p.place(WorkloadSize::Small, &v), Decision::Wait);
+    }
+}

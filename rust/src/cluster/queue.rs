@@ -1,0 +1,98 @@
+//! The FIFO admission queue.
+//!
+//! Jobs wait here between arrival and placement. Ordering is strict
+//! FIFO: the scheduler only ever places the head (no backfilling), so
+//! a large job waiting for a big-enough instance is never starved by a
+//! stream of small jobs behind it. Jobs that can *never* run under the
+//! active policy are rejected at the head instead of waiting forever —
+//! the admission-control half of the paper's OOM boundary (§4).
+
+use super::event::JobId;
+use std::collections::VecDeque;
+
+/// FIFO queue of waiting jobs.
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    items: VecDeque<JobId>,
+    /// High-water mark, for the fleet report.
+    peak: usize,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue::default()
+    }
+
+    pub fn push(&mut self, id: JobId) {
+        self.items.push_back(id);
+        self.peak = self.peak.max(self.items.len());
+    }
+
+    /// The job that must be placed next (strict FIFO).
+    pub fn head(&self) -> Option<JobId> {
+        self.items.front().copied()
+    }
+
+    /// Remove and return the head.
+    pub fn pop(&mut self) -> Option<JobId> {
+        self.items.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Waiting jobs in queue order (head first).
+    pub fn iter(&self) -> impl Iterator<Item = JobId> + '_ {
+        self.items.iter().copied()
+    }
+
+    /// Largest backlog seen over the run.
+    pub fn peak_len(&self) -> usize {
+        self.peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order() {
+        let mut q = JobQueue::new();
+        for id in 0..5 {
+            q.push(id);
+        }
+        assert_eq!(q.head(), Some(0));
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), Some(1));
+        q.push(9);
+        assert_eq!(q.iter().collect::<Vec<_>>(), vec![2, 3, 4, 9]);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut q = JobQueue::new();
+        q.push(0);
+        q.push(1);
+        q.pop();
+        q.push(2);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peak_len(), 2);
+        q.push(3);
+        q.push(4);
+        assert_eq!(q.peak_len(), 4);
+    }
+
+    #[test]
+    fn empty_queue_behaviour() {
+        let mut q = JobQueue::new();
+        assert!(q.is_empty());
+        assert_eq!(q.head(), None);
+        assert_eq!(q.pop(), None);
+    }
+}

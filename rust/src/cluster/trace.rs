@@ -1,0 +1,272 @@
+//! Job arrival traces: Poisson-generated streams and CSV trace files.
+//!
+//! A trace is the workload-facing input of the fleet simulator: a list
+//! of jobs, each with an arrival time, a paper workload size (which
+//! implies the model, step trace and memory floor) and an epoch count.
+//! Generation is deterministic from a seed so every policy comparison
+//! replays the *identical* stream.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::spec::{Workload, WorkloadSize};
+
+/// One job of the input stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobSpec {
+    /// Dense id, also the index into the simulator's job table.
+    pub id: usize,
+    /// Absolute arrival time (s).
+    pub arrival_s: f64,
+    pub workload: WorkloadSize,
+    /// Training epochs this job runs (paper schedules by default).
+    pub epochs: u32,
+}
+
+impl JobSpec {
+    /// Images this job trains over its whole run.
+    pub fn images(&self) -> f64 {
+        let w = Workload::paper(self.workload);
+        (w.steps_per_epoch() * self.epochs as u64 * w.batch_size as u64) as f64
+    }
+}
+
+/// Poisson-stream generator configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceConfig {
+    pub jobs: u32,
+    /// Mean inter-arrival gap (s); arrivals are exponential around it.
+    pub mean_interarrival_s: f64,
+    /// Relative weights for (small, medium, large).
+    pub mix: [f64; 3],
+    /// Override the paper epoch schedule (None keeps 30/5/5).
+    pub epochs: Option<u32>,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            jobs: 1000,
+            mean_interarrival_s: 30.0,
+            mix: [0.5, 0.3, 0.2],
+            epochs: None,
+            seed: crate::util::rng::DEFAULT_SEED,
+        }
+    }
+}
+
+/// Generate a Poisson arrival stream. Deterministic in `cfg.seed`.
+pub fn poisson_trace(cfg: &TraceConfig) -> Vec<JobSpec> {
+    let mut rng = Rng::new(cfg.seed);
+    let total: f64 = cfg.mix.iter().sum();
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(cfg.jobs as usize);
+    for id in 0..cfg.jobs as usize {
+        // Exponential inter-arrival: -mean * ln(1 - U).
+        let u = rng.next_f64();
+        t += -cfg.mean_interarrival_s * (1.0 - u).max(1e-300).ln();
+        let workload = pick_workload(&mut rng, &cfg.mix, total);
+        let epochs = cfg.epochs.unwrap_or(Workload::paper(workload).epochs);
+        out.push(JobSpec {
+            id,
+            arrival_s: t,
+            workload,
+            epochs,
+        });
+    }
+    out
+}
+
+fn pick_workload(rng: &mut Rng, mix: &[f64; 3], total: f64) -> WorkloadSize {
+    let draw = rng.next_f64() * total;
+    let mut acc = 0.0;
+    for (i, w) in WorkloadSize::ALL.iter().enumerate() {
+        acc += mix[i];
+        if draw < acc {
+            return *w;
+        }
+    }
+    WorkloadSize::Large
+}
+
+/// Parse a `small:0.5,medium:0.3,large:0.2` mix string. Unlisted sizes
+/// get weight 0; at least one weight must be positive.
+pub fn parse_mix(s: &str) -> anyhow::Result<[f64; 3]> {
+    let mut mix = [0.0; 3];
+    for part in s.split(',') {
+        let part = part.trim();
+        let (name, weight) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("mix entry '{part}' is not name:weight"))?;
+        let w = WorkloadSize::parse(name.trim())
+            .ok_or_else(|| anyhow::anyhow!("unknown workload '{name}' in mix"))?;
+        let value: f64 = weight
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad weight '{weight}' in mix"))?;
+        anyhow::ensure!(value >= 0.0 && value.is_finite(), "negative weight in mix");
+        let idx = WorkloadSize::ALL.iter().position(|&x| x == w).expect("known");
+        mix[idx] = value;
+    }
+    anyhow::ensure!(mix.iter().sum::<f64>() > 0.0, "mix weights sum to zero");
+    Ok(mix)
+}
+
+/// CSV header of a trace file.
+pub const TRACE_HEADER: &str = "arrival_s,workload,epochs";
+
+/// Serialize a trace to the CSV trace-file format.
+pub fn trace_to_csv(trace: &[JobSpec]) -> String {
+    let mut out = String::from(TRACE_HEADER);
+    out.push('\n');
+    for j in trace {
+        out.push_str(&format!("{},{},{}\n", j.arrival_s, j.workload.name(), j.epochs));
+    }
+    out
+}
+
+/// Parse a CSV trace file (`arrival_s,workload,epochs`, header
+/// optional). Ids are assigned densely in file order; arrivals must be
+/// finite and non-negative.
+pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<JobSpec>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line == TRACE_HEADER {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        anyhow::ensure!(
+            fields.len() == 3,
+            "trace line {}: expected 3 fields, got {}",
+            lineno + 1,
+            fields.len()
+        );
+        let arrival_s: f64 = fields[0]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("trace line {}: bad arrival '{}'", lineno + 1, fields[0]))?;
+        anyhow::ensure!(
+            arrival_s.is_finite() && arrival_s >= 0.0,
+            "trace line {}: arrival must be finite and >= 0",
+            lineno + 1
+        );
+        let workload = WorkloadSize::parse(fields[1])
+            .ok_or_else(|| anyhow::anyhow!("trace line {}: unknown workload '{}'", lineno + 1, fields[1]))?;
+        let epochs: u32 = fields[2]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("trace line {}: bad epochs '{}'", lineno + 1, fields[2]))?;
+        out.push(JobSpec {
+            id: out.len(),
+            arrival_s,
+            workload,
+            epochs,
+        });
+    }
+    Ok(out)
+}
+
+/// JSON summary of a trace's composition, embedded under the `trace`
+/// key of the fleet summary JSON (`FleetMetrics::to_json`).
+pub fn trace_summary_json(trace: &[JobSpec]) -> Json {
+    let mut counts = [0u64; 3];
+    for j in trace {
+        let idx = WorkloadSize::ALL.iter().position(|&x| x == j.workload).expect("known");
+        counts[idx] += 1;
+    }
+    let mut j = Json::obj();
+    j.set("jobs", Json::from_u64(trace.len() as u64))
+        .set(
+            "last_arrival_s",
+            Json::from_f64(trace.last().map(|t| t.arrival_s).unwrap_or(0.0)),
+        );
+    for (i, w) in WorkloadSize::ALL.iter().enumerate() {
+        j.set(w.name(), Json::from_u64(counts[i]));
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TraceConfig {
+        TraceConfig {
+            jobs: 200,
+            mean_interarrival_s: 10.0,
+            mix: [0.6, 0.3, 0.1],
+            epochs: Some(1),
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(poisson_trace(&cfg()), poisson_trace(&cfg()));
+        let mut other = cfg();
+        other.seed = 8;
+        assert_ne!(poisson_trace(&cfg()), poisson_trace(&other));
+    }
+
+    #[test]
+    fn arrivals_strictly_increase_and_average_out() {
+        let t = poisson_trace(&cfg());
+        for pair in t.windows(2) {
+            assert!(pair[1].arrival_s > pair[0].arrival_s);
+        }
+        let mean = t.last().unwrap().arrival_s / t.len() as f64;
+        assert!((mean / 10.0 - 1.0).abs() < 0.3, "mean gap {mean}");
+    }
+
+    #[test]
+    fn mix_weights_respected() {
+        let t = poisson_trace(&cfg());
+        let small = t.iter().filter(|j| j.workload == WorkloadSize::Small).count();
+        let large = t.iter().filter(|j| j.workload == WorkloadSize::Large).count();
+        assert!(small > large, "small {small} !> large {large}");
+    }
+
+    #[test]
+    fn mix_parsing() {
+        assert_eq!(parse_mix("small:1").unwrap(), [1.0, 0.0, 0.0]);
+        assert_eq!(
+            parse_mix("small:0.5, medium:0.3 ,large:0.2").unwrap(),
+            [0.5, 0.3, 0.2]
+        );
+        assert!(parse_mix("tiny:1").is_err());
+        assert!(parse_mix("small:x").is_err());
+        assert!(parse_mix("small:0").is_err());
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let t = poisson_trace(&cfg());
+        let back = parse_trace_csv(&trace_to_csv(&t)).unwrap();
+        assert_eq!(t.len(), back.len());
+        for (a, b) in t.iter().zip(&back) {
+            assert_eq!(a.workload, b.workload);
+            assert_eq!(a.epochs, b.epochs);
+            assert!((a.arrival_s - b.arrival_s).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn csv_rejects_malformed() {
+        assert!(parse_trace_csv("1.0,small").is_err());
+        assert!(parse_trace_csv("x,small,1").is_err());
+        assert!(parse_trace_csv("-1.0,small,1").is_err());
+        assert!(parse_trace_csv("1.0,gigantic,1").is_err());
+        assert!(parse_trace_csv("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn images_count_paper_schedule() {
+        let j = JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            workload: WorkloadSize::Small,
+            epochs: 30,
+        };
+        // 1406 steps x 30 epochs x 32 images.
+        assert_eq!(j.images(), (1406u64 * 30 * 32) as f64);
+    }
+}

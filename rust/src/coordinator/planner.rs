@@ -59,6 +59,33 @@ pub fn throughput(workload: WorkloadSize, profile: MigProfile, cal: &Calibration
     Some(w.batch_size as f64 / step)
 }
 
+/// Throughput of every (workload, profile) pair, computed once per
+/// [`plan`] call. The partition search re-queries the same 15 pairs for
+/// every candidate multiset, so memoizing here cuts simulator
+/// invocations by orders of magnitude — which is what makes the cluster
+/// scheduler's repeated re-planning (MigDynamic repartitioning) cheap.
+struct TputTable {
+    vals: [[Option<f64>; 5]; 3],
+}
+
+impl TputTable {
+    fn build(cal: &Calibration) -> TputTable {
+        let mut vals = [[None; 5]; 3];
+        for (wi, w) in WorkloadSize::ALL.iter().enumerate() {
+            for (pi, p) in MigProfile::ALL.iter().enumerate() {
+                vals[wi][pi] = throughput(*w, *p, cal);
+            }
+        }
+        TputTable { vals }
+    }
+
+    fn get(&self, w: WorkloadSize, p: MigProfile) -> Option<f64> {
+        let wi = WorkloadSize::ALL.iter().position(|&x| x == w).expect("known workload");
+        let pi = MigProfile::ALL.iter().position(|&x| x == p).expect("known profile");
+        self.vals[wi][pi]
+    }
+}
+
 /// Find the throughput-optimal plan for a job mix.
 ///
 /// Search space: every valid profile multiset (≤ 7 instances — small on
@@ -67,9 +94,10 @@ pub fn throughput(workload: WorkloadSize, profile: MigProfile, cal: &Calibration
 /// optimal assignment for identical-throughput-curve jobs, near-optimal
 /// in general (documented trade-off).
 pub fn plan(jobs: &[Job], cal: &Calibration) -> Plan {
+    let table = TputTable::build(cal);
     let mut best: Option<Plan> = None;
     for profiles in PartitionSet::enumerate_valid_multisets() {
-        let candidate = assign(jobs, &profiles, cal);
+        let candidate = assign(jobs, &profiles, &table);
         let better = match &best {
             None => true,
             Some(b) => {
@@ -84,12 +112,19 @@ pub fn plan(jobs: &[Job], cal: &Calibration) -> Plan {
     best.expect("at least one valid partition exists")
 }
 
+/// Just the profile multiset the planner would configure for `jobs` —
+/// the entry point the cluster scheduler's dynamic-repartitioning
+/// policy uses when a drained GPU meets a non-empty queue.
+pub fn best_partition(jobs: &[Job], cal: &Calibration) -> Vec<MigProfile> {
+    plan(jobs, cal).profiles
+}
+
 /// Assignment of jobs to a fixed partition: most-constrained job first
 /// (fewest feasible free slots — memory floors make big jobs scarce in
 /// options), each placed on its best-throughput feasible slot. This
 /// reserves large instances for jobs that need them before fast small
 /// jobs grab everything.
-fn assign(jobs: &[Job], profiles: &[MigProfile], cal: &Calibration) -> Plan {
+fn assign(jobs: &[Job], profiles: &[MigProfile], table: &TputTable) -> Plan {
     let mut free: Vec<MigProfile> = profiles.to_vec();
     let mut remaining: Vec<Job> = jobs.to_vec();
     let mut assignments = Vec::new();
@@ -101,7 +136,7 @@ fn assign(jobs: &[Job], profiles: &[MigProfile], cal: &Calibration) -> Plan {
             let mut feasible = 0usize;
             let mut best_slot: Option<(usize, f64)> = None;
             for (si, profile) in free.iter().enumerate() {
-                if let Some(t) = throughput(job.workload, *profile, cal) {
+                if let Some(t) = table.get(job.workload, *profile) {
                     feasible += 1;
                     if best_slot.map(|(_, bt)| t > bt).unwrap_or(true) {
                         best_slot = Some((si, t));
@@ -235,6 +270,13 @@ mod tests {
             p.total_throughput,
             solo
         );
+    }
+
+    #[test]
+    fn best_partition_matches_plan() {
+        let cal = Calibration::paper();
+        let js = jobs(&[(WorkloadSize::Medium, 1), (WorkloadSize::Small, 3)]);
+        assert_eq!(best_partition(&js, &cal), plan(&js, &cal).profiles);
     }
 
     #[test]

@@ -14,7 +14,23 @@
 //!
 //! See `DESIGN.md` for the system inventory and the per-figure experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Cluster scheduler
+//!
+//! The [`cluster`] subsystem scales the paper's single-GPU study to a
+//! fleet: a deterministic discrete-event simulator admits, queues and
+//! places a stream of training jobs (Poisson or trace-file arrivals)
+//! onto many simulated A100/A30 GPUs, each driven by the calibrated
+//! [`simgpu`] engines. Placement policies live behind the
+//! [`cluster::policy::SchedulingPolicy`] trait — `exclusive`, `mps`,
+//! `timeslice`, `mig-static` and `mig-dynamic` (planner-driven
+//! drain-and-repartition) — with the paper's §4 OOM boundary enforced
+//! as admission control. Fleet metrics (queue wait, JCT, makespan,
+//! aggregate throughput, per-GPU GRACT/SMACT) export through
+//! [`report::fleet`] and the `migsim fleet` CLI subcommand; see
+//! `examples/fleet_sim.rs` and `benches/fleet_scale.rs`.
 
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod mig;

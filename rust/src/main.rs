@@ -6,7 +6,13 @@
 //! * `matrix`    — run the full §3.4 matrix and dump results JSON.
 //! * `figures`   — regenerate every paper figure from the matrix.
 //! * `train`     — real training via the PJRT runtime (Fig 10 / E2E).
+//! * `plan`      — heterogeneous-partition planner (paper future work).
+//! * `fleet`     — cluster-scale collocation: a discrete-event fleet
+//!   simulator comparing placement policies (see `migsim::cluster`).
 
+use migsim::cluster::fleet::{FleetConfig, FleetSim};
+use migsim::cluster::policy::PolicyKind;
+use migsim::cluster::trace::{parse_mix, parse_trace_csv, poisson_trace, trace_to_csv, TraceConfig};
 use migsim::config::Config;
 use migsim::coordinator::experiment::{run_experiment, DeviceGroup, ExperimentSpec};
 use migsim::coordinator::matrix::{paper_matrix, run_matrix};
@@ -19,6 +25,7 @@ use migsim::runtime::trainer::{Trainer, TrainerConfig};
 use migsim::util::cli::Args;
 use migsim::util::fmt_duration;
 use migsim::util::json::Json;
+use migsim::util::rng;
 use migsim::workload::spec::WorkloadSize;
 
 const USAGE: &str = "\
@@ -43,6 +50,20 @@ SUBCOMMANDS
   plan --jobs small,small,medium
       Heterogeneous-partition planner: best MIG configuration for a
       mix of training jobs (the paper's future work).
+  fleet --gpus 8 --jobs 1000 --policy mps
+        [--a30 0] [--cap 7] [--interarrival 30]
+        [--mix small:0.5,medium:0.3,large:0.2] [--epochs N]
+        [--partition 2g.10gb,2g.10gb,2g.10gb] [--trace file.csv]
+        [--dump-trace file.csv] [--out results]
+      Cluster-scale collocation: simulate a job stream on a fleet of
+      A100/A30 GPUs under a placement policy (exclusive | mps |
+      timeslice | mig-static | mig-dynamic). Emits summary JSON +
+      per-job/per-GPU CSV.
+
+GLOBAL FLAGS
+  --seed <u64>   RNG seed for traces and jittered sampling (default
+                 0x5EED; MIGSIM_SEED env var also honored).
+  --config cfg.json
 ";
 
 fn main() -> anyhow::Result<()> {
@@ -59,6 +80,7 @@ fn main() -> anyhow::Result<()> {
         Some("figures") => cmd_figures(&args, &config),
         Some("train") => cmd_train(&args, &config),
         Some("plan") => cmd_plan(&args, &config),
+        Some("fleet") => cmd_fleet(&args, &config),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -108,7 +130,7 @@ fn cmd_run(args: &Args, config: &Config) -> anyhow::Result<()> {
             workload: w,
             group: g,
             replicate: 0,
-            seed: 0x5EED,
+            seed: rng::resolve_seed(args.seed()?),
         },
         &config.calibration,
     );
@@ -168,6 +190,102 @@ fn cmd_plan(args: &Args, config: &Config) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
+    let seed = rng::resolve_seed(args.seed()?);
+    let a100s = args.flag_parse("gpus", 8u32)?;
+    let a30s = args.flag_parse("a30", 0u32)?;
+    anyhow::ensure!(a100s + a30s > 0, "fleet needs at least one GPU");
+    let policy_name = args.flag_or("policy", "mps");
+    let Some(kind) = PolicyKind::parse(&policy_name) else {
+        anyhow::bail!(
+            "unknown policy '{policy_name}' (expected one of: {})",
+            PolicyKind::ALL.map(|p| p.name()).join(" | ")
+        );
+    };
+    let cap = args.flag_parse("cap", 7u32)?;
+    anyhow::ensure!(cap >= 1, "--cap must be >= 1");
+    let partition = match args.flag("partition") {
+        None => None,
+        Some(list) => {
+            let profiles: Option<Vec<MigProfile>> =
+                list.split(',').map(|s| MigProfile::parse(s.trim())).collect();
+            let profiles = profiles.ok_or_else(|| anyhow::anyhow!("unknown profile in '{list}'"))?;
+            anyhow::ensure!(
+                PartitionSet::first_fit(&profiles).is_some(),
+                "partition '{list}' cannot coexist on the A100-40GB"
+            );
+            // Only the static policy honors a fixed layout; erroring
+            // beats silently ignoring the flag.
+            anyhow::ensure!(
+                kind == PolicyKind::MigStatic,
+                "--partition only applies to --policy mig-static \
+                 (mig-dynamic chooses its own layouts)"
+            );
+            Some(profiles)
+        }
+    };
+
+    let trace = match args.flag("trace") {
+        Some(path) => {
+            // The generator flags describe a Poisson stream; with a
+            // trace file they would be silently dead — refuse instead.
+            for flag in ["jobs", "interarrival", "mix", "epochs"] {
+                anyhow::ensure!(
+                    args.flag(flag).is_none(),
+                    "--{flag} only applies to generated traces (conflicts with --trace)"
+                );
+            }
+            parse_trace_csv(&std::fs::read_to_string(path)?)?
+        }
+        None => {
+            let epochs = args
+                .flag("epochs")
+                .map(|v| {
+                    v.parse::<u32>()
+                        .map_err(|_| anyhow::anyhow!("invalid value for --epochs: '{v}'"))
+                })
+                .transpose()?;
+            poisson_trace(&TraceConfig {
+                jobs: args.flag_parse("jobs", 1000u32)?,
+                mean_interarrival_s: args.flag_parse("interarrival", 30.0f64)?,
+                mix: parse_mix(&args.flag_or("mix", "small:0.5,medium:0.3,large:0.2"))?,
+                epochs,
+                seed,
+            })
+        }
+    };
+    anyhow::ensure!(!trace.is_empty(), "empty job trace");
+    if let Some(path) = args.flag("dump-trace") {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, trace_to_csv(&trace))?;
+        println!("trace -> {path}");
+    }
+
+    let policy = kind.build(&config.calibration, cap, partition);
+    let fleet_config = FleetConfig {
+        a100s,
+        a30s,
+        seed,
+        ..FleetConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let sim = FleetSim::new(fleet_config, policy, config.calibration, &trace);
+    let metrics = sim.run();
+    println!("{}", metrics.summary());
+    let out = args.flag_or("out", &config.out_dir);
+    let artifacts = migsim::report::fleet::write_fleet(std::path::Path::new(&out), &metrics)?;
+    println!(
+        "host {:.3} s | wrote {} + {} + {}",
+        t0.elapsed().as_secs_f64(),
+        artifacts.summary_json.display(),
+        artifacts.jobs_csv.display(),
+        artifacts.gpus_csv.display(),
+    );
+    Ok(())
+}
+
 fn cmd_train(args: &Args, config: &Config) -> anyhow::Result<()> {
     let variant = args.flag_or("variant", "small");
     let store =
@@ -181,6 +299,9 @@ fn cmd_train(args: &Args, config: &Config) -> anyhow::Result<()> {
             lr: args.flag_parse("lr", 0.05f32)?,
             noise: args.flag_parse("noise", 0.45f32)?,
             val_batches: args.flag_parse("val-batches", 4u64)?,
+            // An explicit --seed re-seeds training; the default stays
+            // TrainerConfig's own (existing recorded runs reproduce).
+            seed: args.seed()?.unwrap_or(TrainerConfig::default().seed),
             ..TrainerConfig::default()
         },
     )?;

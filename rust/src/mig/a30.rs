@@ -61,6 +61,16 @@ impl A30Profile {
             A30Profile::P4g24gb => "4g.24gb",
         }
     }
+
+    pub fn parse(s: &str) -> Option<A30Profile> {
+        Self::ALL.iter().copied().find(|p| p.name() == s)
+    }
+}
+
+impl std::fmt::Display for A30Profile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
 }
 
 /// Is a multiset of A30 profiles placeable? (Slice budget; the A30 has
@@ -110,6 +120,15 @@ mod tests {
         assert_eq!(P1g6gb.max_homogeneous(), 4);
         assert_eq!(P2g12gb.max_homogeneous(), 2);
         assert_eq!(P4g24gb.max_homogeneous(), 1);
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for p in A30Profile::ALL {
+            assert_eq!(A30Profile::parse(p.name()), Some(p));
+            assert_eq!(p.to_string(), p.name());
+        }
+        assert_eq!(A30Profile::parse("3g.18gb"), None);
     }
 
     #[test]

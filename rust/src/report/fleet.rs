@@ -1,0 +1,138 @@
+//! Fleet-run export: summary JSON + per-job and per-GPU CSV.
+
+use super::csv;
+use crate::cluster::metrics::FleetMetrics;
+use std::path::{Path, PathBuf};
+
+/// Files one [`write_fleet`] call produces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetArtifacts {
+    pub summary_json: PathBuf,
+    pub jobs_csv: PathBuf,
+    pub gpus_csv: PathBuf,
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    v.map(|x| format!("{x:.3}")).unwrap_or_default()
+}
+
+/// Per-job CSV rows: one line per job of the trace.
+pub fn jobs_rows(m: &FleetMetrics) -> Vec<Vec<String>> {
+    m.jobs
+        .iter()
+        .map(|j| {
+            vec![
+                j.spec.id.to_string(),
+                j.spec.workload.name().to_string(),
+                format!("{:.3}", j.spec.arrival_s),
+                fmt_opt(j.start_s),
+                fmt_opt(j.finish_s),
+                fmt_opt(j.wait_s()),
+                fmt_opt(j.jct_s()),
+                j.gpu.map(|g| g.to_string()).unwrap_or_default(),
+                j.outcome.label().to_string(),
+            ]
+        })
+        .collect()
+}
+
+/// Per-GPU CSV rows.
+pub fn gpus_rows(m: &FleetMetrics) -> Vec<Vec<String>> {
+    m.gpus
+        .iter()
+        .map(|g| {
+            vec![
+                g.gpu.to_string(),
+                g.kind.to_string(),
+                g.jobs_served.to_string(),
+                format!("{:.4}", g.fields.gract),
+                format!("{:.4}", g.fields.smact),
+                format!("{:.4}", g.fields.smocc),
+                format!("{:.4}", g.fields.drama),
+            ]
+        })
+        .collect()
+}
+
+/// Write `fleet_<policy>_{summary.json,jobs.csv,gpus.csv}` under `dir`.
+pub fn write_fleet(dir: &Path, m: &FleetMetrics) -> anyhow::Result<FleetArtifacts> {
+    std::fs::create_dir_all(dir)?;
+    let stem = format!("fleet_{}", m.policy);
+    let summary_json = dir.join(format!("{stem}_summary.json"));
+    std::fs::write(&summary_json, m.to_json().to_string_pretty())?;
+    let jobs_csv = dir.join(format!("{stem}_jobs.csv"));
+    csv::write_csv(
+        &jobs_csv,
+        &[
+            "id", "workload", "arrival_s", "start_s", "finish_s", "wait_s", "jct_s", "gpu",
+            "outcome",
+        ],
+        &jobs_rows(m),
+    )?;
+    let gpus_csv = dir.join(format!("{stem}_gpus.csv"));
+    csv::write_csv(
+        &gpus_csv,
+        &["gpu", "kind", "jobs_served", "gract", "smact", "smocc", "drama"],
+        &gpus_rows(m),
+    )?;
+    Ok(FleetArtifacts {
+        summary_json,
+        jobs_csv,
+        gpus_csv,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::{FleetConfig, FleetSim};
+    use crate::cluster::policy::PolicyKind;
+    use crate::cluster::trace::{poisson_trace, TraceConfig};
+    use crate::simgpu::calibration::Calibration;
+    use crate::util::json::Json;
+    use crate::util::tempdir::TempDir;
+
+    fn run() -> FleetMetrics {
+        let cal = Calibration::paper();
+        let trace = poisson_trace(&TraceConfig {
+            jobs: 8,
+            mean_interarrival_s: 1.0,
+            mix: [1.0, 0.0, 0.0],
+            epochs: Some(1),
+            seed: 3,
+        });
+        let config = FleetConfig {
+            a100s: 2,
+            a30s: 0,
+            ..FleetConfig::default()
+        };
+        FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace).run()
+    }
+
+    #[test]
+    fn writes_all_three_artifacts() {
+        let m = run();
+        let dir = TempDir::new().unwrap();
+        let a = write_fleet(dir.path(), &m).unwrap();
+        for p in [&a.summary_json, &a.jobs_csv, &a.gpus_csv] {
+            assert!(p.exists(), "{p:?}");
+        }
+        // JSON parses; CSV has one row per job plus the header.
+        let json = std::fs::read_to_string(&a.summary_json).unwrap();
+        assert!(Json::parse(&json).is_ok());
+        let jobs = std::fs::read_to_string(&a.jobs_csv).unwrap();
+        assert_eq!(jobs.lines().count(), 1 + m.jobs.len());
+        let gpus = std::fs::read_to_string(&a.gpus_csv).unwrap();
+        assert_eq!(gpus.lines().count(), 1 + m.gpus.len());
+    }
+
+    #[test]
+    fn rows_reflect_outcomes() {
+        let m = run();
+        let rows = jobs_rows(&m);
+        assert_eq!(rows.len(), 8);
+        assert!(rows.iter().all(|r| r[8] == "finished"));
+        let grows = gpus_rows(&m);
+        assert_eq!(grows.len(), 2);
+    }
+}

@@ -3,6 +3,8 @@
 
 pub mod csv;
 pub mod figures;
+pub mod fleet;
 pub mod render;
 
 pub use figures::all_figures;
+pub use fleet::write_fleet;

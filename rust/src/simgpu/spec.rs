@@ -47,6 +47,24 @@ pub const A100: GpuSpec = GpuSpec {
     dispatch_gap_s: 16.0e-6,
 }; // dispatch_gap_s is a calibration anchor — see calibration.rs.
 
+/// The A30-24GB — the A100's lower-spec sibling (paper §2.1), used by
+/// the cluster fleet simulator for heterogeneous fleets. 56 SMs in 4
+/// MIG slices of 6 GB, 933 GB/s HBM2; TF32 tensor-core peak 82 TFLOP/s,
+/// classic FP32 10.3 TFLOP/s (NVIDIA A30 datasheet). All 56 SMs are
+/// exposed in MIG mode (4 x 14, no reduced-slice reservation).
+pub const A30: GpuSpec = GpuSpec {
+    sm_count: 56,
+    mig_sm_count: 56,
+    tc_flops_per_sm: 82.0e12 / 56.0,
+    fp32_flops_per_sm: 10.3e12 / 56.0,
+    dram_bw: 933.0e9,
+    memory_slices: 4,
+    dram_capacity: 24_000_000_000,
+    max_warps_per_sm: 64,
+    kernel_launch_s: 8.0e-6,
+    dispatch_gap_s: 16.0e-6,
+};
+
 impl GpuSpec {
     /// Bandwidth available to an instance owning `mem_slices` slices.
     pub fn instance_bw(&self, mem_slices: u32) -> f64 {
@@ -74,5 +92,16 @@ mod tests {
     #[test]
     fn mig_mode_costs_sms() {
         assert_eq!(A100.sm_count - A100.mig_sm_count, 10);
+    }
+
+    #[test]
+    fn a30_is_strictly_smaller_than_a100() {
+        assert!(A30.sm_count < A100.sm_count);
+        assert!(A30.dram_bw < A100.dram_bw);
+        assert!(A30.dram_capacity < A100.dram_capacity);
+        assert_eq!(A30.memory_slices, 4);
+        // 4 slices x 14 SMs, all exposed in MIG mode.
+        assert_eq!(A30.mig_sm_count, 56);
+        assert!((A30.instance_bw(1) - A30.dram_bw / 4.0).abs() < 1.0);
     }
 }

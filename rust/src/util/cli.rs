@@ -70,6 +70,20 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+
+    /// The global `--seed <u64>` flag, shared by every subcommand so
+    /// that simulated traces are reproducible from the command line.
+    /// `None` means "not given" — resolve the effective seed with
+    /// [`crate::util::rng::resolve_seed`].
+    pub fn seed(&self) -> anyhow::Result<Option<u64>> {
+        match self.flag("seed") {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("invalid value for --seed: '{v}'")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -100,6 +114,13 @@ mod tests {
     fn trailing_switch() {
         let a = args("partition --enumerate");
         assert!(a.has("enumerate"));
+    }
+
+    #[test]
+    fn seed_flag() {
+        assert_eq!(args("fleet --seed 42").seed().unwrap(), Some(42));
+        assert_eq!(args("fleet").seed().unwrap(), None);
+        assert!(args("fleet --seed banana").seed().is_err());
     }
 
     #[test]

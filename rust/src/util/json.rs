@@ -133,7 +133,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(v) => {
-                if v.fract() == 0.0 && v.abs() < 2f64.powi(53) {
+                if !v.is_finite() {
+                    // JSON has no NaN/Infinity literal; emitting them
+                    // would produce unparseable output. Serialize as
+                    // null (what `JSON.stringify` does) so every dump
+                    // — fleet metrics included — stays round-trippable.
+                    out.push_str("null");
+                } else if v.fract() == 0.0 && v.abs() < 2f64.powi(53) {
                     let _ = write!(out, "{}", *v as i64);
                 } else {
                     let _ = write!(out, "{v}");
@@ -447,6 +453,19 @@ mod tests {
         assert!(e.offset > 0);
         assert!(Json::parse("[1, 2").is_err());
         assert!(Json::parse("12 34").is_err());
+    }
+
+    #[test]
+    fn non_finite_serializes_as_null() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = Json::Num(v).to_string_compact();
+            assert_eq!(s, "null");
+            assert_eq!(Json::parse(&s).unwrap(), Json::Null);
+        }
+        // Embedded in structures too.
+        let mut j = Json::obj();
+        j.set("bad", Json::from_f64(f64::NAN));
+        assert!(Json::parse(&j.to_string_pretty()).is_ok());
     }
 
     #[test]

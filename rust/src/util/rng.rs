@@ -4,6 +4,25 @@
 //! jittered simulator sampling. Self-contained so that every simulated
 //! experiment and every generated batch is bit-reproducible across builds.
 
+/// The fixed default seed used by the CLI, examples and benches when no
+/// `--seed` flag (or `MIGSIM_SEED` environment variable) is given.
+pub const DEFAULT_SEED: u64 = 0x5EED;
+
+/// Resolve the effective seed for a run: an explicit `--seed` value
+/// wins, then the `MIGSIM_SEED` environment variable (how `cargo test`
+/// runs are re-seeded from the command line), then [`DEFAULT_SEED`].
+pub fn resolve_seed(explicit: Option<u64>) -> u64 {
+    if let Some(seed) = explicit {
+        return seed;
+    }
+    if let Ok(v) = std::env::var("MIGSIM_SEED") {
+        if let Ok(seed) = v.parse() {
+            return seed;
+        }
+    }
+    DEFAULT_SEED
+}
+
 /// xoshiro256** PRNG (Blackman & Vigna), seeded via splitmix64.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -74,6 +93,15 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn explicit_seed_wins() {
+        assert_eq!(resolve_seed(Some(7)), 7);
+        // No env override in the test environment: default applies.
+        if std::env::var("MIGSIM_SEED").is_err() {
+            assert_eq!(resolve_seed(None), DEFAULT_SEED);
+        }
+    }
 
     #[test]
     fn deterministic_across_instances() {

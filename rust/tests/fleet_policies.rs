@@ -1,0 +1,107 @@
+//! Cluster-scale policy comparison: on a saturating homogeneous
+//! small-model trace the aggregate-throughput ranking must match the
+//! paper's §5 conclusion — MPS is the best-performing and most flexible
+//! collocation mode, MIG is isolated but rigid, and default
+//! time-slicing is the worst:
+//!
+//!   Mps >= MigStatic > TimeSlice
+//!
+//! (MigStatic carries its default 3x 2g.10gb layout — the point of a
+//! *static* partition is precisely that it cannot adapt to a flood of
+//! small jobs, while MPS packs seven co-runners per GPU.)
+
+use migsim::cluster::fleet::{FleetConfig, FleetSim};
+use migsim::cluster::metrics::FleetMetrics;
+use migsim::cluster::policy::PolicyKind;
+use migsim::cluster::trace::{poisson_trace, JobSpec, TraceConfig};
+use migsim::simgpu::calibration::Calibration;
+use migsim::util::rng;
+
+/// Saturating homogeneous small-model stream: all jobs arrive within a
+/// couple of seconds, far faster than any policy can serve them.
+fn saturating_small_trace(jobs: u32) -> Vec<JobSpec> {
+    poisson_trace(&TraceConfig {
+        jobs,
+        mean_interarrival_s: 0.01,
+        mix: [1.0, 0.0, 0.0],
+        epochs: Some(1),
+        seed: rng::resolve_seed(None),
+    })
+}
+
+fn run_policy(kind: PolicyKind, trace: &[JobSpec], gpus: u32) -> FleetMetrics {
+    let cal = Calibration::paper();
+    let config = FleetConfig {
+        a100s: gpus,
+        a30s: 0,
+        ..FleetConfig::default()
+    };
+    FleetSim::new(config, kind.build(&cal, 7, None), cal, trace).run()
+}
+
+#[test]
+fn policies_rank_as_in_the_paper() {
+    let trace = saturating_small_trace(42);
+    let mps = run_policy(PolicyKind::Mps, &trace, 2);
+    let mig = run_policy(PolicyKind::MigStatic, &trace, 2);
+    let ts = run_policy(PolicyKind::TimeSlice, &trace, 2);
+
+    for (name, m) in [("mps", &mps), ("mig-static", &mig), ("timeslice", &ts)] {
+        assert_eq!(m.finished(), 42, "{name}: {}", m.summary());
+        assert_eq!(m.rejected(), 0, "{name}");
+    }
+
+    let t_mps = mps.aggregate_images_per_second();
+    let t_mig = mig.aggregate_images_per_second();
+    let t_ts = ts.aggregate_images_per_second();
+    assert!(
+        t_mps >= t_mig,
+        "Mps must be >= MigStatic: {t_mps} vs {t_mig}\n{}\n{}",
+        mps.summary(),
+        mig.summary()
+    );
+    assert!(
+        t_mig > t_ts,
+        "MigStatic must beat TimeSlice: {t_mig} vs {t_ts}\n{}\n{}",
+        mig.summary(),
+        ts.summary()
+    );
+}
+
+#[test]
+fn collocation_beats_the_exclusive_baseline_under_saturation() {
+    // The cluster-scale restatement of the paper's headline: any form
+    // of spatial collocation beats 1-job-per-GPU for small models.
+    let trace = saturating_small_trace(28);
+    let exclusive = run_policy(PolicyKind::Exclusive, &trace, 2);
+    let mps = run_policy(PolicyKind::Mps, &trace, 2);
+    let mig = run_policy(PolicyKind::MigStatic, &trace, 2);
+    assert!(mps.aggregate_images_per_second() > exclusive.aggregate_images_per_second());
+    assert!(mig.aggregate_images_per_second() > exclusive.aggregate_images_per_second());
+    // Queue waits shrink accordingly.
+    assert!(mps.mean_wait_s() < exclusive.mean_wait_s());
+}
+
+#[test]
+fn fleet_run_is_deterministic_for_a_fixed_seed() {
+    let trace = saturating_small_trace(20);
+    for kind in [PolicyKind::Mps, PolicyKind::MigStatic, PolicyKind::MigDynamic] {
+        let a = run_policy(kind, &trace, 2).to_json().to_string_pretty();
+        let b = run_policy(kind, &trace, 2).to_json().to_string_pretty();
+        assert_eq!(a, b, "{kind} diverged across identical runs");
+    }
+}
+
+#[test]
+fn makespan_scales_down_with_fleet_size() {
+    let trace = saturating_small_trace(28);
+    let two = run_policy(PolicyKind::Mps, &trace, 2);
+    let four = run_policy(PolicyKind::Mps, &trace, 4);
+    assert_eq!(four.finished(), 28);
+    assert!(
+        four.makespan_s < two.makespan_s,
+        "4 GPUs {} !< 2 GPUs {}",
+        four.makespan_s,
+        two.makespan_s
+    );
+}

@@ -10,8 +10,9 @@ use migsim::simgpu::engine::{InstanceResources, SimEngine};
 use migsim::simgpu::kernel::{KernelClass, KernelDesc, StepTrace};
 use migsim::simgpu::spec::A100;
 use migsim::telemetry::dcgm;
+use migsim::util::json::Json;
 use migsim::util::prop::{forall, forall_ok};
-use migsim::util::rng::Rng;
+use migsim::util::rng::{resolve_seed, Rng};
 
 fn random_multiset(rng: &mut Rng) -> Vec<MigProfile> {
     let n = 1 + rng.below(7) as usize;
@@ -210,6 +211,96 @@ fn prop_scheduler_conservation() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------
+// JSON round-trip properties (the in-tree serializer feeds every result
+// dump, fleet metrics included).
+// ---------------------------------------------------------------------
+
+fn random_string(rng: &mut Rng) -> String {
+    const PALETTE: [char; 12] = ['a', 'Z', '9', '"', '\\', '/', '\n', '\t', '\r', '\u{1}', 'é', '🚀'];
+    let n = rng.below(12) as usize;
+    (0..n).map(|_| PALETTE[rng.below(PALETTE.len() as u64) as usize]).collect()
+}
+
+fn random_number(rng: &mut Rng) -> f64 {
+    match rng.below(4) {
+        0 => rng.below(1_000_000) as f64,
+        1 => -(rng.below(1000) as f64),
+        2 => (rng.next_f64() - 0.5) * 1e9,
+        _ => rng.next_f64() * 1e-6,
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: u32) -> Json {
+    let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num(random_number(rng)),
+        3 => Json::Str(random_string(rng)),
+        4 => Json::Arr(
+            (0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect(),
+        ),
+        _ => {
+            let mut obj = Json::obj();
+            for _ in 0..rng.below(5) {
+                obj.set(&random_string(rng), random_json(rng, depth - 1));
+            }
+            obj
+        }
+    }
+}
+
+/// (vi) parse ∘ serialize is the identity on finite JSON trees —
+/// nested objects, escape-heavy strings and fractional numbers
+/// included — for both the pretty and the compact printer.
+/// Re-seedable from the command line via MIGSIM_SEED.
+#[test]
+fn prop_json_round_trip() {
+    let seed = resolve_seed(None) ^ 0x15AC;
+    forall_ok(seed, 300, |rng| random_json(rng, 3), |j| {
+        for text in [j.to_string_pretty(), j.to_string_compact()] {
+            let back = Json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+            if back != *j {
+                return Err(format!("round trip changed value: {text}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// (vi-b) Non-finite numbers cannot be represented in JSON; the
+/// serializer must still emit *parseable* output (they degrade to
+/// null) no matter where they sit in the tree.
+#[test]
+fn prop_non_finite_numbers_serialize_parseably() {
+    let seed = resolve_seed(None) ^ 0x2BAD;
+    forall_ok(
+        seed,
+        200,
+        |rng| {
+            let bad = match rng.below(3) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                _ => f64::NEG_INFINITY,
+            };
+            let mut obj = Json::obj();
+            obj.set(&random_string(rng), Json::Num(bad))
+                .set("nested", Json::Arr(vec![Json::Num(bad), random_json(rng, 2)]));
+            obj
+        },
+        |j| {
+            let text = j.to_string_pretty();
+            let back = Json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
+            // The non-finite leaves must have degraded to Null.
+            match back.get("nested").and_then(Json::as_arr) {
+                Some(items) if items[0] == Json::Null => Ok(()),
+                other => Err(format!("expected null leaf, got {other:?}")),
+            }
+        },
+    );
 }
 
 /// Wave-quantization sanity: step time is monotone non-increasing in
