@@ -1,16 +1,30 @@
 //! Fleet-simulator scaling benchmark: a 10k-job trace on a 16-GPU
 //! fleet must stay interactive — the event loop is O(events log events)
 //! with memoized rates, so host time is decoupled from simulated time.
+//!
+//! With `--json` (i.e. `cargo bench --bench fleet_scale -- --json`,
+//! optional `--out <path>`) the run also emits `BENCH_fleet_scale.json`
+//! in the `util::bench::BenchReport` schema, so the 10k-job bench feeds
+//! the same perf trajectory the CI gate reads from `migsim bench`.
 
 use migsim::cluster::fleet::{FleetConfig, FleetSim};
 use migsim::cluster::policy::PolicyKind;
 use migsim::cluster::trace::{poisson_trace, TraceConfig};
 use migsim::simgpu::calibration::Calibration;
-use migsim::util::bench::{bench, section};
+use migsim::util::bench::{bench, section, BenchReport};
 use migsim::util::fmt_duration;
 
 fn main() {
     section("cluster fleet scaling");
+    let args: Vec<String> = std::env::args().collect();
+    let emit_json = args.iter().any(|a| a == "--json");
+    let out_path = args
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| "BENCH_fleet_scale.json".to_string());
+
     let cal = Calibration::paper();
     let trace = poisson_trace(&TraceConfig {
         jobs: 10_000,
@@ -20,6 +34,7 @@ fn main() {
         seed: migsim::util::rng::resolve_seed(None),
     });
 
+    let mut report = BenchReport::new("fleet_scale");
     for kind in [PolicyKind::Mps, PolicyKind::MigStatic, PolicyKind::MigDynamic] {
         let r = bench(&format!("10k jobs / 16 GPUs / {}", kind.name()), 1, 5, || {
             let config = FleetConfig {
@@ -35,6 +50,8 @@ fn main() {
         println!("{r}");
         let jobs_per_s = 10_000.0 / r.median_s;
         println!("  scheduled jobs/s (host): {jobs_per_s:.0}");
+        report.metric(&format!("jobs_per_s_{}", kind.name()), jobs_per_s);
+        report.note(&format!("wall_s_{}", kind.name()), r.median_s);
     }
 
     // One full report for the record.
@@ -51,4 +68,11 @@ fn main() {
         m.aggregate_images_per_second()
     );
     assert!(m.finished() > 9_000, "most jobs must finish: {}", m.finished());
+    report.metric("images_per_s_mps_10k", m.aggregate_images_per_second());
+
+    if emit_json {
+        let path = std::path::PathBuf::from(&out_path);
+        report.write(&path).expect("write bench report");
+        println!("bench report -> {}", path.display());
+    }
 }

@@ -1,0 +1,44 @@
+//! Grid sweep in miniature: the paper's policy × mix × load comparison
+//! as one parallel sweep.
+//!
+//!     cargo run --release --example sweep_grid
+//!
+//! Expands a 5-policy × 2-mix × 2-load grid (20 cells), runs it across
+//! all available cores, and prints the policy-ranking table — the §5
+//! ordering `Mps ≥ MigStatic > TimeSlice` over the whole grid rather
+//! than a single trace. Rerunning at any thread count produces the
+//! byte-identical summary (try `--threads 1` via `migsim sweep`).
+
+use migsim::report::sweep::{policy_means, ranking_table};
+use migsim::simgpu::calibration::Calibration;
+use migsim::sweep::engine::run_sweep;
+use migsim::sweep::grid::{GridSpec, MixSpec};
+
+fn main() {
+    let grid = GridSpec {
+        policies: migsim::cluster::policy::PolicyKind::ALL.to_vec(),
+        mixes: vec![
+            MixSpec::preset("smalls").expect("built-in"),
+            MixSpec::preset("paper").expect("built-in"),
+        ],
+        gpus: vec![2],
+        interarrivals_s: vec![0.5, 4.0],
+        seeds: vec![migsim::util::rng::resolve_seed(None)],
+        jobs_per_cell: 120,
+        epochs: Some(1),
+        cap: 7,
+    };
+    let cal = Calibration::paper();
+    let run = run_sweep(&grid, &cal, 0).expect("valid grid");
+    print!("{}", ranking_table(&run));
+    println!(
+        "\n{} cells | {} threads | host {:.3} s | {:.1} cells/s",
+        run.cells.len(),
+        run.threads,
+        run.host_s,
+        run.cells_per_s()
+    );
+    let means = policy_means(&run);
+    let (best, mean) = &means[0];
+    println!("best policy across the grid: {best} ({mean:.1} img/s mean)");
+}

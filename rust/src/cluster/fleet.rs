@@ -203,12 +203,44 @@ impl FleetSim {
     /// Build a fleet of `config.a100s` A100s followed by `config.a30s`
     /// A30s, partitioned per the policy. `trace` ids must be dense
     /// (0..n in order) — `cluster::trace` generators guarantee it.
+    ///
+    /// Panics on an invalid setup; callers handing over externally
+    /// sourced traces (CSV files) should prefer [`FleetSim::try_new`],
+    /// which reports the violation as a proper error instead.
     pub fn new(
         config: FleetConfig,
         policy: Box<dyn SchedulingPolicy>,
         cal: Calibration,
         trace: &[JobSpec],
     ) -> FleetSim {
+        Self::try_new(config, policy, cal, trace).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Fallible [`FleetSim::new`]: validates the fleet composition and
+    /// the trace (dense ids, finite non-negative arrivals) and returns
+    /// an error naming the first offending job rather than panicking.
+    pub fn try_new(
+        config: FleetConfig,
+        policy: Box<dyn SchedulingPolicy>,
+        cal: Calibration,
+        trace: &[JobSpec],
+    ) -> anyhow::Result<FleetSim> {
+        anyhow::ensure!(
+            config.a100s + config.a30s > 0,
+            "fleet needs at least one GPU"
+        );
+        for (i, spec) in trace.iter().enumerate() {
+            anyhow::ensure!(
+                spec.id == i,
+                "trace ids must be dense and ordered: job at position {i} has id {}",
+                spec.id
+            );
+            anyhow::ensure!(
+                spec.arrival_s.is_finite() && spec.arrival_s >= 0.0,
+                "job {i}: arrival must be finite and >= 0, got {}",
+                spec.arrival_s
+            );
+        }
         let share_model = policy.share_model();
         let kinds = std::iter::repeat_n(GpuKind::A100, config.a100s as usize)
             .chain(std::iter::repeat_n(GpuKind::A30, config.a30s as usize));
@@ -228,12 +260,9 @@ impl FleetSim {
                 jobs_served: 0,
             })
             .collect();
-        assert!(!gpus.is_empty(), "fleet needs at least one GPU");
         let jobs: Vec<JobState> = trace
             .iter()
-            .enumerate()
-            .map(|(i, spec)| {
-                assert_eq!(spec.id, i, "trace ids must be dense and ordered");
+            .map(|spec| {
                 let w = Workload::paper(spec.workload);
                 JobState {
                     spec: *spec,
@@ -250,7 +279,7 @@ impl FleetSim {
                 }
             })
             .collect();
-        FleetSim {
+        Ok(FleetSim {
             config,
             cal,
             policy,
@@ -261,7 +290,7 @@ impl FleetSim {
             timeline: Timeline::new(),
             now: 0.0,
             rate_cache: BTreeMap::new(),
-        }
+        })
     }
 
     /// Run the whole trace to completion and aggregate fleet metrics.
@@ -757,6 +786,35 @@ mod tests {
                 "{kind} not deterministic"
             );
         }
+    }
+
+    #[test]
+    fn try_new_rejects_invalid_setups_instead_of_panicking() {
+        let trace = small_trace(3, 1.0);
+        let empty_fleet = FleetConfig {
+            a100s: 0,
+            a30s: 0,
+            ..FleetConfig::default()
+        };
+        let err = FleetSim::try_new(empty_fleet, Box::new(Exclusive), cal(), &trace)
+            .err()
+            .expect("empty fleet must be rejected");
+        assert!(err.to_string().contains("at least one GPU"), "{err}");
+
+        let config = FleetConfig::default();
+        let mut sparse = small_trace(3, 1.0);
+        sparse[2].id = 9;
+        let err = FleetSim::try_new(config, Box::new(Exclusive), cal(), &sparse)
+            .err()
+            .expect("sparse ids must be rejected");
+        assert!(err.to_string().contains("dense"), "{err}");
+
+        let mut bad_arrival = small_trace(3, 1.0);
+        bad_arrival[1].arrival_s = f64::NAN;
+        let err = FleetSim::try_new(config, Box::new(Exclusive), cal(), &bad_arrival)
+            .err()
+            .expect("non-finite arrival must be rejected");
+        assert!(err.to_string().contains("finite"), "{err}");
     }
 
     #[test]

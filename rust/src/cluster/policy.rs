@@ -306,8 +306,20 @@ impl SchedulingPolicy for MigStatic {
 /// waiting mix via the exhaustive partition search in
 /// [`crate::coordinator::planner`] (A100) or the best homogeneous A30
 /// layout for the head job.
+///
+/// Holds a [`planner::Planner`] so the memoized throughput table is
+/// built once per policy instance, not once per drain — a fleet under
+/// churn (or a sweep running many fleets) re-plans constantly.
 pub struct MigDynamic {
-    pub cal: Calibration,
+    planner: planner::Planner,
+}
+
+impl MigDynamic {
+    pub fn new(cal: &Calibration) -> MigDynamic {
+        MigDynamic {
+            planner: planner::Planner::new(cal),
+        }
+    }
 }
 
 impl SchedulingPolicy for MigDynamic {
@@ -358,7 +370,7 @@ impl SchedulingPolicy for MigDynamic {
                     .take(7)
                     .map(|&w| planner::Job { workload: w })
                     .collect();
-                let mut profiles = planner::best_partition(&jobs, &self.cal);
+                let mut profiles = self.planner.best_partition(&jobs);
                 // Strict-FIFO guard: the aggregate-throughput optimum can
                 // strand the head job (e.g. a large head behind six
                 // smalls loses to 7x 1g.5gb), which would deadlock the
@@ -367,8 +379,7 @@ impl SchedulingPolicy for MigDynamic {
                 // the next drain re-plans for whatever then waits.
                 let head = waiting[0];
                 if !profiles.iter().any(|&p| fits_instance(head, p.memory_bytes())) {
-                    profiles =
-                        planner::best_partition(&[planner::Job { workload: head }], &self.cal);
+                    profiles = self.planner.best_partition(&[planner::Job { workload: head }]);
                 }
                 Some(profiles.iter().map(|&p| InstanceShape::a100(p)).collect())
             }
@@ -435,7 +446,7 @@ impl PolicyKind {
             PolicyKind::Mps => Box::new(Mps { cap }),
             PolicyKind::TimeSlice => Box::new(TimeSlice { cap }),
             PolicyKind::MigStatic => Box::new(MigStatic::new(a100_partition, None)),
-            PolicyKind::MigDynamic => Box::new(MigDynamic { cal: *cal }),
+            PolicyKind::MigDynamic => Box::new(MigDynamic::new(cal)),
         }
     }
 }
@@ -556,7 +567,7 @@ mod tests {
     fn mig_dynamic_waits_where_static_rejects() {
         use MigProfile::*;
         let cal = Calibration::paper();
-        let p = MigDynamic { cal };
+        let p = MigDynamic::new(&cal);
         // Current partition is all-1g, but a repartition could build a
         // 7g.40gb — the large job waits instead of being rejected.
         let v = mig_view(&[(P1g5gb, false), (P1g5gb, false)]);
@@ -566,7 +577,7 @@ mod tests {
     #[test]
     fn mig_dynamic_repartitions_for_small_flood() {
         let cal = Calibration::paper();
-        let p = MigDynamic { cal };
+        let p = MigDynamic::new(&cal);
         let waiting = vec![WorkloadSize::Small; 9];
         let shapes = p.repartition(GpuKind::A100, &waiting).unwrap();
         // The planner's known answer for 7 small jobs: 7x 1g.5gb.
@@ -581,7 +592,7 @@ mod tests {
         // 7x 1g.5gb — which the large head cannot use. The policy must
         // fall back to a head-feasible layout or the queue deadlocks.
         let cal = Calibration::paper();
-        let p = MigDynamic { cal };
+        let p = MigDynamic::new(&cal);
         let mut waiting = vec![WorkloadSize::Large];
         waiting.extend(std::iter::repeat_n(WorkloadSize::Small, 6));
         let shapes = p.repartition(GpuKind::A100, &waiting).unwrap();
@@ -594,7 +605,7 @@ mod tests {
     #[test]
     fn a30_repartition_homogeneous_for_head() {
         let cal = Calibration::paper();
-        let p = MigDynamic { cal };
+        let p = MigDynamic::new(&cal);
         let shapes = p.repartition(GpuKind::A30, &[WorkloadSize::Medium]).unwrap();
         // Medium floor (5.3 GB) fits the 6 GB A30 slice: 4x 1g.6gb.
         assert_eq!(shapes.len(), 4);

@@ -127,12 +127,16 @@ pub fn trace_to_csv(trace: &[JobSpec]) -> String {
 
 /// Parse a CSV trace file (`arrival_s,workload,epochs`, header
 /// optional). Ids are assigned densely in file order; arrivals must be
-/// finite and non-negative.
+/// finite and non-negative, epoch counts at least 1. Every rejection
+/// names the offending line so `migsim fleet --trace` can fail with a
+/// proper error (and nonzero exit) instead of panicking mid-simulation.
 pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<JobSpec>> {
     let mut out = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
-        if line.is_empty() || line == TRACE_HEADER {
+        // Header detection is prefix-based: hand-edited trace files
+        // often carry extra spaces or renamed columns after the first.
+        if line.is_empty() || line.starts_with("arrival") {
             continue;
         }
         let fields: Vec<&str> = line.split(',').map(str::trim).collect();
@@ -155,6 +159,11 @@ pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<JobSpec>> {
         let epochs: u32 = fields[2]
             .parse()
             .map_err(|_| anyhow::anyhow!("trace line {}: bad epochs '{}'", lineno + 1, fields[2]))?;
+        anyhow::ensure!(
+            epochs >= 1,
+            "trace line {}: epochs must be >= 1 (a 0-epoch job trains nothing)",
+            lineno + 1
+        );
         out.push(JobSpec {
             id: out.len(),
             arrival_s,
@@ -255,7 +264,25 @@ mod tests {
         assert!(parse_trace_csv("x,small,1").is_err());
         assert!(parse_trace_csv("-1.0,small,1").is_err());
         assert!(parse_trace_csv("1.0,gigantic,1").is_err());
+        assert!(parse_trace_csv("nan,small,1").is_err());
+        assert!(parse_trace_csv("1e999,small,1").is_err());
+        assert!(parse_trace_csv("1.0,small,0").is_err());
         assert!(parse_trace_csv("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn csv_errors_carry_the_line_number() {
+        let text = "arrival_s,workload,epochs\n1.0,small,1\n2.0,small,zero\n";
+        let err = parse_trace_csv(text).unwrap_err().to_string();
+        assert!(err.contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn csv_header_variants_are_skipped() {
+        let text = "arrival_s, workload, epochs\n1.0,small,2\n";
+        let t = parse_trace_csv(text).unwrap();
+        assert_eq!(t.len(), 1);
+        assert_eq!(t[0].epochs, 2);
     }
 
     #[test]

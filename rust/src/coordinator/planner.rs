@@ -60,7 +60,7 @@ pub fn throughput(workload: WorkloadSize, profile: MigProfile, cal: &Calibration
 }
 
 /// Throughput of every (workload, profile) pair, computed once per
-/// [`plan`] call. The partition search re-queries the same 15 pairs for
+/// [`Planner`]. The partition search re-queries the same 15 pairs for
 /// every candidate multiset, so memoizing here cuts simulator
 /// invocations by orders of magnitude — which is what makes the cluster
 /// scheduler's repeated re-planning (MigDynamic repartitioning) cheap.
@@ -86,35 +86,63 @@ impl TputTable {
     }
 }
 
-/// Find the throughput-optimal plan for a job mix.
+/// A reusable planner: the memoized (workload, profile) throughput
+/// table plus the calibration it was built from.
 ///
-/// Search space: every valid profile multiset (≤ 7 instances — small on
-/// the A100), jobs greedily matched to instances by best marginal
-/// throughput. Exhaustive over partitions, greedy over assignment —
-/// optimal assignment for identical-throughput-curve jobs, near-optimal
-/// in general (documented trade-off).
-pub fn plan(jobs: &[Job], cal: &Calibration) -> Plan {
-    let table = TputTable::build(cal);
-    let mut best: Option<Plan> = None;
-    for profiles in PartitionSet::enumerate_valid_multisets() {
-        let candidate = assign(jobs, &profiles, &table);
-        let better = match &best {
-            None => true,
-            Some(b) => {
-                (candidate.unplaced, -candidate.total_throughput)
-                    < (b.unplaced, -b.total_throughput)
-            }
-        };
-        if better {
-            best = Some(candidate);
-        }
-    }
-    best.expect("at least one valid partition exists")
+/// Building the table costs 15 simulator step evaluations; callers that
+/// plan repeatedly — `MigDynamic` re-planning on every GPU drain, or a
+/// sweep running thousands of fleet cells — construct one `Planner` and
+/// amortize that cost across every subsequent [`Planner::plan`] call.
+pub struct Planner {
+    table: TputTable,
 }
 
-/// Just the profile multiset the planner would configure for `jobs` —
-/// the entry point the cluster scheduler's dynamic-repartitioning
-/// policy uses when a drained GPU meets a non-empty queue.
+impl Planner {
+    pub fn new(cal: &Calibration) -> Planner {
+        Planner {
+            table: TputTable::build(cal),
+        }
+    }
+
+    /// Find the throughput-optimal plan for a job mix.
+    ///
+    /// Search space: every valid profile multiset (≤ 7 instances —
+    /// small on the A100), jobs greedily matched to instances by best
+    /// marginal throughput. Exhaustive over partitions, greedy over
+    /// assignment — optimal assignment for identical-throughput-curve
+    /// jobs, near-optimal in general (documented trade-off).
+    pub fn plan(&self, jobs: &[Job]) -> Plan {
+        let mut best: Option<Plan> = None;
+        for profiles in PartitionSet::enumerate_valid_multisets() {
+            let candidate = assign(jobs, &profiles, &self.table);
+            let better = match &best {
+                None => true,
+                Some(b) => {
+                    (candidate.unplaced, -candidate.total_throughput)
+                        < (b.unplaced, -b.total_throughput)
+                }
+            };
+            if better {
+                best = Some(candidate);
+            }
+        }
+        best.expect("at least one valid partition exists")
+    }
+
+    /// Just the profile multiset the planner would configure for `jobs`.
+    pub fn best_partition(&self, jobs: &[Job]) -> Vec<MigProfile> {
+        self.plan(jobs).profiles
+    }
+}
+
+/// One-shot [`Planner::plan`] (builds and discards the table).
+pub fn plan(jobs: &[Job], cal: &Calibration) -> Plan {
+    Planner::new(cal).plan(jobs)
+}
+
+/// One-shot [`Planner::best_partition`] — the entry point the cluster
+/// scheduler's dynamic-repartitioning policy used before it held a
+/// [`Planner`] of its own.
 pub fn best_partition(jobs: &[Job], cal: &Calibration) -> Vec<MigProfile> {
     plan(jobs, cal).profiles
 }
@@ -277,6 +305,19 @@ mod tests {
         let cal = Calibration::paper();
         let js = jobs(&[(WorkloadSize::Medium, 1), (WorkloadSize::Small, 3)]);
         assert_eq!(best_partition(&js, &cal), plan(&js, &cal).profiles);
+    }
+
+    #[test]
+    fn reused_planner_matches_one_shot_planning() {
+        let cal = Calibration::paper();
+        let planner = Planner::new(&cal);
+        for mix in [
+            jobs(&[(WorkloadSize::Small, 7)]),
+            jobs(&[(WorkloadSize::Medium, 1), (WorkloadSize::Small, 3)]),
+            jobs(&[(WorkloadSize::Large, 1)]),
+        ] {
+            assert_eq!(planner.plan(&mix), plan(&mix, &cal));
+        }
     }
 
     #[test]

@@ -29,6 +29,32 @@
 //! aggregate throughput, per-GPU GRACT/SMACT) export through
 //! [`report::fleet`] and the `migsim fleet` CLI subcommand; see
 //! `examples/fleet_sim.rs` and `benches/fleet_scale.rs`.
+//!
+//! ## Sweeps & benchmarking
+//!
+//! The [`sweep`] subsystem runs collocation experiments as *grids*,
+//! the shape of the paper's evaluation: a declarative
+//! [`sweep::grid::GridSpec`] (policies × workload mixes × fleet sizes
+//! × arrival rates × seeds) expands to self-contained cells that a
+//! lock-free ticket counter distributes across `std::thread` workers.
+//! Each cell seeds its own trace from its grid coordinates, so sibling
+//! cells replay identical job streams and the sweep summary is
+//! **byte-identical at any thread count**. Aggregation flows through
+//! [`report::sweep`]: a schema-versioned `sweep_summary.json`
+//! (`SWEEP_SCHEMA_VERSION`), a per-cell `sweep_cells.csv`, and a
+//! policy-ranking table that reproduces the paper's §5 ordering
+//! (`Mps ≥ MigStatic > TimeSlice`) across the whole grid.
+//!
+//! Performance is tracked through schema-versioned `BENCH_<name>.json`
+//! reports ([`util::bench::BenchReport`], schema
+//! [`util::bench::BENCH_SCHEMA_VERSION`]): `migsim bench` times the
+//! sweep engine and records higher-is-better rates (host `cells_per_s`
+//! and per-policy simulated `images_per_s_*`); `benches/fleet_scale.rs
+//! -- --json` emits the same schema for the 10k-job fleet benchmark.
+//! CI runs `migsim bench --json --quick --baseline BENCH_baseline.json`
+//! and fails on any gated metric more than 15 % below the committed
+//! baseline — see `.github/workflows/ci.yml` for the gate and its
+//! override label. CLI front ends: `migsim sweep` and `migsim bench`.
 
 pub mod cluster;
 pub mod config;
@@ -37,6 +63,7 @@ pub mod mig;
 pub mod report;
 pub mod runtime;
 pub mod simgpu;
+pub mod sweep;
 pub mod telemetry;
 pub mod util;
 pub mod workload;

@@ -9,6 +9,10 @@
 //! * `plan`      — heterogeneous-partition planner (paper future work).
 //! * `fleet`     — cluster-scale collocation: a discrete-event fleet
 //!   simulator comparing placement policies (see `migsim::cluster`).
+//! * `sweep`     — expand a declarative experiment grid and run every
+//!   cell across worker threads (see `migsim::sweep`).
+//! * `bench`     — time the sweep engine and emit/gate machine-readable
+//!   `BENCH_<name>.json` perf reports (the CI regression gate).
 
 use migsim::cluster::fleet::{FleetConfig, FleetSim};
 use migsim::cluster::policy::PolicyKind;
@@ -22,6 +26,9 @@ use migsim::mig::profile::MigProfile;
 use migsim::report::figures;
 use migsim::runtime::artifacts::ArtifactStore;
 use migsim::runtime::trainer::{Trainer, TrainerConfig};
+use migsim::sweep::engine::run_sweep;
+use migsim::sweep::grid::{GridSpec, MixSpec};
+use migsim::util::bench::{bench, compare_reports, BenchReport};
 use migsim::util::cli::Args;
 use migsim::util::fmt_duration;
 use migsim::util::json::Json;
@@ -59,6 +66,26 @@ SUBCOMMANDS
       A100/A30 GPUs under a placement policy (exclusive | mps |
       timeslice | mig-static | mig-dynamic). Emits summary JSON +
       per-job/per-GPU CSV.
+  sweep [--policies mps,mig-static] [--mixes 'smalls|paper']
+        [--gpus 2,4] [--interarrivals 0.5,2.0] [--seeds 1,2]
+        [--jobs 200] [--epochs 1] [--cap 7] [--threads N]
+        [--grid grid.json] [--out results]
+      Expand a declarative grid (policies x mixes x fleet sizes x
+      arrival rates x seeds) into cells and run them all across worker
+      threads. Output is byte-identical at any --threads. Writes
+      sweep_summary.json + sweep_cells.csv and prints the
+      policy-ranking table. --grid loads the spec from JSON instead
+      (same keys as the axis flags; absent keys keep defaults).
+  bench [--quick] [--json] [--name sweep] [--out .] [--threads N]
+        [--iters 3] [--baseline BENCH_baseline.json]
+        [--tolerance 0.15] [--write-baseline]
+      Time the sweep engine (median of --iters runs) and report
+      cells/s plus per-policy images/s. --json writes the
+      schema-versioned BENCH_<name>.json; --baseline compares against
+      a committed report and exits nonzero on any gated metric more
+      than --tolerance below it (the CI perf gate; a baseline marked
+      provisional gates nothing). --write-baseline mints
+      BENCH_baseline.json from this run.
 
 GLOBAL FLAGS
   --seed <u64>   RNG seed for traces and jittered sampling (default
@@ -81,6 +108,8 @@ fn main() -> anyhow::Result<()> {
         Some("train") => cmd_train(&args, &config),
         Some("plan") => cmd_plan(&args, &config),
         Some("fleet") => cmd_fleet(&args, &config),
+        Some("sweep") => cmd_sweep(&args, &config),
+        Some("bench") => cmd_bench(&args, &config),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -271,7 +300,9 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
         ..FleetConfig::default()
     };
     let t0 = std::time::Instant::now();
-    let sim = FleetSim::new(fleet_config, policy, config.calibration, &trace);
+    // try_new: a malformed external trace must exit with a proper
+    // error, not a panic.
+    let sim = FleetSim::try_new(fleet_config, policy, config.calibration, &trace)?;
     let metrics = sim.run();
     println!("{}", metrics.summary());
     let out = args.flag_or("out", &config.out_dir);
@@ -283,6 +314,193 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
         artifacts.jobs_csv.display(),
         artifacts.gpus_csv.display(),
     );
+    Ok(())
+}
+
+/// Parse a comma-separated numeric list flag.
+fn parse_num_list<T: std::str::FromStr>(list: &str, flag: &str) -> anyhow::Result<Vec<T>> {
+    list.split(',')
+        .map(|s| {
+            let s = s.trim();
+            s.parse::<T>()
+                .map_err(|_| anyhow::anyhow!("invalid value '{s}' in --{flag}"))
+        })
+        .collect()
+}
+
+/// Build the sweep grid from `--grid file.json` or the axis flags
+/// (absent flags keep the `GridSpec::default_grid` values).
+fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
+    if let Some(path) = args.flag("grid") {
+        for flag in ["policies", "mixes", "gpus", "interarrivals", "seeds", "jobs", "epochs", "cap"]
+        {
+            anyhow::ensure!(
+                args.flag(flag).is_none(),
+                "--{flag} conflicts with --grid (the file is the whole spec)"
+            );
+        }
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        let json =
+            Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        let mut grid = GridSpec::from_json(&json)?;
+        // The file is the spec, but the global --seed / MIGSIM_SEED
+        // contract still applies when the file does not pin seeds.
+        if json.get("seeds").is_none() {
+            grid.seeds = vec![rng::resolve_seed(args.seed()?)];
+        }
+        return Ok(grid);
+    }
+    let mut grid = GridSpec::default_grid();
+    if let Some(list) = args.flag("policies") {
+        grid.policies = list
+            .split(',')
+            .map(|s| {
+                let s = s.trim();
+                PolicyKind::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown policy '{s}' in --policies (expected one of: {})",
+                        PolicyKind::ALL.map(|p| p.name()).join(" | ")
+                    )
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
+    if let Some(list) = args.flag("mixes") {
+        grid.mixes = list.split('|').map(MixSpec::parse).collect::<anyhow::Result<Vec<_>>>()?;
+    }
+    if let Some(list) = args.flag("gpus") {
+        grid.gpus = parse_num_list(list, "gpus")?;
+    }
+    if let Some(list) = args.flag("interarrivals") {
+        grid.interarrivals_s = parse_num_list(list, "interarrivals")?;
+    }
+    grid.seeds = match args.flag("seeds") {
+        Some(list) => parse_num_list(list, "seeds")?,
+        None => vec![rng::resolve_seed(args.seed()?)],
+    };
+    grid.jobs_per_cell = args.flag_parse("jobs", grid.jobs_per_cell)?;
+    if let Some(e) = args.flag("epochs") {
+        grid.epochs = Some(
+            e.parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for --epochs: '{e}'"))?,
+        );
+    }
+    grid.cap = args.flag_parse("cap", grid.cap)?;
+    grid.validate()?;
+    Ok(grid)
+}
+
+fn cmd_sweep(args: &Args, config: &Config) -> anyhow::Result<()> {
+    let grid = grid_from_args(args)?;
+    let threads = args.flag_parse("threads", 0usize)?;
+    let run = run_sweep(&grid, &config.calibration, threads)?;
+    print!("{}", migsim::report::sweep::ranking_table(&run));
+    println!(
+        "\n{} cells | {} threads | host {:.3} s | {:.1} cells/s",
+        run.cells.len(),
+        run.threads,
+        run.host_s,
+        run.cells_per_s()
+    );
+    let out = args.flag_or("out", &config.out_dir);
+    let artifacts = migsim::report::sweep::write_sweep(
+        std::path::Path::new(&out),
+        &grid,
+        &run,
+        &config.calibration,
+    )?;
+    println!(
+        "wrote {} + {}",
+        artifacts.summary_json.display(),
+        artifacts.cells_csv.display()
+    );
+    Ok(())
+}
+
+fn cmd_bench(args: &Args, config: &Config) -> anyhow::Result<()> {
+    let quick = args.has("quick");
+    let grid = if quick {
+        GridSpec::quick()
+    } else {
+        GridSpec::default_grid()
+    };
+    grid.validate()?;
+    let threads = args.flag_parse("threads", 0usize)?;
+    let iters = args.flag_parse("iters", 3u32)?;
+    anyhow::ensure!(iters >= 1, "--iters must be >= 1");
+    let cal = config.calibration;
+
+    let default_name = if quick { "sweep_quick" } else { "sweep" };
+    let name = args.flag_or("name", default_name);
+    let timing = bench(
+        &format!("sweep of {} cells", grid.cell_count()),
+        1,
+        iters,
+        || run_sweep(&grid, &cal, threads).expect("grid already validated"),
+    );
+    println!("{timing}");
+    // Any run carries the simulated outcomes — they are deterministic.
+    let run = run_sweep(&grid, &cal, threads)?;
+
+    let mut report = BenchReport::new(&name);
+    report.metric("cells_per_s", grid.cell_count() as f64 / timing.median_s);
+    for (policy, mean) in migsim::report::sweep::policy_means(&run) {
+        report.metric(&format!("images_per_s_{policy}"), mean);
+    }
+    report
+        .note("wall_s", timing.median_s)
+        .note("threads", run.threads as f64)
+        .note("cells", grid.cell_count() as f64);
+    for (key, value) in &report.metrics {
+        println!("  {key:<28} {value:.1}");
+    }
+
+    let out = std::path::PathBuf::from(args.flag_or("out", "."));
+    if args.has("json") {
+        let path = out.join(report.file_name());
+        report.write(&path)?;
+        println!("bench report -> {}", path.display());
+    }
+    if args.has("write-baseline") {
+        let mut baseline = report.clone();
+        baseline.name = "baseline".to_string();
+        let path = out.join(baseline.file_name());
+        baseline.write(&path)?;
+        println!("baseline -> {}", path.display());
+    }
+
+    if let Some(path) = args.flag("baseline") {
+        let baseline = BenchReport::read(std::path::Path::new(path))?;
+        let tolerance = args.flag_parse("tolerance", 0.15f64)?;
+        anyhow::ensure!(
+            (0.0..1.0).contains(&tolerance),
+            "--tolerance must be in [0, 1)"
+        );
+        if baseline.provisional {
+            println!(
+                "baseline {path} is provisional — perf gate skipped; \
+                 mint a real one with `migsim bench --quick --write-baseline`"
+            );
+            return Ok(());
+        }
+        let regressions = compare_reports(&baseline, &report, tolerance);
+        if regressions.is_empty() {
+            println!(
+                "perf gate PASS vs {path} (tolerance {:.0}%)",
+                tolerance * 100.0
+            );
+        } else {
+            for r in &regressions {
+                eprintln!("perf regression: {r}");
+            }
+            anyhow::bail!(
+                "{} metric(s) regressed more than {:.0}% vs {path}",
+                regressions.len(),
+                tolerance * 100.0
+            );
+        }
+    }
     Ok(())
 }
 

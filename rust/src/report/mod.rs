@@ -5,6 +5,8 @@ pub mod csv;
 pub mod figures;
 pub mod fleet;
 pub mod render;
+pub mod sweep;
 
 pub use figures::all_figures;
 pub use fleet::write_fleet;
+pub use sweep::write_sweep;

@@ -1,0 +1,281 @@
+//! Sweep-run export: schema-versioned summary JSON, per-cell CSV, and
+//! the policy-ranking table.
+//!
+//! The summary JSON is a pure function of the grid spec and the
+//! simulated outcomes — host timings stay out on purpose, so the same
+//! grid produces the *byte-identical* file at any worker-thread count
+//! (the determinism contract `rust/tests/sweep_determinism.rs` checks).
+
+use super::{csv, render};
+use crate::simgpu::calibration::Calibration;
+use crate::sweep::engine::SweepRun;
+use crate::sweep::grid::GridSpec;
+use crate::util::json::Json;
+use crate::util::safe_div;
+use std::path::{Path, PathBuf};
+
+/// Version of the sweep summary JSON layout. Bump on breaking changes;
+/// consumers (CI, plotting scripts) must check it before reading.
+pub const SWEEP_SCHEMA_VERSION: u64 = 1;
+
+/// Files one [`write_sweep`] call produces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SweepArtifacts {
+    pub summary_json: PathBuf,
+    pub cells_csv: PathBuf,
+}
+
+/// Mean aggregate images/s per policy, sorted best-first (ties break on
+/// policy name for determinism). The sweep-level figure of merit: the
+/// paper's §5 ranking `Mps ≥ MigStatic > TimeSlice` should reproduce
+/// here across the *whole grid*, not just a single trace.
+pub fn policy_means(run: &SweepRun) -> Vec<(String, f64)> {
+    let mut acc: Vec<(String, f64, u64)> = Vec::new();
+    for cell in &run.cells {
+        let name = cell.spec.policy.name();
+        match acc.iter_mut().find(|(n, _, _)| n == name) {
+            Some((_, sum, count)) => {
+                *sum += cell.metrics.images_per_s;
+                *count += 1;
+            }
+            None => acc.push((name.to_string(), cell.metrics.images_per_s, 1)),
+        }
+    }
+    let mut means: Vec<(String, f64)> = acc
+        .into_iter()
+        .map(|(name, sum, count)| (name, safe_div(sum, count as f64)))
+        .collect();
+    means.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+    means
+}
+
+/// The ASCII policy-ranking table for the CLI.
+pub fn ranking_table(run: &SweepRun) -> String {
+    let means = policy_means(run);
+    let rows: Vec<Vec<String>> = means
+        .iter()
+        .map(|(name, mean)| {
+            let cells: Vec<_> = run
+                .cells
+                .iter()
+                .filter(|c| c.spec.policy.name() == name.as_str())
+                .collect();
+            let n = cells.len() as f64;
+            let gract = safe_div(cells.iter().map(|c| c.metrics.mean_gract).sum(), n);
+            let p95 = safe_div(cells.iter().map(|c| c.metrics.p95_jct_s).sum(), n);
+            let rejected: u64 = cells.iter().map(|c| c.metrics.rejected).sum();
+            vec![
+                name.clone(),
+                cells.len().to_string(),
+                format!("{mean:.1}"),
+                format!("{gract:.3}"),
+                crate::util::fmt_duration(p95),
+                rejected.to_string(),
+            ]
+        })
+        .collect();
+    render::table(
+        "policy ranking (mean aggregate images/s across the grid)",
+        &["policy", "cells", "img/s μ", "GRACT μ", "JCT p95 μ", "rejected"],
+        &rows,
+    )
+}
+
+/// The sweep summary as JSON: schema version, calibration fingerprint,
+/// the grid spec verbatim, per-cell outcomes and the policy ranking.
+pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json {
+    let mut j = Json::obj();
+    j.set("schema_version", Json::from_u64(SWEEP_SCHEMA_VERSION))
+        .set(
+            "calibration_fingerprint",
+            Json::from_str_val(&format!("{:016x}", cal.fingerprint())),
+        )
+        .set("grid", grid.to_json())
+        .set("cell_count", Json::from_u64(run.cells.len() as u64));
+    let cells: Vec<Json> = run
+        .cells
+        .iter()
+        .map(|c| {
+            let mut o = Json::obj();
+            o.set("index", Json::from_u64(c.spec.index as u64))
+                .set("policy", Json::from_str_val(c.spec.policy.name()))
+                .set("mix", Json::from_str_val(&c.spec.mix.name))
+                .set("gpus", Json::from_u64(c.spec.gpus as u64))
+                .set("interarrival_s", Json::from_f64(c.spec.mean_interarrival_s))
+                .set("seed", Json::from_u64(c.spec.seed))
+                .set("metrics", c.metrics.to_json());
+            o
+        })
+        .collect();
+    j.set("cells", Json::Arr(cells));
+    let ranking: Vec<Json> = policy_means(run)
+        .iter()
+        .map(|(name, mean)| {
+            let mut o = Json::obj();
+            o.set("policy", Json::from_str_val(name))
+                .set("mean_images_per_s", Json::from_f64(*mean));
+            o
+        })
+        .collect();
+    j.set("ranking", Json::Arr(ranking));
+    j
+}
+
+/// Per-cell CSV rows (one line per cell, grid order).
+pub fn cells_rows(run: &SweepRun) -> Vec<Vec<String>> {
+    run.cells
+        .iter()
+        .map(|c| {
+            vec![
+                c.spec.index.to_string(),
+                c.spec.policy.name().to_string(),
+                c.spec.mix.name.clone(),
+                c.spec.gpus.to_string(),
+                format!("{}", c.spec.mean_interarrival_s),
+                c.spec.seed.to_string(),
+                c.metrics.finished.to_string(),
+                c.metrics.rejected.to_string(),
+                c.metrics.unserved.to_string(),
+                c.metrics.peak_queue.to_string(),
+                format!("{:.3}", c.metrics.makespan_s),
+                format!("{:.3}", c.metrics.mean_wait_s),
+                format!("{:.3}", c.metrics.p50_jct_s),
+                format!("{:.3}", c.metrics.p95_jct_s),
+                format!("{:.1}", c.metrics.images_per_s),
+                format!("{:.4}", c.metrics.mean_gract),
+            ]
+        })
+        .collect()
+}
+
+const CELLS_HEADER: [&str; 16] = [
+    "index",
+    "policy",
+    "mix",
+    "gpus",
+    "interarrival_s",
+    "seed",
+    "finished",
+    "rejected",
+    "unserved",
+    "peak_queue",
+    "makespan_s",
+    "mean_wait_s",
+    "p50_jct_s",
+    "p95_jct_s",
+    "images_per_s",
+    "mean_gract",
+];
+
+/// Write `sweep_summary.json` + `sweep_cells.csv` under `dir`.
+pub fn write_sweep(
+    dir: &Path,
+    grid: &GridSpec,
+    run: &SweepRun,
+    cal: &Calibration,
+) -> anyhow::Result<SweepArtifacts> {
+    std::fs::create_dir_all(dir)?;
+    let summary_json = dir.join("sweep_summary.json");
+    std::fs::write(&summary_json, summary_json_text(grid, run, cal))?;
+    let cells_csv = dir.join("sweep_cells.csv");
+    csv::write_csv(&cells_csv, &CELLS_HEADER, &cells_rows(run))?;
+    Ok(SweepArtifacts {
+        summary_json,
+        cells_csv,
+    })
+}
+
+/// The exact text [`write_sweep`] puts in `sweep_summary.json` — the
+/// byte-identity contract is stated over this string.
+pub fn summary_json_text(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> String {
+    summary_json(grid, run, cal).to_string_pretty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::policy::PolicyKind;
+    use crate::sweep::engine::run_sweep;
+    use crate::sweep::grid::MixSpec;
+    use crate::util::tempdir::TempDir;
+
+    fn saturated_grid() -> GridSpec {
+        // Back-to-back arrivals on one GPU: the collocation policies
+        // separate cleanly, as in the paper's §5 comparison.
+        GridSpec {
+            policies: vec![PolicyKind::Mps, PolicyKind::MigStatic, PolicyKind::TimeSlice],
+            mixes: vec![MixSpec::preset("smalls").unwrap()],
+            gpus: vec![1],
+            interarrivals_s: vec![0.001],
+            seeds: vec![42],
+            jobs_per_cell: 21,
+            epochs: Some(1),
+            cap: 7,
+        }
+    }
+
+    #[test]
+    fn ranking_reproduces_the_paper_ordering() {
+        let grid = saturated_grid();
+        let run = run_sweep(&grid, &Calibration::paper(), 2).unwrap();
+        let means = policy_means(&run);
+        let pos = |name: &str| means.iter().position(|(n, _)| n == name).unwrap();
+        assert!(
+            pos("mps") <= pos("mig-static"),
+            "Mps >= MigStatic expected: {means:?}"
+        );
+        assert!(
+            pos("mig-static") < pos("timeslice"),
+            "MigStatic > TimeSlice expected: {means:?}"
+        );
+    }
+
+    #[test]
+    fn summary_json_is_parseable_and_versioned() {
+        let grid = saturated_grid();
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, 1).unwrap();
+        let text = summary_json_text(&grid, &run, &cal);
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("schema_version").unwrap().as_u64(),
+            Some(SWEEP_SCHEMA_VERSION)
+        );
+        assert_eq!(
+            back.get("cell_count").unwrap().as_u64(),
+            Some(grid.cell_count() as u64)
+        );
+        assert_eq!(
+            back.get("cells").unwrap().as_arr().unwrap().len(),
+            grid.cell_count()
+        );
+        // The embedded grid round-trips to the spec that produced it.
+        let embedded = GridSpec::from_json(back.get("grid").unwrap()).unwrap();
+        assert_eq!(embedded, grid);
+        // No host timings anywhere: the file must be run-invariant.
+        assert!(!text.contains("host_s"), "summary must not embed host time");
+    }
+
+    #[test]
+    fn artifacts_written_with_one_row_per_cell() {
+        let grid = saturated_grid();
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, 2).unwrap();
+        let dir = TempDir::new().unwrap();
+        let a = write_sweep(dir.path(), &grid, &run, &cal).unwrap();
+        assert!(a.summary_json.exists() && a.cells_csv.exists());
+        let csv_text = std::fs::read_to_string(&a.cells_csv).unwrap();
+        assert_eq!(csv_text.lines().count(), 1 + grid.cell_count());
+        assert!(csv_text.lines().next().unwrap().starts_with("index,policy,mix"));
+    }
+
+    #[test]
+    fn ranking_table_lists_every_policy() {
+        let grid = saturated_grid();
+        let run = run_sweep(&grid, &Calibration::paper(), 1).unwrap();
+        let table = ranking_table(&run);
+        for p in &grid.policies {
+            assert!(table.contains(p.name()), "{table}");
+        }
+    }
+}

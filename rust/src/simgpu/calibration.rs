@@ -56,6 +56,29 @@ impl Calibration {
     pub fn paper() -> Self {
         Self::default()
     }
+
+    /// Stable 64-bit fingerprint of the constants, recorded in sweep
+    /// summaries and `BENCH_*.json` files: two runs are only comparable
+    /// when their calibrations match, and a fingerprint mismatch
+    /// explains an "images/s regression" that is really a re-fit.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325; // FNV-1a offset basis
+        for v in [
+            self.gemm_efficiency,
+            self.elementwise_efficiency,
+            self.bandwidth_efficiency,
+            self.dispatch_gap_s,
+            self.mem_latency_s,
+            self.step_overhead_s,
+            self.epoch_overhead_s,
+        ] {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3); // FNV prime
+            }
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -68,5 +91,14 @@ mod tests {
         assert!(c.gemm_efficiency > 0.0 && c.gemm_efficiency < 1.0);
         assert!(c.bandwidth_efficiency > 0.5 && c.bandwidth_efficiency <= 1.0);
         assert!(c.dispatch_gap_s > 0.0 && c.dispatch_gap_s < 1e-3);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let a = Calibration::paper();
+        assert_eq!(a.fingerprint(), Calibration::paper().fingerprint());
+        let mut b = a;
+        b.gemm_efficiency += 0.01;
+        assert_ne!(a.fingerprint(), b.fingerprint());
     }
 }

@@ -1,0 +1,247 @@
+//! The parallel sweep executor.
+//!
+//! Work distribution is a lock-free ticket counter: the expanded cell
+//! list is immutable and shared, and each `std::thread` worker claims
+//! the next unclaimed index with a relaxed `fetch_add` — no queue
+//! locks, no channels, no dependencies beyond `std`. Workers keep
+//! their results locally and the main thread merges them by cell index
+//! afterwards, so the output is **byte-identical at any thread count**:
+//! every cell is self-contained (its own trace, policy and simulator,
+//! seeded from the cell spec alone) and the merge order is the fixed
+//! grid-expansion order, not completion order.
+//!
+//! Host wall time lives in [`SweepRun::host_s`] and is deliberately
+//! kept *out* of the summary JSON (`report::sweep`), which must stay a
+//! pure function of the grid spec.
+
+use super::grid::{CellSpec, GridSpec};
+use crate::cluster::fleet::{FleetConfig, FleetSim};
+use crate::cluster::metrics::FleetMetrics;
+use crate::cluster::trace::poisson_trace;
+use crate::simgpu::calibration::Calibration;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Deterministic scalar outcomes of one cell (no host timings).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellMetrics {
+    pub finished: u64,
+    pub rejected: u64,
+    pub unserved: u64,
+    pub peak_queue: u64,
+    pub makespan_s: f64,
+    pub mean_wait_s: f64,
+    pub p50_jct_s: f64,
+    pub p95_jct_s: f64,
+    pub total_images: f64,
+    pub images_per_s: f64,
+    pub mean_gract: f64,
+}
+
+impl CellMetrics {
+    pub fn from_fleet(m: &FleetMetrics) -> CellMetrics {
+        CellMetrics {
+            finished: m.finished() as u64,
+            rejected: m.rejected() as u64,
+            unserved: m.unserved() as u64,
+            peak_queue: m.peak_queue as u64,
+            makespan_s: m.makespan_s,
+            mean_wait_s: m.mean_wait_s(),
+            p50_jct_s: m.p50_jct_s(),
+            p95_jct_s: m.p95_jct_s(),
+            total_images: m.total_images(),
+            images_per_s: m.aggregate_images_per_second(),
+            mean_gract: m.mean_gract(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("finished", Json::from_u64(self.finished))
+            .set("rejected", Json::from_u64(self.rejected))
+            .set("unserved", Json::from_u64(self.unserved))
+            .set("peak_queue", Json::from_u64(self.peak_queue))
+            .set("makespan_s", Json::from_f64(self.makespan_s))
+            .set("mean_wait_s", Json::from_f64(self.mean_wait_s))
+            .set("p50_jct_s", Json::from_f64(self.p50_jct_s))
+            .set("p95_jct_s", Json::from_f64(self.p95_jct_s))
+            .set("total_images", Json::from_f64(self.total_images))
+            .set("images_per_s", Json::from_f64(self.images_per_s))
+            .set("mean_gract", Json::from_f64(self.mean_gract));
+        j
+    }
+}
+
+/// One executed cell: its spec plus its metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellOutcome {
+    pub spec: CellSpec,
+    pub metrics: CellMetrics,
+}
+
+/// A completed sweep, cells in grid-expansion order.
+#[derive(Debug, Clone)]
+pub struct SweepRun {
+    pub cells: Vec<CellOutcome>,
+    /// Worker threads actually used.
+    pub threads: usize,
+    /// Host wall time of the execution (NOT part of the summary JSON).
+    pub host_s: f64,
+}
+
+impl SweepRun {
+    /// Host-side throughput: cells executed per wall second — the
+    /// figure the CI perf gate tracks.
+    pub fn cells_per_s(&self) -> f64 {
+        crate::util::safe_div(self.cells.len() as f64, self.host_s)
+    }
+}
+
+/// Worker-thread count when the caller does not pin one.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Execute one cell: generate its trace, build its policy and fleet,
+/// run the discrete-event simulation. Pure function of (cell, grid,
+/// cal) — this is what makes the sweep embarrassingly parallel.
+pub fn run_cell(cell: &CellSpec, grid: &GridSpec, cal: &Calibration) -> CellMetrics {
+    let trace = poisson_trace(&cell.trace_config(grid));
+    let policy = cell.policy.build(cal, grid.cap, None);
+    let config = FleetConfig {
+        a100s: cell.gpus,
+        a30s: 0,
+        seed: cell.seed,
+        ..FleetConfig::default()
+    };
+    let sim = FleetSim::new(config, policy, *cal, &trace);
+    CellMetrics::from_fleet(&sim.run())
+}
+
+/// Expand `grid` and execute every cell across `threads` workers
+/// (0 = [`default_threads`]). Output order and content are independent
+/// of `threads`.
+pub fn run_sweep(grid: &GridSpec, cal: &Calibration, threads: usize) -> anyhow::Result<SweepRun> {
+    let cells = grid.cells()?;
+    let threads = if threads == 0 {
+        default_threads()
+    } else {
+        threads
+    };
+    // More workers than cells just park on an empty ticket counter.
+    let workers = threads.min(cells.len()).max(1);
+    let t0 = std::time::Instant::now();
+
+    let next = AtomicUsize::new(0);
+    let merged: anyhow::Result<Vec<(usize, CellMetrics)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, CellMetrics)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= cells.len() {
+                            break;
+                        }
+                        local.push((i, run_cell(&cells[i], grid, cal)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        let mut all = Vec::with_capacity(cells.len());
+        for h in handles {
+            match h.join() {
+                Ok(local) => all.extend(local),
+                Err(_) => anyhow::bail!("sweep worker panicked"),
+            }
+        }
+        Ok(all)
+    });
+    let mut merged = merged?;
+    merged.sort_by_key(|&(i, _)| i);
+
+    let outcomes: Vec<CellOutcome> = cells
+        .into_iter()
+        .zip(merged)
+        .map(|(spec, (i, metrics))| {
+            debug_assert_eq!(spec.index, i);
+            CellOutcome { spec, metrics }
+        })
+        .collect();
+    Ok(SweepRun {
+        cells: outcomes,
+        threads: workers,
+        host_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::policy::PolicyKind;
+    use crate::sweep::grid::MixSpec;
+
+    fn tiny_grid() -> GridSpec {
+        GridSpec {
+            policies: vec![PolicyKind::Mps, PolicyKind::MigStatic],
+            mixes: vec![MixSpec::preset("smalls").unwrap()],
+            gpus: vec![1],
+            interarrivals_s: vec![0.5],
+            seeds: vec![11, 12],
+            jobs_per_cell: 20,
+            epochs: Some(1),
+            cap: 7,
+        }
+    }
+
+    #[test]
+    fn run_cell_matches_a_direct_fleet_run() {
+        let grid = tiny_grid();
+        let cal = Calibration::paper();
+        let cell = &grid.cells().unwrap()[0];
+        let trace = poisson_trace(&cell.trace_config(&grid));
+        let direct = FleetSim::new(
+            FleetConfig {
+                a100s: cell.gpus,
+                a30s: 0,
+                seed: cell.seed,
+                ..FleetConfig::default()
+            },
+            cell.policy.build(&cal, grid.cap, None),
+            cal,
+            &trace,
+        )
+        .run();
+        assert_eq!(run_cell(cell, &grid, &cal), CellMetrics::from_fleet(&direct));
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let grid = tiny_grid();
+        let cal = Calibration::paper();
+        let one = run_sweep(&grid, &cal, 1).unwrap();
+        let many = run_sweep(&grid, &cal, 4).unwrap();
+        assert_eq!(one.cells, many.cells);
+        assert_eq!(one.cells.len(), grid.cell_count());
+        // Workers are capped by the cell count.
+        assert!(many.threads <= grid.cell_count());
+    }
+
+    #[test]
+    fn all_cells_execute_exactly_once() {
+        let grid = tiny_grid();
+        let run = run_sweep(&grid, &Calibration::paper(), 3).unwrap();
+        let indices: Vec<usize> = run.cells.iter().map(|c| c.spec.index).collect();
+        assert_eq!(indices, (0..grid.cell_count()).collect::<Vec<_>>());
+        // Every cell accounted for every job of its trace.
+        for c in &run.cells {
+            assert_eq!(
+                c.metrics.finished + c.metrics.rejected + c.metrics.unserved,
+                grid.jobs_per_cell as u64,
+                "{}",
+                c.spec.label()
+            );
+        }
+    }
+}

@@ -1,0 +1,522 @@
+//! Declarative sweep grids: axes × axes × … → a flat list of cells.
+//!
+//! A [`GridSpec`] names five axes — placement policies, workload mixes,
+//! fleet sizes, mean inter-arrival gaps and trace seeds — plus the
+//! per-cell constants (jobs per trace, epoch override, co-runner cap).
+//! [`GridSpec::cells`] validates every axis and expands the cartesian
+//! product in a *fixed nested order* (policy outermost, seed innermost),
+//! so cell indices — and therefore sweep output — are a pure function
+//! of the spec, never of execution order or thread count.
+//!
+//! Seeding: a cell's trace seed is its seed-axis value, untouched. Cells
+//! that differ only in policy or fleet size therefore replay the
+//! *identical* arrival stream — the paper's §3.4 methodology (same
+//! workload, different collocation mode) lifted to fleet scale — and a
+//! re-run of any single cell reproduces it bit-for-bit.
+
+use crate::cluster::policy::PolicyKind;
+use crate::cluster::trace::{parse_mix, TraceConfig};
+use crate::util::json::Json;
+use crate::util::rng::DEFAULT_SEED;
+use crate::workload::spec::WorkloadSize;
+
+/// A named (small, medium, large) arrival-mix weighting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixSpec {
+    pub name: String,
+    pub weights: [f64; 3],
+}
+
+impl MixSpec {
+    pub fn new(name: &str, weights: [f64; 3]) -> MixSpec {
+        MixSpec {
+            name: name.to_string(),
+            weights,
+        }
+    }
+
+    /// Built-in mixes: `smalls` (hyper-parameter-tuning flood), `paper`
+    /// (the §3.4 half-small mix) and `heavy` (large-model heavy).
+    pub fn preset(name: &str) -> Option<MixSpec> {
+        let weights = match name {
+            "smalls" => [1.0, 0.0, 0.0],
+            "paper" => [0.5, 0.3, 0.2],
+            "heavy" => [0.2, 0.3, 0.5],
+            _ => return None,
+        };
+        Some(MixSpec::new(name, weights))
+    }
+
+    /// Parse one mix entry: a preset name (`paper`), a raw mix string
+    /// (`small:0.7,medium:0.3`) or a named one (`lite=small:0.7,medium:0.3`).
+    pub fn parse(entry: &str) -> anyhow::Result<MixSpec> {
+        let entry = entry.trim();
+        if let Some(m) = MixSpec::preset(entry) {
+            return Ok(m);
+        }
+        let (name, spec) = match entry.split_once('=') {
+            Some((n, s)) => (n.trim(), s.trim()),
+            None => (entry, entry),
+        };
+        anyhow::ensure!(
+            spec.contains(':'),
+            "unknown mix '{entry}' (not a preset: smalls | paper | heavy; \
+             not a name:weight list)"
+        );
+        Ok(MixSpec::new(name, parse_mix(spec)?))
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("name", Json::from_str_val(&self.name));
+        for (i, w) in WorkloadSize::ALL.iter().enumerate() {
+            j.set(w.name(), Json::from_f64(self.weights[i]));
+        }
+        j
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<MixSpec> {
+        if let Some(name) = j.as_str() {
+            return MixSpec::parse(name);
+        }
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("mix must be a preset string or an object"))?;
+        let name = obj
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("custom")
+            .to_string();
+        let mut weights = [0.0; 3];
+        for (i, w) in WorkloadSize::ALL.iter().enumerate() {
+            if let Some(v) = obj.get(w.name()).and_then(|v| v.as_f64()) {
+                anyhow::ensure!(
+                    v >= 0.0 && v.is_finite(),
+                    "mix '{name}': weight for {} must be finite and >= 0",
+                    w.name()
+                );
+                weights[i] = v;
+            }
+        }
+        anyhow::ensure!(
+            weights.iter().sum::<f64>() > 0.0,
+            "mix '{name}': weights sum to zero"
+        );
+        Ok(MixSpec { name, weights })
+    }
+}
+
+/// The declarative sweep grid: five axes plus per-cell constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridSpec {
+    pub policies: Vec<PolicyKind>,
+    pub mixes: Vec<MixSpec>,
+    /// A100 counts (one fleet size per entry).
+    pub gpus: Vec<u32>,
+    /// Mean Poisson inter-arrival gaps in seconds.
+    pub interarrivals_s: Vec<f64>,
+    /// Trace seeds (replicates).
+    pub seeds: Vec<u64>,
+    /// Jobs per generated trace.
+    pub jobs_per_cell: u32,
+    /// Epoch override for every job (`None` keeps the paper schedule —
+    /// hours of simulated time per job; sweeps usually want `Some(1)`).
+    pub epochs: Option<u32>,
+    /// Shared-mode co-runner cap (mps / timeslice).
+    pub cap: u32,
+}
+
+impl GridSpec {
+    /// The full default grid: 5 policies × 2 mixes × 2 fleet sizes ×
+    /// 2 arrival rates × 1 seed = 40 cells.
+    pub fn default_grid() -> GridSpec {
+        GridSpec {
+            policies: PolicyKind::ALL.to_vec(),
+            mixes: vec![
+                MixSpec::preset("smalls").expect("built-in"),
+                MixSpec::preset("paper").expect("built-in"),
+            ],
+            gpus: vec![2, 4],
+            interarrivals_s: vec![0.5, 2.0],
+            seeds: vec![DEFAULT_SEED],
+            jobs_per_cell: 200,
+            epochs: Some(1),
+            cap: 7,
+        }
+    }
+
+    /// The CI benchmark grid: 3 policies × 1 mix × 1 fleet × 1 arrival
+    /// rate × 2 seeds = 6 cells, small enough for a per-commit gate.
+    pub fn quick() -> GridSpec {
+        GridSpec {
+            policies: vec![PolicyKind::Mps, PolicyKind::MigStatic, PolicyKind::TimeSlice],
+            mixes: vec![MixSpec::preset("smalls").expect("built-in")],
+            gpus: vec![2],
+            interarrivals_s: vec![0.5],
+            seeds: vec![DEFAULT_SEED, DEFAULT_SEED + 1],
+            jobs_per_cell: 150,
+            epochs: Some(1),
+            cap: 7,
+        }
+    }
+
+    /// Number of cells the grid expands to.
+    pub fn cell_count(&self) -> usize {
+        self.policies.len()
+            * self.mixes.len()
+            * self.gpus.len()
+            * self.interarrivals_s.len()
+            * self.seeds.len()
+    }
+
+    /// Reject empty axes and out-of-domain values with an error naming
+    /// the axis — an empty axis silently expanding to zero cells is the
+    /// classic way a sweep "succeeds" while measuring nothing.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.policies.is_empty(), "grid axis 'policies' is empty");
+        anyhow::ensure!(!self.mixes.is_empty(), "grid axis 'mixes' is empty");
+        anyhow::ensure!(!self.gpus.is_empty(), "grid axis 'gpus' is empty");
+        anyhow::ensure!(
+            !self.interarrivals_s.is_empty(),
+            "grid axis 'interarrivals' is empty"
+        );
+        anyhow::ensure!(!self.seeds.is_empty(), "grid axis 'seeds' is empty");
+        anyhow::ensure!(self.jobs_per_cell >= 1, "jobs_per_cell must be >= 1");
+        anyhow::ensure!(self.cap >= 1, "cap must be >= 1");
+        if let Some(e) = self.epochs {
+            anyhow::ensure!(e >= 1, "epochs override must be >= 1");
+        }
+        for &g in &self.gpus {
+            anyhow::ensure!(g >= 1, "grid axis 'gpus' contains a zero-GPU fleet");
+        }
+        for &ia in &self.interarrivals_s {
+            anyhow::ensure!(
+                ia.is_finite() && ia > 0.0,
+                "grid axis 'interarrivals' contains a non-positive gap ({ia})"
+            );
+        }
+        for &s in &self.seeds {
+            // The summary JSON must replay exactly; JSON numbers are
+            // f64, so bigger seeds would round-trip lossily.
+            anyhow::ensure!(
+                s <= (1u64 << 53),
+                "seed {s} exceeds 2^53 and cannot round-trip through the summary JSON"
+            );
+        }
+        for m in &self.mixes {
+            anyhow::ensure!(
+                m.weights.iter().sum::<f64>() > 0.0,
+                "mix '{}' has zero total weight",
+                m.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Expand to cells in the fixed nested order: policy → mix → gpus →
+    /// interarrival → seed.
+    pub fn cells(&self) -> anyhow::Result<Vec<CellSpec>> {
+        self.validate()?;
+        let mut out = Vec::with_capacity(self.cell_count());
+        for &policy in &self.policies {
+            for mix in &self.mixes {
+                for &gpus in &self.gpus {
+                    for &interarrival in &self.interarrivals_s {
+                        for &seed in &self.seeds {
+                            out.push(CellSpec {
+                                index: out.len(),
+                                policy,
+                                mix: mix.clone(),
+                                gpus,
+                                mean_interarrival_s: interarrival,
+                                seed,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// The grid as JSON — embedded verbatim in the sweep summary so a
+    /// result file is self-describing (and replayable).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "policies",
+            Json::Arr(
+                self.policies
+                    .iter()
+                    .map(|p| Json::from_str_val(p.name()))
+                    .collect(),
+            ),
+        )
+        .set(
+            "mixes",
+            Json::Arr(self.mixes.iter().map(|m| m.to_json()).collect()),
+        )
+        .set(
+            "gpus",
+            Json::Arr(self.gpus.iter().map(|&g| Json::from_u64(g as u64)).collect()),
+        )
+        .set(
+            "interarrivals_s",
+            Json::Arr(
+                self.interarrivals_s
+                    .iter()
+                    .map(|&v| Json::from_f64(v))
+                    .collect(),
+            ),
+        )
+        .set(
+            "seeds",
+            Json::Arr(self.seeds.iter().map(|&s| Json::from_u64(s)).collect()),
+        )
+        .set("jobs_per_cell", Json::from_u64(self.jobs_per_cell as u64))
+        .set(
+            "epochs",
+            match self.epochs {
+                Some(e) => Json::from_u64(e as u64),
+                None => Json::Null,
+            },
+        )
+        .set("cap", Json::from_u64(self.cap as u64));
+        j
+    }
+
+    /// Load a grid from its JSON form. Keys are optional: absent axes
+    /// keep the [`GridSpec::default_grid`] values, so a grid file can
+    /// override just one axis.
+    pub fn from_json(j: &Json) -> anyhow::Result<GridSpec> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("grid spec must be a JSON object"))?;
+        for key in obj.keys() {
+            anyhow::ensure!(
+                [
+                    "policies",
+                    "mixes",
+                    "gpus",
+                    "interarrivals_s",
+                    "seeds",
+                    "jobs_per_cell",
+                    "epochs",
+                    "cap",
+                ]
+                .contains(&key.as_str()),
+                "unknown grid key '{key}'"
+            );
+        }
+        let mut grid = GridSpec::default_grid();
+        if let Some(v) = obj.get("policies") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'policies' must be an array"))?;
+            grid.policies = arr
+                .iter()
+                .map(|p| {
+                    let name = p
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("policy entries must be strings"))?;
+                    PolicyKind::parse(name)
+                        .ok_or_else(|| anyhow::anyhow!("unknown policy '{name}'"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = obj.get("mixes") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'mixes' must be an array"))?;
+            grid.mixes = arr.iter().map(MixSpec::from_json).collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = obj.get("gpus") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'gpus' must be an array"))?;
+            grid.gpus = arr
+                .iter()
+                .map(|g| {
+                    g.as_u32()
+                        .ok_or_else(|| anyhow::anyhow!("gpu counts must be non-negative integers"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = obj.get("interarrivals_s") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'interarrivals_s' must be an array"))?;
+            grid.interarrivals_s = arr
+                .iter()
+                .map(|g| {
+                    g.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("interarrival gaps must be numbers"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = obj.get("seeds") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'seeds' must be an array"))?;
+            grid.seeds = arr
+                .iter()
+                .map(|s| s.as_u64().ok_or_else(|| anyhow::anyhow!("seeds must be u64")))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = obj.get("jobs_per_cell") {
+            grid.jobs_per_cell = v
+                .as_u32()
+                .ok_or_else(|| anyhow::anyhow!("'jobs_per_cell' must be a u32"))?;
+        }
+        if let Some(v) = obj.get("epochs") {
+            grid.epochs = match v {
+                Json::Null => None,
+                _ => Some(
+                    v.as_u32()
+                        .ok_or_else(|| anyhow::anyhow!("'epochs' must be a u32 or null"))?,
+                ),
+            };
+        }
+        if let Some(v) = obj.get("cap") {
+            grid.cap = v.as_u32().ok_or_else(|| anyhow::anyhow!("'cap' must be a u32"))?;
+        }
+        grid.validate()?;
+        Ok(grid)
+    }
+}
+
+/// One point of the expanded grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellSpec {
+    /// Position in the fixed expansion order (stable across runs).
+    pub index: usize,
+    pub policy: PolicyKind,
+    pub mix: MixSpec,
+    pub gpus: u32,
+    pub mean_interarrival_s: f64,
+    pub seed: u64,
+}
+
+impl CellSpec {
+    /// The cell's trace generator configuration. The seed is the
+    /// seed-axis value itself, so sibling cells (same mix / arrival /
+    /// seed, different policy or fleet) replay the identical stream.
+    pub fn trace_config(&self, grid: &GridSpec) -> TraceConfig {
+        TraceConfig {
+            jobs: grid.jobs_per_cell,
+            mean_interarrival_s: self.mean_interarrival_s,
+            mix: self.mix.weights,
+            epochs: grid.epochs,
+            seed: self.seed,
+        }
+    }
+
+    /// Short human-readable label for logs and CSV rows.
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/g{}/ia{}/s{}",
+            self.policy.name(),
+            self.mix.name,
+            self.gpus,
+            self.mean_interarrival_s,
+            self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_expands_to_forty_ordered_cells() {
+        let grid = GridSpec::default_grid();
+        let cells = grid.cells().unwrap();
+        assert_eq!(cells.len(), 40);
+        assert_eq!(cells.len(), grid.cell_count());
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        // Policy is the outermost axis: the first block is all one policy.
+        let per_policy = cells.len() / grid.policies.len();
+        assert!(cells[..per_policy].iter().all(|c| c.policy == grid.policies[0]));
+    }
+
+    #[test]
+    fn empty_axes_are_rejected_by_name() {
+        let mut g = GridSpec::default_grid();
+        g.policies.clear();
+        let err = g.cells().unwrap_err().to_string();
+        assert!(err.contains("policies"), "{err}");
+
+        let mut g = GridSpec::default_grid();
+        g.seeds.clear();
+        let err = g.cells().unwrap_err().to_string();
+        assert!(err.contains("seeds"), "{err}");
+
+        let mut g = GridSpec::default_grid();
+        g.gpus = vec![0];
+        assert!(g.cells().is_err());
+
+        let mut g = GridSpec::default_grid();
+        g.interarrivals_s = vec![-1.0];
+        assert!(g.cells().is_err());
+
+        let mut g = GridSpec::default_grid();
+        g.seeds = vec![u64::MAX];
+        let err = g.cells().unwrap_err().to_string();
+        assert!(err.contains("2^53"), "{err}");
+    }
+
+    #[test]
+    fn sibling_cells_share_the_trace_stream() {
+        let grid = GridSpec::default_grid();
+        let cells = grid.cells().unwrap();
+        let a = cells.iter().find(|c| c.policy == PolicyKind::Mps).unwrap();
+        let b = cells
+            .iter()
+            .find(|c| {
+                c.policy == PolicyKind::TimeSlice
+                    && c.mix == a.mix
+                    && c.gpus == a.gpus
+                    && c.mean_interarrival_s == a.mean_interarrival_s
+                    && c.seed == a.seed
+            })
+            .unwrap();
+        assert_eq!(a.trace_config(&grid), b.trace_config(&grid));
+    }
+
+    #[test]
+    fn mix_parsing_presets_and_custom() {
+        assert_eq!(MixSpec::parse("smalls").unwrap().weights, [1.0, 0.0, 0.0]);
+        let m = MixSpec::parse("lite=small:0.8,medium:0.2").unwrap();
+        assert_eq!(m.name, "lite");
+        assert_eq!(m.weights, [0.8, 0.2, 0.0]);
+        let unnamed = MixSpec::parse("small:1").unwrap();
+        assert_eq!(unnamed.weights, [1.0, 0.0, 0.0]);
+        assert!(MixSpec::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn grid_json_round_trip() {
+        let grid = GridSpec::default_grid();
+        let back = GridSpec::from_json(&grid.to_json()).unwrap();
+        assert_eq!(grid, back);
+        // Partial specs override just the named axes.
+        let partial = Json::parse(r#"{"gpus": [8], "jobs_per_cell": 50}"#).unwrap();
+        let g = GridSpec::from_json(&partial).unwrap();
+        assert_eq!(g.gpus, vec![8]);
+        assert_eq!(g.jobs_per_cell, 50);
+        assert_eq!(g.policies, GridSpec::default_grid().policies);
+        // Unknown keys are typos, not silently-ignored axes.
+        let typo = Json::parse(r#"{"gpu": [8]}"#).unwrap();
+        assert!(GridSpec::from_json(&typo).is_err());
+    }
+
+    #[test]
+    fn quick_grid_is_small_and_valid() {
+        let g = GridSpec::quick();
+        assert!(g.validate().is_ok());
+        assert!(g.cell_count() <= 8, "quick grid must stay CI-cheap");
+    }
+}

@@ -1,0 +1,23 @@
+//! Experiment sweeps: the paper's collocation grid at fleet scale.
+//!
+//! The paper's evaluation is a *grid* — policy × workload × device
+//! layout — and this subsystem makes such grids first-class:
+//!
+//! * [`grid`] — a declarative [`grid::GridSpec`] (policies × mixes ×
+//!   fleet sizes × arrival rates × seeds) expanded into self-contained
+//!   cells in a fixed order, each seeded from its own coordinates so
+//!   results never depend on execution order.
+//! * [`engine`] — a multi-threaded executor: a lock-free ticket counter
+//!   over the shared cell list, per-worker result buffers, and an
+//!   index-ordered merge. A sweep's output is byte-identical at 1, 2 or
+//!   8 threads (`rust/tests/sweep_determinism.rs` proves it).
+//!
+//! Aggregation (summary JSON, per-cell CSV, the policy-ranking table)
+//! lives in [`crate::report::sweep`]; the `migsim sweep` and `migsim
+//! bench` subcommands are the CLI front ends.
+
+pub mod engine;
+pub mod grid;
+
+pub use engine::{default_threads, run_cell, run_sweep, CellMetrics, CellOutcome, SweepRun};
+pub use grid::{CellSpec, GridSpec, MixSpec};

@@ -1,9 +1,35 @@
-//! Minimal benchmarking harness (offline substitute for `criterion`).
+//! Minimal benchmarking harness (offline substitute for `criterion`),
+//! plus the machine-readable `BENCH_<name>.json` trajectory format.
 //!
 //! Each `benches/*.rs` binary uses this to (a) print the regenerated
 //! figure series (the reproduction artifact) and (b) time the code that
 //! produces it with warmup + median-of-N statistics.
+//!
+//! # `BENCH_*.json` (schema version [`BENCH_SCHEMA_VERSION`])
+//!
+//! ```json
+//! {
+//!   "schema_version": 1,
+//!   "name": "baseline",
+//!   "provisional": false,
+//!   "metrics": { "cells_per_s": 120.0, "images_per_s_mps": 5400.0 },
+//!   "info": { "wall_s": 0.05, "threads": 8 }
+//! }
+//! ```
+//!
+//! * `metrics` — **higher-is-better rates** the CI perf gate compares:
+//!   a metric regresses when `current < baseline * (1 - tolerance)`.
+//! * `info` — ungated context (wall times, thread counts, fingerprints).
+//! * `provisional: true` marks a bootstrap baseline with no recorded
+//!   numbers yet: [`compare_reports`] gates nothing against it, so the
+//!   first CI run on a new machine can mint the real one (see
+//!   `.github/workflows/ci.yml`).
+//!
+//! Both `migsim bench` and `benches/fleet_scale.rs` emit this schema,
+//! so every perf source feeds one comparable trajectory.
 
+use crate::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Timing result of one benchmark case.
@@ -75,6 +101,172 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Version of the `BENCH_*.json` layout. Bump on breaking changes.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// One machine-readable benchmark report (see the module docs for the
+/// file layout and gating semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    pub name: String,
+    /// Higher-is-better rates, gated by CI.
+    pub metrics: BTreeMap<String, f64>,
+    /// Ungated context (wall times, thread counts, …).
+    pub info: BTreeMap<String, f64>,
+    /// Bootstrap marker: no recorded numbers to gate against yet.
+    pub provisional: bool,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport {
+            name: name.to_string(),
+            metrics: BTreeMap::new(),
+            info: BTreeMap::new(),
+            provisional: false,
+        }
+    }
+
+    /// Record a gated higher-is-better rate.
+    pub fn metric(&mut self, key: &str, value: f64) -> &mut Self {
+        self.metrics.insert(key.to_string(), value);
+        self
+    }
+
+    /// Record ungated context.
+    pub fn note(&mut self, key: &str, value: f64) -> &mut Self {
+        self.info.insert(key.to_string(), value);
+        self
+    }
+
+    /// Canonical file name: `BENCH_<name>.json`.
+    pub fn file_name(&self) -> String {
+        format!("BENCH_{}.json", self.name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let map_json = |m: &BTreeMap<String, f64>| {
+            let mut o = Json::obj();
+            for (k, v) in m {
+                o.set(k, Json::from_f64(*v));
+            }
+            o
+        };
+        let mut j = Json::obj();
+        j.set("schema_version", Json::from_u64(BENCH_SCHEMA_VERSION))
+            .set("name", Json::from_str_val(&self.name))
+            .set("provisional", Json::Bool(self.provisional))
+            .set("metrics", map_json(&self.metrics))
+            .set("info", map_json(&self.info));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<BenchReport> {
+        let version = j
+            .get("schema_version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("bench report: missing schema_version"))?;
+        anyhow::ensure!(
+            version == BENCH_SCHEMA_VERSION,
+            "bench report schema_version {version} != supported {BENCH_SCHEMA_VERSION}"
+        );
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("bench report: missing name"))?
+            .to_string();
+        let read_map = |key: &str| -> anyhow::Result<BTreeMap<String, f64>> {
+            let mut out = BTreeMap::new();
+            if let Some(obj) = j.get(key).and_then(|v| v.as_obj()) {
+                for (k, v) in obj {
+                    let v = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("bench report: {key}.{k} is not a number"))?;
+                    out.insert(k.clone(), v);
+                }
+            }
+            Ok(out)
+        };
+        Ok(BenchReport {
+            name,
+            metrics: read_map("metrics")?,
+            info: read_map("info")?,
+            provisional: j
+                .get("provisional")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+        })
+    }
+
+    pub fn write(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn read(path: &std::path::Path) -> anyhow::Result<BenchReport> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        BenchReport::from_json(&json)
+    }
+}
+
+/// One gated metric that fell below the tolerated floor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    pub metric: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Fractional loss vs baseline (0.2 = 20 % slower).
+    pub loss_frac: f64,
+}
+
+impl std::fmt::Display for Regression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {:.3} -> {:.3} ({:.1}% below baseline)",
+            self.metric,
+            self.baseline,
+            self.current,
+            self.loss_frac * 100.0
+        )
+    }
+}
+
+/// Gate `current` against `baseline`: every baseline metric must reach
+/// `baseline * (1 - tolerance)` in `current`; a metric missing from
+/// `current` counts as fully regressed. Returns the offending metrics
+/// (empty = pass). A `provisional` baseline gates nothing.
+pub fn compare_reports(
+    baseline: &BenchReport,
+    current: &BenchReport,
+    tolerance: f64,
+) -> Vec<Regression> {
+    if baseline.provisional {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (key, &base) in &baseline.metrics {
+        let cur = current.metrics.get(key).copied().unwrap_or(0.0);
+        if base > 0.0 && cur < base * (1.0 - tolerance) {
+            out.push(Regression {
+                metric: key.clone(),
+                baseline: base,
+                current: cur,
+                loss_frac: (base - cur) / base,
+            });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,5 +289,74 @@ mod tests {
         };
         let s = r.to_string();
         assert!(s.contains("ms") && s.contains("ns") && s.contains("s"));
+    }
+
+    fn report() -> BenchReport {
+        let mut r = BenchReport::new("baseline");
+        r.metric("cells_per_s", 100.0)
+            .metric("images_per_s_mps", 5000.0)
+            .note("wall_s", 0.5);
+        r
+    }
+
+    #[test]
+    fn bench_report_round_trips_through_json() {
+        let r = report();
+        let back = BenchReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        assert_eq!(r.file_name(), "BENCH_baseline.json");
+    }
+
+    #[test]
+    fn bench_report_file_round_trip() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let r = report();
+        let path = dir.path().join(r.file_name());
+        r.write(&path).unwrap();
+        assert_eq!(BenchReport::read(&path).unwrap(), r);
+    }
+
+    #[test]
+    fn bench_report_rejects_wrong_schema_version() {
+        let mut j = report().to_json();
+        j.set("schema_version", Json::from_u64(999));
+        assert!(BenchReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn compare_flags_regressions_beyond_tolerance() {
+        let base = report();
+        let mut cur = report();
+        // 10% down on a 15% gate: fine.
+        cur.metric("cells_per_s", 90.0);
+        assert!(compare_reports(&base, &cur, 0.15).is_empty());
+        // 20% down: flagged.
+        cur.metric("cells_per_s", 80.0);
+        let regs = compare_reports(&base, &cur, 0.15);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "cells_per_s");
+        assert!((regs[0].loss_frac - 0.2).abs() < 1e-9);
+        // Improvements never flag.
+        cur.metric("cells_per_s", 500.0);
+        assert!(compare_reports(&base, &cur, 0.15).is_empty());
+    }
+
+    #[test]
+    fn compare_treats_missing_metric_as_regressed() {
+        let base = report();
+        let mut cur = report();
+        cur.metrics.remove("images_per_s_mps");
+        let regs = compare_reports(&base, &cur, 0.15);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].metric, "images_per_s_mps");
+    }
+
+    #[test]
+    fn provisional_baseline_gates_nothing() {
+        let mut base = report();
+        base.provisional = true;
+        let mut cur = BenchReport::new("current");
+        cur.metric("cells_per_s", 1.0);
+        assert!(compare_reports(&base, &cur, 0.15).is_empty());
     }
 }

@@ -1,0 +1,97 @@
+//! The sweep engine's determinism contract: for a fixed grid spec, the
+//! summary JSON (the artifact CI and plotting scripts consume) must be
+//! **byte-identical** no matter how many worker threads execute the
+//! sweep — 1, 2 or 8. This is what makes `BENCH_*.json` images/s
+//! values gateable and sweep results reviewable in diffs.
+
+use migsim::cluster::policy::PolicyKind;
+use migsim::report::sweep::summary_json_text;
+use migsim::simgpu::calibration::Calibration;
+use migsim::sweep::engine::run_sweep;
+use migsim::sweep::grid::{GridSpec, MixSpec};
+use migsim::util::prop::forall_ok;
+use migsim::util::rng::Rng;
+
+/// Draw a small random grid: 1–3 policies, one preset mix, 1–2 GPUs,
+/// 1–2 seeds, 10–40 jobs per cell. Small enough that the three runs
+/// per case stay fast, varied enough to exercise every policy path.
+fn random_grid(r: &mut Rng) -> GridSpec {
+    let n_policies = 1 + r.below(3) as usize;
+    let policies: Vec<PolicyKind> = (0..n_policies)
+        .map(|_| PolicyKind::ALL[r.below(PolicyKind::ALL.len() as u64) as usize])
+        .collect();
+    let presets = ["smalls", "paper", "heavy"];
+    let mix = MixSpec::preset(presets[r.below(3) as usize]).expect("built-in");
+    let n_seeds = 1 + r.below(2);
+    let seeds: Vec<u64> = (0..n_seeds).map(|i| 1000 + i * 17 + r.below(1000)).collect();
+    GridSpec {
+        policies,
+        mixes: vec![mix],
+        gpus: vec![1 + r.below(2) as u32],
+        interarrivals_s: vec![0.2 + r.next_f64() * 2.0],
+        seeds,
+        jobs_per_cell: 10 + r.below(31) as u32,
+        epochs: Some(1),
+        cap: 7,
+    }
+}
+
+#[test]
+fn summary_json_is_byte_identical_at_1_2_and_8_threads() {
+    let cal = Calibration::paper();
+    forall_ok(
+        0x5EED_CE11,
+        5,
+        random_grid,
+        |grid| -> Result<(), String> {
+            let reference = run_sweep(grid, &cal, 1).map_err(|e| e.to_string())?;
+            let expected = summary_json_text(grid, &reference, &cal);
+            for threads in [2usize, 8] {
+                let run = run_sweep(grid, &cal, threads).map_err(|e| e.to_string())?;
+                let got = summary_json_text(grid, &run, &cal);
+                if got != expected {
+                    return Err(format!(
+                        "summary JSON diverged at {threads} threads \
+                         ({} cells)",
+                        grid.cell_count()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quick_bench_grid_is_thread_count_invariant() {
+    // The exact grid the CI perf gate times: its images/s metrics must
+    // not depend on the runner's core count.
+    let cal = Calibration::paper();
+    let grid = GridSpec::quick();
+    let one = run_sweep(&grid, &cal, 1).unwrap();
+    let eight = run_sweep(&grid, &cal, 8).unwrap();
+    assert_eq!(
+        summary_json_text(&grid, &one, &cal),
+        summary_json_text(&grid, &eight, &cal)
+    );
+}
+
+#[test]
+fn grid_expansion_rejects_empty_axes_with_a_clear_error() {
+    for (axis, mutate) in [
+        ("policies", Box::new(|g: &mut GridSpec| g.policies.clear()) as Box<dyn Fn(&mut GridSpec)>),
+        ("mixes", Box::new(|g: &mut GridSpec| g.mixes.clear())),
+        ("gpus", Box::new(|g: &mut GridSpec| g.gpus.clear())),
+        ("interarrivals", Box::new(|g: &mut GridSpec| g.interarrivals_s.clear())),
+        ("seeds", Box::new(|g: &mut GridSpec| g.seeds.clear())),
+    ] {
+        let mut grid = GridSpec::default_grid();
+        mutate(&mut grid);
+        let err = grid
+            .cells()
+            .err()
+            .unwrap_or_else(|| panic!("empty '{axis}' axis must be rejected"))
+            .to_string();
+        assert!(err.contains(axis), "error for '{axis}' names the axis: {err}");
+    }
+}
