@@ -3,14 +3,19 @@
 //!
 //!     cargo run --release --example sweep_grid
 //!
-//! Expands a 5-policy × 2-mix × 2-load grid (20 cells), runs it across
-//! all available cores, and prints the policy-ranking table — the §5
+//! Expands a 5-policy × 2-mix × 2-load × 2-interference grid (40
+//! cells), runs it across all available cores, and prints the
+//! policy-ranking and interference-sensitivity tables — the §5
 //! ordering `Mps ≥ MigStatic > TimeSlice` over the whole grid rather
-//! than a single trace. Rerunning at any thread count produces the
-//! byte-identical summary (try `--threads 1` via `migsim sweep`).
+//! than a single trace, plus how much contention costs the shared
+//! policies (MIG rows must not move). Rerunning at any thread count
+//! produces the byte-identical summary (try `--threads 1` via
+//! `migsim sweep`).
 
-use migsim::report::sweep::{policy_means, ranking_table};
+use migsim::cluster::policy::AdmissionMode;
+use migsim::report::sweep::{interference_table, policy_means, ranking_table};
 use migsim::simgpu::calibration::Calibration;
+use migsim::simgpu::interference::InterferenceModel;
 use migsim::sweep::engine::run_sweep;
 use migsim::sweep::grid::{GridSpec, MixSpec};
 
@@ -23,14 +28,17 @@ fn main() {
         ],
         gpus: vec![2],
         interarrivals_s: vec![0.5, 4.0],
+        interference: vec![InterferenceModel::Off, InterferenceModel::Roofline],
         seeds: vec![migsim::util::rng::resolve_seed(None)],
         jobs_per_cell: 120,
         epochs: Some(1),
         cap: 7,
+        admission: AdmissionMode::Strict,
     };
     let cal = Calibration::paper();
     let run = run_sweep(&grid, &cal, 0).expect("valid grid");
     print!("{}", ranking_table(&run));
+    print!("{}", interference_table(&run));
     println!(
         "\n{} cells | {} threads | host {:.3} s | {:.1} cells/s",
         run.cells.len(),

@@ -1,9 +1,14 @@
 //! The discrete-event timeline: a binary-heap priority queue of
-//! simulation events ordered by (time, insertion sequence).
+//! simulation events ordered by (time, event kind, insertion sequence).
 //!
-//! The sequence number makes the ordering *total* and deterministic:
-//! two events at the same simulated instant pop in the order they were
-//! pushed, so a fleet run is bit-reproducible for a fixed seed
+//! At equal timestamps, events pop by *kind*: finishes first, then
+//! repartitions, then arrivals. A job finishing at the same instant
+//! another arrives must release its memory (and a reconfigured GPU must
+//! come back) **before** the arrival's admission check runs — under
+//! oversubscribed admission the difference is a job surviving versus
+//! being OOM-killed against memory that was already free. The sequence
+//! number breaks the remaining ties, keeping the ordering *total* and
+//! deterministic: a fleet run is bit-reproducible for a fixed seed
 //! regardless of how many events collide on a timestamp.
 
 use std::cmp::Ordering;
@@ -26,6 +31,19 @@ pub enum EventKind {
     Repartition { gpu: usize },
 }
 
+impl EventKind {
+    /// Tie rank at equal timestamps: resource-releasing events first.
+    /// A finish frees memory/slots and a repartition brings a GPU back
+    /// before any same-instant arrival is admission-checked.
+    fn rank(&self) -> u8 {
+        match self {
+            EventKind::Finish { .. } => 0,
+            EventKind::Repartition { .. } => 1,
+            EventKind::Arrival(_) => 2,
+        }
+    }
+}
+
 /// One scheduled event.
 #[derive(Debug, Clone, Copy)]
 pub struct Event {
@@ -34,12 +52,14 @@ pub struct Event {
     pub kind: EventKind,
 }
 
-// Ordered for a max-heap: "greatest" = earliest time, then lowest seq.
+// Ordered for a max-heap: "greatest" = earliest time, then lowest kind
+// rank (finish < repartition < arrival), then lowest seq.
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
         other
             .time_s
             .total_cmp(&self.time_s)
+            .then_with(|| other.kind.rank().cmp(&self.kind.rank()))
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -129,12 +149,32 @@ mod tests {
         assert_eq!(t.pop().unwrap().time_s, 1.0);
         t.push(4.0, EventKind::Repartition { gpu: 0 });
         t.push(4.0, EventKind::Finish { job: 2, gen: 0 });
-        // Same time: repartition was pushed first, so it pops first.
-        assert!(matches!(t.pop().unwrap().kind, EventKind::Repartition { .. }));
+        // Same time: the finish outranks the earlier-pushed repartition.
         assert!(matches!(t.pop().unwrap().kind, EventKind::Finish { .. }));
+        assert!(matches!(t.pop().unwrap().kind, EventKind::Repartition { .. }));
         assert_eq!(t.pop().unwrap().time_s, 10.0);
         assert!(t.pop().is_none());
         assert!(t.is_empty());
+    }
+
+    #[test]
+    fn equal_time_orders_finish_before_arrival() {
+        // The fleet pushes every arrival up-front (lowest seqs), so
+        // without the kind rank a same-instant finish would lose the
+        // tie and the arrival's admission check would run against
+        // memory that is already free. Kinds must outrank seqs.
+        let mut t = Timeline::new();
+        t.push(5.0, EventKind::Arrival(9));
+        t.push(5.0, EventKind::Repartition { gpu: 1 });
+        t.push(5.0, EventKind::Finish { job: 3, gen: 2 });
+        assert!(matches!(t.pop().unwrap().kind, EventKind::Finish { .. }));
+        assert!(matches!(t.pop().unwrap().kind, EventKind::Repartition { .. }));
+        assert!(matches!(t.pop().unwrap().kind, EventKind::Arrival(9)));
+        // Within one kind, insertion order still breaks the tie.
+        t.push(5.0, EventKind::Finish { job: 1, gen: 0 });
+        t.push(5.0, EventKind::Finish { job: 2, gen: 0 });
+        assert!(matches!(t.pop().unwrap().kind, EventKind::Finish { job: 1, .. }));
+        assert!(matches!(t.pop().unwrap().kind, EventKind::Finish { job: 2, .. }));
     }
 
     #[test]

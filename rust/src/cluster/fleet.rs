@@ -15,9 +15,18 @@
 //!   including the input-pipeline wait. Rates are memoized — a fleet
 //!   run touches only a handful of distinct (workload, resources,
 //!   co-runner) combinations no matter how many jobs flow through.
+//! * **Interference** — under whole-GPU sharing each co-runner's rate
+//!   is stretched by the contention factor the resident mix produces
+//!   ([`crate::simgpu::interference`]), re-evaluated on every residency
+//!   change; MIG slots never consult the model (slice isolation).
+//!   Oversubscribed admission (`FleetConfig::admission`) turns the §4
+//!   memory floors soft: what the policy places beyond them dies at
+//!   placement with a structured `JobOutcome::OomKilled`.
 //! * **Telemetry** — every rate interval accrues the job's per-step
 //!   activity account onto its GPU, so the run ends with per-GPU
-//!   GRACT/SMACT/SMOCC/DRAMA via [`crate::telemetry::dcgm`].
+//!   GRACT/SMACT/SMOCC/DRAMA via [`crate::telemetry::dcgm`] — and the
+//!   contention-stretched busy integrals mean GRACT/SMACT now *reflect*
+//!   contention (high activity, low throughput) instead of ignoring it.
 //!
 //! Determinism: all state lives in `Vec`s/`BTreeMap`s, event ties break
 //! by insertion order, and the only randomness is the seeded arrival
@@ -25,13 +34,18 @@
 
 use super::event::{EventKind, JobId, Timeline};
 use super::metrics::{FleetMetrics, GpuRecord, JobOutcome, JobRecord};
-use super::policy::{Decision, FleetView, GpuView, SchedulingPolicy, ShareModel};
+use super::policy::{
+    usable_bytes, AdmissionMode, Decision, FleetView, GpuView, SchedulingPolicy, ShareModel,
+};
 use super::queue::JobQueue;
 use super::trace::JobSpec;
 use crate::mig::a30::A30Profile;
 use crate::mig::profile::MigProfile;
 use crate::simgpu::calibration::Calibration;
 use crate::simgpu::engine::{InstanceResources, SimEngine, StepStats};
+use crate::simgpu::interference::{
+    apply_slowdown, ContentionModel, DemandProfile, InterferenceModel,
+};
 use crate::simgpu::mps::mps_step;
 use crate::simgpu::spec::{GpuSpec, A100, A30};
 use crate::simgpu::timeslice::timeslice_step;
@@ -113,6 +127,14 @@ pub struct FleetConfig {
     pub repartition_s: f64,
     /// Trace seed, carried into the report for reproducibility.
     pub seed: u64,
+    /// Contention model for whole-GPU sharing (`simgpu::interference`);
+    /// MIG instances are always interference-free. `Off` applies no
+    /// contention at all (every factor is exactly 1.0).
+    pub interference: InterferenceModel,
+    /// Memory-floor semantics: `Strict` waits/rejects at the floors,
+    /// `Oversubscribe` admits beyond them and OOM-kills what does not
+    /// fit (the paper's §4 crash as a structured outcome).
+    pub admission: AdmissionMode,
 }
 
 impl Default for FleetConfig {
@@ -122,6 +144,8 @@ impl Default for FleetConfig {
             a30s: 0,
             repartition_s: 2.0,
             seed: crate::util::rng::DEFAULT_SEED,
+            interference: InterferenceModel::Off,
+            admission: AdmissionMode::Strict,
         }
     }
 }
@@ -177,12 +201,16 @@ struct JobState {
     /// weight its activity carries in the per-GPU telemetry account
     /// (mirrors `dcgm::device_report`'s compute-slice weighting).
     device_frac: f64,
+    /// Worst contention slowdown the job has experienced (1.0 = none).
+    peak_slowdown: f64,
     gpu: Option<usize>,
     slot: Option<usize>,
     gen: u64,
     start_s: Option<f64>,
     finish_s: Option<f64>,
     rejected: Option<String>,
+    /// Oversubscribed placement crashed the process at startup.
+    oomed: Option<String>,
 }
 
 /// The discrete-event fleet simulator.
@@ -191,12 +219,14 @@ pub struct FleetSim {
     cal: Calibration,
     policy: Box<dyn SchedulingPolicy>,
     share_model: Option<ShareModel>,
+    contention: ContentionModel,
     gpus: Vec<GpuState>,
     jobs: Vec<JobState>,
     queue: JobQueue,
     timeline: Timeline,
     now: f64,
     rate_cache: BTreeMap<RateKey, StepStats>,
+    demand_cache: BTreeMap<(GpuKind, WorkloadSize), DemandProfile>,
 }
 
 impl FleetSim {
@@ -270,12 +300,14 @@ impl FleetSim {
                     remaining_steps: (w.steps_per_epoch() * spec.epochs as u64) as f64,
                     per_step: StepStats::default(),
                     device_frac: 0.0,
+                    peak_slowdown: 1.0,
                     gpu: None,
                     slot: None,
                     gen: 0,
                     start_s: None,
                     finish_s: None,
                     rejected: None,
+                    oomed: None,
                 }
             })
             .collect();
@@ -284,12 +316,14 @@ impl FleetSim {
             cal,
             policy,
             share_model,
+            contention: ContentionModel::new(config.interference),
             gpus,
             jobs,
             queue: JobQueue::new(),
             timeline: Timeline::new(),
             now: 0.0,
             rate_cache: BTreeMap::new(),
+            demand_cache: BTreeMap::new(),
         })
     }
 
@@ -375,12 +409,18 @@ impl FleetSim {
                 Decision::Slot { gpu, slot } => {
                     assert!(self.share_model.is_none(), "Slot decision from a shared policy");
                     self.queue.pop();
-                    self.place_slot(head, gpu, slot);
+                    match self.oom_check_slot(head, gpu, slot) {
+                        Some(reason) => self.jobs[head].oomed = Some(reason),
+                        None => self.place_slot(head, gpu, slot),
+                    }
                 }
                 Decision::Share { gpu } => {
                     assert!(self.share_model.is_some(), "Share decision from a MIG policy");
                     self.queue.pop();
-                    self.place_share(head, gpu);
+                    match self.oom_check_share(head, gpu) {
+                        Some(reason) => self.jobs[head].oomed = Some(reason),
+                        None => self.place_share(head, gpu),
+                    }
                 }
                 Decision::Reject(reason) => {
                     self.queue.pop();
@@ -428,6 +468,54 @@ impl FleetSim {
         }
     }
 
+    /// The paper's §4 OOM crash, enforced fleet-side: oversubscribed
+    /// admission lets the policy place a job into an instance its
+    /// memory plan cannot allocate on — the process dies at startup.
+    /// Returns the kill reason, or `None` when the placement fits
+    /// (always, under strict admission: the policy guaranteed it).
+    fn oom_check_slot(&self, id: JobId, gi: usize, si: usize) -> Option<String> {
+        let shape = self.gpus[gi].partition[si].shape;
+        let workload = self.jobs[id].spec.workload;
+        if GpuMemoryPlan::paper(workload).allocate(shape.memory_bytes).is_some() {
+            return None;
+        }
+        debug_assert!(
+            self.config.admission == AdmissionMode::Oversubscribe,
+            "strict slot placement must fit the memory plan"
+        );
+        Some(format!(
+            "memory floor {} exceeds instance {} ({}) on GPU {gi}",
+            crate::util::fmt_bytes(self.jobs[id].floor_bytes),
+            shape.name,
+            crate::util::fmt_bytes(shape.memory_bytes),
+        ))
+    }
+
+    /// Shared-mode twin of `oom_check_slot`: the arriving
+    /// process OOMs when the aggregate resident memory floors exceed
+    /// the device's usable framebuffer.
+    fn oom_check_share(&self, id: JobId, gi: usize) -> Option<String> {
+        let need = self.jobs[id].floor_bytes;
+        let resident: u64 = self.gpus[gi]
+            .residents
+            .iter()
+            .map(|&r| self.jobs[r].floor_bytes)
+            .sum();
+        let usable = usable_bytes(self.gpus[gi].kind.spec().dram_capacity);
+        if resident + need <= usable {
+            return None;
+        }
+        debug_assert!(
+            self.config.admission == AdmissionMode::Oversubscribe,
+            "strict shared placement must fit the aggregate floors"
+        );
+        Some(format!(
+            "aggregate memory floors {} exceed usable {} on GPU {gi}",
+            crate::util::fmt_bytes(resident + need),
+            crate::util::fmt_bytes(usable),
+        ))
+    }
+
     fn place_slot(&mut self, id: JobId, gi: usize, si: usize) {
         self.update_gpu(gi);
         let kind = self.gpus[gi].kind;
@@ -460,6 +548,13 @@ impl FleetSim {
 
     /// Recompute rates and finish events for all co-runners of `gi`.
     /// Assumes `update_gpu(gi)` already ran at `self.now`.
+    ///
+    /// This is where interference lands: each co-runner's base n-way
+    /// rate (memoized, homogeneous) is stretched by the contention
+    /// factor the *actual* resident mix produces — aggregate
+    /// memory-bandwidth demand and SM occupancy pressure from the
+    /// roofline-derived [`DemandProfile`]s. MIG placements never pass
+    /// through here, so slots stay interference-free by construction.
     fn reschedule_residents(&mut self, gi: usize) {
         let kind = self.gpus[gi].kind;
         let n = self.gpus[gi].residents.len() as u32;
@@ -475,16 +570,39 @@ impl FleetSim {
             }
             ShareModel::TimeSlice => 1.0,
         };
-        for id in ids {
-            let workload = self.jobs[id].spec.workload;
+        let workloads: Vec<WorkloadSize> =
+            ids.iter().map(|&id| self.jobs[id].spec.workload).collect();
+        let profiles: Vec<DemandProfile> = workloads
+            .iter()
+            .map(|&w| self.demand_profile(kind, w))
+            .collect();
+        let spec = kind.spec();
+        for (i, &id) in ids.iter().enumerate() {
+            let workload = workloads[i];
             let mode = match model {
                 ShareModel::Mps => RateMode::Mps { n },
                 ShareModel::TimeSlice => RateMode::TimeSlice { n },
             };
-            let stats = self.per_step(kind, workload, mode);
+            let base = self.per_step(kind, workload, mode);
+            let factor = self.contention.slowdown(&spec, &self.cal, &profiles, i);
+            let stats = apply_slowdown(base, factor);
+            self.jobs[id].peak_slowdown = self.jobs[id].peak_slowdown.max(factor);
             self.jobs[id].device_frac = frac;
             self.start_job(id, gi, None, stats);
         }
+    }
+
+    /// Roofline-derived demand profile of `workload` on a whole `kind`
+    /// device, memoized like the rate cache.
+    fn demand_profile(&mut self, kind: GpuKind, workload: WorkloadSize) -> DemandProfile {
+        let key = (kind, workload);
+        if let Some(p) = self.demand_cache.get(&key) {
+            return *p;
+        }
+        let profile =
+            DemandProfile::from_trace(resnet::step_trace_cached(workload), &kind.spec(), &self.cal);
+        self.demand_cache.insert(key, profile);
+        profile
     }
 
     /// Commit a (re)placement: record start, apply the new rate, bump
@@ -572,6 +690,7 @@ impl FleetSim {
                         .sum(),
                 })
                 .collect(),
+            admission: self.config.admission,
         }
     }
 
@@ -617,6 +736,8 @@ impl FleetSim {
             .map(|j| {
                 let outcome = if j.finish_s.is_some() {
                     JobOutcome::Finished
+                } else if let Some(reason) = &j.oomed {
+                    JobOutcome::OomKilled(reason.clone())
                 } else if let Some(reason) = &j.rejected {
                     JobOutcome::Rejected(reason.clone())
                 } else {
@@ -631,6 +752,19 @@ impl FleetSim {
                 }
             })
             .collect();
+        let slowdowns: Vec<f64> = self
+            .jobs
+            .iter()
+            .filter(|j| j.start_s.is_some())
+            .map(|j| j.peak_slowdown)
+            .collect();
+        // "1.0 = no interference" also covers the degenerate run where
+        // nothing was ever placed — 0.0 would read as a speedup.
+        let mean_slowdown = if slowdowns.is_empty() {
+            1.0
+        } else {
+            slowdowns.iter().sum::<f64>() / slowdowns.len() as f64
+        };
         let gpus: Vec<GpuRecord> = self
             .gpus
             .iter()
@@ -640,15 +774,10 @@ impl FleetSim {
                 let engine = SimEngine::new(spec, self.cal);
                 let mut account = g.accum;
                 account.wall_s = elapsed;
-                let f = dcgm::instance_fields(&engine, &account, spec.memory_slices);
-                // Whole-GPU sharing sums co-runner busy integrals, so
-                // cap at the physical 1.0 (concurrent engines).
-                let fields = dcgm::DcgmFields {
-                    gract: f.gract.min(1.0),
-                    smact: f.smact.min(1.0),
-                    smocc: f.smocc.min(1.0),
-                    drama: f.drama.min(1.0),
-                };
+                // Whole-GPU sharing sums co-runner busy integrals (and
+                // contention stretches them), so cap at the physical 1.0.
+                let fields =
+                    dcgm::instance_fields(&engine, &account, spec.memory_slices).clamp_unit();
                 GpuRecord {
                     gpu: gi,
                     kind: g.kind.name(),
@@ -660,8 +789,11 @@ impl FleetSim {
         FleetMetrics {
             policy: self.policy.name().to_string(),
             seed: self.config.seed,
+            interference: self.config.interference.name().to_string(),
+            admission: self.config.admission.name().to_string(),
             makespan_s: elapsed,
             peak_queue: self.queue.peak_len(),
+            mean_slowdown,
             jobs,
             gpus,
         }
@@ -885,6 +1017,197 @@ mod tests {
         let m = run(PolicyKind::MigDynamic.build(&cal(), 7, None), &trace, 1);
         assert_eq!(m.unserved(), 0, "{}", m.summary());
         assert_eq!(m.finished(), 8);
+    }
+
+    fn manual_trace(n: usize, workload: WorkloadSize, gap_s: f64) -> Vec<JobSpec> {
+        (0..n)
+            .map(|id| JobSpec {
+                id,
+                arrival_s: id as f64 * gap_s,
+                workload,
+                epochs: 1,
+            })
+            .collect()
+    }
+
+    fn run_with(
+        policy: Box<dyn SchedulingPolicy>,
+        trace: &[JobSpec],
+        gpus: u32,
+        interference: InterferenceModel,
+        admission: AdmissionMode,
+    ) -> FleetMetrics {
+        let config = FleetConfig {
+            a100s: gpus,
+            a30s: 0,
+            interference,
+            admission,
+            ..FleetConfig::default()
+        };
+        FleetSim::new(config, policy, cal(), trace).run()
+    }
+
+    #[test]
+    fn oversubscribed_share_oom_kills_instead_of_waiting() {
+        // 6 large jobs (floor 9.4 GB) on one A100 under MPS cap 7: the
+        // 38 GB usable admits four; strict admission queues the rest,
+        // oversubscribed admission places them anyway and they die with
+        // a structured OomKilled — never a panic, never silence.
+        let trace = manual_trace(6, WorkloadSize::Large, 0.001);
+        let strict = run_with(
+            Box::new(Mps { cap: 7 }),
+            &trace,
+            1,
+            InterferenceModel::Off,
+            AdmissionMode::Strict,
+        );
+        assert_eq!(strict.finished(), 6);
+        assert_eq!(strict.oom_killed(), 0);
+
+        let over = run_with(
+            Box::new(Mps { cap: 7 }),
+            &trace,
+            1,
+            InterferenceModel::Off,
+            AdmissionMode::Oversubscribe,
+        );
+        assert_eq!(over.finished(), 4, "{}", over.summary());
+        assert_eq!(over.oom_killed(), 2, "{}", over.summary());
+        assert_eq!(over.rejected(), 0);
+        assert_eq!(over.unserved(), 0);
+        let killed = over
+            .jobs
+            .iter()
+            .find(|j| matches!(j.outcome, JobOutcome::OomKilled(_)))
+            .unwrap();
+        assert!(killed.start_s.is_none(), "an OOM-killed job never ran");
+        if let JobOutcome::OomKilled(reason) = &killed.outcome {
+            assert!(reason.contains("memory floors"), "{reason}");
+        }
+    }
+
+    #[test]
+    fn oversubscribed_slot_oom_kills_where_strict_rejects() {
+        // Large (floor 9.4 GB) on an all-1g.5gb partition: strict
+        // admission rejects it outright, oversubscribed admission
+        // launches it into a 1g.5gb instance where it promptly OOMs.
+        let trace = manual_trace(1, WorkloadSize::Large, 1.0);
+        let partition = Some(vec![MigProfile::P1g5gb; 7]);
+        let strict = run_with(
+            Box::new(MigStatic::new(partition.clone(), None)),
+            &trace,
+            1,
+            InterferenceModel::Off,
+            AdmissionMode::Strict,
+        );
+        assert_eq!(strict.rejected(), 1);
+        let over = run_with(
+            Box::new(MigStatic::new(partition, None)),
+            &trace,
+            1,
+            InterferenceModel::Off,
+            AdmissionMode::Oversubscribe,
+        );
+        assert_eq!(over.oom_killed(), 1, "{}", over.summary());
+        assert_eq!(over.rejected(), 0);
+    }
+
+    #[test]
+    fn finish_releases_memory_before_an_equal_time_arrival() {
+        // Regression for the event-order bug: all arrivals are pushed
+        // up-front (lowest heap seqs), so without kind-ranked ties a
+        // job arriving at exactly another's finish timestamp was
+        // admission-checked *before* the finish released its memory —
+        // and OOM-killed under oversubscription against memory that
+        // was already free. Phase 1 learns the first finish time;
+        // phase 2 replays with a fifth large job arriving exactly then.
+        let base = manual_trace(4, WorkloadSize::Large, 0.0);
+        let probe = run_with(
+            Box::new(Mps { cap: 7 }),
+            &base,
+            1,
+            InterferenceModel::Off,
+            AdmissionMode::Oversubscribe,
+        );
+        assert_eq!(probe.finished(), 4);
+        let first_finish = probe
+            .jobs
+            .iter()
+            .filter_map(|j| j.finish_s)
+            .fold(f64::INFINITY, f64::min);
+        assert!(first_finish.is_finite());
+
+        let mut trace = base;
+        trace.push(JobSpec {
+            id: 4,
+            arrival_s: first_finish,
+            workload: WorkloadSize::Large,
+            epochs: 1,
+        });
+        let m = run_with(
+            Box::new(Mps { cap: 7 }),
+            &trace,
+            1,
+            InterferenceModel::Off,
+            AdmissionMode::Oversubscribe,
+        );
+        assert_eq!(
+            m.oom_killed(),
+            0,
+            "the same-instant finish must free its floor first: {}",
+            m.summary()
+        );
+        assert_eq!(m.finished(), 5);
+    }
+
+    #[test]
+    fn interference_stretches_shared_rates_but_not_mig() {
+        let trace = manual_trace(8, WorkloadSize::Medium, 0.001);
+        let off = run_with(
+            Box::new(Mps { cap: 7 }),
+            &trace,
+            1,
+            InterferenceModel::Off,
+            AdmissionMode::Strict,
+        );
+        let roofline = run_with(
+            Box::new(Mps { cap: 7 }),
+            &trace,
+            1,
+            InterferenceModel::Roofline,
+            AdmissionMode::Strict,
+        );
+        assert!(off.mean_slowdown == 1.0, "off must not slow: {}", off.mean_slowdown);
+        assert!(
+            roofline.mean_slowdown > 1.0,
+            "contended mediums must slow: {}",
+            roofline.mean_slowdown
+        );
+        assert!(
+            roofline.mean_service_s() > off.mean_service_s(),
+            "roofline {} !> off {}",
+            roofline.mean_service_s(),
+            off.mean_service_s()
+        );
+        // MIG instances are interference-free: the whole run is
+        // bit-identical whatever the model says.
+        let mig_off = run_with(
+            Box::new(MigStatic::new(None, None)),
+            &trace,
+            1,
+            InterferenceModel::Off,
+            AdmissionMode::Strict,
+        );
+        let mig_roofline = run_with(
+            Box::new(MigStatic::new(None, None)),
+            &trace,
+            1,
+            InterferenceModel::Roofline,
+            AdmissionMode::Strict,
+        );
+        assert_eq!(mig_off.makespan_s, mig_roofline.makespan_s);
+        assert_eq!(mig_off.mean_service_s(), mig_roofline.mean_service_s());
+        assert_eq!(mig_roofline.mean_slowdown, 1.0);
     }
 
     #[test]

@@ -13,6 +13,11 @@ pub enum JobOutcome {
     Finished,
     /// Admission control refused it (memory floor can never fit).
     Rejected(String),
+    /// Placed under oversubscribed admission where its memory floor did
+    /// not fit: the process crashed at startup — the paper's §4 OOM
+    /// boundary as a structured outcome instead of a silent
+    /// impossibility.
+    OomKilled(String),
     /// Still queued when the event stream drained (trace ended while
     /// the job waited — only possible for never-placeable backlogs).
     Unserved,
@@ -23,6 +28,7 @@ impl JobOutcome {
         match self {
             JobOutcome::Finished => "finished",
             JobOutcome::Rejected(_) => "rejected",
+            JobOutcome::OomKilled(_) => "oom-killed",
             JobOutcome::Unserved => "unserved",
         }
     }
@@ -65,10 +71,17 @@ pub struct GpuRecord {
 pub struct FleetMetrics {
     pub policy: String,
     pub seed: u64,
+    /// Contention model active for the run (`simgpu::interference`).
+    pub interference: String,
+    /// Admission semantics active for the run (strict | oversubscribe).
+    pub admission: String,
     /// Last event time: the whole stream is served by here.
     pub makespan_s: f64,
     /// Admission-queue high-water mark.
     pub peak_queue: usize,
+    /// Mean peak contention slowdown over jobs that ran (1.0 = no
+    /// interference; MIG policies always report 1.0).
+    pub mean_slowdown: f64,
     pub jobs: Vec<JobRecord>,
     pub gpus: Vec<GpuRecord>,
 }
@@ -99,6 +112,29 @@ impl FleetMetrics {
 
     pub fn unserved(&self) -> usize {
         self.jobs.iter().filter(|j| j.outcome == JobOutcome::Unserved).count()
+    }
+
+    pub fn oom_killed(&self) -> usize {
+        self.jobs
+            .iter()
+            .filter(|j| matches!(j.outcome, JobOutcome::OomKilled(_)))
+            .count()
+    }
+
+    /// Mean in-service time (finish − start) of finished jobs — the
+    /// per-job epoch-time figure that contention stretches (queue wait
+    /// excluded on purpose, unlike JCT).
+    pub fn mean_service_s(&self) -> f64 {
+        let services: Vec<f64> = self
+            .jobs
+            .iter()
+            .filter(|j| j.outcome == JobOutcome::Finished)
+            .filter_map(|j| match (j.start_s, j.finish_s) {
+                (Some(start), Some(finish)) => Some(finish - start),
+                _ => None,
+            })
+            .collect();
+        safe_div(services.iter().sum(), services.len() as f64)
     }
 
     /// Images trained by finished jobs.
@@ -150,13 +186,17 @@ impl FleetMetrics {
         let mut j = Json::obj();
         j.set("policy", Json::from_str_val(&self.policy))
             .set("seed", Json::from_u64(self.seed))
+            .set("interference", Json::from_str_val(&self.interference))
+            .set("admission", Json::from_str_val(&self.admission))
             .set("gpus", Json::from_u64(self.gpus.len() as u64))
             .set("jobs", Json::from_u64(self.jobs.len() as u64))
             .set("finished", Json::from_u64(self.finished() as u64))
             .set("rejected", Json::from_u64(self.rejected() as u64))
+            .set("oom_killed", Json::from_u64(self.oom_killed() as u64))
             .set("unserved", Json::from_u64(self.unserved() as u64))
             .set("makespan_s", Json::from_f64(self.makespan_s))
             .set("peak_queue", Json::from_u64(self.peak_queue as u64))
+            .set("mean_slowdown", Json::from_f64(self.mean_slowdown))
             .set("mean_wait_s", Json::from_f64(self.mean_wait_s()))
             .set("p50_jct_s", Json::from_f64(self.p50_jct_s()))
             .set("p95_jct_s", Json::from_f64(self.p95_jct_s()))
@@ -190,11 +230,12 @@ impl FleetMetrics {
     /// One human-readable line for the CLI.
     pub fn summary(&self) -> String {
         format!(
-            "{:<12} {} jobs: {} finished, {} rejected, {} unserved | makespan {} | wait μ {} | JCT p50 {} p95 {} | {:.1} img/s | GRACT μ {:.2}",
+            "{:<12} {} jobs: {} finished, {} rejected, {} oom, {} unserved | makespan {} | wait μ {} | JCT p50 {} p95 {} | {:.1} img/s | GRACT μ {:.2} | slowdown μ {:.2}",
             self.policy,
             self.jobs.len(),
             self.finished(),
             self.rejected(),
+            self.oom_killed(),
             self.unserved(),
             crate::util::fmt_duration(self.makespan_s),
             crate::util::fmt_duration(self.mean_wait_s()),
@@ -202,6 +243,7 @@ impl FleetMetrics {
             crate::util::fmt_duration(self.p95_jct_s()),
             self.aggregate_images_per_second(),
             self.mean_gract(),
+            self.mean_slowdown,
         )
     }
 }
@@ -230,8 +272,11 @@ mod tests {
         FleetMetrics {
             policy: "test".into(),
             seed: 1,
+            interference: "off".into(),
+            admission: "strict".into(),
             makespan_s: 100.0,
             peak_queue: 2,
+            mean_slowdown: 1.0,
             jobs,
             gpus: Vec::new(),
         }
@@ -262,14 +307,23 @@ mod tests {
             finish_s: None,
             ..record(2, 0.0, 0.0, 0.0)
         });
+        jobs.push(JobRecord {
+            outcome: JobOutcome::OomKilled("floor exceeds free memory".into()),
+            start_s: None,
+            finish_s: None,
+            ..record(3, 0.0, 0.0, 0.0)
+        });
         let m = metrics(jobs);
         assert_eq!(m.finished(), 2);
         assert_eq!(m.rejected(), 1);
+        assert_eq!(m.oom_killed(), 1);
         assert_eq!(m.unserved(), 0);
         // 2 finished small 1-epoch jobs: 2 x 1406 x 32 images / 100 s.
         let expect = 2.0 * (1406 * 32) as f64 / 100.0;
         assert!((m.aggregate_images_per_second() - expect).abs() < 1e-9);
         assert_eq!(m.mean_wait_s(), 5.0);
+        // Service time averages finish - start over the finished jobs.
+        assert_eq!(m.mean_service_s(), 50.0);
     }
 
     #[test]

@@ -20,9 +20,22 @@
 //! a run is bit-reproducible for a fixed `--seed`.
 //!
 //! Jobs wait in a strict-FIFO admission queue ([`queue`]); placement is
-//! guarded by the paper's §4 memory model — a job is never placed where
-//! its TensorFlow memory floor does not fit (it queues instead), and a
-//! job that can *never* fit under the active policy is rejected.
+//! guarded by the paper's §4 memory model — under strict admission a
+//! job is never placed where its TensorFlow memory floor does not fit
+//! (it queues instead), and a job that can *never* fit under the
+//! active policy is rejected. Under `--admission oversubscribe`
+//! ([`policy::AdmissionMode`]) the floors turn soft: the job is placed
+//! anyway and dies at placement with a structured
+//! [`metrics::JobOutcome::OomKilled`]. At equal timestamps finish
+//! events outrank arrivals, so a same-instant finish releases its
+//! memory before the arrival's admission check runs.
+//!
+//! Whole-GPU sharing additionally applies the
+//! [`crate::simgpu::interference`] contention model: each co-runner's
+//! rate is stretched by a slowdown factor derived from the resident
+//! mix's aggregate bandwidth demand and SM occupancy pressure,
+//! re-evaluated on every residency change — MIG instances stay
+//! interference-free by construction.
 //!
 //! # Policies ([`policy::SchedulingPolicy`])
 //!

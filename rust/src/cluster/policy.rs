@@ -18,9 +18,13 @@
 //!   re-partitioned for the waiting mix via `coordinator::planner`.
 //!
 //! Admission control (the paper's §4 OOM boundary) is part of every
-//! decision: a job is never placed where its TensorFlow memory floor
-//! does not fit — it *waits* instead; a job whose floor can never fit
-//! under the active policy is rejected outright.
+//! decision. Under [`AdmissionMode::Strict`] (the default) a job is
+//! never placed where its TensorFlow memory floor does not fit — it
+//! *waits* instead; a job whose floor can never fit under the active
+//! policy is rejected outright. Under [`AdmissionMode::Oversubscribe`]
+//! the floors become soft: placement ignores them and the fleet
+//! OOM-kills the overcommitted job — the paper's crash, reported as a
+//! structured outcome.
 
 use super::fleet::{GpuKind, InstanceShape};
 use crate::coordinator::planner;
@@ -52,6 +56,43 @@ pub enum ShareModel {
     TimeSlice,
 }
 
+/// How the paper's §4 memory floors gate placement.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Never place a job where its memory floor does not fit: it waits
+    /// for room, or is rejected when no feasible placement can ever
+    /// exist under the policy.
+    #[default]
+    Strict,
+    /// Admit beyond the floors — the paper's raw collocation runs,
+    /// where launching one training process too many *crashes* it. The
+    /// fleet turns that crash into a structured
+    /// [`crate::cluster::metrics::JobOutcome::OomKilled`] at placement
+    /// time instead of leaving the scenario silently impossible.
+    Oversubscribe,
+}
+
+impl AdmissionMode {
+    pub const ALL: [AdmissionMode; 2] = [AdmissionMode::Strict, AdmissionMode::Oversubscribe];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionMode::Strict => "strict",
+            AdmissionMode::Oversubscribe => "oversubscribe",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AdmissionMode> {
+        Self::ALL.iter().copied().find(|m| m.name() == s)
+    }
+}
+
+impl std::fmt::Display for AdmissionMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Read-only per-GPU state a policy decides over.
 #[derive(Debug, Clone)]
 pub struct GpuView {
@@ -70,6 +111,10 @@ pub struct GpuView {
 #[derive(Debug, Clone, Default)]
 pub struct FleetView {
     pub gpus: Vec<GpuView>,
+    /// Active admission semantics: under [`AdmissionMode::Oversubscribe`]
+    /// the memory-floor checks below are skipped — the fleet OOM-kills
+    /// whatever does not fit at placement time.
+    pub admission: AdmissionMode,
 }
 
 /// The TF memory floor of a workload (below it the process OOMs).
@@ -115,21 +160,26 @@ pub trait SchedulingPolicy {
 
 /// Shared-mode placement: least-loaded GPU with room under `cap`
 /// co-runners whose aggregate memory floors still fit. Deterministic
-/// tie-break on the lowest GPU index.
+/// tie-break on the lowest GPU index. Oversubscribed admission skips
+/// both memory checks — every GPU under the cap is eligible, and the
+/// fleet OOM-kills what turns out not to fit.
 fn shared_place(cap: u32, workload: WorkloadSize, view: &FleetView) -> Decision {
     let need = floor_bytes(workload);
+    let oversubscribe = view.admission == AdmissionMode::Oversubscribe;
     let mut best: Option<(usize, usize)> = None; // (residents, gpu)
-    let mut ever_fits = false;
+    let mut ever_fits = oversubscribe;
     for (gi, g) in view.gpus.iter().enumerate() {
         if need <= usable_bytes(g.kind.spec().dram_capacity) {
             ever_fits = true;
-        } else {
+        } else if !oversubscribe {
             continue;
         }
         if g.repartitioning || g.residents >= cap as usize {
             continue;
         }
-        if g.resident_floor_bytes + need > usable_bytes(g.kind.spec().dram_capacity) {
+        if !oversubscribe
+            && g.resident_floor_bytes + need > usable_bytes(g.kind.spec().dram_capacity)
+        {
             continue;
         }
         if best.map(|(r, _)| g.residents < r).unwrap_or(true) {
@@ -221,23 +271,51 @@ impl SchedulingPolicy for TimeSlice {
 
 /// Best-fit over free MIG slots: the smallest free instance whose
 /// memory fits, tie-broken on (gpu, slot) index for determinism.
-fn slot_place(workload: WorkloadSize, view: &FleetView) -> Option<Decision> {
+///
+/// With `oversubscribe_fallback` a job with no fitting free instance
+/// falls back to the *largest* free instance anywhere — the fleet then
+/// OOM-kills it at placement, reproducing the paper's §4 crash for
+/// medium/large on `1g.5gb` as a structured outcome. MigStatic enables
+/// the fallback whenever admission is oversubscribed; MigDynamic only
+/// for jobs no repartition could ever serve (a drain can mint a
+/// fitting instance, so killing a servable job would be an artifact of
+/// placement order, not the paper's crash).
+fn slot_place(
+    workload: WorkloadSize,
+    view: &FleetView,
+    oversubscribe_fallback: bool,
+) -> Option<Decision> {
     let mut best: Option<(u64, usize, usize)> = None;
+    // (memory, gpu, slot) of the largest free non-fitting instance;
+    // first-seen wins ties ((gpu, slot) ascending iteration order).
+    let mut largest: Option<(u64, usize, usize)> = None;
     for (gi, g) in view.gpus.iter().enumerate() {
         if g.repartitioning {
             continue;
         }
         for (si, (shape, occupied)) in g.slots.iter().enumerate() {
-            if *occupied || !fits_instance(workload, shape.memory_bytes) {
+            if *occupied {
                 continue;
             }
             let key = (shape.memory_bytes, gi, si);
-            if best.map(|b| key < b).unwrap_or(true) {
-                best = Some(key);
+            if fits_instance(workload, shape.memory_bytes) {
+                if best.map(|b| key < b).unwrap_or(true) {
+                    best = Some(key);
+                }
+            } else if largest.map(|(m, _, _)| shape.memory_bytes > m).unwrap_or(true) {
+                largest = Some(key);
             }
         }
     }
-    best.map(|(_, gpu, slot)| Decision::Slot { gpu, slot })
+    if let Some((_, gpu, slot)) = best {
+        return Some(Decision::Slot { gpu, slot });
+    }
+    if oversubscribe_fallback {
+        if let Some((_, gpu, slot)) = largest {
+            return Some(Decision::Slot { gpu, slot });
+        }
+    }
+    None
 }
 
 /// Fixed MIG partitions: each A100 carries `a100`, each A30 `a30`.
@@ -283,8 +361,14 @@ impl SchedulingPolicy for MigStatic {
     }
 
     fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision {
-        if let Some(d) = slot_place(workload, view) {
+        let oversubscribe = view.admission == AdmissionMode::Oversubscribe;
+        if let Some(d) = slot_place(workload, view, oversubscribe) {
             return d;
+        }
+        // Oversubscribed admission places into *any* free instance (and
+        // OOM-kills), so reaching here means every slot is busy: wait.
+        if oversubscribe {
+            return Decision::Wait;
         }
         // The partition never changes: if no shape anywhere could hold
         // the job, waiting is futile — reject (admission control).
@@ -340,15 +424,22 @@ impl SchedulingPolicy for MigDynamic {
     }
 
     fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision {
-        if let Some(d) = slot_place(workload, view) {
-            return d;
-        }
-        // Unlike the static policy, a repartition can always create the
-        // device's biggest instance — only jobs too big even for that
-        // are rejected.
+        // A repartition can always create the device's biggest
+        // instance — only jobs too big even for that can never run.
         let ever_fits = view.gpus.iter().any(|g| {
             fits_instance(workload, g.kind.largest_instance_bytes())
         });
+        // Oversubscribed fallback only for never-servable jobs: a
+        // drain-and-repartition can mint a fitting instance for
+        // everything else, so those wait instead of being OOM-killed
+        // by an accident of the current layout.
+        let oversubscribe = view.admission == AdmissionMode::Oversubscribe;
+        if let Some(d) = slot_place(workload, view, oversubscribe && !ever_fits) {
+            return d;
+        }
+        if oversubscribe {
+            return Decision::Wait;
+        }
         if ever_fits {
             Decision::Wait
         } else {
@@ -473,6 +564,7 @@ mod tests {
                     resident_floor_bytes: r as u64 * floor_bytes(WorkloadSize::Small),
                 })
                 .collect(),
+            admission: AdmissionMode::Strict,
         }
     }
 
@@ -485,6 +577,7 @@ mod tests {
                 residents: 0,
                 resident_floor_bytes: 0,
             }],
+            admission: AdmissionMode::Strict,
         }
     }
 
@@ -515,6 +608,7 @@ mod tests {
                 residents: 4,
                 resident_floor_bytes: 4 * floor_bytes(WorkloadSize::Large),
             }],
+            admission: AdmissionMode::Strict,
         };
         assert_eq!(p.place(WorkloadSize::Large, &four_large), Decision::Wait);
         // But a small job (4.4 GB floor) would not fit either: 37.6+4.4 > 38.
@@ -618,6 +712,77 @@ mod tests {
             assert_eq!(PolicyKind::parse(k.name()), Some(k));
         }
         assert_eq!(PolicyKind::parse("fifo"), None);
+    }
+
+    #[test]
+    fn admission_mode_round_trip() {
+        for m in AdmissionMode::ALL {
+            assert_eq!(AdmissionMode::parse(m.name()), Some(m));
+            assert_eq!(format!("{m}"), m.name());
+        }
+        assert_eq!(AdmissionMode::parse("lenient"), None);
+        assert_eq!(AdmissionMode::default(), AdmissionMode::Strict);
+    }
+
+    #[test]
+    fn oversubscribe_admits_beyond_the_memory_floors() {
+        // Same four-large-residents view that makes strict admission
+        // wait: oversubscribed admission shares anyway (the fleet then
+        // OOM-kills the fifth at placement).
+        let p = Mps { cap: 7 };
+        let mut v = FleetView {
+            gpus: vec![GpuView {
+                kind: GpuKind::A100,
+                repartitioning: false,
+                slots: Vec::new(),
+                residents: 4,
+                resident_floor_bytes: 4 * floor_bytes(WorkloadSize::Large),
+            }],
+            admission: AdmissionMode::Oversubscribe,
+        };
+        assert_eq!(p.place(WorkloadSize::Large, &v), Decision::Share { gpu: 0 });
+        // The co-runner cap is a concurrency limit, not a memory floor:
+        // it still applies.
+        v.gpus[0].residents = 7;
+        assert_eq!(p.place(WorkloadSize::Large, &v), Decision::Wait);
+    }
+
+    #[test]
+    fn oversubscribe_slot_falls_back_to_largest_free_instance() {
+        use MigProfile::*;
+        let p = MigStatic::new(Some(vec![P1g5gb; 7]), None);
+        let mut v = mig_view(&[(P1g5gb, false), (P1g5gb, false)]);
+        v.admission = AdmissionMode::Oversubscribe;
+        // Strict rejects (large never fits 1g.5gb); oversubscribed
+        // placement picks a free instance and lets the fleet OOM-kill.
+        assert_eq!(p.place(WorkloadSize::Large, &v), Decision::Slot { gpu: 0, slot: 0 });
+        // With every slot busy the job waits for a free one.
+        let mut busy = mig_view(&[(P1g5gb, true), (P1g5gb, true)]);
+        busy.admission = AdmissionMode::Oversubscribe;
+        assert_eq!(p.place(WorkloadSize::Large, &busy), Decision::Wait);
+        // A fitting free instance still wins over a bigger non-fitting
+        // fallback under oversubscription.
+        let mut mixed = mig_view(&[(P3g20gb, false), (P1g5gb, false)]);
+        mixed.admission = AdmissionMode::Oversubscribe;
+        assert_eq!(p.place(WorkloadSize::Small, &mixed), Decision::Slot { gpu: 0, slot: 1 });
+    }
+
+    #[test]
+    fn mig_dynamic_oversubscribe_waits_for_a_repartition_not_an_oom() {
+        use MigProfile::*;
+        // MigDynamic can mint a fitting instance by draining the GPU,
+        // so oversubscribed admission must NOT shove a large job into a
+        // free 1g.5gb (where it would be OOM-killed): it waits and the
+        // drain-and-repartition serves it, exactly as under strict.
+        let cal = Calibration::paper();
+        let p = MigDynamic::new(&cal);
+        let mut v = mig_view(&[(P1g5gb, false), (P1g5gb, false)]);
+        v.admission = AdmissionMode::Oversubscribe;
+        assert_eq!(p.place(WorkloadSize::Large, &v), Decision::Wait);
+        // A fitting free slot is still taken directly.
+        let mut fits = mig_view(&[(P3g20gb, false), (P1g5gb, false)]);
+        fits.admission = AdmissionMode::Oversubscribe;
+        assert_eq!(p.place(WorkloadSize::Large, &fits), Decision::Slot { gpu: 0, slot: 0 });
     }
 
     #[test]

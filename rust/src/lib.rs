@@ -30,6 +30,31 @@
 //! [`report::fleet`] and the `migsim fleet` CLI subcommand; see
 //! `examples/fleet_sim.rs` and `benches/fleet_scale.rs`.
 //!
+//! ## Interference model
+//!
+//! The [`simgpu::interference`] subsystem stops the simulator from
+//! assuming the paper's ranking and starts deriving it: whole-GPU
+//! sharing (MPS, default time-slicing) applies a per-job contention
+//! **slowdown factor** computed from the resident mix — aggregate
+//! DRAM-bandwidth demand vs achievable bandwidth and SM occupancy
+//! pressure, both roofline-derived
+//! ([`simgpu::interference::DemandProfile`]) — while MIG instances are
+//! interference-free by construction (factor identically 1.0). Three
+//! models are selectable (`--interference off|linear|roofline` on
+//! `migsim fleet`, an axis on `migsim sweep`): `off` charges nothing
+//! (every factor exactly 1.0), `linear` charges a flat tax per
+//! co-runner, `roofline` charges for measured contention. The
+//! stretched busy integrals flow into the DCGM telemetry, so a
+//! contended device reports *high* GRACT/SMACT at *low* throughput —
+//! the signature MIGPerf (arXiv 2301.00407) measures.
+//!
+//! Admission gains the same nuance: `--admission strict` (default)
+//! keeps the §4 memory floors hard (jobs wait or are rejected), while
+//! `--admission oversubscribe` makes them soft — the policy places
+//! beyond the floors and the fleet kills the overcommitted job with a
+//! structured `JobOutcome::OomKilled`, reproducing the paper's crash
+//! (medium/large on `1g.5gb`) as data instead of an impossibility.
+//!
 //! ## Sweeps & benchmarking
 //!
 //! The [`sweep`] subsystem runs collocation experiments as *grids*,

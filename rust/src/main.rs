@@ -15,7 +15,7 @@
 //!   `BENCH_<name>.json` perf reports (the CI regression gate).
 
 use migsim::cluster::fleet::{FleetConfig, FleetSim};
-use migsim::cluster::policy::PolicyKind;
+use migsim::cluster::policy::{AdmissionMode, PolicyKind};
 use migsim::cluster::trace::{parse_mix, parse_trace_csv, poisson_trace, trace_to_csv, TraceConfig};
 use migsim::config::Config;
 use migsim::coordinator::experiment::{run_experiment, DeviceGroup, ExperimentSpec};
@@ -26,6 +26,7 @@ use migsim::mig::profile::MigProfile;
 use migsim::report::figures;
 use migsim::runtime::artifacts::ArtifactStore;
 use migsim::runtime::trainer::{Trainer, TrainerConfig};
+use migsim::simgpu::interference::InterferenceModel;
 use migsim::sweep::engine::run_sweep;
 use migsim::sweep::grid::{GridSpec, MixSpec};
 use migsim::util::bench::{bench, compare_reports, BenchReport};
@@ -60,22 +61,35 @@ SUBCOMMANDS
   fleet --gpus 8 --jobs 1000 --policy mps
         [--a30 0] [--cap 7] [--interarrival 30]
         [--mix small:0.5,medium:0.3,large:0.2] [--epochs N]
+        [--interference off|linear|roofline] [--admission strict|oversubscribe]
         [--partition 2g.10gb,2g.10gb,2g.10gb] [--trace file.csv]
         [--dump-trace file.csv] [--out results]
       Cluster-scale collocation: simulate a job stream on a fleet of
       A100/A30 GPUs under a placement policy (exclusive | mps |
-      timeslice | mig-static | mig-dynamic). Emits summary JSON +
+      timeslice | mig-static | mig-dynamic). --interference applies a
+      contention model to whole-GPU sharing (MIG instances stay
+      interference-free); --admission oversubscribe turns the paper's
+      memory floors soft — jobs placed beyond them are OOM-killed
+      (structured outcome) instead of queued. Emits summary JSON +
       per-job/per-GPU CSV.
   sweep [--policies mps,mig-static] [--mixes 'smalls|paper']
-        [--gpus 2,4] [--interarrivals 0.5,2.0] [--seeds 1,2]
+        [--gpus 2,4] [--interarrivals 0.5,2.0]
+        [--interference off,roofline] [--admission strict] [--seeds 1,2]
         [--jobs 200] [--epochs 1] [--cap 7] [--threads N]
         [--grid grid.json] [--out results]
       Expand a declarative grid (policies x mixes x fleet sizes x
-      arrival rates x seeds) into cells and run them all across worker
-      threads. Output is byte-identical at any --threads. Writes
-      sweep_summary.json + sweep_cells.csv and prints the
-      policy-ranking table. --grid loads the spec from JSON instead
-      (same keys as the axis flags; absent keys keep defaults).
+      arrival rates x interference models x seeds) into cells and run
+      them all across worker threads. Output is byte-identical at any
+      --threads. Writes sweep_summary.json + sweep_cells.csv and prints
+      the policy-ranking table (plus the interference-sensitivity table
+      when the interference axis has several models). --grid loads the
+      spec from JSON instead (same keys as the axis flags; absent keys
+      keep defaults).
+  validate <file>
+      Schema-check a machine-readable artifact: BENCH_*.json reports
+      (schema v1 round-trip) and sweep_summary.json files (schema
+      version, embedded grid round-trip, per-cell consistency). Exits
+      nonzero on drift — CI runs this on everything it uploads.
   bench [--quick] [--json] [--name sweep] [--out .] [--threads N]
         [--iters 3] [--baseline BENCH_baseline.json]
         [--tolerance 0.15] [--write-baseline]
@@ -110,6 +124,7 @@ fn main() -> anyhow::Result<()> {
         Some("fleet") => cmd_fleet(&args, &config),
         Some("sweep") => cmd_sweep(&args, &config),
         Some("bench") => cmd_bench(&args, &config),
+        Some("validate") => cmd_validate(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -233,6 +248,8 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
     };
     let cap = args.flag_parse("cap", 7u32)?;
     anyhow::ensure!(cap >= 1, "--cap must be >= 1");
+    let interference = parse_interference_flag(args)?.unwrap_or(InterferenceModel::Off);
+    let admission = parse_admission_flag(args)?.unwrap_or(AdmissionMode::Strict);
     let partition = match args.flag("partition") {
         None => None,
         Some(list) => {
@@ -297,6 +314,8 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
         a100s,
         a30s,
         seed,
+        interference,
+        admission,
         ..FleetConfig::default()
     };
     let t0 = std::time::Instant::now();
@@ -317,6 +336,32 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse the optional `--interference off|linear|roofline` flag.
+fn parse_interference_flag(args: &Args) -> anyhow::Result<Option<InterferenceModel>> {
+    match args.flag("interference") {
+        None => Ok(None),
+        Some(s) => InterferenceModel::parse(s.trim())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown interference model '{s}' (expected off | linear | roofline)"
+                )
+            })
+            .map(Some),
+    }
+}
+
+/// Parse the optional `--admission strict|oversubscribe` flag.
+fn parse_admission_flag(args: &Args) -> anyhow::Result<Option<AdmissionMode>> {
+    match args.flag("admission") {
+        None => Ok(None),
+        Some(s) => AdmissionMode::parse(s.trim())
+            .ok_or_else(|| {
+                anyhow::anyhow!("unknown admission mode '{s}' (expected strict | oversubscribe)")
+            })
+            .map(Some),
+    }
+}
+
 /// Parse a comma-separated numeric list flag.
 fn parse_num_list<T: std::str::FromStr>(list: &str, flag: &str) -> anyhow::Result<Vec<T>> {
     list.split(',')
@@ -332,8 +377,18 @@ fn parse_num_list<T: std::str::FromStr>(list: &str, flag: &str) -> anyhow::Resul
 /// (absent flags keep the `GridSpec::default_grid` values).
 fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
     if let Some(path) = args.flag("grid") {
-        for flag in ["policies", "mixes", "gpus", "interarrivals", "seeds", "jobs", "epochs", "cap"]
-        {
+        for flag in [
+            "policies",
+            "mixes",
+            "gpus",
+            "interarrivals",
+            "interference",
+            "admission",
+            "seeds",
+            "jobs",
+            "epochs",
+            "cap",
+        ] {
             anyhow::ensure!(
                 args.flag(flag).is_none(),
                 "--{flag} conflicts with --grid (the file is the whole spec)"
@@ -375,6 +430,23 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
     if let Some(list) = args.flag("interarrivals") {
         grid.interarrivals_s = parse_num_list(list, "interarrivals")?;
     }
+    if let Some(list) = args.flag("interference") {
+        grid.interference = list
+            .split(',')
+            .map(|s| {
+                let s = s.trim();
+                InterferenceModel::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown interference model '{s}' in --interference \
+                         (expected off | linear | roofline)"
+                    )
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
+    if let Some(mode) = parse_admission_flag(args)? {
+        grid.admission = mode;
+    }
     grid.seeds = match args.flag("seeds") {
         Some(list) => parse_num_list(list, "seeds")?,
         None => vec![rng::resolve_seed(args.seed()?)],
@@ -396,6 +468,9 @@ fn cmd_sweep(args: &Args, config: &Config) -> anyhow::Result<()> {
     let threads = args.flag_parse("threads", 0usize)?;
     let run = run_sweep(&grid, &config.calibration, threads)?;
     print!("{}", migsim::report::sweep::ranking_table(&run));
+    if grid.interference.len() > 1 {
+        print!("{}", migsim::report::sweep::interference_table(&run));
+    }
     println!(
         "\n{} cells | {} threads | host {:.3} s | {:.1} cells/s",
         run.cells.len(),
@@ -502,6 +577,118 @@ fn cmd_bench(args: &Args, config: &Config) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// `migsim validate <file>` — schema-check a machine-readable artifact
+/// so CI fails on drift instead of uploading silently broken files.
+/// Detects the kind by content: a sweep summary carries `grid` +
+/// `cells`, a bench report carries `metrics` + `provisional`.
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let Some(path) = args.positional.first() else {
+        anyhow::bail!("usage: migsim validate <file> (BENCH_*.json or sweep_summary.json)");
+    };
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+
+    if json.get("grid").is_some() && json.get("cells").is_some() {
+        let cells = validate_sweep_summary(&json).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        println!(
+            "OK sweep summary {path}: schema v{}, {cells} cells",
+            migsim::report::sweep::SWEEP_SCHEMA_VERSION
+        );
+        return Ok(());
+    }
+    if json.get("metrics").is_some() && json.get("provisional").is_some() {
+        let report = BenchReport::from_json(&json).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let back = BenchReport::from_json(&report.to_json())?;
+        anyhow::ensure!(
+            back == report,
+            "{path}: bench report does not round-trip losslessly"
+        );
+        println!(
+            "OK bench report {path}: schema v{}, {} gated metric(s){}",
+            migsim::util::bench::BENCH_SCHEMA_VERSION,
+            report.metrics.len(),
+            if report.provisional { " (provisional — gates nothing)" } else { "" }
+        );
+        return Ok(());
+    }
+    anyhow::bail!(
+        "{path}: unrecognized artifact (expected a BENCH_*.json report \
+         or a sweep_summary.json)"
+    )
+}
+
+/// Deep checks on a sweep summary: schema version, embedded grid
+/// round-trip, and per-cell consistency. Returns the cell count.
+fn validate_sweep_summary(json: &Json) -> anyhow::Result<usize> {
+    let version = json
+        .get("schema_version")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow::anyhow!("missing schema_version"))?;
+    anyhow::ensure!(
+        version == migsim::report::sweep::SWEEP_SCHEMA_VERSION,
+        "schema_version {version} != supported {}",
+        migsim::report::sweep::SWEEP_SCHEMA_VERSION
+    );
+    let grid = GridSpec::from_json(json.get("grid").expect("checked by caller"))?;
+    anyhow::ensure!(
+        GridSpec::from_json(&grid.to_json())? == grid,
+        "embedded grid does not round-trip losslessly"
+    );
+    let cells = json
+        .get("cells")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("'cells' must be an array"))?;
+    anyhow::ensure!(
+        cells.len() == grid.cell_count(),
+        "cells array has {} entries but the grid expands to {}",
+        cells.len(),
+        grid.cell_count()
+    );
+    let declared = json
+        .get("cell_count")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow::anyhow!("missing cell_count"))?;
+    anyhow::ensure!(
+        declared as usize == cells.len(),
+        "cell_count {declared} disagrees with the cells array ({})",
+        cells.len()
+    );
+    for (i, cell) in cells.iter().enumerate() {
+        let index = cell
+            .get("index")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing index"))?;
+        anyhow::ensure!(index as usize == i, "cell {i}: index {index} out of order");
+        let policy = cell
+            .get("policy")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing policy"))?;
+        anyhow::ensure!(
+            PolicyKind::parse(policy).is_some(),
+            "cell {i}: unknown policy '{policy}'"
+        );
+        let interference = cell
+            .get("interference")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing interference"))?;
+        anyhow::ensure!(
+            InterferenceModel::parse(interference).is_some(),
+            "cell {i}: unknown interference model '{interference}'"
+        );
+        let metrics = cell
+            .get("metrics")
+            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing metrics"))?;
+        for key in ["finished", "oom_killed", "images_per_s", "mean_slowdown"] {
+            anyhow::ensure!(
+                metrics.get(key).and_then(|v| v.as_f64()).is_some(),
+                "cell {i}: metrics.{key} missing or not a number"
+            );
+        }
+    }
+    Ok(cells.len())
 }
 
 fn cmd_train(args: &Args, config: &Config) -> anyhow::Result<()> {

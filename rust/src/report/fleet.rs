@@ -1,4 +1,9 @@
 //! Fleet-run export: summary JSON + per-job and per-GPU CSV.
+//!
+//! The summary JSON carries the run's interference model, admission
+//! mode, `oom_killed` count and `mean_slowdown` (see
+//! `FleetMetrics::to_json`); the per-job CSV's `outcome` column labels
+//! oversubscribed casualties `oom-killed`.
 
 use super::csv;
 use crate::cluster::metrics::FleetMetrics;
@@ -134,5 +139,36 @@ mod tests {
         assert!(rows.iter().all(|r| r[8] == "finished"));
         let grows = gpus_rows(&m);
         assert_eq!(grows.len(), 2);
+    }
+
+    #[test]
+    fn oversubscribed_run_exports_oom_outcomes() {
+        use crate::cluster::policy::AdmissionMode;
+        use crate::cluster::trace::JobSpec;
+        use crate::workload::spec::WorkloadSize;
+        // Six larges on one A100 under MPS: four fit, two OOM. The CSV
+        // outcome column and the summary JSON both say so.
+        let cal = Calibration::paper();
+        let trace: Vec<JobSpec> = (0..6)
+            .map(|id| JobSpec {
+                id,
+                arrival_s: id as f64 * 0.001,
+                workload: WorkloadSize::Large,
+                epochs: 1,
+            })
+            .collect();
+        let config = FleetConfig {
+            a100s: 1,
+            a30s: 0,
+            admission: AdmissionMode::Oversubscribe,
+            ..FleetConfig::default()
+        };
+        let m = FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace).run();
+        let rows = jobs_rows(&m);
+        assert_eq!(rows.iter().filter(|r| r[8] == "oom-killed").count(), 2);
+        let json = Json::parse(&m.to_json().to_string_pretty()).unwrap();
+        assert_eq!(json.get("oom_killed").unwrap().as_u64(), Some(2));
+        assert_eq!(json.get("admission").unwrap().as_str(), Some("oversubscribe"));
+        assert!(json.get("mean_slowdown").unwrap().as_f64().is_some());
     }
 }

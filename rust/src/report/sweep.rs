@@ -16,7 +16,11 @@ use std::path::{Path, PathBuf};
 
 /// Version of the sweep summary JSON layout. Bump on breaking changes;
 /// consumers (CI, plotting scripts) must check it before reading.
-pub const SWEEP_SCHEMA_VERSION: u64 = 1;
+///
+/// v2: per-cell `interference` axis value, `oom_killed` +
+/// `mean_slowdown` metrics, grid `interference`/`admission` keys and
+/// the `interference_sensitivity` section.
+pub const SWEEP_SCHEMA_VERSION: u64 = 2;
 
 /// Files one [`write_sweep`] call produces.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -63,20 +67,83 @@ pub fn ranking_table(run: &SweepRun) -> String {
             let n = cells.len() as f64;
             let gract = safe_div(cells.iter().map(|c| c.metrics.mean_gract).sum(), n);
             let p95 = safe_div(cells.iter().map(|c| c.metrics.p95_jct_s).sum(), n);
+            let slowdown = safe_div(cells.iter().map(|c| c.metrics.mean_slowdown).sum(), n);
             let rejected: u64 = cells.iter().map(|c| c.metrics.rejected).sum();
+            let oom: u64 = cells.iter().map(|c| c.metrics.oom_killed).sum();
             vec![
                 name.clone(),
                 cells.len().to_string(),
                 format!("{mean:.1}"),
                 format!("{gract:.3}"),
                 crate::util::fmt_duration(p95),
+                format!("{slowdown:.2}"),
                 rejected.to_string(),
+                oom.to_string(),
             ]
         })
         .collect();
     render::table(
         "policy ranking (mean aggregate images/s across the grid)",
-        &["policy", "cells", "img/s μ", "GRACT μ", "JCT p95 μ", "rejected"],
+        &["policy", "cells", "img/s μ", "GRACT μ", "JCT p95 μ", "slowdown μ", "rejected", "oom"],
+        &rows,
+    )
+}
+
+/// Mean aggregate images/s per (policy, interference model), in grid
+/// order: the interference-sensitivity view. Shared policies (MPS,
+/// time-slicing) degrade as the model turns on; MIG rows must not move
+/// — that gap *is* the paper's isolation argument, derived instead of
+/// assumed.
+pub fn interference_sensitivity(run: &SweepRun) -> Vec<(String, String, f64)> {
+    let mut acc: Vec<(String, String, f64, u64)> = Vec::new();
+    for cell in &run.cells {
+        let policy = cell.spec.policy.name();
+        let model = cell.spec.interference.name();
+        match acc
+            .iter_mut()
+            .find(|(p, m, _, _)| p == policy && m == model)
+        {
+            Some((_, _, sum, count)) => {
+                *sum += cell.metrics.images_per_s;
+                *count += 1;
+            }
+            None => acc.push((
+                policy.to_string(),
+                model.to_string(),
+                cell.metrics.images_per_s,
+                1,
+            )),
+        }
+    }
+    acc.into_iter()
+        .map(|(p, m, sum, count)| (p, m, safe_div(sum, count as f64)))
+        .collect()
+}
+
+/// The ASCII interference-sensitivity table: one row per (policy,
+/// model) with the throughput delta vs that policy's `off` mean.
+/// Meaningful when the grid sweeps the interference axis; with a single
+/// model it degenerates to one row per policy at ±0.0 %.
+pub fn interference_table(run: &SweepRun) -> String {
+    let sens = interference_sensitivity(run);
+    let off_mean = |policy: &str| -> Option<f64> {
+        sens.iter()
+            .find(|(p, m, _)| p == policy && m == "off")
+            .map(|&(_, _, v)| v)
+    };
+    let rows: Vec<Vec<String>> = sens
+        .iter()
+        .map(|(policy, model, mean)| {
+            let delta = match off_mean(policy) {
+                Some(off) if off > 0.0 => format!("{:+.1}%", (mean / off - 1.0) * 100.0),
+                _ => "n/a".to_string(),
+            };
+            vec![policy.clone(), model.clone(), format!("{mean:.1}"), delta]
+        })
+        .collect();
+    render::table(
+        "interference sensitivity (mean images/s by contention model)",
+        &["policy", "interference", "img/s μ", "vs off"],
         &rows,
     )
 }
@@ -102,6 +169,7 @@ pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json 
                 .set("mix", Json::from_str_val(&c.spec.mix.name))
                 .set("gpus", Json::from_u64(c.spec.gpus as u64))
                 .set("interarrival_s", Json::from_f64(c.spec.mean_interarrival_s))
+                .set("interference", Json::from_str_val(c.spec.interference.name()))
                 .set("seed", Json::from_u64(c.spec.seed))
                 .set("metrics", c.metrics.to_json());
             o
@@ -118,6 +186,17 @@ pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json 
         })
         .collect();
     j.set("ranking", Json::Arr(ranking));
+    let sensitivity: Vec<Json> = interference_sensitivity(run)
+        .iter()
+        .map(|(policy, model, mean)| {
+            let mut o = Json::obj();
+            o.set("policy", Json::from_str_val(policy))
+                .set("interference", Json::from_str_val(model))
+                .set("mean_images_per_s", Json::from_f64(*mean));
+            o
+        })
+        .collect();
+    j.set("interference_sensitivity", Json::Arr(sensitivity));
     j
 }
 
@@ -132,9 +211,11 @@ pub fn cells_rows(run: &SweepRun) -> Vec<Vec<String>> {
                 c.spec.mix.name.clone(),
                 c.spec.gpus.to_string(),
                 format!("{}", c.spec.mean_interarrival_s),
+                c.spec.interference.name().to_string(),
                 c.spec.seed.to_string(),
                 c.metrics.finished.to_string(),
                 c.metrics.rejected.to_string(),
+                c.metrics.oom_killed.to_string(),
                 c.metrics.unserved.to_string(),
                 c.metrics.peak_queue.to_string(),
                 format!("{:.3}", c.metrics.makespan_s),
@@ -143,20 +224,23 @@ pub fn cells_rows(run: &SweepRun) -> Vec<Vec<String>> {
                 format!("{:.3}", c.metrics.p95_jct_s),
                 format!("{:.1}", c.metrics.images_per_s),
                 format!("{:.4}", c.metrics.mean_gract),
+                format!("{:.3}", c.metrics.mean_slowdown),
             ]
         })
         .collect()
 }
 
-const CELLS_HEADER: [&str; 16] = [
+const CELLS_HEADER: [&str; 19] = [
     "index",
     "policy",
     "mix",
     "gpus",
     "interarrival_s",
+    "interference",
     "seed",
     "finished",
     "rejected",
+    "oom_killed",
     "unserved",
     "peak_queue",
     "makespan_s",
@@ -165,6 +249,7 @@ const CELLS_HEADER: [&str; 16] = [
     "p95_jct_s",
     "images_per_s",
     "mean_gract",
+    "mean_slowdown",
 ];
 
 /// Write `sweep_summary.json` + `sweep_cells.csv` under `dir`.
@@ -199,6 +284,9 @@ mod tests {
     use crate::sweep::grid::MixSpec;
     use crate::util::tempdir::TempDir;
 
+    use crate::cluster::policy::AdmissionMode;
+    use crate::simgpu::interference::InterferenceModel;
+
     fn saturated_grid() -> GridSpec {
         // Back-to-back arrivals on one GPU: the collocation policies
         // separate cleanly, as in the paper's §5 comparison.
@@ -207,10 +295,12 @@ mod tests {
             mixes: vec![MixSpec::preset("smalls").unwrap()],
             gpus: vec![1],
             interarrivals_s: vec![0.001],
+            interference: vec![InterferenceModel::Off],
             seeds: vec![42],
             jobs_per_cell: 21,
             epochs: Some(1),
             cap: 7,
+            admission: AdmissionMode::Strict,
         }
     }
 
@@ -277,5 +367,40 @@ mod tests {
         for p in &grid.policies {
             assert!(table.contains(p.name()), "{table}");
         }
+    }
+
+    #[test]
+    fn interference_sensitivity_degrades_shared_but_not_mig() {
+        // Sweep the interference axis on a bandwidth-heavy mix: the
+        // shared policies lose throughput when contention turns on,
+        // while the MIG cells are bit-identical — the isolation gap the
+        // paper measures, now derived by the model.
+        let mut grid = saturated_grid();
+        grid.mixes = vec![MixSpec::preset("heavy").unwrap()];
+        grid.interference = vec![InterferenceModel::Off, InterferenceModel::Roofline];
+        let run = run_sweep(&grid, &Calibration::paper(), 2).unwrap();
+        let sens = interference_sensitivity(&run);
+        let mean = |policy: &str, model: &str| -> f64 {
+            sens.iter()
+                .find(|(p, m, _)| p == policy && m == model)
+                .map(|&(_, _, v)| v)
+                .unwrap_or_else(|| panic!("missing ({policy}, {model}) in {sens:?}"))
+        };
+        assert!(
+            mean("mps", "roofline") < mean("mps", "off"),
+            "contention must cost MPS throughput: {sens:?}"
+        );
+        assert!(
+            mean("timeslice", "roofline") < mean("timeslice", "off"),
+            "contention must cost time-slicing throughput: {sens:?}"
+        );
+        assert_eq!(
+            mean("mig-static", "roofline"),
+            mean("mig-static", "off"),
+            "MIG cells must not move: {sens:?}"
+        );
+        // The table renders a row per (policy, model) with a delta.
+        let table = interference_table(&run);
+        assert!(table.contains("roofline") && table.contains("vs off"), "{table}");
     }
 }

@@ -1,0 +1,363 @@
+//! Interference-aware collocation: a contention model for whole-GPU
+//! sharing.
+//!
+//! The paper's headline nuance is that MPS and default time-slicing
+//! share memory bandwidth and SMs — collocated throughput degrades as
+//! co-runners contend — while MIG partitions are interference-free.
+//! MISO (arXiv 2207.11428) exploits exactly this MPS-vs-MIG gap to pick
+//! partitions, and MIGPerf (arXiv 2301.00407) measures the degradation
+//! curves a credible benchmark must reproduce.
+//!
+//! This module models the gap as a per-job **slowdown factor**:
+//!
+//! * [`DemandProfile`] — the roofline-derived resource appetite of one
+//!   resident training job (mean DRAM-bandwidth demand while busy, the
+//!   memory-bound share of its kernels, and its time-averaged active-SM
+//!   fraction), computed from the job's step trace via
+//!   [`super::roofline::time_kernel`] / [`super::occupancy`].
+//! * [`ContentionModel`] — folds the demand profiles of *all* residents
+//!   of a shared GPU into a factor `>= 1.0` for each of them. Under
+//!   [`InterferenceModel::Off`] the factor is always 1.0 (the base
+//!   n-way sharing cost from `simgpu::mps` / `simgpu::timeslice` is the
+//!   whole story); `Linear` charges a fixed tax per co-runner;
+//!   `Roofline` charges for aggregate bandwidth demand beyond the
+//!   device's achievable bandwidth and for SM occupancy pressure beyond
+//!   a full device, each weighted by how exposed the *victim* job is
+//!   (its memory-bound share, its own SM appetite).
+//! * [`apply_slowdown`] — stretches a [`StepStats`] account by a
+//!   factor: kernels take longer (busy time and the SMACT/SMOCC
+//!   integrals scale — a stalled SM still reports active), while
+//!   host-side overheads (dispatch gaps, framework step cost, input
+//!   wait) are unaffected.
+//!
+//! Jobs inside MIG instances never consult this model: slice isolation
+//! is the point, and `cluster::fleet` only applies contention on the
+//! whole-GPU sharing path.
+//!
+//! Every factor is monotone non-decreasing in the co-runner set (adding
+//! a resident can only add demand), capped at [`MAX_SLOWDOWN`], and
+//! exactly 1.0 for a job running alone.
+
+use super::calibration::Calibration;
+use super::engine::StepStats;
+use super::kernel::StepTrace;
+use super::roofline::time_kernel;
+use super::spec::GpuSpec;
+
+/// Which contention model whole-GPU sharing applies (`off` charges
+/// nothing: every factor is exactly 1.0).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InterferenceModel {
+    /// No cross-runner contention beyond the base n-way sharing cost.
+    Off,
+    /// Fixed inflation per co-runner, blind to what the co-runners do.
+    Linear,
+    /// Roofline-derived: aggregate DRAM-bandwidth demand vs achievable
+    /// bandwidth plus SM occupancy pressure, per-victim weighted.
+    Roofline,
+}
+
+impl InterferenceModel {
+    pub const ALL: [InterferenceModel; 3] = [
+        InterferenceModel::Off,
+        InterferenceModel::Linear,
+        InterferenceModel::Roofline,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            InterferenceModel::Off => "off",
+            InterferenceModel::Linear => "linear",
+            InterferenceModel::Roofline => "roofline",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<InterferenceModel> {
+        Self::ALL.iter().copied().find(|m| m.name() == s)
+    }
+}
+
+impl std::fmt::Display for InterferenceModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// `Linear`: slowdown per co-runner (measured MPS-style degradation is
+/// a few percent per added client for mixed workloads).
+pub const LINEAR_SLOWDOWN_PER_CORUNNER: f64 = 0.04;
+
+/// `Roofline`: small always-on concurrency tax per co-runner (scheduler
+/// and L2 interference exists even for compute-bound mixes); keeps the
+/// factor strictly increasing in the co-runner count.
+pub const ROOFLINE_BASE_PER_CORUNNER: f64 = 0.01;
+
+/// `Roofline`: slowdown per unit of excess aggregate bandwidth demand,
+/// scaled by the victim's memory-bound share.
+pub const BW_PRESSURE_WEIGHT: f64 = 0.15;
+
+/// `Roofline`: slowdown per unit of excess aggregate SM occupancy
+/// demand, scaled by the victim's own SM appetite.
+pub const SM_PRESSURE_WEIGHT: f64 = 0.05;
+
+/// Physical sanity cap on any contention factor.
+pub const MAX_SLOWDOWN: f64 = 2.5;
+
+/// Roofline-derived resource appetite of one resident job, measured on
+/// the whole (unshared) device so profiles compose additively.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DemandProfile {
+    /// Mean DRAM bandwidth demand while the step's kernels run (B/s).
+    pub bw_demand: f64,
+    /// Fraction of kernel busy time bound by the memory roofline leg.
+    pub memory_bound_frac: f64,
+    /// Time-averaged active-SM fraction of the whole device.
+    pub sm_demand: f64,
+}
+
+impl DemandProfile {
+    /// Profile one training step of `trace` on the whole `spec` device.
+    pub fn from_trace(trace: &StepTrace, spec: &GpuSpec, cal: &Calibration) -> DemandProfile {
+        let mut busy_s = 0.0;
+        let mut memory_bound_s = 0.0;
+        let mut dram_bytes = 0.0;
+        let mut smact_integral = 0.0;
+        for k in &trace.kernels {
+            let t = time_kernel(k, spec.sm_count, spec.memory_slices, spec, cal);
+            busy_s += t.busy_s;
+            dram_bytes += t.dram_bytes;
+            smact_integral += t.busy_s * t.occupancy.sm_active_frac;
+            if t.memory_bound {
+                memory_bound_s += t.busy_s;
+            }
+        }
+        if busy_s <= 0.0 {
+            return DemandProfile {
+                bw_demand: 0.0,
+                memory_bound_frac: 0.0,
+                sm_demand: 0.0,
+            };
+        }
+        DemandProfile {
+            bw_demand: dram_bytes / busy_s,
+            memory_bound_frac: memory_bound_s / busy_s,
+            sm_demand: smact_integral / busy_s,
+        }
+    }
+}
+
+/// The per-GPU contention model: resident demand profiles in, per-job
+/// slowdown factors out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ContentionModel {
+    pub model: InterferenceModel,
+}
+
+impl ContentionModel {
+    pub fn new(model: InterferenceModel) -> ContentionModel {
+        ContentionModel { model }
+    }
+
+    /// Slowdown factor (`>= 1.0`) for resident `i` among `residents`
+    /// sharing the whole `spec` device. Exactly 1.0 for a job running
+    /// alone or under `Off`; monotone non-decreasing as residents are
+    /// added; capped at [`MAX_SLOWDOWN`].
+    pub fn slowdown(
+        &self,
+        spec: &GpuSpec,
+        cal: &Calibration,
+        residents: &[DemandProfile],
+        i: usize,
+    ) -> f64 {
+        let n = residents.len();
+        debug_assert!(i < n, "victim index {i} out of {n} residents");
+        if n <= 1 {
+            return 1.0;
+        }
+        let factor = match self.model {
+            InterferenceModel::Off => 1.0,
+            InterferenceModel::Linear => {
+                1.0 + LINEAR_SLOWDOWN_PER_CORUNNER * (n - 1) as f64
+            }
+            InterferenceModel::Roofline => {
+                let capacity = spec.dram_bw * cal.bandwidth_efficiency;
+                let total_bw: f64 = residents.iter().map(|r| r.bw_demand).sum();
+                let bw_pressure = (crate::util::safe_div(total_bw, capacity) - 1.0).max(0.0);
+                let total_sm: f64 = residents.iter().map(|r| r.sm_demand).sum();
+                let sm_pressure = (total_sm - 1.0).max(0.0);
+                let victim = residents[i];
+                1.0 + ROOFLINE_BASE_PER_CORUNNER * (n - 1) as f64
+                    + BW_PRESSURE_WEIGHT * bw_pressure * victim.memory_bound_frac
+                    + SM_PRESSURE_WEIGHT * sm_pressure * victim.sm_demand
+            }
+        };
+        factor.min(MAX_SLOWDOWN)
+    }
+}
+
+/// Stretch a per-step activity account by a contention `factor`:
+/// kernels take `factor`x longer (busy time and the activity integrals
+/// scale — a memory-stalled SM still reports active to DCGM), while
+/// host-side overhead (dispatch gaps, framework step cost, input wait)
+/// and the traffic/FLOP totals are untouched.
+pub fn apply_slowdown(stats: StepStats, factor: f64) -> StepStats {
+    debug_assert!(factor >= 1.0, "slowdown factor {factor} < 1");
+    if factor <= 1.0 {
+        return stats;
+    }
+    let overhead_s = (stats.wall_s - stats.busy_s).max(0.0);
+    StepStats {
+        wall_s: stats.busy_s * factor + overhead_s,
+        busy_s: stats.busy_s * factor,
+        smact_integral: stats.smact_integral * factor,
+        smocc_integral: stats.smocc_integral * factor,
+        ..stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simgpu::kernel::{KernelClass, KernelDesc};
+    use crate::simgpu::spec::A100;
+    use crate::util::prop::forall_ok;
+    use crate::util::rng::Rng;
+
+    fn cal() -> Calibration {
+        Calibration::paper()
+    }
+
+    fn random_profile(r: &mut Rng) -> DemandProfile {
+        DemandProfile {
+            bw_demand: r.next_f64() * 2.0 * A100.dram_bw,
+            memory_bound_frac: r.next_f64(),
+            sm_demand: r.next_f64(),
+        }
+    }
+
+    #[test]
+    fn names_round_trip_and_reject_unknowns() {
+        for m in InterferenceModel::ALL {
+            assert_eq!(InterferenceModel::parse(m.name()), Some(m));
+            assert_eq!(format!("{m}"), m.name());
+        }
+        assert_eq!(InterferenceModel::parse("quadratic"), None);
+    }
+
+    #[test]
+    fn solo_and_off_never_slow_down() {
+        let mut r = Rng::new(7);
+        let p = random_profile(&mut r);
+        for model in InterferenceModel::ALL {
+            let cm = ContentionModel::new(model);
+            assert_eq!(cm.slowdown(&A100, &cal(), &[p], 0), 1.0, "{model} solo");
+        }
+        let cm = ContentionModel::new(InterferenceModel::Off);
+        let crowd: Vec<DemandProfile> = (0..7).map(|_| random_profile(&mut r)).collect();
+        for i in 0..crowd.len() {
+            assert_eq!(cm.slowdown(&A100, &cal(), &crowd, i), 1.0, "off resident {i}");
+        }
+    }
+
+    #[test]
+    fn slowdown_monotone_in_corunner_count() {
+        // The contract the fleet relies on: adding a co-runner can only
+        // add demand, so a fixed victim's factor never decreases.
+        for model in [InterferenceModel::Linear, InterferenceModel::Roofline] {
+            let cm = ContentionModel::new(model);
+            forall_ok(
+                0x1F7E_12A5,
+                40,
+                |r| -> Vec<DemandProfile> {
+                    (0..2 + r.below(6) as usize).map(|_| random_profile(r)).collect()
+                },
+                |crowd| -> Result<(), String> {
+                    let mut last = 1.0;
+                    for n in 1..=crowd.len() {
+                        let f = cm.slowdown(&A100, &cal(), &crowd[..n], 0);
+                        if f < last - 1e-12 {
+                            return Err(format!("{model}: factor {f} < {last} at n={n}"));
+                        }
+                        if !(1.0..=MAX_SLOWDOWN).contains(&f) {
+                            return Err(format!("{model}: factor {f} out of range at n={n}"));
+                        }
+                        last = f;
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn roofline_charges_bandwidth_hungry_victims_more() {
+        let cm = ContentionModel::new(InterferenceModel::Roofline);
+        let hog = DemandProfile {
+            bw_demand: A100.dram_bw, // saturates the device alone
+            memory_bound_frac: 1.0,
+            sm_demand: 0.9,
+        };
+        let light = DemandProfile {
+            bw_demand: 0.05 * A100.dram_bw,
+            memory_bound_frac: 0.0,
+            sm_demand: 0.15,
+        };
+        let crowd = [hog, hog, light];
+        let f_hog = cm.slowdown(&A100, &cal(), &crowd, 0);
+        let f_light = cm.slowdown(&A100, &cal(), &crowd, 2);
+        assert!(f_hog > f_light, "hog {f_hog} !> light {f_light}");
+        assert!(f_hog > 1.0 && f_hog <= MAX_SLOWDOWN);
+    }
+
+    #[test]
+    fn apply_slowdown_stretches_busy_not_overhead() {
+        let stats = StepStats {
+            wall_s: 1.0,
+            busy_s: 0.6,
+            smact_integral: 0.5,
+            smocc_integral: 0.4,
+            dram_bytes: 1e9,
+            kernels: 40,
+            flops: 1e12,
+        };
+        let slowed = apply_slowdown(stats, 1.5);
+        assert!((slowed.busy_s - 0.9).abs() < 1e-12);
+        // Overhead (wall - busy) is preserved exactly.
+        assert!(((slowed.wall_s - slowed.busy_s) - 0.4).abs() < 1e-12);
+        assert!((slowed.smact_integral - 0.75).abs() < 1e-12);
+        // Traffic and work totals are untouched.
+        assert_eq!(slowed.dram_bytes, stats.dram_bytes);
+        assert_eq!(slowed.kernels, stats.kernels);
+        assert_eq!(slowed.flops, stats.flops);
+        // Factor 1.0 is the identity.
+        assert_eq!(apply_slowdown(stats, 1.0), stats);
+    }
+
+    #[test]
+    fn demand_profile_from_memory_bound_trace() {
+        let trace = StepTrace {
+            kernels: (0..30)
+                .map(|_| KernelDesc {
+                    name: "bn",
+                    class: KernelClass::Elementwise,
+                    flops: 1e6,
+                    dram_bytes: 1e9,
+                    grid_blocks: 10_000,
+                    warps_per_block: 8,
+                    blocks_per_sm: 8,
+                    arith_scale: 1.0,
+                })
+                .collect(),
+        };
+        let p = DemandProfile::from_trace(&trace, &A100, &cal());
+        // Bandwidth-bound kernels demand (nearly) the full achievable
+        // bandwidth while they run.
+        assert!(p.memory_bound_frac > 0.99, "{p:?}");
+        assert!(p.bw_demand > 0.5 * A100.dram_bw, "{p:?}");
+        assert!(p.sm_demand > 0.5, "{p:?}");
+        // An empty trace profiles as zero demand.
+        let zero = DemandProfile::from_trace(&StepTrace::default(), &A100, &cal());
+        assert_eq!(zero.bw_demand, 0.0);
+        assert_eq!(zero.sm_demand, 0.0);
+    }
+}

@@ -12,10 +12,14 @@
 //!   SMs → sublinear slowdown on small instances (Fig 2) and low
 //!   SMACT/SMOCC on `7g.40gb` (Figs 5, 6);
 //! * MIG instances own disjoint slices → zero interference (Fig 2/3);
-//! * MIG mode hides 10 of 108 SMs → non-MIG is 0.7–2.9 % faster (§4.1).
+//! * MIG mode hides 10 of 108 SMs → non-MIG is 0.7–2.9 % faster (§4.1);
+//! * MPS / time-slicing share bandwidth and SMs → co-runners contend
+//!   ([`interference`] turns aggregate demand into per-job slowdowns,
+//!   identically 1.0 inside MIG instances).
 
 pub mod calibration;
 pub mod engine;
+pub mod interference;
 pub mod kernel;
 pub mod mps;
 pub mod occupancy;
@@ -24,5 +28,6 @@ pub mod spec;
 pub mod timeslice;
 
 pub use engine::{InstanceResources, SimEngine, StepStats};
+pub use interference::{ContentionModel, DemandProfile, InterferenceModel};
 pub use kernel::{KernelClass, KernelDesc, StepTrace};
 pub use spec::A100;

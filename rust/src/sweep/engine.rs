@@ -27,6 +27,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 pub struct CellMetrics {
     pub finished: u64,
     pub rejected: u64,
+    pub oom_killed: u64,
     pub unserved: u64,
     pub peak_queue: u64,
     pub makespan_s: f64,
@@ -36,6 +37,8 @@ pub struct CellMetrics {
     pub total_images: f64,
     pub images_per_s: f64,
     pub mean_gract: f64,
+    /// Mean peak contention slowdown over placed jobs (1.0 = none).
+    pub mean_slowdown: f64,
 }
 
 impl CellMetrics {
@@ -43,6 +46,7 @@ impl CellMetrics {
         CellMetrics {
             finished: m.finished() as u64,
             rejected: m.rejected() as u64,
+            oom_killed: m.oom_killed() as u64,
             unserved: m.unserved() as u64,
             peak_queue: m.peak_queue as u64,
             makespan_s: m.makespan_s,
@@ -52,6 +56,7 @@ impl CellMetrics {
             total_images: m.total_images(),
             images_per_s: m.aggregate_images_per_second(),
             mean_gract: m.mean_gract(),
+            mean_slowdown: m.mean_slowdown,
         }
     }
 
@@ -59,6 +64,7 @@ impl CellMetrics {
         let mut j = Json::obj();
         j.set("finished", Json::from_u64(self.finished))
             .set("rejected", Json::from_u64(self.rejected))
+            .set("oom_killed", Json::from_u64(self.oom_killed))
             .set("unserved", Json::from_u64(self.unserved))
             .set("peak_queue", Json::from_u64(self.peak_queue))
             .set("makespan_s", Json::from_f64(self.makespan_s))
@@ -67,7 +73,8 @@ impl CellMetrics {
             .set("p95_jct_s", Json::from_f64(self.p95_jct_s))
             .set("total_images", Json::from_f64(self.total_images))
             .set("images_per_s", Json::from_f64(self.images_per_s))
-            .set("mean_gract", Json::from_f64(self.mean_gract));
+            .set("mean_gract", Json::from_f64(self.mean_gract))
+            .set("mean_slowdown", Json::from_f64(self.mean_slowdown));
         j
     }
 }
@@ -112,6 +119,8 @@ pub fn run_cell(cell: &CellSpec, grid: &GridSpec, cal: &Calibration) -> CellMetr
         a100s: cell.gpus,
         a30s: 0,
         seed: cell.seed,
+        interference: cell.interference,
+        admission: grid.admission,
         ..FleetConfig::default()
     };
     let sim = FleetSim::new(config, policy, *cal, &trace);
@@ -188,10 +197,15 @@ mod tests {
             mixes: vec![MixSpec::preset("smalls").unwrap()],
             gpus: vec![1],
             interarrivals_s: vec![0.5],
+            interference: vec![
+                crate::simgpu::interference::InterferenceModel::Off,
+                crate::simgpu::interference::InterferenceModel::Roofline,
+            ],
             seeds: vec![11, 12],
             jobs_per_cell: 20,
             epochs: Some(1),
             cap: 7,
+            admission: crate::cluster::policy::AdmissionMode::Strict,
         }
     }
 
@@ -206,6 +220,8 @@ mod tests {
                 a100s: cell.gpus,
                 a30s: 0,
                 seed: cell.seed,
+                interference: cell.interference,
+                admission: grid.admission,
                 ..FleetConfig::default()
             },
             cell.policy.build(&cal, grid.cap, None),
@@ -237,7 +253,7 @@ mod tests {
         // Every cell accounted for every job of its trace.
         for c in &run.cells {
             assert_eq!(
-                c.metrics.finished + c.metrics.rejected + c.metrics.unserved,
+                c.metrics.finished + c.metrics.rejected + c.metrics.oom_killed + c.metrics.unserved,
                 grid.jobs_per_cell as u64,
                 "{}",
                 c.spec.label()

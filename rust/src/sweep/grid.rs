@@ -14,8 +14,9 @@
 //! workload, different collocation mode) lifted to fleet scale — and a
 //! re-run of any single cell reproduces it bit-for-bit.
 
-use crate::cluster::policy::PolicyKind;
+use crate::cluster::policy::{AdmissionMode, PolicyKind};
 use crate::cluster::trace::{parse_mix, TraceConfig};
+use crate::simgpu::interference::InterferenceModel;
 use crate::util::json::Json;
 use crate::util::rng::DEFAULT_SEED;
 use crate::workload::spec::WorkloadSize;
@@ -106,7 +107,7 @@ impl MixSpec {
     }
 }
 
-/// The declarative sweep grid: five axes plus per-cell constants.
+/// The declarative sweep grid: six axes plus per-cell constants.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GridSpec {
     pub policies: Vec<PolicyKind>,
@@ -115,6 +116,9 @@ pub struct GridSpec {
     pub gpus: Vec<u32>,
     /// Mean Poisson inter-arrival gaps in seconds.
     pub interarrivals_s: Vec<f64>,
+    /// Contention models for whole-GPU sharing (`off`/`linear`/
+    /// `roofline`); MIG cells are interference-free regardless.
+    pub interference: Vec<InterferenceModel>,
     /// Trace seeds (replicates).
     pub seeds: Vec<u64>,
     /// Jobs per generated trace.
@@ -124,6 +128,9 @@ pub struct GridSpec {
     pub epochs: Option<u32>,
     /// Shared-mode co-runner cap (mps / timeslice).
     pub cap: u32,
+    /// Memory-floor semantics for every cell (`strict` waits at the §4
+    /// floors, `oversubscribe` OOM-kills what does not fit).
+    pub admission: AdmissionMode,
 }
 
 impl GridSpec {
@@ -138,10 +145,12 @@ impl GridSpec {
             ],
             gpus: vec![2, 4],
             interarrivals_s: vec![0.5, 2.0],
+            interference: vec![InterferenceModel::Off],
             seeds: vec![DEFAULT_SEED],
             jobs_per_cell: 200,
             epochs: Some(1),
             cap: 7,
+            admission: AdmissionMode::Strict,
         }
     }
 
@@ -153,10 +162,12 @@ impl GridSpec {
             mixes: vec![MixSpec::preset("smalls").expect("built-in")],
             gpus: vec![2],
             interarrivals_s: vec![0.5],
+            interference: vec![InterferenceModel::Off],
             seeds: vec![DEFAULT_SEED, DEFAULT_SEED + 1],
             jobs_per_cell: 150,
             epochs: Some(1),
             cap: 7,
+            admission: AdmissionMode::Strict,
         }
     }
 
@@ -166,6 +177,7 @@ impl GridSpec {
             * self.mixes.len()
             * self.gpus.len()
             * self.interarrivals_s.len()
+            * self.interference.len()
             * self.seeds.len()
     }
 
@@ -179,6 +191,10 @@ impl GridSpec {
         anyhow::ensure!(
             !self.interarrivals_s.is_empty(),
             "grid axis 'interarrivals' is empty"
+        );
+        anyhow::ensure!(
+            !self.interference.is_empty(),
+            "grid axis 'interference' is empty"
         );
         anyhow::ensure!(!self.seeds.is_empty(), "grid axis 'seeds' is empty");
         anyhow::ensure!(self.jobs_per_cell >= 1, "jobs_per_cell must be >= 1");
@@ -214,7 +230,7 @@ impl GridSpec {
     }
 
     /// Expand to cells in the fixed nested order: policy → mix → gpus →
-    /// interarrival → seed.
+    /// interarrival → interference → seed.
     pub fn cells(&self) -> anyhow::Result<Vec<CellSpec>> {
         self.validate()?;
         let mut out = Vec::with_capacity(self.cell_count());
@@ -222,15 +238,18 @@ impl GridSpec {
             for mix in &self.mixes {
                 for &gpus in &self.gpus {
                     for &interarrival in &self.interarrivals_s {
-                        for &seed in &self.seeds {
-                            out.push(CellSpec {
-                                index: out.len(),
-                                policy,
-                                mix: mix.clone(),
-                                gpus,
-                                mean_interarrival_s: interarrival,
-                                seed,
-                            });
+                        for &interference in &self.interference {
+                            for &seed in &self.seeds {
+                                out.push(CellSpec {
+                                    index: out.len(),
+                                    policy,
+                                    mix: mix.clone(),
+                                    gpus,
+                                    mean_interarrival_s: interarrival,
+                                    interference,
+                                    seed,
+                                });
+                            }
                         }
                     }
                 }
@@ -270,6 +289,15 @@ impl GridSpec {
             ),
         )
         .set(
+            "interference",
+            Json::Arr(
+                self.interference
+                    .iter()
+                    .map(|m| Json::from_str_val(m.name()))
+                    .collect(),
+            ),
+        )
+        .set(
             "seeds",
             Json::Arr(self.seeds.iter().map(|&s| Json::from_u64(s)).collect()),
         )
@@ -281,7 +309,8 @@ impl GridSpec {
                 None => Json::Null,
             },
         )
-        .set("cap", Json::from_u64(self.cap as u64));
+        .set("cap", Json::from_u64(self.cap as u64))
+        .set("admission", Json::from_str_val(self.admission.name()));
         j
     }
 
@@ -299,10 +328,12 @@ impl GridSpec {
                     "mixes",
                     "gpus",
                     "interarrivals_s",
+                    "interference",
                     "seeds",
                     "jobs_per_cell",
                     "epochs",
                     "cap",
+                    "admission",
                 ]
                 .contains(&key.as_str()),
                 "unknown grid key '{key}'"
@@ -354,6 +385,30 @@ impl GridSpec {
                 })
                 .collect::<anyhow::Result<Vec<_>>>()?;
         }
+        if let Some(v) = obj.get("interference") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'interference' must be an array"))?;
+            grid.interference = arr
+                .iter()
+                .map(|m| {
+                    let name = m
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("interference entries must be strings"))?;
+                    InterferenceModel::parse(name).ok_or_else(|| {
+                        anyhow::anyhow!("unknown interference model '{name}' (off | linear | roofline)")
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = obj.get("admission") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("'admission' must be a string"))?;
+            grid.admission = AdmissionMode::parse(name).ok_or_else(|| {
+                anyhow::anyhow!("unknown admission mode '{name}' (strict | oversubscribe)")
+            })?;
+        }
         if let Some(v) = obj.get("seeds") {
             let arr = v
                 .as_arr()
@@ -394,6 +449,7 @@ pub struct CellSpec {
     pub mix: MixSpec,
     pub gpus: u32,
     pub mean_interarrival_s: f64,
+    pub interference: InterferenceModel,
     pub seed: u64,
 }
 
@@ -414,11 +470,12 @@ impl CellSpec {
     /// Short human-readable label for logs and CSV rows.
     pub fn label(&self) -> String {
         format!(
-            "{}/{}/g{}/ia{}/s{}",
+            "{}/{}/g{}/ia{}/{}/s{}",
             self.policy.name(),
             self.mix.name,
             self.gpus,
             self.mean_interarrival_s,
+            self.interference.name(),
             self.seed
         )
     }
@@ -466,6 +523,37 @@ mod tests {
         g.seeds = vec![u64::MAX];
         let err = g.cells().unwrap_err().to_string();
         assert!(err.contains("2^53"), "{err}");
+
+        let mut g = GridSpec::default_grid();
+        g.interference.clear();
+        let err = g.cells().unwrap_err().to_string();
+        assert!(err.contains("interference"), "{err}");
+    }
+
+    #[test]
+    fn interference_axis_expands_and_round_trips() {
+        let mut grid = GridSpec::default_grid();
+        grid.interference = vec![InterferenceModel::Off, InterferenceModel::Roofline];
+        grid.admission = AdmissionMode::Oversubscribe;
+        let cells = grid.cells().unwrap();
+        assert_eq!(cells.len(), 80, "40 base cells x 2 interference models");
+        // The axis sits between interarrival and seed in the expansion.
+        assert_eq!(cells[0].interference, InterferenceModel::Off);
+        assert_eq!(cells[grid.seeds.len()].interference, InterferenceModel::Roofline);
+        assert!(cells[0].label().contains("/off/"));
+        // JSON carries both the axis and the admission constant.
+        let back = GridSpec::from_json(&grid.to_json()).unwrap();
+        assert_eq!(back, grid);
+        let partial = Json::parse(r#"{"interference": ["roofline"], "admission": "oversubscribe"}"#)
+            .unwrap();
+        let g = GridSpec::from_json(&partial).unwrap();
+        assert_eq!(g.interference, vec![InterferenceModel::Roofline]);
+        assert_eq!(g.admission, AdmissionMode::Oversubscribe);
+        assert!(GridSpec::from_json(
+            &Json::parse(r#"{"interference": ["quadratic"]}"#).unwrap()
+        )
+        .is_err());
+        assert!(GridSpec::from_json(&Json::parse(r#"{"admission": "lenient"}"#).unwrap()).is_err());
     }
 
     #[test]

@@ -19,6 +19,24 @@ pub struct DcgmFields {
     pub drama: f64,
 }
 
+impl DcgmFields {
+    /// Clamp every field into `[0, 1]`. Whole-GPU sharing sums the
+    /// co-runners' busy integrals, and contention
+    /// (`simgpu::interference`) stretches them further — a
+    /// memory-stalled SM still reports active, which is exactly why a
+    /// contended MPS device shows *high* GRACT/SMACT at *low*
+    /// throughput — but the physical activity ratio of one device
+    /// cannot exceed 1.0.
+    pub fn clamp_unit(self) -> DcgmFields {
+        DcgmFields {
+            gract: self.gract.clamp(0.0, 1.0),
+            smact: self.smact.clamp(0.0, 1.0),
+            smocc: self.smocc.clamp(0.0, 1.0),
+            drama: self.drama.clamp(0.0, 1.0),
+        }
+    }
+}
+
 /// Instance-level metric report.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct InstanceLevel {
@@ -190,6 +208,24 @@ mod tests {
                 assert!((0.0..=1.0).contains(&f), "{p}: {f}");
             }
         }
+    }
+
+    #[test]
+    fn clamp_unit_bounds_contended_accounts() {
+        // A contended shared GPU can accumulate busy integrals beyond
+        // its elapsed time; the report caps at the physical 1.0 and
+        // leaves in-range values untouched.
+        let f = DcgmFields {
+            gract: 1.7,
+            smact: 0.4,
+            smocc: -0.1,
+            drama: 1.0,
+        };
+        let c = f.clamp_unit();
+        assert_eq!(c.gract, 1.0);
+        assert_eq!(c.smact, 0.4);
+        assert_eq!(c.smocc, 0.0);
+        assert_eq!(c.drama, 1.0);
     }
 
     #[test]

@@ -12,9 +12,10 @@
 
 use migsim::cluster::fleet::{FleetConfig, FleetSim};
 use migsim::cluster::metrics::FleetMetrics;
-use migsim::cluster::policy::PolicyKind;
+use migsim::cluster::policy::{AdmissionMode, PolicyKind};
 use migsim::cluster::trace::{poisson_trace, JobSpec, TraceConfig};
 use migsim::simgpu::calibration::Calibration;
+use migsim::simgpu::interference::InterferenceModel;
 use migsim::util::rng;
 
 /// Saturating homogeneous small-model stream: all jobs arrive within a
@@ -30,13 +31,35 @@ fn saturating_small_trace(jobs: u32) -> Vec<JobSpec> {
 }
 
 fn run_policy(kind: PolicyKind, trace: &[JobSpec], gpus: u32) -> FleetMetrics {
+    run_policy_with(kind, trace, gpus, InterferenceModel::Off)
+}
+
+fn run_policy_with(
+    kind: PolicyKind,
+    trace: &[JobSpec],
+    gpus: u32,
+    interference: InterferenceModel,
+) -> FleetMetrics {
     let cal = Calibration::paper();
     let config = FleetConfig {
         a100s: gpus,
         a30s: 0,
+        interference,
+        admission: AdmissionMode::Strict,
         ..FleetConfig::default()
     };
     FleetSim::new(config, kind.build(&cal, 7, None), cal, trace).run()
+}
+
+/// Saturating heterogeneous stream on the paper's §3.4 arrival mix.
+fn saturating_mix_trace(jobs: u32, mix: [f64; 3]) -> Vec<JobSpec> {
+    poisson_trace(&TraceConfig {
+        jobs,
+        mean_interarrival_s: 0.01,
+        mix,
+        epochs: Some(1),
+        seed: rng::resolve_seed(None),
+    })
 }
 
 #[test]
@@ -90,6 +113,96 @@ fn fleet_run_is_deterministic_for_a_fixed_seed() {
         let b = run_policy(kind, &trace, 2).to_json().to_string_pretty();
         assert_eq!(a, b, "{kind} diverged across identical runs");
     }
+}
+
+#[test]
+fn roofline_interference_slows_mps_jobs_but_not_mig() {
+    // The interference acceptance contract: on a bandwidth-heavy mix,
+    // turning the contention model on must stretch MPS per-job epoch
+    // (service) time, while MigStatic — whose jobs live in isolated
+    // instances — reproduces its interference=off run exactly.
+    let trace = saturating_mix_trace(24, [0.2, 0.3, 0.5]);
+    let mps_off = run_policy_with(PolicyKind::Mps, &trace, 2, InterferenceModel::Off);
+    let mps_roofline = run_policy_with(PolicyKind::Mps, &trace, 2, InterferenceModel::Roofline);
+    assert_eq!(mps_off.finished(), 24);
+    assert_eq!(mps_roofline.finished(), 24);
+    assert_eq!(mps_off.mean_slowdown, 1.0);
+    assert!(
+        mps_roofline.mean_slowdown > 1.0,
+        "contended MPS must report a slowdown: {}",
+        mps_roofline.mean_slowdown
+    );
+    assert!(
+        mps_roofline.mean_service_s() > mps_off.mean_service_s(),
+        "MPS per-job epoch time must exceed its interference=off value: {} !> {}",
+        mps_roofline.mean_service_s(),
+        mps_off.mean_service_s()
+    );
+
+    let mig_off = run_policy_with(PolicyKind::MigStatic, &trace, 2, InterferenceModel::Off);
+    let mig_roofline =
+        run_policy_with(PolicyKind::MigStatic, &trace, 2, InterferenceModel::Roofline);
+    assert_eq!(mig_off.makespan_s, mig_roofline.makespan_s, "MIG must be untouched");
+    assert_eq!(mig_off.mean_service_s(), mig_roofline.mean_service_s());
+    assert_eq!(mig_roofline.mean_slowdown, 1.0);
+}
+
+#[test]
+fn ranking_still_holds_with_roofline_on_the_paper_mix() {
+    // §5 with contention modeled: interference shrinks the MPS margin
+    // but must not flip the paper's aggregate ordering.
+    let trace = saturating_mix_trace(40, [0.5, 0.3, 0.2]);
+    let mps = run_policy_with(PolicyKind::Mps, &trace, 2, InterferenceModel::Roofline);
+    let mig = run_policy_with(PolicyKind::MigStatic, &trace, 2, InterferenceModel::Roofline);
+    let ts = run_policy_with(PolicyKind::TimeSlice, &trace, 2, InterferenceModel::Roofline);
+    for (name, m) in [("mps", &mps), ("mig-static", &mig), ("timeslice", &ts)] {
+        assert_eq!(m.finished(), 40, "{name}: {}", m.summary());
+    }
+    let t_mps = mps.aggregate_images_per_second();
+    let t_mig = mig.aggregate_images_per_second();
+    let t_ts = ts.aggregate_images_per_second();
+    assert!(
+        t_mps >= t_mig,
+        "Mps must stay >= MigStatic under roofline: {t_mps} vs {t_mig}\n{}\n{}",
+        mps.summary(),
+        mig.summary()
+    );
+    assert!(
+        t_mig > t_ts,
+        "MigStatic must stay > TimeSlice under roofline: {t_mig} vs {t_ts}\n{}\n{}",
+        mig.summary(),
+        ts.summary()
+    );
+}
+
+#[test]
+fn oversubscribed_admission_is_deterministic_and_structured() {
+    // A saturating all-large stream under oversubscription: the 38 GB
+    // usable holds four 9.4 GB floors, so every further placement dies
+    // as OomKilled — never a panic, never an unserved limbo — and the
+    // run stays bit-reproducible.
+    let trace = saturating_mix_trace(30, [0.0, 0.0, 1.0]);
+    let cal = Calibration::paper();
+    let run = || {
+        let config = FleetConfig {
+            a100s: 1,
+            a30s: 0,
+            admission: AdmissionMode::Oversubscribe,
+            ..FleetConfig::default()
+        };
+        FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace).run()
+    };
+    let a = run();
+    assert_eq!(a.finished() + a.oom_killed(), 30, "{}", a.summary());
+    assert_eq!(a.rejected(), 0);
+    assert_eq!(a.unserved(), 0);
+    assert!(a.oom_killed() > 0, "a saturated heavy mix must overcommit: {}", a.summary());
+    let b = run();
+    assert_eq!(
+        a.to_json().to_string_pretty(),
+        b.to_json().to_string_pretty(),
+        "oversubscribed runs diverged"
+    );
 }
 
 #[test]

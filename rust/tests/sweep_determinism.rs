@@ -4,17 +4,19 @@
 //! sweep — 1, 2 or 8. This is what makes `BENCH_*.json` images/s
 //! values gateable and sweep results reviewable in diffs.
 
-use migsim::cluster::policy::PolicyKind;
+use migsim::cluster::policy::{AdmissionMode, PolicyKind};
 use migsim::report::sweep::summary_json_text;
 use migsim::simgpu::calibration::Calibration;
+use migsim::simgpu::interference::InterferenceModel;
 use migsim::sweep::engine::run_sweep;
 use migsim::sweep::grid::{GridSpec, MixSpec};
 use migsim::util::prop::forall_ok;
 use migsim::util::rng::Rng;
 
 /// Draw a small random grid: 1–3 policies, one preset mix, 1–2 GPUs,
-/// 1–2 seeds, 10–40 jobs per cell. Small enough that the three runs
-/// per case stay fast, varied enough to exercise every policy path.
+/// 1–2 interference models, either admission mode, 1–2 seeds, 10–40
+/// jobs per cell. Small enough that the three runs per case stay fast,
+/// varied enough to exercise every policy/contention/admission path.
 fn random_grid(r: &mut Rng) -> GridSpec {
     let n_policies = 1 + r.below(3) as usize;
     let policies: Vec<PolicyKind> = (0..n_policies)
@@ -22,6 +24,16 @@ fn random_grid(r: &mut Rng) -> GridSpec {
         .collect();
     let presets = ["smalls", "paper", "heavy"];
     let mix = MixSpec::preset(presets[r.below(3) as usize]).expect("built-in");
+    let interference = if r.below(2) == 0 {
+        vec![InterferenceModel::Off]
+    } else {
+        vec![InterferenceModel::Linear, InterferenceModel::Roofline]
+    };
+    let admission = if r.below(4) == 0 {
+        AdmissionMode::Oversubscribe
+    } else {
+        AdmissionMode::Strict
+    };
     let n_seeds = 1 + r.below(2);
     let seeds: Vec<u64> = (0..n_seeds).map(|i| 1000 + i * 17 + r.below(1000)).collect();
     GridSpec {
@@ -29,10 +41,12 @@ fn random_grid(r: &mut Rng) -> GridSpec {
         mixes: vec![mix],
         gpus: vec![1 + r.below(2) as u32],
         interarrivals_s: vec![0.2 + r.next_f64() * 2.0],
+        interference,
         seeds,
         jobs_per_cell: 10 + r.below(31) as u32,
         epochs: Some(1),
         cap: 7,
+        admission,
     }
 }
 
@@ -83,6 +97,7 @@ fn grid_expansion_rejects_empty_axes_with_a_clear_error() {
         ("mixes", Box::new(|g: &mut GridSpec| g.mixes.clear())),
         ("gpus", Box::new(|g: &mut GridSpec| g.gpus.clear())),
         ("interarrivals", Box::new(|g: &mut GridSpec| g.interarrivals_s.clear())),
+        ("interference", Box::new(|g: &mut GridSpec| g.interference.clear())),
         ("seeds", Box::new(|g: &mut GridSpec| g.seeds.clear())),
     ] {
         let mut grid = GridSpec::default_grid();
