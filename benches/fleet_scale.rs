@@ -31,7 +31,7 @@ fn main() {
         mean_interarrival_s: 2.0,
         mix: [0.6, 0.3, 0.1],
         epochs: Some(1),
-        seed: migsim::util::rng::resolve_seed(None),
+        seed: migsim::util::rng::resolve_seed(None).expect("valid MIGSIM_SEED"),
     });
 
     let mut report = BenchReport::new("fleet_scale");

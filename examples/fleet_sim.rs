@@ -22,7 +22,7 @@ fn main() {
         mean_interarrival_s: 5.0,
         mix: [0.6, 0.3, 0.1],
         epochs: Some(1),
-        seed: migsim::util::rng::resolve_seed(None),
+        seed: migsim::util::rng::resolve_seed(None).expect("valid MIGSIM_SEED"),
     });
     println!(
         "fleet: 4x A100 | trace: {} jobs (60% small / 30% medium / 10% large), \

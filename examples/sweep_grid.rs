@@ -29,7 +29,8 @@ fn main() {
         gpus: vec![2],
         interarrivals_s: vec![0.5, 4.0],
         interference: vec![InterferenceModel::Off, InterferenceModel::Roofline],
-        seeds: vec![migsim::util::rng::resolve_seed(None)],
+        queues: vec![migsim::cluster::queue::QueueDiscipline::Fifo],
+        seeds: vec![migsim::util::rng::resolve_seed(None).expect("valid MIGSIM_SEED")],
         jobs_per_cell: 120,
         epochs: Some(1),
         cap: 7,

@@ -10,6 +10,11 @@
 //! number breaks the remaining ties, keeping the ordering *total* and
 //! deterministic: a fleet run is bit-reproducible for a fixed seed
 //! regardless of how many events collide on a timestamp.
+//!
+//! Every popped finish and repartition re-runs the placement pass, so
+//! backfill disciplines re-scan the queue (with reservations
+//! recomputed from the surviving finish estimates) at exactly the
+//! moments the fleet state changes.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;

@@ -22,6 +22,12 @@
 //!   Oversubscribed admission (`FleetConfig::admission`) turns the §4
 //!   memory floors soft: what the policy places beyond them dies at
 //!   placement with a structured `JobOutcome::OomKilled`.
+//! * **Queue disciplines** — the admission queue ([`super::queue`])
+//!   runs under a [`QueueDiscipline`]: `fifo` (place only the head —
+//!   PR 1 bit-for-bit), EASY/conservative backfilling (reservation-
+//!   guarded placements past a blocked head, re-scanned on every
+//!   finish and repartition event) or `sjf`. The report carries the
+//!   `backfilled` count and the total head-of-line blocked time.
 //! * **Telemetry** — every rate interval accrues the job's per-step
 //!   activity account onto its GPU, so the run ends with per-GPU
 //!   GRACT/SMACT/SMOCC/DRAMA via [`crate::telemetry::dcgm`] — and the
@@ -35,9 +41,10 @@
 use super::event::{EventKind, JobId, Timeline};
 use super::metrics::{FleetMetrics, GpuRecord, JobOutcome, JobRecord};
 use super::policy::{
-    usable_bytes, AdmissionMode, Decision, FleetView, GpuView, SchedulingPolicy, ShareModel,
+    fits_instance, usable_bytes, AdmissionMode, Decision, FleetView, GpuView, SchedulingPolicy,
+    ShareModel,
 };
-use super::queue::JobQueue;
+use super::queue::{JobQueue, QueueDiscipline, Reservation};
 use super::trace::JobSpec;
 use crate::mig::a30::A30Profile;
 use crate::mig::profile::MigProfile;
@@ -135,6 +142,9 @@ pub struct FleetConfig {
     /// `Oversubscribe` admits beyond them and OOM-kills what does not
     /// fit (the paper's §4 crash as a structured outcome).
     pub admission: AdmissionMode,
+    /// Admission-queue discipline (`fifo` reproduces PR 1 bit-for-bit;
+    /// the backfill family and `sjf` place past a blocked head).
+    pub queue: QueueDiscipline,
 }
 
 impl Default for FleetConfig {
@@ -146,6 +156,7 @@ impl Default for FleetConfig {
             seed: crate::util::rng::DEFAULT_SEED,
             interference: InterferenceModel::Off,
             admission: AdmissionMode::Strict,
+            queue: QueueDiscipline::Fifo,
         }
     }
 }
@@ -203,6 +214,17 @@ struct JobState {
     device_frac: f64,
     /// Worst contention slowdown the job has experienced (1.0 = none).
     peak_slowdown: f64,
+    /// Contention slowdown of the current placement (1.0 on MIG).
+    cur_slowdown: f64,
+    /// ∫ slowdown · d(busy time) over the job's service so far — the
+    /// numerator of its busy-time-weighted mean slowdown.
+    slowdown_integral: f64,
+    /// Busy service time accumulated so far (the integral's weight).
+    service_s: f64,
+    /// Absolute time of the job's currently scheduled finish event —
+    /// exact for MIG slots, the latest estimate under co-runner churn.
+    /// Backfill reservations are computed from these.
+    expected_finish_s: f64,
     gpu: Option<usize>,
     slot: Option<usize>,
     gen: u64,
@@ -227,6 +249,35 @@ pub struct FleetSim {
     now: f64,
     rate_cache: BTreeMap<RateKey, StepStats>,
     demand_cache: BTreeMap<(GpuKind, WorkloadSize), DemandProfile>,
+    /// Current queue head and since when it has been blocked, for the
+    /// head-of-line wait account.
+    hol_since: Option<(JobId, f64)>,
+    /// Total time any queue head spent blocked over the run.
+    hol_wait_s: f64,
+}
+
+/// Outcome of offering one waiting job to the policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Attempt {
+    /// Placed and now running; removed from the queue.
+    Placed,
+    /// Removed from the queue without running (rejected by admission
+    /// control, or OOM-killed at an oversubscribed placement).
+    Terminal,
+    /// Nothing fits right now; the job stays queued.
+    Blocked,
+}
+
+/// Outcome of offering one backfill candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum BackfillOutcome {
+    /// Fleet or queue state changed (placed, OOM-killed or rejected):
+    /// restart the scan with fresh reservations.
+    Progress,
+    /// Candidate stays queued; keep scanning.
+    Skipped,
+    /// No further backfilling is safe on this scan.
+    Stop,
 }
 
 impl FleetSim {
@@ -301,6 +352,10 @@ impl FleetSim {
                     per_step: StepStats::default(),
                     device_frac: 0.0,
                     peak_slowdown: 1.0,
+                    cur_slowdown: 1.0,
+                    slowdown_integral: 0.0,
+                    service_s: 0.0,
+                    expected_finish_s: f64::INFINITY,
                     gpu: None,
                     slot: None,
                     gen: 0,
@@ -319,11 +374,13 @@ impl FleetSim {
             contention: ContentionModel::new(config.interference),
             gpus,
             jobs,
-            queue: JobQueue::new(),
+            queue: JobQueue::new(config.queue),
             timeline: Timeline::new(),
             now: 0.0,
             rate_cache: BTreeMap::new(),
             demand_cache: BTreeMap::new(),
+            hol_since: None,
+            hol_wait_s: 0.0,
         })
     }
 
@@ -393,41 +450,445 @@ impl FleetSim {
 
     // -- placement -----------------------------------------------------
 
-    /// Place head-of-queue jobs until the head must wait (strict FIFO).
+    /// Drain the queue as far as the active [`QueueDiscipline`] allows.
     ///
     /// Fully drained GPUs are first offered to the policy for
     /// reconfiguration (MigDynamic's drain-and-repartition): with a
     /// backlog of small jobs, a GPU that empties gets rebuilt as
     /// 7x 1g.5gb *before* the next placement locks its layout in.
+    ///
+    /// Runs on every arrival, finish and repartition event, so
+    /// backfill opportunities are re-scanned (and reservations
+    /// recomputed from scratch — never stale) whenever the fleet state
+    /// changes.
     fn try_place(&mut self) {
         self.maybe_repartition_idle_gpus();
-        loop {
-            let Some(head) = self.queue.head() else { break };
-            let workload = self.jobs[head].spec.workload;
-            let view = self.view();
-            match self.policy.place(workload, &view) {
-                Decision::Slot { gpu, slot } => {
-                    assert!(self.share_model.is_none(), "Slot decision from a shared policy");
-                    self.queue.pop();
-                    match self.oom_check_slot(head, gpu, slot) {
-                        Some(reason) => self.jobs[head].oomed = Some(reason),
-                        None => self.place_slot(head, gpu, slot),
-                    }
-                }
-                Decision::Share { gpu } => {
-                    assert!(self.share_model.is_some(), "Share decision from a MIG policy");
-                    self.queue.pop();
-                    match self.oom_check_share(head, gpu) {
-                        Some(reason) => self.jobs[head].oomed = Some(reason),
-                        None => self.place_share(head, gpu),
-                    }
-                }
-                Decision::Reject(reason) => {
-                    self.queue.pop();
-                    self.jobs[head].rejected = Some(reason);
-                }
-                Decision::Wait => break,
+        match self.queue.discipline() {
+            QueueDiscipline::Fifo => self.place_fifo(),
+            QueueDiscipline::Sjf => self.place_sjf(),
+            QueueDiscipline::BackfillEasy => self.place_backfill(false),
+            QueueDiscipline::BackfillConservative => self.place_backfill(true),
+        }
+        self.note_hol_state();
+    }
+
+    /// Strict FIFO: place head-of-queue jobs until the head must wait.
+    /// This is PR 1's placement loop verbatim — `fifo` runs reproduce
+    /// the pre-discipline simulator bit-for-bit.
+    fn place_fifo(&mut self) {
+        while let Some(head) = self.queue.head() {
+            if self.attempt_place(head) == Attempt::Blocked {
+                break;
             }
+        }
+    }
+
+    /// Shortest-job-first: offer waiting jobs in order of estimated
+    /// service time (canonical whole-device rate; ties break on
+    /// arrival), greedily skipping whatever does not fit right now. No
+    /// starvation protection by design.
+    ///
+    /// One sorted walk per pass suffices: the estimates are
+    /// placement-independent and placements only *consume* capacity
+    /// (nothing frees mid-pass), so neither the order nor a `Blocked`
+    /// verdict can change until the next event.
+    fn place_sjf(&mut self) {
+        let ids: Vec<JobId> = self.queue.iter().collect();
+        if ids.is_empty() {
+            return;
+        }
+        let mut order: Vec<(f64, JobId)> = ids
+            .iter()
+            .map(|&id| (self.est_service_canonical(id), id))
+            .collect();
+        order.sort_by(|a, b| a.0.total_cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        let mut placed: Vec<JobId> = Vec::new();
+        // Once one candidate of a workload size is Blocked, every later
+        // same-size candidate is too (decisions depend only on the
+        // workload and a view that placements can only shrink), so the
+        // pass offers each size at most once past its first Block.
+        let mut blocked: Vec<WorkloadSize> = Vec::new();
+        for (_, id) in order {
+            let workload = self.jobs[id].spec.workload;
+            if blocked.contains(&workload) {
+                continue;
+            }
+            match self.attempt_place(id) {
+                Attempt::Placed => placed.push(id),
+                Attempt::Terminal => {}
+                Attempt::Blocked => blocked.push(workload),
+            }
+        }
+        // A placement jumped the arrival order only if someone who
+        // arrived earlier is *still waiting* when the pass ends — a
+        // same-instant reshuffle that leaves nobody behind is FIFO in
+        // everything but program order (trace ids are arrival order).
+        let min_waiting = self.queue.iter().min();
+        if let Some(min_waiting) = min_waiting {
+            let jumped = placed.iter().filter(|&&id| id > min_waiting).count();
+            for _ in 0..jumped {
+                self.queue.note_backfill();
+            }
+        }
+    }
+
+    /// Backfilling: the head keeps absolute priority (the FIFO phase),
+    /// and when it blocks, jobs behind it are placed out of order only
+    /// when they cannot delay the head's reservation (EASY) — or any
+    /// blocked job's reservation (`conservative`).
+    fn place_backfill(&mut self, conservative: bool) {
+        loop {
+            // FIFO phase — identical to `place_fifo`.
+            while let Some(head) = self.queue.head() {
+                if self.attempt_place(head) == Attempt::Blocked {
+                    break;
+                }
+            }
+            let Some(head) = self.queue.head() else { return };
+            // The head is blocked. Without a computable reservation
+            // (e.g. MigDynamic waiting for a drain-and-repartition to
+            // mint a fitting instance) no backfilling happens at all:
+            // extra placements could postpone that drain indefinitely.
+            let Some(head_res) = self.reservation_for(head) else {
+                return;
+            };
+            let mut reservations = vec![head_res];
+            let mut progressed = false;
+            for id in self.queue.behind_head() {
+                match self.try_backfill(id, &mut reservations, conservative) {
+                    // Placement/rejection changed the fleet or queue
+                    // state: restart the scan with fresh reservations.
+                    // Restarts stay cheap in aggregate — successful
+                    // backfills per pass are bounded by the capacity
+                    // the triggering event freed (one slot per finish,
+                    // one GPU per repartition), not by queue depth.
+                    BackfillOutcome::Progress => {
+                        progressed = true;
+                        break;
+                    }
+                    BackfillOutcome::Skipped => continue,
+                    BackfillOutcome::Stop => return,
+                }
+            }
+            if !progressed {
+                return;
+            }
+        }
+    }
+
+    /// Offer job `id` to the policy right now. On anything but
+    /// `Blocked` the job leaves the queue (placed, OOM-killed at
+    /// placement, or rejected by admission control).
+    fn attempt_place(&mut self, id: JobId) -> Attempt {
+        let workload = self.jobs[id].spec.workload;
+        let view = self.view();
+        match self.policy.place(workload, &view) {
+            Decision::Slot { gpu, slot } => {
+                assert!(self.share_model.is_none(), "Slot decision from a shared policy");
+                self.queue.remove(id);
+                match self.oom_check_slot(id, gpu, slot) {
+                    Some(reason) => {
+                        self.jobs[id].oomed = Some(reason);
+                        Attempt::Terminal
+                    }
+                    None => {
+                        self.place_slot(id, gpu, slot);
+                        Attempt::Placed
+                    }
+                }
+            }
+            Decision::Share { gpu } => {
+                assert!(self.share_model.is_some(), "Share decision from a MIG policy");
+                self.queue.remove(id);
+                match self.oom_check_share(id, gpu) {
+                    Some(reason) => {
+                        self.jobs[id].oomed = Some(reason);
+                        Attempt::Terminal
+                    }
+                    None => {
+                        self.place_share(id, gpu);
+                        Attempt::Placed
+                    }
+                }
+            }
+            Decision::Reject(reason) => {
+                self.queue.remove(id);
+                self.jobs[id].rejected = Some(reason);
+                Attempt::Terminal
+            }
+            Decision::Wait => Attempt::Blocked,
+        }
+    }
+
+    /// Offer backfill candidate `id`: place it only when the placement
+    /// cannot delay any held reservation — a MIG candidate runs in an
+    /// instance disjoint from every reserved one or estimates to
+    /// finish before the reserved start; a shared-GPU candidate must
+    /// stay off reserved GPUs entirely (joining one re-rates its
+    /// residents and always pushes the reserved start). Under
+    /// `conservative`, blocked
+    /// candidates add their own reservations to the set, and a
+    /// fits-now-but-unsafe candidate pins its target resource so later
+    /// candidates cannot take it out from under it.
+    fn try_backfill(
+        &mut self,
+        id: JobId,
+        reservations: &mut Vec<Reservation>,
+        conservative: bool,
+    ) -> BackfillOutcome {
+        let workload = self.jobs[id].spec.workload;
+        let view = self.view();
+        match self.policy.place(workload, &view) {
+            Decision::Wait => {
+                if !conservative {
+                    return BackfillOutcome::Skipped;
+                }
+                match self.reservation_for(id) {
+                    Some(r) => {
+                        reservations.push(r);
+                        BackfillOutcome::Skipped
+                    }
+                    // A blocked job with no estimable start: nothing
+                    // behind it can be proven delay-safe.
+                    None => BackfillOutcome::Stop,
+                }
+            }
+            Decision::Reject(reason) => {
+                self.queue.remove(id);
+                self.jobs[id].rejected = Some(reason);
+                BackfillOutcome::Progress
+            }
+            Decision::Slot { gpu, slot } => {
+                assert!(self.share_model.is_none(), "Slot decision from a shared policy");
+                let est_finish = self.now + self.est_service_slot(id, gpu, slot);
+                let safe = reservations
+                    .iter()
+                    .all(|r| !r.claims_slot(gpu, slot) || est_finish <= r.start_s);
+                if safe {
+                    self.queue.remove(id);
+                    match self.oom_check_slot(id, gpu, slot) {
+                        // An OOM-killed candidate never ran: it is not
+                        // a backfill, just an oversubscribed casualty.
+                        Some(reason) => self.jobs[id].oomed = Some(reason),
+                        None => {
+                            self.place_slot(id, gpu, slot);
+                            self.queue.note_backfill();
+                        }
+                    }
+                    BackfillOutcome::Progress
+                } else {
+                    if conservative {
+                        reservations.push(Reservation {
+                            start_s: self.now,
+                            gpu,
+                            slot: Some(slot),
+                        });
+                    }
+                    BackfillOutcome::Skipped
+                }
+            }
+            Decision::Share { gpu } => {
+                assert!(self.share_model.is_some(), "Share decision from a MIG policy");
+                // Shared-mode backfill is cross-GPU only: joining the
+                // reserved GPU re-rates every resident at n+1
+                // co-runners, which pushes the reservation-defining
+                // finish — and so the head's start — later no matter
+                // how short the candidate is. There is no delay-free
+                // same-GPU placement to estimate.
+                let safe = reservations.iter().all(|r| !r.claims_gpu(gpu));
+                if safe {
+                    self.queue.remove(id);
+                    match self.oom_check_share(id, gpu) {
+                        Some(reason) => self.jobs[id].oomed = Some(reason),
+                        None => {
+                            self.place_share(id, gpu);
+                            self.queue.note_backfill();
+                        }
+                    }
+                    BackfillOutcome::Progress
+                } else {
+                    if conservative {
+                        reservations.push(Reservation {
+                            start_s: self.now,
+                            gpu,
+                            slot: None,
+                        });
+                    }
+                    BackfillOutcome::Skipped
+                }
+            }
+        }
+    }
+
+    /// Estimate when and where blocked job `id` can earliest start,
+    /// from the running jobs' expected finish times. `None` when no
+    /// currently existing placement could ever serve it (a repartition
+    /// would have to mint one first) — the caller then refuses to
+    /// backfill rather than risk delaying the job indefinitely.
+    ///
+    /// Exact for MIG fleets (slot rates never change); an estimate
+    /// under whole-GPU sharing, where co-runner churn and contention
+    /// move the finish times — the standard backfill caveat, no worse
+    /// than the user-supplied walltimes real schedulers trust.
+    fn reservation_for(&mut self, id: JobId) -> Option<Reservation> {
+        let workload = self.jobs[id].spec.workload;
+        let strict = self.config.admission == AdmissionMode::Strict;
+        match self.share_model {
+            None => {
+                // Earliest-freeing instance the job could take. Only
+                // fitting shapes count — unless the policy's
+                // oversubscribed fallback really would place this job
+                // into any free instance (MigStatic semantics;
+                // MigDynamic keeps servable jobs waiting for a drain,
+                // so their reservations must not claim slots they
+                // cannot use — that would defeat the no-backfill
+                // guard and starve the head).
+                let any_slot = !strict && {
+                    let view = self.view();
+                    self.policy.oversubscribed_fallback(workload, &view)
+                };
+                let mut best: Option<(f64, usize, usize)> = None;
+                for (gi, g) in self.gpus.iter().enumerate() {
+                    if g.repartitioning {
+                        continue;
+                    }
+                    for (si, slot) in g.partition.iter().enumerate() {
+                        if !any_slot && !fits_instance(workload, slot.shape.memory_bytes) {
+                            continue;
+                        }
+                        let t = match slot.job {
+                            // Free but unchosen (defensive): startable now.
+                            None => self.now,
+                            Some(occ) => self.jobs[occ].expected_finish_s,
+                        };
+                        if best.map(|b| (t, gi, si) < b).unwrap_or(true) {
+                            best = Some((t, gi, si));
+                        }
+                    }
+                }
+                best.map(|(start_s, gpu, slot)| Reservation {
+                    start_s,
+                    gpu,
+                    slot: Some(slot),
+                })
+            }
+            Some(_) => {
+                let need = self.jobs[id].floor_bytes;
+                let cap = self.policy.shared_cap().unwrap_or(1) as usize;
+                let mut best: Option<(f64, usize)> = None;
+                for (gi, g) in self.gpus.iter().enumerate() {
+                    if g.repartitioning {
+                        continue;
+                    }
+                    let usable = usable_bytes(g.kind.spec().dram_capacity);
+                    if strict && need > usable {
+                        continue; // can never fit this GPU
+                    }
+                    // Free residents in expected-finish order until the
+                    // job clears both the co-runner cap and (under
+                    // strict admission) the aggregate memory floors.
+                    let mut fins: Vec<(f64, u64)> = g
+                        .residents
+                        .iter()
+                        .map(|&r| (self.jobs[r].expected_finish_s, self.jobs[r].floor_bytes))
+                        .collect();
+                    fins.sort_by(|a, b| a.0.total_cmp(&b.0));
+                    let mut count = fins.len();
+                    let mut floors: u64 = fins.iter().map(|f| f.1).sum();
+                    let mut start = self.now;
+                    let fits = |count: usize, floors: u64| {
+                        count < cap && (!strict || floors + need <= usable)
+                    };
+                    let mut found = fits(count, floors);
+                    if !found {
+                        for (t, fb) in fins {
+                            count -= 1;
+                            floors -= fb;
+                            start = t;
+                            if fits(count, floors) {
+                                found = true;
+                                break;
+                            }
+                        }
+                    }
+                    if found && best.map(|b| (start, gi) < b).unwrap_or(true) {
+                        best = Some((start, gi));
+                    }
+                }
+                best.map(|(start_s, gpu)| Reservation {
+                    start_s,
+                    gpu,
+                    slot: None,
+                })
+            }
+        }
+    }
+
+    /// Estimated service time of unstarted job `id` in MIG instance
+    /// `(gi, si)` — exact, since slot rates never change.
+    fn est_service_slot(&mut self, id: JobId, gi: usize, si: usize) -> f64 {
+        let kind = self.gpus[gi].kind;
+        let shape = self.gpus[gi].partition[si].shape;
+        let workload = self.jobs[id].spec.workload;
+        let stats = self.per_step(
+            kind,
+            workload,
+            RateMode::Slot {
+                sms: shape.sms,
+                mem_slices: shape.mem_slices,
+            },
+        );
+        self.est_from(id, stats)
+    }
+
+    /// Canonical service estimate for SJF ordering: the job's isolated
+    /// whole-device rate on the fleet's first GPU kind — a stable,
+    /// placement-independent proxy (memoized like every rate).
+    fn est_service_canonical(&mut self, id: JobId) -> f64 {
+        let kind = self.gpus[0].kind;
+        let mode = match self.share_model {
+            Some(ShareModel::Mps) => RateMode::Mps { n: 1 },
+            Some(ShareModel::TimeSlice) => RateMode::TimeSlice { n: 1 },
+            None => {
+                let spec = kind.spec();
+                RateMode::Slot {
+                    sms: spec.mig_sm_count,
+                    mem_slices: spec.memory_slices,
+                }
+            }
+        };
+        let workload = self.jobs[id].spec.workload;
+        let stats = self.per_step(kind, workload, mode);
+        self.est_from(id, stats)
+    }
+
+    /// Remaining steps at `stats`' rate, plus the fixed per-epoch
+    /// framework overhead for jobs that have not started yet (started
+    /// jobs already carry it inside `remaining_steps`).
+    fn est_from(&self, id: JobId, stats: StepStats) -> f64 {
+        let j = &self.jobs[id];
+        let overhead = if j.start_s.is_none() {
+            j.spec.epochs as f64 * self.cal.epoch_overhead_s
+        } else {
+            0.0
+        };
+        j.remaining_steps * stats.wall_s + overhead
+    }
+
+    /// Head-of-line wait accounting: close the previous head's blocked
+    /// span when the head changed, and open one for the current head.
+    /// Called at the end of every placement pass, so a head that stays
+    /// blocked keeps accruing from when it first reached the front.
+    fn note_hol_state(&mut self) {
+        let head = self.queue.head();
+        match (self.hol_since, head) {
+            (Some((id, _)), Some(h)) if id == h => {}
+            (Some((_, since)), new) => {
+                self.hol_wait_s += self.now - since;
+                self.hol_since = new.map(|h| (h, self.now));
+            }
+            (None, Some(h)) => self.hol_since = Some((h, self.now)),
+            (None, None) => {}
         }
     }
 
@@ -587,6 +1048,9 @@ impl FleetSim {
             let factor = self.contention.slowdown(&spec, &self.cal, &profiles, i);
             let stats = apply_slowdown(base, factor);
             self.jobs[id].peak_slowdown = self.jobs[id].peak_slowdown.max(factor);
+            // The preceding `update_gpu` accrued the old interval at
+            // the old factor; the new one applies from `now` on.
+            self.jobs[id].cur_slowdown = factor;
             self.jobs[id].device_frac = frac;
             self.start_job(id, gi, None, stats);
         }
@@ -622,6 +1086,7 @@ impl FleetSim {
         j.per_step = stats;
         j.gen += 1;
         let finish = self.now + j.remaining_steps * stats.wall_s;
+        j.expected_finish_s = finish;
         let gen = j.gen;
         self.timeline.push(finish, EventKind::Finish { job: id, gen });
     }
@@ -645,6 +1110,12 @@ impl FleetSim {
             }
             let steps = (dt / j.per_step.wall_s).min(j.remaining_steps);
             j.remaining_steps -= steps;
+            // Busy-time-weighted slowdown account: weight the interval
+            // actually spent stepping (≤ dt for a job that finished
+            // mid-interval) by the contention factor it ran under.
+            let served = steps * j.per_step.wall_s;
+            j.slowdown_integral += j.cur_slowdown * served;
+            j.service_s += served;
             // Activity weighted by the placement's compute share of the
             // device (DRAM bytes stay unweighted: device-level DRAMA
             // divides by full-device bandwidth, which already encodes
@@ -729,6 +1200,10 @@ impl FleetSim {
         for gi in 0..self.gpus.len() {
             self.update_gpu(gi);
         }
+        // Close the open head-of-line span (unserved backlogs).
+        if let Some((_, since)) = self.hol_since.take() {
+            self.hol_wait_s += self.now - since;
+        }
         let elapsed = self.now;
         let jobs: Vec<JobRecord> = self
             .jobs
@@ -752,19 +1227,36 @@ impl FleetSim {
                 }
             })
             .collect();
-        let slowdowns: Vec<f64> = self
-            .jobs
-            .iter()
-            .filter(|j| j.start_s.is_some())
-            .map(|j| j.peak_slowdown)
-            .collect();
-        // "1.0 = no interference" also covers the degenerate run where
-        // nothing was ever placed — 0.0 would read as a speedup.
-        let mean_slowdown = if slowdowns.is_empty() {
-            1.0
-        } else {
-            slowdowns.iter().sum::<f64>() / slowdowns.len() as f64
+        // Two slowdown views over the jobs that ran: the busy-time-
+        // weighted mean (what contention cost on average) and the mean
+        // of per-job peaks (how bad the worst moment was). PR 3
+        // reported the peak mean *as* the mean — overstating sustained
+        // contention whenever a brief co-runner spike dominated a
+        // mostly-solo run.
+        let placed: Vec<&JobState> = self.jobs.iter().filter(|j| j.start_s.is_some()).collect();
+        let mean_of = |vals: &[f64]| -> f64 {
+            // "1.0 = no interference" also covers the degenerate run
+            // where nothing was ever placed — 0.0 would read as a
+            // speedup.
+            if vals.is_empty() {
+                1.0
+            } else {
+                vals.iter().sum::<f64>() / vals.len() as f64
+            }
         };
+        let means: Vec<f64> = placed
+            .iter()
+            .map(|j| {
+                if j.service_s > 0.0 {
+                    j.slowdown_integral / j.service_s
+                } else {
+                    j.peak_slowdown
+                }
+            })
+            .collect();
+        let peaks: Vec<f64> = placed.iter().map(|j| j.peak_slowdown).collect();
+        let mean_slowdown = mean_of(&means);
+        let peak_slowdown = mean_of(&peaks);
         let gpus: Vec<GpuRecord> = self
             .gpus
             .iter()
@@ -791,9 +1283,13 @@ impl FleetSim {
             seed: self.config.seed,
             interference: self.config.interference.name().to_string(),
             admission: self.config.admission.name().to_string(),
+            queue_discipline: self.queue.discipline().name().to_string(),
             makespan_s: elapsed,
             peak_queue: self.queue.peak_len(),
+            backfilled: self.queue.backfilled(),
+            hol_wait_s: self.hol_wait_s,
             mean_slowdown,
+            peak_slowdown,
             jobs,
             gpus,
         }
@@ -1208,6 +1704,54 @@ mod tests {
         assert_eq!(mig_off.makespan_s, mig_roofline.makespan_s);
         assert_eq!(mig_off.mean_service_s(), mig_roofline.mean_service_s());
         assert_eq!(mig_roofline.mean_slowdown, 1.0);
+    }
+
+    fn run_q(
+        policy: Box<dyn SchedulingPolicy>,
+        trace: &[JobSpec],
+        gpus: u32,
+        queue: QueueDiscipline,
+    ) -> FleetMetrics {
+        let config = FleetConfig {
+            a100s: gpus,
+            a30s: 0,
+            queue,
+            ..FleetConfig::default()
+        };
+        FleetSim::new(config, policy, cal(), trace).run()
+    }
+
+    #[test]
+    fn disciplines_match_fifo_on_a_homogeneous_stream() {
+        // Every waiting job is identical, so no discipline can usefully
+        // jump the head: simulated outcomes must agree with FIFO and no
+        // out-of-order placement may be counted.
+        let trace = small_trace(20, 0.001);
+        let fifo = run_q(Box::new(Mps { cap: 7 }), &trace, 1, QueueDiscipline::Fifo);
+        assert_eq!(fifo.backfilled, 0);
+        assert_eq!(fifo.queue_discipline, "fifo");
+        for q in QueueDiscipline::ALL {
+            let m = run_q(Box::new(Mps { cap: 7 }), &trace, 1, q);
+            assert_eq!(m.finished(), 20, "{q}");
+            assert_eq!(m.backfilled, 0, "{q}");
+            assert_eq!(m.makespan_s, fifo.makespan_s, "{q}");
+            assert_eq!(m.mean_wait_s(), fifo.mean_wait_s(), "{q}");
+            assert_eq!(m.queue_discipline, q.name());
+        }
+    }
+
+    #[test]
+    fn saturated_fifo_accrues_head_of_line_wait() {
+        // Back-to-back arrivals on one GPU: some head must block while
+        // the fleet is full, and the account must say for how long.
+        let trace = small_trace(20, 0.001);
+        let m = run_q(Box::new(Mps { cap: 7 }), &trace, 1, QueueDiscipline::Fifo);
+        assert!(m.hol_wait_s > 0.0, "hol {}", m.hol_wait_s);
+        assert!(m.hol_wait_s <= m.makespan_s, "{} vs {}", m.hol_wait_s, m.makespan_s);
+        // An uncontended fleet never blocks a head.
+        let idle = run_q(Box::new(Mps { cap: 7 }), &small_trace(5, 1e6), 2, QueueDiscipline::Fifo);
+        assert_eq!(idle.hol_wait_s, 0.0);
+        assert_eq!(idle.peak_slowdown, 1.0);
     }
 
     #[test]

@@ -75,13 +75,24 @@ pub struct FleetMetrics {
     pub interference: String,
     /// Admission semantics active for the run (strict | oversubscribe).
     pub admission: String,
+    /// Queue discipline active for the run (fifo | backfill-easy |
+    /// backfill-conservative | sjf).
+    pub queue_discipline: String,
     /// Last event time: the whole stream is served by here.
     pub makespan_s: f64,
     /// Admission-queue high-water mark.
     pub peak_queue: usize,
-    /// Mean peak contention slowdown over jobs that ran (1.0 = no
-    /// interference; MIG policies always report 1.0).
+    /// Placements that jumped the arrival order (0 under `fifo`).
+    pub backfilled: u64,
+    /// Total time any queue head spent blocked — the head-of-line
+    /// exposure backfilling works around.
+    pub hol_wait_s: f64,
+    /// Busy-time-weighted mean contention slowdown over jobs that ran
+    /// (1.0 = no interference; MIG policies always report 1.0).
     pub mean_slowdown: f64,
+    /// Mean of per-job *peak* slowdowns — the worst-moment view this
+    /// field's pre-PR-4 namesake (`mean_slowdown`) actually reported.
+    pub peak_slowdown: f64,
     pub jobs: Vec<JobRecord>,
     pub gpus: Vec<GpuRecord>,
 }
@@ -188,6 +199,7 @@ impl FleetMetrics {
             .set("seed", Json::from_u64(self.seed))
             .set("interference", Json::from_str_val(&self.interference))
             .set("admission", Json::from_str_val(&self.admission))
+            .set("queue_discipline", Json::from_str_val(&self.queue_discipline))
             .set("gpus", Json::from_u64(self.gpus.len() as u64))
             .set("jobs", Json::from_u64(self.jobs.len() as u64))
             .set("finished", Json::from_u64(self.finished() as u64))
@@ -196,7 +208,10 @@ impl FleetMetrics {
             .set("unserved", Json::from_u64(self.unserved() as u64))
             .set("makespan_s", Json::from_f64(self.makespan_s))
             .set("peak_queue", Json::from_u64(self.peak_queue as u64))
+            .set("backfilled", Json::from_u64(self.backfilled))
+            .set("hol_wait_s", Json::from_f64(self.hol_wait_s))
             .set("mean_slowdown", Json::from_f64(self.mean_slowdown))
+            .set("peak_slowdown", Json::from_f64(self.peak_slowdown))
             .set("mean_wait_s", Json::from_f64(self.mean_wait_s()))
             .set("p50_jct_s", Json::from_f64(self.p50_jct_s()))
             .set("p95_jct_s", Json::from_f64(self.p95_jct_s()))
@@ -230,8 +245,9 @@ impl FleetMetrics {
     /// One human-readable line for the CLI.
     pub fn summary(&self) -> String {
         format!(
-            "{:<12} {} jobs: {} finished, {} rejected, {} oom, {} unserved | makespan {} | wait μ {} | JCT p50 {} p95 {} | {:.1} img/s | GRACT μ {:.2} | slowdown μ {:.2}",
+            "{:<12} [{}] {} jobs: {} finished, {} rejected, {} oom, {} unserved | makespan {} | wait μ {} | hol {} | backfilled {} | JCT p50 {} p95 {} | {:.1} img/s | GRACT μ {:.2} | slowdown μ {:.2} peak {:.2}",
             self.policy,
+            self.queue_discipline,
             self.jobs.len(),
             self.finished(),
             self.rejected(),
@@ -239,11 +255,14 @@ impl FleetMetrics {
             self.unserved(),
             crate::util::fmt_duration(self.makespan_s),
             crate::util::fmt_duration(self.mean_wait_s()),
+            crate::util::fmt_duration(self.hol_wait_s),
+            self.backfilled,
             crate::util::fmt_duration(self.p50_jct_s()),
             crate::util::fmt_duration(self.p95_jct_s()),
             self.aggregate_images_per_second(),
             self.mean_gract(),
             self.mean_slowdown,
+            self.peak_slowdown,
         )
     }
 }
@@ -274,9 +293,13 @@ mod tests {
             seed: 1,
             interference: "off".into(),
             admission: "strict".into(),
+            queue_discipline: "fifo".into(),
             makespan_s: 100.0,
             peak_queue: 2,
+            backfilled: 0,
+            hol_wait_s: 0.0,
             mean_slowdown: 1.0,
+            peak_slowdown: 1.0,
             jobs,
             gpus: Vec::new(),
         }
@@ -335,6 +358,11 @@ mod tests {
         assert_eq!(back.get("finished").unwrap().as_u64(), Some(1));
         assert_eq!(back.get("policy").unwrap().as_str(), Some("test"));
         assert!(back.get("aggregate_images_per_second").unwrap().as_f64().is_some());
+        // Queue-discipline fields ride along in the summary.
+        assert_eq!(back.get("queue_discipline").unwrap().as_str(), Some("fifo"));
+        assert_eq!(back.get("backfilled").unwrap().as_u64(), Some(0));
+        assert!(back.get("hol_wait_s").unwrap().as_f64().is_some());
+        assert!(back.get("peak_slowdown").unwrap().as_f64().is_some());
         // Trace composition rides along in the summary.
         assert_eq!(back.at(&["trace", "small"]).unwrap().as_u64(), Some(1));
         assert_eq!(back.at(&["trace", "jobs"]).unwrap().as_u64(), Some(1));

@@ -19,7 +19,12 @@
 //! coming back with a new MIG layout). Ties pop in insertion order, so
 //! a run is bit-reproducible for a fixed `--seed`.
 //!
-//! Jobs wait in a strict-FIFO admission queue ([`queue`]); placement is
+//! Jobs wait in an admission queue ([`queue`]) driven by a
+//! [`queue::QueueDiscipline`]: strict `fifo` (place only the head),
+//! `backfill-easy` / `backfill-conservative` (reservation-guarded
+//! placements past a blocked head, ending head-of-line blocking the
+//! way EASY/conservative batch schedulers do) or `sjf`
+//! (shortest-job-first by estimated service time). Placement is
 //! guarded by the paper's §4 memory model — under strict admission a
 //! job is never placed where its TensorFlow memory floor does not fit
 //! (it queues instead), and a job that can *never* fit under the
@@ -69,5 +74,5 @@ pub use event::{Event, EventKind, JobId, Timeline};
 pub use fleet::{FleetConfig, FleetSim, GpuKind, InstanceShape};
 pub use metrics::{FleetMetrics, GpuRecord, JobOutcome, JobRecord};
 pub use policy::{Decision, FleetView, PolicyKind, SchedulingPolicy, ShareModel};
-pub use queue::JobQueue;
+pub use queue::{JobQueue, QueueDiscipline};
 pub use trace::{poisson_trace, JobSpec, TraceConfig};

@@ -2,9 +2,11 @@
 //! scale behind the [`SchedulingPolicy`] trait.
 //!
 //! Each policy answers one question: *given the current fleet state,
-//! where does the head-of-queue job go?* The fleet mechanics (rates,
-//! event bookkeeping, telemetry) are shared; only the placement
-//! decision and the sharing model differ:
+//! where does a waiting job go?* Which waiting job gets offered is the
+//! queue discipline's call ([`crate::cluster::queue`]) — the head
+//! under FIFO, any queued job under backfill/SJF. The fleet mechanics
+//! (rates, event bookkeeping, telemetry) are shared; only the
+//! placement decision and the sharing model differ:
 //!
 //! * [`Exclusive`] — one job per GPU, whole device (the paper's
 //!   non-MIG baseline; the 1-job-per-GPU cluster default).
@@ -34,7 +36,7 @@ use crate::simgpu::calibration::Calibration;
 use crate::workload::memory::{GpuMemoryPlan, USABLE_FRACTION};
 use crate::workload::spec::WorkloadSize;
 
-/// Where the head-of-queue job goes.
+/// Where the offered waiting job goes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Decision {
     /// Place into MIG instance `slot` of GPU `gpu`.
@@ -128,7 +130,9 @@ pub fn usable_bytes(capacity: u64) -> u64 {
 }
 
 /// Does the workload's memory plan fit an instance of `bytes` capacity?
-fn fits_instance(w: WorkloadSize, bytes: u64) -> bool {
+/// Public because the fleet's backfill reservations reuse the exact
+/// per-policy fit check the placement decisions are made with.
+pub fn fits_instance(w: WorkloadSize, bytes: u64) -> bool {
     GpuMemoryPlan::paper(w).allocate(bytes).is_some()
 }
 
@@ -144,8 +148,28 @@ pub trait SchedulingPolicy {
     /// The MIG partition each GPU starts with (empty in shared mode).
     fn initial_partition(&self, kind: GpuKind) -> Vec<InstanceShape>;
 
-    /// Decide where the head-of-queue job of `workload` goes.
+    /// Decide where a waiting job of `workload` goes. Queue
+    /// disciplines decide *which* waiting job is offered — the head
+    /// under FIFO, any queued job under backfill/SJF — so the decision
+    /// must depend only on the workload and the fleet view.
     fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision;
+
+    /// Co-runner cap of a shared-mode policy (`None` for MIG
+    /// policies). Backfill reservations replay the same cap the
+    /// placement decision enforces.
+    fn shared_cap(&self) -> Option<u32> {
+        None
+    }
+
+    /// Under oversubscribed admission, would [`Self::place`] fall back
+    /// to *any* free instance for a job of `workload` (MigStatic), or
+    /// does it still wait for a fitting placement (MigDynamic's
+    /// drain-and-repartition serves servable jobs)? Backfill
+    /// reservations mirror this so a blocked head is never "reserved"
+    /// onto an instance its policy would not actually place it into.
+    fn oversubscribed_fallback(&self, _workload: WorkloadSize, _view: &FleetView) -> bool {
+        false
+    }
 
     /// Offer a new partition for a fully drained GPU given the waiting
     /// workloads (head first). `None` = keep the current partition.
@@ -217,6 +241,10 @@ impl SchedulingPolicy for Exclusive {
     fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision {
         shared_place(1, workload, view)
     }
+
+    fn shared_cap(&self) -> Option<u32> {
+        Some(1)
+    }
 }
 
 /// MPS spatial sharing with at most `cap` co-runners per GPU.
@@ -240,6 +268,10 @@ impl SchedulingPolicy for Mps {
     fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision {
         shared_place(self.cap, workload, view)
     }
+
+    fn shared_cap(&self) -> Option<u32> {
+        Some(self.cap)
+    }
 }
 
 /// Default CUDA time-slicing with at most `cap` co-runners per GPU.
@@ -262,6 +294,10 @@ impl SchedulingPolicy for TimeSlice {
 
     fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision {
         shared_place(self.cap, workload, view)
+    }
+
+    fn shared_cap(&self) -> Option<u32> {
+        Some(self.cap)
     }
 }
 
@@ -384,6 +420,12 @@ impl SchedulingPolicy for MigStatic {
             ))
         }
     }
+
+    fn oversubscribed_fallback(&self, _workload: WorkloadSize, _view: &FleetView) -> bool {
+        // `place` shoves any job into any free instance when
+        // oversubscribed (the §4 crash): every slot is takeable.
+        true
+    }
 }
 
 /// Planner-driven repartitioning: drained GPUs are reconfigured for the
@@ -448,6 +490,16 @@ impl SchedulingPolicy for MigDynamic {
                 crate::util::fmt_bytes(floor_bytes(workload))
             ))
         }
+    }
+
+    fn oversubscribed_fallback(&self, workload: WorkloadSize, view: &FleetView) -> bool {
+        // Mirror of `place`: the fallback fires only for jobs no
+        // repartition could ever serve — servable jobs wait for a
+        // drain instead, so their reservations must not claim
+        // non-fitting slots.
+        !view.gpus.iter().any(|g| {
+            fits_instance(workload, g.kind.largest_instance_bytes())
+        })
     }
 
     fn repartition(&self, kind: GpuKind, waiting: &[WorkloadSize]) -> Option<Vec<InstanceShape>> {
@@ -704,6 +756,16 @@ mod tests {
         // Medium floor (5.3 GB) fits the 6 GB A30 slice: 4x 1g.6gb.
         assert_eq!(shapes.len(), 4);
         assert!(shapes.iter().all(|s| s.name == "1g.6gb"));
+    }
+
+    #[test]
+    fn shared_cap_mirrors_the_placement_cap() {
+        let cal = Calibration::paper();
+        assert_eq!(Exclusive.shared_cap(), Some(1));
+        assert_eq!(Mps { cap: 5 }.shared_cap(), Some(5));
+        assert_eq!(TimeSlice { cap: 3 }.shared_cap(), Some(3));
+        assert_eq!(MigStatic::new(None, None).shared_cap(), None);
+        assert_eq!(MigDynamic::new(&cal).shared_cap(), None);
     }
 
     #[test]

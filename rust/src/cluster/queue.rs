@@ -1,26 +1,163 @@
-//! The FIFO admission queue.
+//! The admission queue and its queue disciplines.
 //!
-//! Jobs wait here between arrival and placement. Ordering is strict
-//! FIFO: the scheduler only ever places the head (no backfilling), so
-//! a large job waiting for a big-enough instance is never starved by a
-//! stream of small jobs behind it. Jobs that can *never* run under the
-//! active policy are rejected at the head instead of waiting forever —
-//! the admission-control half of the paper's OOM boundary (§4).
+//! Jobs wait here between arrival and placement. PR 1's queue was
+//! strict FIFO that only ever offered its *head* to the scheduler, so
+//! one large job waiting for a big-enough instance stalled every small
+//! job behind it — classic head-of-line blocking, and exactly the
+//! regime where the paper's collocation benefit (§5) is understated.
+//! The queue now carries a [`QueueDiscipline`]:
+//!
+//! * **`fifo`** — the PR 1 behaviour, bit-for-bit: only the head is
+//!   ever offered; a blocked head stalls the queue.
+//! * **`backfill-easy`** — EASY backfilling: the head keeps absolute
+//!   priority, and when it blocks the fleet computes its earliest-start
+//!   *reservation* (from the running jobs' expected finish times in the
+//!   simgpu throughput table). Jobs behind the head may then be placed
+//!   out of order when doing so cannot delay that reservation — a MIG
+//!   candidate runs in an instance disjoint from the reserved one or
+//!   estimates to finish before the reserved start; a shared-GPU
+//!   candidate must stay off reserved GPUs entirely, because one more
+//!   co-runner always slows the residents the reservation is timed
+//!   on.
+//! * **`backfill-conservative`** — like EASY, but *every* blocked job
+//!   ahead of a candidate holds a reservation, and a candidate must be
+//!   delay-safe with respect to all of them. Fewer backfills, stronger
+//!   ordering guarantees.
+//! * **`sjf`** — shortest-job-first: waiting jobs are offered in order
+//!   of estimated service time (ties broken by arrival). No starvation
+//!   protection — a long job can wait indefinitely under a stream of
+//!   short ones; that trade-off is the point of comparing disciplines.
+//!
+//! The queue itself stays an arrival-ordered `VecDeque`; discipline
+//! semantics (which job to offer next, reservation bookkeeping) are
+//! driven by `cluster::fleet`, which re-scans the queue on every
+//! arrival, finish and repartition event. Reservations are recomputed
+//! from scratch on each scan — there is no persistent reservation
+//! state to invalidate, so a repartition or an early finish simply
+//! yields fresh (and never stale) estimates.
+//!
+//! Jobs that can *never* run under the active policy are rejected when
+//! first offered instead of waiting forever — the admission-control
+//! half of the paper's OOM boundary (§4).
 
 use super::event::JobId;
 use std::collections::VecDeque;
 
-/// FIFO queue of waiting jobs.
+/// Ordering policy of the admission queue.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum QueueDiscipline {
+    /// Strict arrival order; only the head is ever offered.
+    #[default]
+    Fifo,
+    /// EASY backfilling: FIFO head priority plus out-of-order
+    /// placements that cannot delay the head's reservation.
+    BackfillEasy,
+    /// Conservative backfilling: every blocked job holds a reservation
+    /// a backfill candidate must respect.
+    BackfillConservative,
+    /// Shortest-job-first by estimated service time (no starvation
+    /// protection).
+    Sjf,
+}
+
+impl QueueDiscipline {
+    pub const ALL: [QueueDiscipline; 4] = [
+        QueueDiscipline::Fifo,
+        QueueDiscipline::BackfillEasy,
+        QueueDiscipline::BackfillConservative,
+        QueueDiscipline::Sjf,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QueueDiscipline::Fifo => "fifo",
+            QueueDiscipline::BackfillEasy => "backfill-easy",
+            QueueDiscipline::BackfillConservative => "backfill-conservative",
+            QueueDiscipline::Sjf => "sjf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<QueueDiscipline> {
+        Self::ALL.iter().copied().find(|q| q.name() == s)
+    }
+
+    /// [`Self::parse`] with a ready-made error that names every
+    /// discipline — the one message every CLI/JSON surface shows.
+    pub fn parse_or_err(s: &str) -> anyhow::Result<QueueDiscipline> {
+        Self::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown queue discipline '{s}' (expected one of: {})",
+                Self::ALL.map(|q| q.name()).join(" | ")
+            )
+        })
+    }
+
+    /// Does the discipline place jobs past a blocked head under a
+    /// reservation (the backfill family)?
+    pub fn is_backfill(self) -> bool {
+        matches!(
+            self,
+            QueueDiscipline::BackfillEasy | QueueDiscipline::BackfillConservative
+        )
+    }
+}
+
+impl std::fmt::Display for QueueDiscipline {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A blocked job's earliest-start estimate and the resource it expects
+/// to take: a specific MIG instance (`slot: Some`) or a whole-GPU
+/// co-runner seat (`slot: None`). Backfill candidates must either stay
+/// off the reserved resource or finish before `start_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Reservation {
+    /// Estimated earliest start (absolute simulated seconds).
+    pub start_s: f64,
+    pub gpu: usize,
+    /// Reserved MIG instance; `None` reserves shared-GPU capacity.
+    pub slot: Option<usize>,
+}
+
+impl Reservation {
+    /// Would a MIG placement into `(gpu, slot)` contend with this
+    /// reservation?
+    pub fn claims_slot(&self, gpu: usize, slot: usize) -> bool {
+        self.gpu == gpu && self.slot.map(|s| s == slot).unwrap_or(true)
+    }
+
+    /// Would a whole-GPU co-runner placement on `gpu` contend with this
+    /// reservation?
+    pub fn claims_gpu(&self, gpu: usize) -> bool {
+        self.gpu == gpu
+    }
+}
+
+/// The admission queue: arrival-ordered storage plus the discipline
+/// the fleet drives it with.
 #[derive(Debug, Default)]
 pub struct JobQueue {
     items: VecDeque<JobId>,
+    discipline: QueueDiscipline,
     /// High-water mark, for the fleet report.
     peak: usize,
+    /// Placements that jumped a blocked job ahead of them in arrival
+    /// order (backfill or SJF reordering).
+    backfilled: u64,
 }
 
 impl JobQueue {
-    pub fn new() -> JobQueue {
-        JobQueue::default()
+    pub fn new(discipline: QueueDiscipline) -> JobQueue {
+        JobQueue {
+            discipline,
+            ..JobQueue::default()
+        }
+    }
+
+    pub fn discipline(&self) -> QueueDiscipline {
+        self.discipline
     }
 
     pub fn push(&mut self, id: JobId) {
@@ -28,7 +165,7 @@ impl JobQueue {
         self.peak = self.peak.max(self.items.len());
     }
 
-    /// The job that must be placed next (strict FIFO).
+    /// The job with arrival priority (front of the queue).
     pub fn head(&self) -> Option<JobId> {
         self.items.front().copied()
     }
@@ -36,6 +173,18 @@ impl JobQueue {
     /// Remove and return the head.
     pub fn pop(&mut self) -> Option<JobId> {
         self.items.pop_front()
+    }
+
+    /// Remove `id` wherever it sits in the queue (out-of-order
+    /// placement or rejection). Returns whether it was present.
+    pub fn remove(&mut self, id: JobId) -> bool {
+        match self.items.iter().position(|&x| x == id) {
+            Some(i) => {
+                self.items.remove(i);
+                true
+            }
+            None => false,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -51,9 +200,25 @@ impl JobQueue {
         self.items.iter().copied()
     }
 
+    /// Waiting jobs behind the head, in arrival order — the backfill
+    /// candidate scan.
+    pub fn behind_head(&self) -> Vec<JobId> {
+        self.items.iter().skip(1).copied().collect()
+    }
+
     /// Largest backlog seen over the run.
     pub fn peak_len(&self) -> usize {
         self.peak
+    }
+
+    /// Record one out-of-order placement.
+    pub fn note_backfill(&mut self) {
+        self.backfilled += 1;
+    }
+
+    /// Placements that jumped the arrival order over the whole run.
+    pub fn backfilled(&self) -> u64 {
+        self.backfilled
     }
 }
 
@@ -63,7 +228,7 @@ mod tests {
 
     #[test]
     fn fifo_order() {
-        let mut q = JobQueue::new();
+        let mut q = JobQueue::new(QueueDiscipline::Fifo);
         for id in 0..5 {
             q.push(id);
         }
@@ -72,11 +237,12 @@ mod tests {
         assert_eq!(q.pop(), Some(1));
         q.push(9);
         assert_eq!(q.iter().collect::<Vec<_>>(), vec![2, 3, 4, 9]);
+        assert_eq!(q.behind_head(), vec![3, 4, 9]);
     }
 
     #[test]
     fn peak_tracks_high_water() {
-        let mut q = JobQueue::new();
+        let mut q = JobQueue::new(QueueDiscipline::Fifo);
         q.push(0);
         q.push(1);
         q.pop();
@@ -90,9 +256,67 @@ mod tests {
 
     #[test]
     fn empty_queue_behaviour() {
-        let mut q = JobQueue::new();
+        let mut q = JobQueue::new(QueueDiscipline::Fifo);
         assert!(q.is_empty());
         assert_eq!(q.head(), None);
         assert_eq!(q.pop(), None);
+        assert!(q.behind_head().is_empty());
+        assert!(!q.remove(3));
+    }
+
+    #[test]
+    fn remove_takes_any_position_and_counts_nothing() {
+        let mut q = JobQueue::new(QueueDiscipline::BackfillEasy);
+        for id in 0..4 {
+            q.push(id);
+        }
+        assert!(q.remove(2));
+        assert!(!q.remove(2));
+        assert_eq!(q.iter().collect::<Vec<_>>(), vec![0, 1, 3]);
+        // `remove` itself never counts a backfill; the fleet decides.
+        assert_eq!(q.backfilled(), 0);
+        q.note_backfill();
+        assert_eq!(q.backfilled(), 1);
+    }
+
+    #[test]
+    fn discipline_round_trip_and_default() {
+        for q in QueueDiscipline::ALL {
+            assert_eq!(QueueDiscipline::parse(q.name()), Some(q));
+            assert_eq!(format!("{q}"), q.name());
+        }
+        assert_eq!(QueueDiscipline::parse("lifo"), None);
+        let err = QueueDiscipline::parse_or_err("lifo").unwrap_err().to_string();
+        assert!(err.contains("lifo") && err.contains("backfill-easy"), "{err}");
+        assert_eq!(
+            QueueDiscipline::parse_or_err("sjf").unwrap(),
+            QueueDiscipline::Sjf
+        );
+        assert_eq!(QueueDiscipline::default(), QueueDiscipline::Fifo);
+        assert!(QueueDiscipline::BackfillEasy.is_backfill());
+        assert!(QueueDiscipline::BackfillConservative.is_backfill());
+        assert!(!QueueDiscipline::Fifo.is_backfill());
+        assert!(!QueueDiscipline::Sjf.is_backfill());
+    }
+
+    #[test]
+    fn reservation_claims() {
+        let slot_res = Reservation {
+            start_s: 5.0,
+            gpu: 1,
+            slot: Some(2),
+        };
+        assert!(slot_res.claims_slot(1, 2));
+        assert!(!slot_res.claims_slot(1, 3));
+        assert!(!slot_res.claims_slot(0, 2));
+        let gpu_res = Reservation {
+            start_s: 5.0,
+            gpu: 1,
+            slot: None,
+        };
+        assert!(gpu_res.claims_gpu(1));
+        assert!(!gpu_res.claims_gpu(0));
+        // A whole-GPU reservation claims every slot of that GPU.
+        assert!(gpu_res.claims_slot(1, 0));
     }
 }

@@ -126,10 +126,17 @@ pub fn trace_to_csv(trace: &[JobSpec]) -> String {
 }
 
 /// Parse a CSV trace file (`arrival_s,workload,epochs`, header
-/// optional). Ids are assigned densely in file order; arrivals must be
-/// finite and non-negative, epoch counts at least 1. Every rejection
-/// names the offending line so `migsim fleet --trace` can fail with a
-/// proper error (and nonzero exit) instead of panicking mid-simulation.
+/// optional). Arrivals must be finite and non-negative, epoch counts
+/// at least 1. Every rejection names the offending line so `migsim
+/// fleet --trace` can fail with a proper error (and nonzero exit)
+/// instead of panicking mid-simulation.
+///
+/// Rows may appear out of arrival order (hand-edited or concatenated
+/// traces): the parsed trace is **stably sorted by `arrival_s`**, ties
+/// keeping file order, and ids are assigned densely *after* the sort —
+/// so id order always equals replay order. Without the sort, the event
+/// heap would replay an unsorted file in timestamp order while the
+/// FIFO queue ids (and every per-job report row) claimed file order.
 pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<JobSpec>> {
     let mut out = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
@@ -170,6 +177,14 @@ pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<JobSpec>> {
             workload,
             epochs,
         });
+    }
+    let sorted = out.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s);
+    if !sorted {
+        // `sort_by` is stable: equal arrivals keep their file order.
+        out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        for (i, job) in out.iter_mut().enumerate() {
+            job.id = i;
+        }
     }
     Ok(out)
 }
@@ -268,6 +283,43 @@ mod tests {
         assert!(parse_trace_csv("1e999,small,1").is_err());
         assert!(parse_trace_csv("1.0,small,0").is_err());
         assert!(parse_trace_csv("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn csv_in_order_rows_keep_file_order() {
+        // Already-sorted traces parse exactly as before the sort fix.
+        let text = "arrival_s,workload,epochs\n1.0,small,1\n2.0,medium,2\n3.0,large,3\n";
+        let t = parse_trace_csv(text).unwrap();
+        assert_eq!(t.len(), 3);
+        for (i, j) in t.iter().enumerate() {
+            assert_eq!(j.id, i);
+        }
+        assert_eq!(t[0].workload, WorkloadSize::Small);
+        assert_eq!(t[2].workload, WorkloadSize::Large);
+    }
+
+    #[test]
+    fn csv_out_of_order_rows_are_sorted_with_a_stable_tiebreak() {
+        // Regression: unsorted rows used to keep file-order ids while
+        // the event heap replayed them in timestamp order — the
+        // reported "FIFO" order was neither. Now the parse sorts by
+        // arrival (ties keep file order) and re-ids densely, so id
+        // order equals replay order.
+        let text = "arrival_s,workload,epochs\n\
+                    5.0,large,1\n\
+                    1.0,small,1\n\
+                    5.0,medium,1\n\
+                    0.5,small,2\n";
+        let t = parse_trace_csv(text).unwrap();
+        let arrivals: Vec<f64> = t.iter().map(|j| j.arrival_s).collect();
+        assert_eq!(arrivals, vec![0.5, 1.0, 5.0, 5.0]);
+        for (i, j) in t.iter().enumerate() {
+            assert_eq!(j.id, i, "ids must be dense in arrival order");
+        }
+        // The 5.0 tie keeps file order: large (line 2) before medium.
+        assert_eq!(t[2].workload, WorkloadSize::Large);
+        assert_eq!(t[3].workload, WorkloadSize::Medium);
+        assert_eq!(t[0].epochs, 2);
     }
 
     #[test]

@@ -55,12 +55,36 @@
 //! structured `JobOutcome::OomKilled`, reproducing the paper's crash
 //! (medium/large on `1g.5gb`) as data instead of an impossibility.
 //!
+//! ## Queue disciplines
+//!
+//! The fleet's admission queue ([`cluster::queue`]) runs under a
+//! selectable [`cluster::queue::QueueDiscipline`]: `fifo` (place only
+//! the head — one blocked large job stalls every small job behind it),
+//! `backfill-easy` (EASY backfilling: the blocked head gets an
+//! earliest-start *reservation* computed from the running jobs'
+//! expected finishes in the simgpu throughput table, and jobs behind
+//! it are placed out of order only when they cannot delay that
+//! reservation — disjoint resources, or an estimated finish before the
+//! reserved start), `backfill-conservative` (every blocked job holds a
+//! reservation a candidate must respect) and `sjf`
+//! (shortest-estimated-service first, no starvation protection). The
+//! queue is re-scanned on every finish and repartition event with
+//! reservations recomputed from scratch. Reports carry the
+//! `backfilled` count, the total head-of-line blocked time
+//! (`hol_wait_s`), the busy-time-weighted `mean_slowdown` and the
+//! peak-based `peak_slowdown`. Surface: `migsim fleet --queue`, a
+//! seventh `queues` sweep axis (`migsim sweep --queues
+//! fifo,backfill-easy`, summary schema v3 with a
+//! discipline-ranking table/JSON section). Under `fifo` the simulator
+//! reproduces its pre-discipline behaviour bit-for-bit.
+//!
 //! ## Sweeps & benchmarking
 //!
 //! The [`sweep`] subsystem runs collocation experiments as *grids*,
 //! the shape of the paper's evaluation: a declarative
 //! [`sweep::grid::GridSpec`] (policies × workload mixes × fleet sizes
-//! × arrival rates × seeds) expands to self-contained cells that a
+//! × arrival rates × interference models × queue disciplines × seeds)
+//! expands to self-contained cells that a
 //! lock-free ticket counter distributes across `std::thread` workers.
 //! Each cell seeds its own trace from its grid coordinates, so sibling
 //! cells replay identical job streams and the sweep summary is

@@ -16,6 +16,7 @@
 
 use migsim::cluster::fleet::{FleetConfig, FleetSim};
 use migsim::cluster::policy::{AdmissionMode, PolicyKind};
+use migsim::cluster::queue::QueueDiscipline;
 use migsim::cluster::trace::{parse_mix, parse_trace_csv, poisson_trace, trace_to_csv, TraceConfig};
 use migsim::config::Config;
 use migsim::coordinator::experiment::{run_experiment, DeviceGroup, ExperimentSpec};
@@ -62,6 +63,7 @@ SUBCOMMANDS
         [--a30 0] [--cap 7] [--interarrival 30]
         [--mix small:0.5,medium:0.3,large:0.2] [--epochs N]
         [--interference off|linear|roofline] [--admission strict|oversubscribe]
+        [--queue fifo|backfill-easy|backfill-conservative|sjf]
         [--partition 2g.10gb,2g.10gb,2g.10gb] [--trace file.csv]
         [--dump-trace file.csv] [--out results]
       Cluster-scale collocation: simulate a job stream on a fleet of
@@ -70,21 +72,27 @@ SUBCOMMANDS
       contention model to whole-GPU sharing (MIG instances stay
       interference-free); --admission oversubscribe turns the paper's
       memory floors soft — jobs placed beyond them are OOM-killed
-      (structured outcome) instead of queued. Emits summary JSON +
-      per-job/per-GPU CSV.
+      (structured outcome) instead of queued. --queue picks the
+      admission-queue discipline: fifo places only the head (and one
+      blocked job stalls everything behind it), the backfill
+      disciplines place delay-safe jobs past a blocked head under a
+      reservation, sjf reorders by estimated service time. Emits
+      summary JSON + per-job/per-GPU CSV.
   sweep [--policies mps,mig-static] [--mixes 'smalls|paper']
         [--gpus 2,4] [--interarrivals 0.5,2.0]
-        [--interference off,roofline] [--admission strict] [--seeds 1,2]
+        [--interference off,roofline] [--admission strict]
+        [--queues fifo,backfill-easy] [--seeds 1,2]
         [--jobs 200] [--epochs 1] [--cap 7] [--threads N]
         [--grid grid.json] [--out results]
       Expand a declarative grid (policies x mixes x fleet sizes x
-      arrival rates x interference models x seeds) into cells and run
-      them all across worker threads. Output is byte-identical at any
-      --threads. Writes sweep_summary.json + sweep_cells.csv and prints
-      the policy-ranking table (plus the interference-sensitivity table
-      when the interference axis has several models). --grid loads the
-      spec from JSON instead (same keys as the axis flags; absent keys
-      keep defaults).
+      arrival rates x interference models x queue disciplines x seeds)
+      into cells and run them all across worker threads. Output is
+      byte-identical at any --threads. Writes sweep_summary.json +
+      sweep_cells.csv and prints the policy-ranking table (plus the
+      interference-sensitivity and queue-discipline tables when those
+      axes have several values). --grid loads the spec from JSON
+      instead (same keys as the axis flags; absent keys keep
+      defaults).
   validate <file>
       Schema-check a machine-readable artifact: BENCH_*.json reports
       (schema v1 round-trip) and sweep_summary.json files (schema
@@ -174,7 +182,7 @@ fn cmd_run(args: &Args, config: &Config) -> anyhow::Result<()> {
             workload: w,
             group: g,
             replicate: 0,
-            seed: rng::resolve_seed(args.seed()?),
+            seed: rng::resolve_seed(args.seed()?)?,
         },
         &config.calibration,
     );
@@ -235,7 +243,7 @@ fn cmd_plan(args: &Args, config: &Config) -> anyhow::Result<()> {
 }
 
 fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
-    let seed = rng::resolve_seed(args.seed()?);
+    let seed = rng::resolve_seed(args.seed()?)?;
     let a100s = args.flag_parse("gpus", 8u32)?;
     let a30s = args.flag_parse("a30", 0u32)?;
     anyhow::ensure!(a100s + a30s > 0, "fleet needs at least one GPU");
@@ -250,6 +258,7 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
     anyhow::ensure!(cap >= 1, "--cap must be >= 1");
     let interference = parse_interference_flag(args)?.unwrap_or(InterferenceModel::Off);
     let admission = parse_admission_flag(args)?.unwrap_or(AdmissionMode::Strict);
+    let queue = parse_queue_flag(args)?.unwrap_or(QueueDiscipline::Fifo);
     let partition = match args.flag("partition") {
         None => None,
         Some(list) => {
@@ -316,6 +325,7 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
         seed,
         interference,
         admission,
+        queue,
         ..FleetConfig::default()
     };
     let t0 = std::time::Instant::now();
@@ -362,6 +372,14 @@ fn parse_admission_flag(args: &Args) -> anyhow::Result<Option<AdmissionMode>> {
     }
 }
 
+/// Parse the optional `--queue <discipline>` flag.
+fn parse_queue_flag(args: &Args) -> anyhow::Result<Option<QueueDiscipline>> {
+    match args.flag("queue") {
+        None => Ok(None),
+        Some(s) => QueueDiscipline::parse_or_err(s.trim()).map(Some),
+    }
+}
+
 /// Parse a comma-separated numeric list flag.
 fn parse_num_list<T: std::str::FromStr>(list: &str, flag: &str) -> anyhow::Result<Vec<T>> {
     list.split(',')
@@ -384,6 +402,7 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
             "interarrivals",
             "interference",
             "admission",
+            "queues",
             "seeds",
             "jobs",
             "epochs",
@@ -402,7 +421,7 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
         // The file is the spec, but the global --seed / MIGSIM_SEED
         // contract still applies when the file does not pin seeds.
         if json.get("seeds").is_none() {
-            grid.seeds = vec![rng::resolve_seed(args.seed()?)];
+            grid.seeds = vec![rng::resolve_seed(args.seed()?)?];
         }
         return Ok(grid);
     }
@@ -447,9 +466,15 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
     if let Some(mode) = parse_admission_flag(args)? {
         grid.admission = mode;
     }
+    if let Some(list) = args.flag("queues") {
+        grid.queues = list
+            .split(',')
+            .map(|s| QueueDiscipline::parse_or_err(s.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
     grid.seeds = match args.flag("seeds") {
         Some(list) => parse_num_list(list, "seeds")?,
-        None => vec![rng::resolve_seed(args.seed()?)],
+        None => vec![rng::resolve_seed(args.seed()?)?],
     };
     grid.jobs_per_cell = args.flag_parse("jobs", grid.jobs_per_cell)?;
     if let Some(e) = args.flag("epochs") {
@@ -470,6 +495,9 @@ fn cmd_sweep(args: &Args, config: &Config) -> anyhow::Result<()> {
     print!("{}", migsim::report::sweep::ranking_table(&run));
     if grid.interference.len() > 1 {
         print!("{}", migsim::report::sweep::interference_table(&run));
+    }
+    if grid.queues.len() > 1 {
+        print!("{}", migsim::report::sweep::queue_table(&run));
     }
     println!(
         "\n{} cells | {} threads | host {:.3} s | {:.1} cells/s",
@@ -678,10 +706,26 @@ fn validate_sweep_summary(json: &Json) -> anyhow::Result<usize> {
             InterferenceModel::parse(interference).is_some(),
             "cell {i}: unknown interference model '{interference}'"
         );
+        let queue = cell
+            .get("queue")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing queue"))?;
+        anyhow::ensure!(
+            QueueDiscipline::parse(queue).is_some(),
+            "cell {i}: unknown queue discipline '{queue}'"
+        );
         let metrics = cell
             .get("metrics")
             .ok_or_else(|| anyhow::anyhow!("cell {i}: missing metrics"))?;
-        for key in ["finished", "oom_killed", "images_per_s", "mean_slowdown"] {
+        for key in [
+            "finished",
+            "oom_killed",
+            "images_per_s",
+            "mean_slowdown",
+            "peak_slowdown",
+            "backfilled",
+            "hol_wait_s",
+        ] {
             anyhow::ensure!(
                 metrics.get(key).and_then(|v| v.as_f64()).is_some(),
                 "cell {i}: metrics.{key} missing or not a number"

@@ -1,7 +1,9 @@
 //! Fleet-run export: summary JSON + per-job and per-GPU CSV.
 //!
 //! The summary JSON carries the run's interference model, admission
-//! mode, `oom_killed` count and `mean_slowdown` (see
+//! mode, queue discipline, `oom_killed`/`backfilled` counts, the
+//! head-of-line wait and both slowdown views (busy-time-weighted
+//! `mean_slowdown`, peak-based `peak_slowdown` — see
 //! `FleetMetrics::to_json`); the per-job CSV's `outcome` column labels
 //! oversubscribed casualties `oom-killed`.
 
@@ -170,5 +172,8 @@ mod tests {
         assert_eq!(json.get("oom_killed").unwrap().as_u64(), Some(2));
         assert_eq!(json.get("admission").unwrap().as_str(), Some("oversubscribe"));
         assert!(json.get("mean_slowdown").unwrap().as_f64().is_some());
+        assert!(json.get("peak_slowdown").unwrap().as_f64().is_some());
+        assert_eq!(json.get("queue_discipline").unwrap().as_str(), Some("fifo"));
+        assert_eq!(json.get("backfilled").unwrap().as_u64(), Some(0));
     }
 }

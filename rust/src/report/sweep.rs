@@ -20,7 +20,12 @@ use std::path::{Path, PathBuf};
 /// v2: per-cell `interference` axis value, `oom_killed` +
 /// `mean_slowdown` metrics, grid `interference`/`admission` keys and
 /// the `interference_sensitivity` section.
-pub const SWEEP_SCHEMA_VERSION: u64 = 2;
+///
+/// v3: the `queues` axis (grid key + per-cell `queue` value), the
+/// `queue_ranking` section, per-cell `backfilled`/`hol_wait_s`
+/// metrics, and `mean_slowdown` re-based to the busy-time-weighted
+/// mean (the former peak-based value now exports as `peak_slowdown`).
+pub const SWEEP_SCHEMA_VERSION: u64 = 3;
 
 /// Files one [`write_sweep`] call produces.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -148,6 +153,81 @@ pub fn interference_table(run: &SweepRun) -> String {
     )
 }
 
+/// Per-discipline aggregate over the grid: the queue-discipline
+/// ranking's data, sorted best-first on mean images/s (ties break on
+/// name). With a multi-discipline `queues` axis this is the
+/// head-of-line-blocking view: backfilling should cut mean wait
+/// without costing throughput.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueueSummary {
+    pub queue: String,
+    pub cells: u64,
+    pub mean_images_per_s: f64,
+    pub mean_wait_s: f64,
+    /// Total out-of-order placements across the discipline's cells.
+    pub backfilled: u64,
+}
+
+/// Aggregate every cell by queue discipline (see [`QueueSummary`]).
+pub fn queue_means(run: &SweepRun) -> Vec<QueueSummary> {
+    let mut acc: Vec<(String, f64, f64, u64, u64)> = Vec::new();
+    for cell in &run.cells {
+        let name = cell.spec.queue.name();
+        match acc.iter_mut().find(|(n, ..)| n == name) {
+            Some((_, img, wait, backfilled, count)) => {
+                *img += cell.metrics.images_per_s;
+                *wait += cell.metrics.mean_wait_s;
+                *backfilled += cell.metrics.backfilled;
+                *count += 1;
+            }
+            None => acc.push((
+                name.to_string(),
+                cell.metrics.images_per_s,
+                cell.metrics.mean_wait_s,
+                cell.metrics.backfilled,
+                1,
+            )),
+        }
+    }
+    let mut means: Vec<QueueSummary> = acc
+        .into_iter()
+        .map(|(queue, img, wait, backfilled, count)| QueueSummary {
+            queue,
+            cells: count,
+            mean_images_per_s: safe_div(img, count as f64),
+            mean_wait_s: safe_div(wait, count as f64),
+            backfilled,
+        })
+        .collect();
+    means.sort_by(|a, b| {
+        b.mean_images_per_s
+            .total_cmp(&a.mean_images_per_s)
+            .then_with(|| a.queue.cmp(&b.queue))
+    });
+    means
+}
+
+/// The ASCII queue-discipline ranking table for the CLI.
+pub fn queue_table(run: &SweepRun) -> String {
+    let rows: Vec<Vec<String>> = queue_means(run)
+        .iter()
+        .map(|q| {
+            vec![
+                q.queue.clone(),
+                q.cells.to_string(),
+                format!("{:.1}", q.mean_images_per_s),
+                crate::util::fmt_duration(q.mean_wait_s),
+                q.backfilled.to_string(),
+            ]
+        })
+        .collect();
+    render::table(
+        "queue-discipline ranking (mean images/s and queue wait across the grid)",
+        &["queue", "cells", "img/s μ", "wait μ", "backfilled"],
+        &rows,
+    )
+}
+
 /// The sweep summary as JSON: schema version, calibration fingerprint,
 /// the grid spec verbatim, per-cell outcomes and the policy ranking.
 pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json {
@@ -170,6 +250,7 @@ pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json 
                 .set("gpus", Json::from_u64(c.spec.gpus as u64))
                 .set("interarrival_s", Json::from_f64(c.spec.mean_interarrival_s))
                 .set("interference", Json::from_str_val(c.spec.interference.name()))
+                .set("queue", Json::from_str_val(c.spec.queue.name()))
                 .set("seed", Json::from_u64(c.spec.seed))
                 .set("metrics", c.metrics.to_json());
             o
@@ -197,6 +278,19 @@ pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json 
         })
         .collect();
     j.set("interference_sensitivity", Json::Arr(sensitivity));
+    let queue_ranking: Vec<Json> = queue_means(run)
+        .iter()
+        .map(|q| {
+            let mut o = Json::obj();
+            o.set("queue", Json::from_str_val(&q.queue))
+                .set("cells", Json::from_u64(q.cells))
+                .set("mean_images_per_s", Json::from_f64(q.mean_images_per_s))
+                .set("mean_wait_s", Json::from_f64(q.mean_wait_s))
+                .set("backfilled", Json::from_u64(q.backfilled));
+            o
+        })
+        .collect();
+    j.set("queue_ranking", Json::Arr(queue_ranking));
     j
 }
 
@@ -212,44 +306,52 @@ pub fn cells_rows(run: &SweepRun) -> Vec<Vec<String>> {
                 c.spec.gpus.to_string(),
                 format!("{}", c.spec.mean_interarrival_s),
                 c.spec.interference.name().to_string(),
+                c.spec.queue.name().to_string(),
                 c.spec.seed.to_string(),
                 c.metrics.finished.to_string(),
                 c.metrics.rejected.to_string(),
                 c.metrics.oom_killed.to_string(),
                 c.metrics.unserved.to_string(),
                 c.metrics.peak_queue.to_string(),
+                c.metrics.backfilled.to_string(),
                 format!("{:.3}", c.metrics.makespan_s),
                 format!("{:.3}", c.metrics.mean_wait_s),
+                format!("{:.3}", c.metrics.hol_wait_s),
                 format!("{:.3}", c.metrics.p50_jct_s),
                 format!("{:.3}", c.metrics.p95_jct_s),
                 format!("{:.1}", c.metrics.images_per_s),
                 format!("{:.4}", c.metrics.mean_gract),
                 format!("{:.3}", c.metrics.mean_slowdown),
+                format!("{:.3}", c.metrics.peak_slowdown),
             ]
         })
         .collect()
 }
 
-const CELLS_HEADER: [&str; 19] = [
+const CELLS_HEADER: [&str; 23] = [
     "index",
     "policy",
     "mix",
     "gpus",
     "interarrival_s",
     "interference",
+    "queue",
     "seed",
     "finished",
     "rejected",
     "oom_killed",
     "unserved",
     "peak_queue",
+    "backfilled",
     "makespan_s",
     "mean_wait_s",
+    "hol_wait_s",
     "p50_jct_s",
     "p95_jct_s",
     "images_per_s",
     "mean_gract",
     "mean_slowdown",
+    "peak_slowdown",
 ];
 
 /// Write `sweep_summary.json` + `sweep_cells.csv` under `dir`.
@@ -285,6 +387,7 @@ mod tests {
     use crate::util::tempdir::TempDir;
 
     use crate::cluster::policy::AdmissionMode;
+    use crate::cluster::queue::QueueDiscipline;
     use crate::simgpu::interference::InterferenceModel;
 
     fn saturated_grid() -> GridSpec {
@@ -296,6 +399,7 @@ mod tests {
             gpus: vec![1],
             interarrivals_s: vec![0.001],
             interference: vec![InterferenceModel::Off],
+            queues: vec![QueueDiscipline::Fifo],
             seeds: vec![42],
             jobs_per_cell: 21,
             epochs: Some(1),
@@ -402,5 +506,42 @@ mod tests {
         // The table renders a row per (policy, model) with a delta.
         let table = interference_table(&run);
         assert!(table.contains("roofline") && table.contains("vs off"), "{table}");
+    }
+
+    #[test]
+    fn queue_ranking_covers_the_axis_and_exports() {
+        // Sweep the queues axis: the per-discipline ranking must carry
+        // one row per discipline, no discipline may lose jobs, and the
+        // summary JSON must carry the per-cell queue value. (The
+        // head-of-line *win* itself is asserted in
+        // rust/tests/fleet_policies.rs with a custom partition that
+        // actually blocks a head.)
+        let mut grid = saturated_grid();
+        grid.policies = vec![PolicyKind::Mps, PolicyKind::MigStatic];
+        grid.mixes = vec![MixSpec::preset("paper").unwrap()];
+        grid.queues = vec![QueueDiscipline::Fifo, QueueDiscipline::BackfillEasy];
+        grid.jobs_per_cell = 40;
+        let run = run_sweep(&grid, &Calibration::paper(), 2).unwrap();
+        let means = queue_means(&run);
+        assert_eq!(means.len(), 2, "{means:?}");
+        // No discipline may lose jobs: the whole stream is served
+        // either way, backfilling only reorders it.
+        for c in &run.cells {
+            assert_eq!(
+                c.metrics.finished + c.metrics.rejected,
+                grid.jobs_per_cell as u64,
+                "{}",
+                c.spec.label()
+            );
+        }
+        let table = queue_table(&run);
+        assert!(table.contains("backfill-easy") && table.contains("fifo"), "{table}");
+        // The summary JSON carries the per-cell queue and the ranking.
+        let cal = Calibration::paper();
+        let json = Json::parse(&summary_json_text(&grid, &run, &cal)).unwrap();
+        let cells = json.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells[0].get("queue").unwrap().as_str(), Some("fifo"));
+        assert_eq!(cells[1].get("queue").unwrap().as_str(), Some("backfill-easy"));
+        assert_eq!(json.get("queue_ranking").unwrap().as_arr().unwrap().len(), 2);
     }
 }

@@ -37,8 +37,15 @@ pub struct CellMetrics {
     pub total_images: f64,
     pub images_per_s: f64,
     pub mean_gract: f64,
-    /// Mean peak contention slowdown over placed jobs (1.0 = none).
+    /// Busy-time-weighted mean contention slowdown over placed jobs
+    /// (1.0 = none).
     pub mean_slowdown: f64,
+    /// Mean of per-job peak slowdowns (1.0 = none).
+    pub peak_slowdown: f64,
+    /// Placements that jumped the arrival order (0 under `fifo`).
+    pub backfilled: u64,
+    /// Total time any queue head spent blocked.
+    pub hol_wait_s: f64,
 }
 
 impl CellMetrics {
@@ -57,6 +64,9 @@ impl CellMetrics {
             images_per_s: m.aggregate_images_per_second(),
             mean_gract: m.mean_gract(),
             mean_slowdown: m.mean_slowdown,
+            peak_slowdown: m.peak_slowdown,
+            backfilled: m.backfilled,
+            hol_wait_s: m.hol_wait_s,
         }
     }
 
@@ -74,7 +84,10 @@ impl CellMetrics {
             .set("total_images", Json::from_f64(self.total_images))
             .set("images_per_s", Json::from_f64(self.images_per_s))
             .set("mean_gract", Json::from_f64(self.mean_gract))
-            .set("mean_slowdown", Json::from_f64(self.mean_slowdown));
+            .set("mean_slowdown", Json::from_f64(self.mean_slowdown))
+            .set("peak_slowdown", Json::from_f64(self.peak_slowdown))
+            .set("backfilled", Json::from_u64(self.backfilled))
+            .set("hol_wait_s", Json::from_f64(self.hol_wait_s));
         j
     }
 }
@@ -121,6 +134,7 @@ pub fn run_cell(cell: &CellSpec, grid: &GridSpec, cal: &Calibration) -> CellMetr
         seed: cell.seed,
         interference: cell.interference,
         admission: grid.admission,
+        queue: cell.queue,
         ..FleetConfig::default()
     };
     let sim = FleetSim::new(config, policy, *cal, &trace);
@@ -201,6 +215,10 @@ mod tests {
                 crate::simgpu::interference::InterferenceModel::Off,
                 crate::simgpu::interference::InterferenceModel::Roofline,
             ],
+            queues: vec![
+                crate::cluster::queue::QueueDiscipline::Fifo,
+                crate::cluster::queue::QueueDiscipline::BackfillEasy,
+            ],
             seeds: vec![11, 12],
             jobs_per_cell: 20,
             epochs: Some(1),
@@ -222,6 +240,7 @@ mod tests {
                 seed: cell.seed,
                 interference: cell.interference,
                 admission: grid.admission,
+                queue: cell.queue,
                 ..FleetConfig::default()
             },
             cell.policy.build(&cal, grid.cap, None),

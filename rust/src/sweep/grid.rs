@@ -1,8 +1,9 @@
 //! Declarative sweep grids: axes × axes × … → a flat list of cells.
 //!
-//! A [`GridSpec`] names five axes — placement policies, workload mixes,
-//! fleet sizes, mean inter-arrival gaps and trace seeds — plus the
-//! per-cell constants (jobs per trace, epoch override, co-runner cap).
+//! A [`GridSpec`] names seven axes — placement policies, workload
+//! mixes, fleet sizes, mean inter-arrival gaps, interference models,
+//! queue disciplines and trace seeds — plus the per-cell constants
+//! (jobs per trace, epoch override, co-runner cap, admission mode).
 //! [`GridSpec::cells`] validates every axis and expands the cartesian
 //! product in a *fixed nested order* (policy outermost, seed innermost),
 //! so cell indices — and therefore sweep output — are a pure function
@@ -15,6 +16,7 @@
 //! re-run of any single cell reproduces it bit-for-bit.
 
 use crate::cluster::policy::{AdmissionMode, PolicyKind};
+use crate::cluster::queue::QueueDiscipline;
 use crate::cluster::trace::{parse_mix, TraceConfig};
 use crate::simgpu::interference::InterferenceModel;
 use crate::util::json::Json;
@@ -107,7 +109,7 @@ impl MixSpec {
     }
 }
 
-/// The declarative sweep grid: six axes plus per-cell constants.
+/// The declarative sweep grid: seven axes plus per-cell constants.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GridSpec {
     pub policies: Vec<PolicyKind>,
@@ -119,6 +121,9 @@ pub struct GridSpec {
     /// Contention models for whole-GPU sharing (`off`/`linear`/
     /// `roofline`); MIG cells are interference-free regardless.
     pub interference: Vec<InterferenceModel>,
+    /// Admission-queue disciplines (`fifo`/`backfill-easy`/
+    /// `backfill-conservative`/`sjf`).
+    pub queues: Vec<QueueDiscipline>,
     /// Trace seeds (replicates).
     pub seeds: Vec<u64>,
     /// Jobs per generated trace.
@@ -146,6 +151,7 @@ impl GridSpec {
             gpus: vec![2, 4],
             interarrivals_s: vec![0.5, 2.0],
             interference: vec![InterferenceModel::Off],
+            queues: vec![QueueDiscipline::Fifo],
             seeds: vec![DEFAULT_SEED],
             jobs_per_cell: 200,
             epochs: Some(1),
@@ -163,6 +169,7 @@ impl GridSpec {
             gpus: vec![2],
             interarrivals_s: vec![0.5],
             interference: vec![InterferenceModel::Off],
+            queues: vec![QueueDiscipline::Fifo],
             seeds: vec![DEFAULT_SEED, DEFAULT_SEED + 1],
             jobs_per_cell: 150,
             epochs: Some(1),
@@ -178,6 +185,7 @@ impl GridSpec {
             * self.gpus.len()
             * self.interarrivals_s.len()
             * self.interference.len()
+            * self.queues.len()
             * self.seeds.len()
     }
 
@@ -196,6 +204,7 @@ impl GridSpec {
             !self.interference.is_empty(),
             "grid axis 'interference' is empty"
         );
+        anyhow::ensure!(!self.queues.is_empty(), "grid axis 'queues' is empty");
         anyhow::ensure!(!self.seeds.is_empty(), "grid axis 'seeds' is empty");
         anyhow::ensure!(self.jobs_per_cell >= 1, "jobs_per_cell must be >= 1");
         anyhow::ensure!(self.cap >= 1, "cap must be >= 1");
@@ -230,7 +239,7 @@ impl GridSpec {
     }
 
     /// Expand to cells in the fixed nested order: policy → mix → gpus →
-    /// interarrival → interference → seed.
+    /// interarrival → interference → queue → seed.
     pub fn cells(&self) -> anyhow::Result<Vec<CellSpec>> {
         self.validate()?;
         let mut out = Vec::with_capacity(self.cell_count());
@@ -239,16 +248,19 @@ impl GridSpec {
                 for &gpus in &self.gpus {
                     for &interarrival in &self.interarrivals_s {
                         for &interference in &self.interference {
-                            for &seed in &self.seeds {
-                                out.push(CellSpec {
-                                    index: out.len(),
-                                    policy,
-                                    mix: mix.clone(),
-                                    gpus,
-                                    mean_interarrival_s: interarrival,
-                                    interference,
-                                    seed,
-                                });
+                            for &queue in &self.queues {
+                                for &seed in &self.seeds {
+                                    out.push(CellSpec {
+                                        index: out.len(),
+                                        policy,
+                                        mix: mix.clone(),
+                                        gpus,
+                                        mean_interarrival_s: interarrival,
+                                        interference,
+                                        queue,
+                                        seed,
+                                    });
+                                }
                             }
                         }
                     }
@@ -298,6 +310,15 @@ impl GridSpec {
             ),
         )
         .set(
+            "queues",
+            Json::Arr(
+                self.queues
+                    .iter()
+                    .map(|q| Json::from_str_val(q.name()))
+                    .collect(),
+            ),
+        )
+        .set(
             "seeds",
             Json::Arr(self.seeds.iter().map(|&s| Json::from_u64(s)).collect()),
         )
@@ -329,6 +350,7 @@ impl GridSpec {
                     "gpus",
                     "interarrivals_s",
                     "interference",
+                    "queues",
                     "seeds",
                     "jobs_per_cell",
                     "epochs",
@@ -401,6 +423,20 @@ impl GridSpec {
                 })
                 .collect::<anyhow::Result<Vec<_>>>()?;
         }
+        if let Some(v) = obj.get("queues") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'queues' must be an array"))?;
+            grid.queues = arr
+                .iter()
+                .map(|q| {
+                    let name = q
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("queue entries must be strings"))?;
+                    QueueDiscipline::parse_or_err(name)
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
         if let Some(v) = obj.get("admission") {
             let name = v
                 .as_str()
@@ -450,6 +486,7 @@ pub struct CellSpec {
     pub gpus: u32,
     pub mean_interarrival_s: f64,
     pub interference: InterferenceModel,
+    pub queue: QueueDiscipline,
     pub seed: u64,
 }
 
@@ -470,12 +507,13 @@ impl CellSpec {
     /// Short human-readable label for logs and CSV rows.
     pub fn label(&self) -> String {
         format!(
-            "{}/{}/g{}/ia{}/{}/s{}",
+            "{}/{}/g{}/ia{}/{}/{}/s{}",
             self.policy.name(),
             self.mix.name,
             self.gpus,
             self.mean_interarrival_s,
             self.interference.name(),
+            self.queue.name(),
             self.seed
         )
     }
@@ -528,6 +566,34 @@ mod tests {
         g.interference.clear();
         let err = g.cells().unwrap_err().to_string();
         assert!(err.contains("interference"), "{err}");
+
+        let mut g = GridSpec::default_grid();
+        g.queues.clear();
+        let err = g.cells().unwrap_err().to_string();
+        assert!(err.contains("queues"), "{err}");
+    }
+
+    #[test]
+    fn queues_axis_expands_and_round_trips() {
+        let mut grid = GridSpec::default_grid();
+        grid.queues = vec![QueueDiscipline::Fifo, QueueDiscipline::BackfillEasy];
+        let cells = grid.cells().unwrap();
+        assert_eq!(cells.len(), 80, "40 base cells x 2 queue disciplines");
+        // The axis sits between interference and seed in the expansion.
+        assert_eq!(cells[0].queue, QueueDiscipline::Fifo);
+        assert_eq!(cells[grid.seeds.len()].queue, QueueDiscipline::BackfillEasy);
+        assert!(cells[0].label().contains("/fifo/"));
+        assert!(cells[1].label().contains("/backfill-easy/"));
+        let back = GridSpec::from_json(&grid.to_json()).unwrap();
+        assert_eq!(back, grid);
+        let partial = Json::parse(r#"{"queues": ["sjf", "backfill-conservative"]}"#).unwrap();
+        let g = GridSpec::from_json(&partial).unwrap();
+        assert_eq!(
+            g.queues,
+            vec![QueueDiscipline::Sjf, QueueDiscipline::BackfillConservative]
+        );
+        assert!(GridSpec::from_json(&Json::parse(r#"{"queues": ["lifo"]}"#).unwrap()).is_err());
+        assert!(GridSpec::from_json(&Json::parse(r#"{"queues": []}"#).unwrap()).is_err());
     }
 
     #[test]

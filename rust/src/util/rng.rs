@@ -11,16 +11,31 @@ pub const DEFAULT_SEED: u64 = 0x5EED;
 /// Resolve the effective seed for a run: an explicit `--seed` value
 /// wins, then the `MIGSIM_SEED` environment variable (how `cargo test`
 /// runs are re-seeded from the command line), then [`DEFAULT_SEED`].
-pub fn resolve_seed(explicit: Option<u64>) -> u64 {
+///
+/// A malformed `MIGSIM_SEED` is an **error**, not a silent fallback: a
+/// typo'd seed would otherwise quietly reproduce a *different* run
+/// than the one the operator asked for. An empty (or whitespace-only)
+/// value counts as unset.
+pub fn resolve_seed(explicit: Option<u64>) -> anyhow::Result<u64> {
+    resolve_seed_from(explicit, std::env::var("MIGSIM_SEED").ok().as_deref())
+}
+
+/// [`resolve_seed`] with the environment value injected, so the
+/// resolution rules are testable without racing on the process
+/// environment.
+fn resolve_seed_from(explicit: Option<u64>, env: Option<&str>) -> anyhow::Result<u64> {
     if let Some(seed) = explicit {
-        return seed;
+        return Ok(seed);
     }
-    if let Ok(v) = std::env::var("MIGSIM_SEED") {
-        if let Ok(seed) = v.parse() {
-            return seed;
-        }
+    match env.map(str::trim) {
+        None | Some("") => Ok(DEFAULT_SEED),
+        Some(v) => v.parse().map_err(|_| {
+            anyhow::anyhow!(
+                "MIGSIM_SEED='{v}' is not a valid u64 seed \
+                 (unset it or pass --seed to override)"
+            )
+        }),
     }
-    DEFAULT_SEED
 }
 
 /// xoshiro256** PRNG (Blackman & Vigna), seeded via splitmix64.
@@ -96,11 +111,29 @@ mod tests {
 
     #[test]
     fn explicit_seed_wins() {
-        assert_eq!(resolve_seed(Some(7)), 7);
+        assert_eq!(resolve_seed(Some(7)).unwrap(), 7);
         // No env override in the test environment: default applies.
         if std::env::var("MIGSIM_SEED").is_err() {
-            assert_eq!(resolve_seed(None), DEFAULT_SEED);
+            assert_eq!(resolve_seed(None).unwrap(), DEFAULT_SEED);
         }
+    }
+
+    #[test]
+    fn malformed_env_seed_is_an_error_not_a_silent_default() {
+        // The PR 1 behaviour silently fell back to DEFAULT_SEED on a
+        // typo'd MIGSIM_SEED — a quietly different run. Now it errors.
+        let err = resolve_seed_from(None, Some("0x5EED")).unwrap_err().to_string();
+        assert!(err.contains("0x5EED"), "{err}");
+        assert!(resolve_seed_from(None, Some("12a")).is_err());
+        assert!(resolve_seed_from(None, Some("-3")).is_err());
+        // Valid, empty and unset values resolve as before.
+        assert_eq!(resolve_seed_from(None, Some("42")).unwrap(), 42);
+        assert_eq!(resolve_seed_from(None, Some(" 42 ")).unwrap(), 42);
+        assert_eq!(resolve_seed_from(None, Some("")).unwrap(), DEFAULT_SEED);
+        assert_eq!(resolve_seed_from(None, Some("  ")).unwrap(), DEFAULT_SEED);
+        assert_eq!(resolve_seed_from(None, None).unwrap(), DEFAULT_SEED);
+        // An explicit --seed always wins, malformed env included.
+        assert_eq!(resolve_seed_from(Some(7), Some("junk")).unwrap(), 7);
     }
 
     #[test]

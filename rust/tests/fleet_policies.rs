@@ -12,11 +12,14 @@
 
 use migsim::cluster::fleet::{FleetConfig, FleetSim};
 use migsim::cluster::metrics::FleetMetrics;
-use migsim::cluster::policy::{AdmissionMode, PolicyKind};
+use migsim::cluster::policy::{AdmissionMode, MigStatic, PolicyKind};
+use migsim::cluster::queue::QueueDiscipline;
 use migsim::cluster::trace::{poisson_trace, JobSpec, TraceConfig};
+use migsim::mig::profile::MigProfile;
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::InterferenceModel;
 use migsim::util::rng;
+use migsim::workload::spec::WorkloadSize;
 
 /// Saturating homogeneous small-model stream: all jobs arrive within a
 /// couple of seconds, far faster than any policy can serve them.
@@ -26,7 +29,7 @@ fn saturating_small_trace(jobs: u32) -> Vec<JobSpec> {
         mean_interarrival_s: 0.01,
         mix: [1.0, 0.0, 0.0],
         epochs: Some(1),
-        seed: rng::resolve_seed(None),
+        seed: rng::resolve_seed(None).expect("valid MIGSIM_SEED"),
     })
 }
 
@@ -58,7 +61,7 @@ fn saturating_mix_trace(jobs: u32, mix: [f64; 3]) -> Vec<JobSpec> {
         mean_interarrival_s: 0.01,
         mix,
         epochs: Some(1),
-        seed: rng::resolve_seed(None),
+        seed: rng::resolve_seed(None).expect("valid MIGSIM_SEED"),
     })
 }
 
@@ -127,9 +130,18 @@ fn roofline_interference_slows_mps_jobs_but_not_mig() {
     assert_eq!(mps_off.finished(), 24);
     assert_eq!(mps_roofline.finished(), 24);
     assert_eq!(mps_off.mean_slowdown, 1.0);
+    assert_eq!(mps_off.peak_slowdown, 1.0);
     assert!(
         mps_roofline.mean_slowdown > 1.0,
         "contended MPS must report a slowdown: {}",
+        mps_roofline.mean_slowdown
+    );
+    // The busy-time-weighted mean can never exceed the mean of per-job
+    // peaks — the two were conflated before the PR 4 fix.
+    assert!(
+        mps_roofline.peak_slowdown >= mps_roofline.mean_slowdown,
+        "peak {} must bound the weighted mean {}",
+        mps_roofline.peak_slowdown,
         mps_roofline.mean_slowdown
     );
     assert!(
@@ -145,6 +157,7 @@ fn roofline_interference_slows_mps_jobs_but_not_mig() {
     assert_eq!(mig_off.makespan_s, mig_roofline.makespan_s, "MIG must be untouched");
     assert_eq!(mig_off.mean_service_s(), mig_roofline.mean_service_s());
     assert_eq!(mig_roofline.mean_slowdown, 1.0);
+    assert_eq!(mig_roofline.peak_slowdown, 1.0);
 }
 
 #[test]
@@ -203,6 +216,143 @@ fn oversubscribed_admission_is_deterministic_and_structured() {
         b.to_json().to_string_pretty(),
         "oversubscribed runs diverged"
     );
+}
+
+/// One large job ahead of many smalls on a `mig-static` partition with
+/// a single large-capable instance: the canonical head-of-line
+/// blocking scenario the backfill disciplines exist for.
+///
+/// Layout: `2g.10gb + 5x 1g.5gb` (7 compute slices). A large (9.4 GB
+/// floor) fits only the 2g.10gb; a small (4.4 GB) fits a 1g.5gb. Job 0
+/// (large) takes the 2g instance, job 1 (large) blocks on it, and ten
+/// smalls arrive behind — under FIFO they all stall although five
+/// 1g.5gb instances sit idle.
+fn head_of_line_trace() -> Vec<JobSpec> {
+    let mut trace = vec![
+        JobSpec { id: 0, arrival_s: 0.0, workload: WorkloadSize::Large, epochs: 1 },
+        JobSpec { id: 1, arrival_s: 0.1, workload: WorkloadSize::Large, epochs: 1 },
+    ];
+    for i in 0..10 {
+        trace.push(JobSpec {
+            id: 2 + i,
+            arrival_s: 0.2 + i as f64 * 0.01,
+            workload: WorkloadSize::Small,
+            epochs: 1,
+        });
+    }
+    trace
+}
+
+fn run_hol(queue: QueueDiscipline) -> FleetMetrics {
+    let partition = vec![
+        MigProfile::P2g10gb,
+        MigProfile::P1g5gb,
+        MigProfile::P1g5gb,
+        MigProfile::P1g5gb,
+        MigProfile::P1g5gb,
+        MigProfile::P1g5gb,
+    ];
+    let config = FleetConfig {
+        a100s: 1,
+        a30s: 0,
+        queue,
+        ..FleetConfig::default()
+    };
+    let policy = Box::new(MigStatic::new(Some(partition), None));
+    FleetSim::new(config, policy, Calibration::paper(), &head_of_line_trace()).run()
+}
+
+fn mean_small_wait(m: &FleetMetrics) -> f64 {
+    let waits: Vec<f64> = m
+        .jobs
+        .iter()
+        .filter(|j| j.spec.workload == WorkloadSize::Small)
+        .map(|j| j.wait_s().expect("small jobs all run"))
+        .collect();
+    waits.iter().sum::<f64>() / waits.len() as f64
+}
+
+#[test]
+fn backfill_easy_ends_head_of_line_blocking_without_delaying_the_head() {
+    let fifo = run_hol(QueueDiscipline::Fifo);
+    let easy = run_hol(QueueDiscipline::BackfillEasy);
+    for (name, m) in [("fifo", &fifo), ("backfill-easy", &easy)] {
+        assert_eq!(m.finished(), 12, "{name}: {}", m.summary());
+        assert_eq!(m.rejected(), 0, "{name}");
+    }
+    assert_eq!(fifo.backfilled, 0);
+    assert!(easy.backfilled > 0, "{}", easy.summary());
+    // The blocked large head starts at exactly the same instant: the
+    // smalls ran on disjoint 1g instances, so EASY never delayed it.
+    let head_start = |m: &FleetMetrics| m.jobs[1].start_s.expect("head runs");
+    assert_eq!(
+        head_start(&easy),
+        head_start(&fifo),
+        "backfilling must never delay the blocked head's start"
+    );
+    // And the smalls stop paying for the head's wait.
+    assert!(
+        mean_small_wait(&easy) < mean_small_wait(&fifo),
+        "backfill-easy must cut mean small wait: {} !< {}",
+        mean_small_wait(&easy),
+        mean_small_wait(&fifo)
+    );
+    // The head-of-line account agrees: the head still blocks (that is
+    // what the reservation protects), but the queue behind it drains.
+    assert!(fifo.hol_wait_s > 0.0);
+}
+
+#[test]
+fn backfill_conservative_also_safe_and_sjf_reorders() {
+    let fifo = run_hol(QueueDiscipline::Fifo);
+    let conservative = run_hol(QueueDiscipline::BackfillConservative);
+    assert_eq!(conservative.finished(), 12, "{}", conservative.summary());
+    assert!(conservative.backfilled > 0);
+    // Conservative reservations are a superset of EASY's: the head is
+    // still never delayed.
+    assert_eq!(
+        conservative.jobs[1].start_s.unwrap(),
+        fifo.jobs[1].start_s.unwrap()
+    );
+    assert!(mean_small_wait(&conservative) < mean_small_wait(&fifo));
+
+    // SJF places the short smalls ahead of the blocked large too (its
+    // contract is mean wait, not head protection).
+    let sjf = run_hol(QueueDiscipline::Sjf);
+    assert_eq!(sjf.finished(), 12, "{}", sjf.summary());
+    assert!(sjf.backfilled > 0);
+    assert!(mean_small_wait(&sjf) < mean_small_wait(&fifo));
+}
+
+#[test]
+fn ranking_still_holds_under_every_queue_discipline() {
+    // §5 must survive the queue rework: on the saturating small flood
+    // every discipline degenerates to FIFO order (identical jobs have
+    // nothing to jump), so Mps >= MigStatic > TimeSlice holds for all.
+    let trace = saturating_small_trace(30);
+    let cal = Calibration::paper();
+    for queue in QueueDiscipline::ALL {
+        let run_q = |kind: PolicyKind| -> FleetMetrics {
+            let config = FleetConfig {
+                a100s: 2,
+                a30s: 0,
+                queue,
+                ..FleetConfig::default()
+            };
+            FleetSim::new(config, kind.build(&cal, 7, None), cal, &trace).run()
+        };
+        let mps = run_q(PolicyKind::Mps);
+        let mig = run_q(PolicyKind::MigStatic);
+        let ts = run_q(PolicyKind::TimeSlice);
+        for (name, m) in [("mps", &mps), ("mig-static", &mig), ("timeslice", &ts)] {
+            assert_eq!(m.finished(), 30, "{queue}/{name}: {}", m.summary());
+        }
+        let t_mps = mps.aggregate_images_per_second();
+        let t_mig = mig.aggregate_images_per_second();
+        let t_ts = ts.aggregate_images_per_second();
+        assert!(t_mps >= t_mig, "{queue}: Mps {t_mps} !>= MigStatic {t_mig}");
+        assert!(t_mig > t_ts, "{queue}: MigStatic {t_mig} !> TimeSlice {t_ts}");
+    }
 }
 
 #[test]

@@ -259,7 +259,7 @@ fn random_json(rng: &mut Rng, depth: u32) -> Json {
 /// Re-seedable from the command line via MIGSIM_SEED.
 #[test]
 fn prop_json_round_trip() {
-    let seed = resolve_seed(None) ^ 0x15AC;
+    let seed = resolve_seed(None).expect("valid MIGSIM_SEED") ^ 0x15AC;
     forall_ok(seed, 300, |rng| random_json(rng, 3), |j| {
         for text in [j.to_string_pretty(), j.to_string_compact()] {
             let back = Json::parse(&text).map_err(|e| format!("{e} in {text}"))?;
@@ -276,7 +276,7 @@ fn prop_json_round_trip() {
 /// null) no matter where they sit in the tree.
 #[test]
 fn prop_non_finite_numbers_serialize_parseably() {
-    let seed = resolve_seed(None) ^ 0x2BAD;
+    let seed = resolve_seed(None).expect("valid MIGSIM_SEED") ^ 0x2BAD;
     forall_ok(
         seed,
         200,

@@ -5,6 +5,7 @@
 //! values gateable and sweep results reviewable in diffs.
 
 use migsim::cluster::policy::{AdmissionMode, PolicyKind};
+use migsim::cluster::queue::QueueDiscipline;
 use migsim::report::sweep::summary_json_text;
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::InterferenceModel;
@@ -14,9 +15,10 @@ use migsim::util::prop::forall_ok;
 use migsim::util::rng::Rng;
 
 /// Draw a small random grid: 1–3 policies, one preset mix, 1–2 GPUs,
-/// 1–2 interference models, either admission mode, 1–2 seeds, 10–40
-/// jobs per cell. Small enough that the three runs per case stay fast,
-/// varied enough to exercise every policy/contention/admission path.
+/// 1–2 interference models, either admission mode, 1–2 queue
+/// disciplines, 1–2 seeds, 10–40 jobs per cell. Small enough that the
+/// three runs per case stay fast, varied enough to exercise every
+/// policy/contention/admission/discipline path.
 fn random_grid(r: &mut Rng) -> GridSpec {
     let n_policies = 1 + r.below(3) as usize;
     let policies: Vec<PolicyKind> = (0..n_policies)
@@ -34,6 +36,11 @@ fn random_grid(r: &mut Rng) -> GridSpec {
     } else {
         AdmissionMode::Strict
     };
+    let queues = match r.below(3) {
+        0 => vec![QueueDiscipline::Fifo],
+        1 => vec![QueueDiscipline::BackfillEasy, QueueDiscipline::Sjf],
+        _ => vec![QueueDiscipline::Fifo, QueueDiscipline::BackfillConservative],
+    };
     let n_seeds = 1 + r.below(2);
     let seeds: Vec<u64> = (0..n_seeds).map(|i| 1000 + i * 17 + r.below(1000)).collect();
     GridSpec {
@@ -42,6 +49,7 @@ fn random_grid(r: &mut Rng) -> GridSpec {
         gpus: vec![1 + r.below(2) as u32],
         interarrivals_s: vec![0.2 + r.next_f64() * 2.0],
         interference,
+        queues,
         seeds,
         jobs_per_cell: 10 + r.below(31) as u32,
         epochs: Some(1),
@@ -98,6 +106,7 @@ fn grid_expansion_rejects_empty_axes_with_a_clear_error() {
         ("gpus", Box::new(|g: &mut GridSpec| g.gpus.clear())),
         ("interarrivals", Box::new(|g: &mut GridSpec| g.interarrivals_s.clear())),
         ("interference", Box::new(|g: &mut GridSpec| g.interference.clear())),
+        ("queues", Box::new(|g: &mut GridSpec| g.queues.clear())),
         ("seeds", Box::new(|g: &mut GridSpec| g.seeds.clear())),
     ] {
         let mut grid = GridSpec::default_grid();
