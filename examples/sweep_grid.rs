@@ -3,7 +3,7 @@
 //!
 //!     cargo run --release --example sweep_grid
 //!
-//! Expands a 5-policy × 2-mix × 2-load × 2-interference grid (40
+//! Expands a 6-policy × 2-mix × 2-load × 2-interference grid (48
 //! cells), runs it across all available cores, and prints the
 //! policy-ranking and interference-sensitivity tables — the §5
 //! ordering `Mps ≥ MigStatic > TimeSlice` over the whole grid rather
@@ -35,6 +35,7 @@ fn main() {
         epochs: Some(1),
         cap: 7,
         admission: AdmissionMode::Strict,
+        probe_window_s: 15.0,
     };
     let cal = Calibration::paper();
     let run = run_sweep(&grid, &cal, 0).expect("valid grid");

@@ -34,17 +34,26 @@ pub enum EventKind {
     Finish { job: JobId, gen: u64 },
     /// A drained GPU finishes reconfiguring to a new MIG partition.
     Repartition { gpu: usize },
+    /// A hybrid (MISO-style) policy's probe window elapsed on `gpu`:
+    /// the fleet re-evaluates whether the shared probe region should
+    /// commit its residents to a MIG partition. Fires only on fleets
+    /// whose policy exposes a probe region; stale probes (the GPU
+    /// already committed, drained or lost residents) no-op on pop.
+    Probe { gpu: usize },
 }
 
 impl EventKind {
     /// Tie rank at equal timestamps: resource-releasing events first.
     /// A finish frees memory/slots and a repartition brings a GPU back
-    /// before any same-instant arrival is admission-checked.
+    /// before any same-instant arrival is admission-checked; a probe
+    /// evaluates after same-instant finishes (a leaving resident must
+    /// not be migrated) but before same-instant arrivals join.
     fn rank(&self) -> u8 {
         match self {
             EventKind::Finish { .. } => 0,
             EventKind::Repartition { .. } => 1,
-            EventKind::Arrival(_) => 2,
+            EventKind::Probe { .. } => 2,
+            EventKind::Arrival(_) => 3,
         }
     }
 }
@@ -170,10 +179,12 @@ mod tests {
         // memory that is already free. Kinds must outrank seqs.
         let mut t = Timeline::new();
         t.push(5.0, EventKind::Arrival(9));
+        t.push(5.0, EventKind::Probe { gpu: 0 });
         t.push(5.0, EventKind::Repartition { gpu: 1 });
         t.push(5.0, EventKind::Finish { job: 3, gen: 2 });
         assert!(matches!(t.pop().unwrap().kind, EventKind::Finish { .. }));
         assert!(matches!(t.pop().unwrap().kind, EventKind::Repartition { .. }));
+        assert!(matches!(t.pop().unwrap().kind, EventKind::Probe { .. }));
         assert!(matches!(t.pop().unwrap().kind, EventKind::Arrival(9)));
         // Within one kind, insertion order still breaks the tie.
         t.push(5.0, EventKind::Finish { job: 1, gen: 0 });

@@ -46,6 +46,7 @@ use super::policy::{
 };
 use super::queue::{JobQueue, QueueDiscipline, Reservation};
 use super::trace::JobSpec;
+use crate::coordinator::planner::ProbedJob;
 use crate::mig::a30::A30Profile;
 use crate::mig::profile::MigProfile;
 use crate::simgpu::calibration::Calibration;
@@ -145,6 +146,15 @@ pub struct FleetConfig {
     /// Admission-queue discipline (`fifo` reproduces PR 1 bit-for-bit;
     /// the backfill family and `sjf` place past a blocked head).
     pub queue: QueueDiscipline,
+    /// MISO probe window: how long every resident of a shared probe
+    /// region must be observed before the fleet asks a hybrid policy
+    /// (`mig-miso`) whether to commit them to a MIG partition. Inert
+    /// for non-hybrid policies.
+    pub probe_window_s: f64,
+    /// Busy-time penalty each migrated job pays when it moves from the
+    /// probe region into its MIG slice (checkpoint/restore of the
+    /// training process). Inert for non-hybrid policies.
+    pub migration_cost_s: f64,
 }
 
 impl Default for FleetConfig {
@@ -157,6 +167,8 @@ impl Default for FleetConfig {
             interference: InterferenceModel::Off,
             admission: AdmissionMode::Strict,
             queue: QueueDiscipline::Fifo,
+            probe_window_s: 15.0,
+            migration_cost_s: 1.0,
         }
     }
 }
@@ -241,9 +253,19 @@ pub struct FleetSim {
     cal: Calibration,
     policy: Box<dyn SchedulingPolicy>,
     share_model: Option<ShareModel>,
+    /// Hybrid (MISO-style) policy: MIG slices and a shared MPS probe
+    /// region coexist, probe-window events fire, committed GPUs revert
+    /// to probe regions when they drain.
+    hybrid: bool,
     contention: ContentionModel,
     gpus: Vec<GpuState>,
     jobs: Vec<JobState>,
+    /// Per-GPU jobs mid-migration: pulled out of the probe region when
+    /// a commit started, placed into the new slices when the
+    /// repartition event lands.
+    migrating: Vec<Vec<JobId>>,
+    /// Probe-to-slice migrations over the run.
+    migrations: u64,
     queue: JobQueue,
     timeline: Timeline,
     now: f64,
@@ -366,14 +388,29 @@ impl FleetSim {
                 }
             })
             .collect();
+        anyhow::ensure!(
+            config.probe_window_s.is_finite() && config.probe_window_s > 0.0,
+            "probe window must be finite and > 0, got {}",
+            config.probe_window_s
+        );
+        anyhow::ensure!(
+            config.migration_cost_s.is_finite() && config.migration_cost_s >= 0.0,
+            "migration cost must be finite and >= 0, got {}",
+            config.migration_cost_s
+        );
+        let hybrid = policy.probe_cap().is_some();
+        let n_gpus = gpus.len();
         Ok(FleetSim {
             config,
             cal,
             policy,
             share_model,
+            hybrid,
             contention: ContentionModel::new(config.interference),
             gpus,
             jobs,
+            migrating: vec![Vec::new(); n_gpus],
+            migrations: 0,
             queue: JobQueue::new(config.queue),
             timeline: Timeline::new(),
             now: 0.0,
@@ -398,6 +435,7 @@ impl FleetSim {
                 }
                 EventKind::Finish { job, gen } => self.handle_finish(job, gen),
                 EventKind::Repartition { gpu } => self.handle_repartition(gpu),
+                EventKind::Probe { gpu } => self.handle_probe(gpu),
             }
         }
         self.collect_metrics()
@@ -429,6 +467,16 @@ impl FleetSim {
                 if !self.gpus[gi].residents.is_empty() {
                     // Survivors speed up: fewer co-runners.
                     self.reschedule_residents(gi);
+                    // Hybrid fleets: a departure can make the shrunken
+                    // probe set fully placeable (four mediums can't
+                    // slice, three can), so re-arm the commit
+                    // evaluation. The all-aged gate in `handle_probe`
+                    // keeps it a no-op while young residents remain,
+                    // and the probe's tie rank lets every same-instant
+                    // finish land first.
+                    if self.hybrid && self.gpus[gi].partition.is_empty() {
+                        self.timeline.push(self.now, EventKind::Probe { gpu: gi });
+                    }
                 }
             }
         }
@@ -438,14 +486,122 @@ impl FleetSim {
     fn handle_repartition(&mut self, gi: usize) {
         self.update_gpu(gi);
         let g = &mut self.gpus[gi];
-        debug_assert!(g.repartitioning && self.share_model.is_none());
+        debug_assert!(g.repartitioning && (self.share_model.is_none() || self.hybrid));
         g.partition = g
             .pending_partition
             .drain(..)
             .map(|shape| Slot { shape, job: None })
             .collect();
         g.repartitioning = false;
+        // A MISO commit parked its probe residents here: land each in
+        // its slice now that the partition exists. Largest floor first
+        // onto the smallest fitting free slice — with the nested
+        // fits-relation this greedy completes whenever a complete
+        // matching exists, and the policy only committed to partitions
+        // the planner fully placed.
+        let mut movers = std::mem::take(&mut self.migrating[gi]);
+        movers.sort_by_key(|&id| std::cmp::Reverse(self.jobs[id].floor_bytes));
+        for id in movers {
+            let workload = self.jobs[id].spec.workload;
+            let mut best: Option<(u64, usize)> = None; // (bytes, slot)
+            for (si, slot) in self.gpus[gi].partition.iter().enumerate() {
+                if slot.job.is_some() || !fits_instance(workload, slot.shape.memory_bytes) {
+                    continue;
+                }
+                let key = (slot.shape.memory_bytes, si);
+                if best.map(|b| key < b).unwrap_or(true) {
+                    best = Some(key);
+                }
+            }
+            match best {
+                Some((_, si)) => self.migrate_into_slot(id, gi, si),
+                // Defensive: the plan guaranteed a fit; if a shape is
+                // missing anyway, the job re-queues rather than hangs.
+                None => {
+                    self.jobs[id].gpu = None;
+                    self.queue.push(id);
+                }
+            }
+        }
         self.try_place();
+    }
+
+    /// The MISO probe window elapsed on GPU `gi`: if every resident of
+    /// its probe region has been observed for the full window, ask the
+    /// policy whether a planned MIG partition beats the observed
+    /// shared throughput — and start the commit (drain the probe
+    /// region, reconfigure, migrate) when it does. Stale probes (the
+    /// GPU committed, emptied or picked up a younger resident whose
+    /// own probe event is still pending) no-op.
+    fn handle_probe(&mut self, gi: usize) {
+        if !self.hybrid {
+            return;
+        }
+        {
+            let g = &self.gpus[gi];
+            if g.repartitioning || !g.partition.is_empty() || g.residents.is_empty() {
+                return;
+            }
+        }
+        let window = self.config.probe_window_s;
+        let ids: Vec<JobId> = self.gpus[gi].residents.clone();
+        let all_aged = ids.iter().all(|&id| {
+            self.jobs[id]
+                .start_s
+                .map(|s| self.now - s >= window - 1e-9)
+                .unwrap_or(false)
+        });
+        if !all_aged {
+            return;
+        }
+        // Probe signal: the contention model's per-resident slowdown
+        // plus each resident's achieved (contention-stretched) rate.
+        let kind = self.gpus[gi].kind;
+        let profiles: Vec<DemandProfile> = ids
+            .iter()
+            .map(|&id| {
+                let w = self.jobs[id].spec.workload;
+                self.demand_profile(kind, w)
+            })
+            .collect();
+        let slowdowns = self
+            .contention
+            .observed_slowdowns(&kind.spec(), &self.cal, &profiles);
+        let probes: Vec<ProbedJob> = ids
+            .iter()
+            .zip(&slowdowns)
+            .map(|(&id, &observed_slowdown)| {
+                let j = &self.jobs[id];
+                let batch = Workload::paper(j.spec.workload).batch_size as f64;
+                ProbedJob {
+                    workload: j.spec.workload,
+                    observed_images_per_s: crate::util::safe_div(batch, j.per_step.wall_s),
+                    observed_slowdown,
+                }
+            })
+            .collect();
+        let Some(shapes) = self.policy.probe_decision(kind, &probes) else {
+            return; // the shared baseline wins — stay on MPS
+        };
+        // Commit: account progress at the probe rates, pull the
+        // residents off the device (their stale finish events die via
+        // the generation bump) and reconfigure. The repartition event
+        // lands them in their slices.
+        self.update_gpu(gi);
+        let movers: Vec<JobId> = std::mem::take(&mut self.gpus[gi].residents);
+        for &id in &movers {
+            let j = &mut self.jobs[id];
+            j.gen += 1;
+            j.slot = None;
+            j.cur_slowdown = 1.0;
+            j.expected_finish_s = f64::INFINITY;
+        }
+        self.migrating[gi] = movers;
+        let g = &mut self.gpus[gi];
+        g.repartitioning = true;
+        g.pending_partition = shapes;
+        self.timeline
+            .push(self.now + self.config.repartition_s, EventKind::Repartition { gpu: gi });
     }
 
     // -- placement -----------------------------------------------------
@@ -469,7 +625,32 @@ impl FleetSim {
             QueueDiscipline::BackfillEasy => self.place_backfill(false),
             QueueDiscipline::BackfillConservative => self.place_backfill(true),
         }
+        // After the pass: on a hybrid fleet, committed GPUs that sit
+        // fully drained while jobs still wait revert to whole-device
+        // probe regions (the placement pass above already used any
+        // fitting free slices, so whoever still waits needs the
+        // revert). Runs last so a fitting slice beats a 2 s rebuild.
+        if self.hybrid && !self.queue.is_empty() {
+            self.maybe_revert_drained_gpus();
+        }
         self.note_hol_state();
+    }
+
+    /// Hybrid fleets: a committed GPU that fully drained while jobs
+    /// wait is reconfigured back to an unpartitioned probe region, so
+    /// the MISO probe-commit cycle can restart for the new mix.
+    fn maybe_revert_drained_gpus(&mut self) {
+        for gi in 0..self.gpus.len() {
+            let g = &self.gpus[gi];
+            if g.repartitioning || g.partition.is_empty() || !self.gpu_idle(gi) {
+                continue;
+            }
+            let g = &mut self.gpus[gi];
+            g.repartitioning = true;
+            g.pending_partition = Vec::new();
+            self.timeline
+                .push(self.now + self.config.repartition_s, EventKind::Repartition { gpu: gi });
+        }
     }
 
     /// Strict FIFO: place head-of-queue jobs until the head must wait.
@@ -584,7 +765,10 @@ impl FleetSim {
         let view = self.view();
         match self.policy.place(workload, &view) {
             Decision::Slot { gpu, slot } => {
-                assert!(self.share_model.is_none(), "Slot decision from a shared policy");
+                assert!(
+                    self.share_model.is_none() || self.hybrid,
+                    "Slot decision from a shared policy"
+                );
                 self.queue.remove(id);
                 match self.oom_check_slot(id, gpu, slot) {
                     Some(reason) => {
@@ -659,7 +843,10 @@ impl FleetSim {
                 BackfillOutcome::Progress
             }
             Decision::Slot { gpu, slot } => {
-                assert!(self.share_model.is_none(), "Slot decision from a shared policy");
+                assert!(
+                    self.share_model.is_none() || self.hybrid,
+                    "Slot decision from a shared policy"
+                );
                 let est_finish = self.now + self.est_service_slot(id, gpu, slot);
                 let safe = reservations
                     .iter()
@@ -731,6 +918,14 @@ impl FleetSim {
     /// move the finish times — the standard backfill caveat, no worse
     /// than the user-supplied walltimes real schedulers trust.
     fn reservation_for(&mut self, id: JobId) -> Option<Reservation> {
+        // Hybrid (MISO) fleets have no computable reservations: a
+        // blocked job's earliest start depends on future probe commits
+        // and drain-reverts, not on any existing placement's finish.
+        // No reservation means no backfilling — the same safe stance
+        // MigDynamic takes while waiting for a drain.
+        if self.hybrid {
+            return None;
+        }
         let workload = self.jobs[id].spec.workload;
         let strict = self.config.admission == AdmissionMode::Strict;
         match self.share_model {
@@ -999,12 +1194,43 @@ impl FleetSim {
         self.start_job(id, gi, Some(si), stats);
     }
 
+    /// Land a MISO-migrated job in MIG instance `(gi, si)`: exactly
+    /// [`FleetSim::place_slot`] plus the busy-time migration penalty
+    /// (charged as equivalent steps at the slice rate, so it stretches
+    /// the finish without touching the telemetry account) and the
+    /// slowdown reset — slices are interference-free.
+    fn migrate_into_slot(&mut self, id: JobId, gi: usize, si: usize) {
+        let shape = self.gpus[gi].partition[si].shape;
+        let workload = self.jobs[id].spec.workload;
+        let kind = self.gpus[gi].kind;
+        let stats = self.per_step(
+            kind,
+            workload,
+            RateMode::Slot {
+                sms: shape.sms,
+                mem_slices: shape.mem_slices,
+            },
+        );
+        if stats.wall_s > 0.0 {
+            self.jobs[id].remaining_steps += self.config.migration_cost_s / stats.wall_s;
+        }
+        self.migrations += 1;
+        self.jobs[id].cur_slowdown = 1.0;
+        self.place_slot(id, gi, si);
+    }
+
     fn place_share(&mut self, id: JobId, gi: usize) {
         self.update_gpu(gi);
         self.gpus[gi].residents.push(id);
         self.jobs[id].gpu = Some(gi);
         // Every co-runner's rate changes (n grew), the new job included.
         self.reschedule_residents(gi);
+        // Hybrid fleets: the new resident opens (or extends) the probe
+        // window — evaluate once every resident has aged through it.
+        if self.hybrid {
+            self.timeline
+                .push(self.now + self.config.probe_window_s, EventKind::Probe { gpu: gi });
+        }
     }
 
     /// Recompute rates and finish events for all co-runners of `gi`.
@@ -1288,6 +1514,8 @@ impl FleetSim {
             peak_queue: self.queue.peak_len(),
             backfilled: self.queue.backfilled(),
             hol_wait_s: self.hol_wait_s,
+            migrations: self.migrations,
+            probe_window_s: self.config.probe_window_s,
             mean_slowdown,
             peak_slowdown,
             jobs,
@@ -1752,6 +1980,97 @@ mod tests {
         let idle = run_q(Box::new(Mps { cap: 7 }), &small_trace(5, 1e6), 2, QueueDiscipline::Fifo);
         assert_eq!(idle.hol_wait_s, 0.0);
         assert_eq!(idle.peak_slowdown, 1.0);
+    }
+
+    #[test]
+    fn miso_forced_commit_migrates_probed_jobs_into_slices() {
+        use crate::cluster::policy::MigMiso;
+        // Commit margin 0: the probe commits to the planner's partition
+        // as soon as every resident has aged through the (tiny) window,
+        // regardless of the observed shared throughput. Three smalls
+        // probe on one A100, migrate, and finish in slices; a fourth
+        // arriving mid-reconfiguration lands in a leftover free slice.
+        let cal = cal();
+        let mut trace = manual_trace(3, WorkloadSize::Small, 0.001);
+        trace.push(JobSpec {
+            id: 3,
+            arrival_s: 0.1,
+            workload: WorkloadSize::Small,
+            epochs: 1,
+        });
+        let config = FleetConfig {
+            a100s: 1,
+            a30s: 0,
+            probe_window_s: 0.05,
+            ..FleetConfig::default()
+        };
+        let policy = Box::new(MigMiso::with_margin(&cal, 7, 0.0));
+        let m = FleetSim::new(config, policy, cal, &trace).run();
+        assert_eq!(m.finished(), 4, "{}", m.summary());
+        assert_eq!(m.migrations, 3, "{}", m.summary());
+        assert_eq!(m.policy, "mig-miso");
+        assert_eq!(m.probe_window_s, 0.05);
+        // Slices are interference-free: post-migration service runs at
+        // slowdown 1.0, and with interference off so did the probe.
+        assert_eq!(m.mean_slowdown, 1.0);
+        // The run is deterministic.
+        let policy = Box::new(MigMiso::with_margin(&cal, 7, 0.0));
+        let b = FleetSim::new(config, policy, cal, &trace).run();
+        assert_eq!(
+            m.to_json().to_string_pretty(),
+            b.to_json().to_string_pretty()
+        );
+    }
+
+    #[test]
+    fn miso_migration_cost_stretches_the_makespan() {
+        use crate::cluster::policy::MigMiso;
+        let cal = cal();
+        let trace = manual_trace(3, WorkloadSize::Small, 0.001);
+        let run_cost = |migration_cost_s: f64| -> FleetMetrics {
+            let config = FleetConfig {
+                a100s: 1,
+                a30s: 0,
+                probe_window_s: 0.05,
+                migration_cost_s,
+                ..FleetConfig::default()
+            };
+            let policy = Box::new(MigMiso::with_margin(&cal, 7, 0.0));
+            FleetSim::new(config, policy, cal, &trace).run()
+        };
+        let free = run_cost(0.0);
+        let taxed = run_cost(10.0);
+        assert_eq!(free.migrations, 3);
+        assert_eq!(taxed.migrations, 3);
+        assert!(
+            taxed.makespan_s > free.makespan_s,
+            "migration penalty must cost wall time: {} !> {}",
+            taxed.makespan_s,
+            free.makespan_s
+        );
+    }
+
+    #[test]
+    fn miso_with_prohibitive_margin_never_migrates_and_matches_mps() {
+        use crate::cluster::policy::MigMiso;
+        // An unreachable commit margin keeps every job on the shared
+        // probe region forever: mig-miso degenerates to the MPS
+        // policy's exact placement behaviour.
+        let cal = cal();
+        let trace = small_trace(20, 0.001);
+        let config = FleetConfig {
+            a100s: 2,
+            a30s: 0,
+            ..FleetConfig::default()
+        };
+        let policy = Box::new(MigMiso::with_margin(&cal, 7, f64::INFINITY));
+        let miso = FleetSim::new(config, policy, cal, &trace).run();
+        let mps = FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace).run();
+        assert_eq!(miso.migrations, 0);
+        assert_eq!(miso.finished(), 20);
+        assert_eq!(miso.makespan_s, mps.makespan_s);
+        assert_eq!(miso.jobs, mps.jobs);
+        assert_eq!(miso.gpus, mps.gpus);
     }
 
     #[test]

@@ -87,6 +87,12 @@ pub struct FleetMetrics {
     /// Total time any queue head spent blocked — the head-of-line
     /// exposure backfilling works around.
     pub hol_wait_s: f64,
+    /// Probe-to-slice migrations (MISO commits; 0 unless the policy is
+    /// hybrid, i.e. `mig-miso`).
+    pub migrations: u64,
+    /// MISO probe window the run was configured with (inert unless the
+    /// policy is hybrid; carried for the sweep's per-cell record).
+    pub probe_window_s: f64,
     /// Busy-time-weighted mean contention slowdown over jobs that ran
     /// (1.0 = no interference; MIG policies always report 1.0).
     pub mean_slowdown: f64,
@@ -210,6 +216,8 @@ impl FleetMetrics {
             .set("peak_queue", Json::from_u64(self.peak_queue as u64))
             .set("backfilled", Json::from_u64(self.backfilled))
             .set("hol_wait_s", Json::from_f64(self.hol_wait_s))
+            .set("migrations", Json::from_u64(self.migrations))
+            .set("probe_window_s", Json::from_f64(self.probe_window_s))
             .set("mean_slowdown", Json::from_f64(self.mean_slowdown))
             .set("peak_slowdown", Json::from_f64(self.peak_slowdown))
             .set("mean_wait_s", Json::from_f64(self.mean_wait_s()))
@@ -245,7 +253,7 @@ impl FleetMetrics {
     /// One human-readable line for the CLI.
     pub fn summary(&self) -> String {
         format!(
-            "{:<12} [{}] {} jobs: {} finished, {} rejected, {} oom, {} unserved | makespan {} | wait μ {} | hol {} | backfilled {} | JCT p50 {} p95 {} | {:.1} img/s | GRACT μ {:.2} | slowdown μ {:.2} peak {:.2}",
+            "{:<12} [{}] {} jobs: {} finished, {} rejected, {} oom, {} unserved | makespan {} | wait μ {} | hol {} | backfilled {} | migrations {} | JCT p50 {} p95 {} | {:.1} img/s | GRACT μ {:.2} | slowdown μ {:.2} peak {:.2}",
             self.policy,
             self.queue_discipline,
             self.jobs.len(),
@@ -257,6 +265,7 @@ impl FleetMetrics {
             crate::util::fmt_duration(self.mean_wait_s()),
             crate::util::fmt_duration(self.hol_wait_s),
             self.backfilled,
+            self.migrations,
             crate::util::fmt_duration(self.p50_jct_s()),
             crate::util::fmt_duration(self.p95_jct_s()),
             self.aggregate_images_per_second(),
@@ -298,6 +307,8 @@ mod tests {
             peak_queue: 2,
             backfilled: 0,
             hol_wait_s: 0.0,
+            migrations: 0,
+            probe_window_s: 15.0,
             mean_slowdown: 1.0,
             peak_slowdown: 1.0,
             jobs,
@@ -363,6 +374,9 @@ mod tests {
         assert_eq!(back.get("backfilled").unwrap().as_u64(), Some(0));
         assert!(back.get("hol_wait_s").unwrap().as_f64().is_some());
         assert!(back.get("peak_slowdown").unwrap().as_f64().is_some());
+        // MISO fields ride along in the summary.
+        assert_eq!(back.get("migrations").unwrap().as_u64(), Some(0));
+        assert!(back.get("probe_window_s").unwrap().as_f64().is_some());
         // Trace composition rides along in the summary.
         assert_eq!(back.at(&["trace", "small"]).unwrap().as_u64(), Some(1));
         assert_eq!(back.at(&["trace", "jobs"]).unwrap().as_u64(), Some(1));

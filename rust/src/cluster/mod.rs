@@ -11,13 +11,15 @@
 //!
 //! # Event model
 //!
-//! A run is a binary-heap timeline ([`event::Timeline`]) of three event
+//! A run is a binary-heap timeline ([`event::Timeline`]) of four event
 //! kinds: **job arrival** (from a Poisson stream or a CSV trace file,
 //! [`trace`]), **job finish** (scheduled from the job's calibrated
 //! per-step rate; superseded and rescheduled whenever the job's
-//! co-runner count changes), and **GPU repartition** (a drained GPU
-//! coming back with a new MIG layout). Ties pop in insertion order, so
-//! a run is bit-reproducible for a fixed `--seed`.
+//! co-runner count changes), **GPU repartition** (a drained GPU
+//! coming back with a new MIG layout), and — on hybrid `mig-miso`
+//! fleets — **probe** (a probe window elapsing, triggering the
+//! MISO commit decision). Ties pop in insertion order, so a run is
+//! bit-reproducible for a fixed `--seed`.
 //!
 //! Jobs wait in an admission queue ([`queue`]) driven by a
 //! [`queue::QueueDiscipline`]: strict `fifo` (place only the head),
@@ -51,6 +53,7 @@
 //! | `timeslice`   | ≤ cap co-runners, round-robin| context-switch + cold caches |
 //! | `mig-static`  | fixed MIG partition          | best-fit into free instances |
 //! | `mig-dynamic` | drain-and-repartition        | layouts from `coordinator::planner` |
+//! | `mig-miso`    | MPS probe → MIG commit       | MISO-style predictive partitioning |
 //!
 //! # Metrics and usage
 //!

@@ -18,6 +18,13 @@
 //!   best-fit into free instances whose memory floor fits.
 //! * [`MigDynamic`] — like static, but a fully drained GPU is
 //!   re-partitioned for the waiting mix via `coordinator::planner`.
+//! * [`MigMiso`] — MISO-style predictive partitioning: new jobs land
+//!   in a shared MPS *probe region* (unpartitioned GPUs) where the
+//!   contention model observes their demand; after a probe window the
+//!   fleet asks [`SchedulingPolicy::probe_decision`] whether a planned
+//!   MIG partition beats the observed shared throughput, and migrates
+//!   the residents into interference-free slices when it does —
+//!   falling back to pure MPS when sharing already wins.
 //!
 //! Admission control (the paper's §4 OOM boundary) is part of every
 //! decision. Under [`AdmissionMode::Strict`] (the default) a job is
@@ -103,10 +110,21 @@ pub struct GpuView {
     pub repartitioning: bool,
     /// MIG instances as (shape, occupied) — empty in shared mode.
     pub slots: Vec<(InstanceShape, bool)>,
-    /// Whole-GPU co-runners currently resident (shared mode).
+    /// Whole-GPU co-runners currently resident (shared mode, and the
+    /// probe region of a hybrid policy).
     pub residents: usize,
     /// Sum of the residents' memory floors (shared mode admission).
     pub resident_floor_bytes: u64,
+}
+
+impl GpuView {
+    /// Is this GPU currently a shared MPS *probe region* a hybrid
+    /// (MISO-style) policy can place new jobs into? Unpartitioned and
+    /// not mid-reconfiguration — a committed GPU carries slices
+    /// instead, and reverts to a probe region once it drains.
+    pub fn probe_region(&self) -> bool {
+        !self.repartitioning && self.slots.is_empty()
+    }
 }
 
 /// Read-only fleet snapshot.
@@ -174,6 +192,28 @@ pub trait SchedulingPolicy {
     /// Offer a new partition for a fully drained GPU given the waiting
     /// workloads (head first). `None` = keep the current partition.
     fn repartition(&self, _kind: GpuKind, _waiting: &[WorkloadSize]) -> Option<Vec<InstanceShape>> {
+        None
+    }
+
+    /// `Some(cap)` marks a *hybrid* policy (MIG slices **and** a
+    /// shared MPS probe region coexist on the fleet, `mig-miso`):
+    /// unpartitioned GPUs host up to `cap` probing co-runners, and the
+    /// fleet fires a probe-window timer after each join. `None` (the
+    /// default) keeps the classic all-shared or all-MIG split.
+    fn probe_cap(&self) -> Option<u32> {
+        None
+    }
+
+    /// MISO commit decision for one probe region: given what the
+    /// contention model observed about the residents (workload,
+    /// achieved images/s, slowdown factor), return the MIG partition
+    /// to migrate them into — or `None` to keep them on shared MPS.
+    /// Only consulted for policies with [`Self::probe_cap`] `Some`.
+    fn probe_decision(
+        &self,
+        _kind: GpuKind,
+        _probes: &[planner::ProbedJob],
+    ) -> Option<Vec<InstanceShape>> {
         None
     }
 }
@@ -539,11 +579,143 @@ impl SchedulingPolicy for MigDynamic {
     }
 }
 
+/// MISO-style predictive partitioning (Li et al., 2022): use MPS to
+/// *predict* the best MIG partition before committing to it.
+///
+/// New jobs land in a shared MPS probe region — any unpartitioned GPU
+/// — where the contention model observes their demand. After the
+/// fleet's probe window ([`crate::cluster::fleet::FleetConfig::probe_window_s`])
+/// the planner scores every valid A100/A30 slice set against the
+/// *observed* shared throughput ([`planner::Planner::miso_a100`] /
+/// [`planner::Planner::miso_a30`]); when a partition wins by
+/// [`planner::MISO_COMMIT_MARGIN`] the residents migrate into
+/// interference-free slices (paying the repartition downtime plus a
+/// busy-time migration penalty), otherwise they stay on MPS — the
+/// paper's "MPS is fastest" baseline is the fallback, its "MIG is
+/// isolated" benefit the reward.
+pub struct MigMiso {
+    planner: planner::Planner,
+    /// Probe-region co-runner cap (the MPS cap).
+    pub cap: u32,
+    /// Commit threshold: predicted MIG aggregate must beat the
+    /// observed shared aggregate by this factor. Defaults to
+    /// [`planner::MISO_COMMIT_MARGIN`]; tests pin 0.0 to force
+    /// migration deterministically.
+    pub commit_margin: f64,
+}
+
+impl MigMiso {
+    pub fn new(cal: &Calibration, cap: u32) -> MigMiso {
+        MigMiso {
+            planner: planner::Planner::new(cal),
+            cap,
+            commit_margin: planner::MISO_COMMIT_MARGIN,
+        }
+    }
+
+    pub fn with_margin(cal: &Calibration, cap: u32, commit_margin: f64) -> MigMiso {
+        MigMiso {
+            commit_margin,
+            ..MigMiso::new(cal, cap)
+        }
+    }
+}
+
+impl SchedulingPolicy for MigMiso {
+    fn name(&self) -> &'static str {
+        "mig-miso"
+    }
+
+    fn share_model(&self) -> Option<ShareModel> {
+        // The probe region shares via MPS; committed GPUs carry MIG
+        // slices (`probe_cap` marks the policy hybrid).
+        Some(ShareModel::Mps)
+    }
+
+    fn initial_partition(&self, _kind: GpuKind) -> Vec<InstanceShape> {
+        // Every GPU starts as a probe region; commits carve slices.
+        Vec::new()
+    }
+
+    fn place(&self, workload: WorkloadSize, view: &FleetView) -> Decision {
+        let need = floor_bytes(workload);
+        let oversubscribe = view.admission == AdmissionMode::Oversubscribe;
+        // (1) Probe first — MISO's premise is that every job's demand
+        // is worth observing under MPS before a partition is chosen.
+        // Least-loaded probe region under the cap and (strict) floors.
+        let mut best: Option<(usize, usize)> = None; // (residents, gpu)
+        let mut ever_fits = oversubscribe;
+        for (gi, g) in view.gpus.iter().enumerate() {
+            if need <= usable_bytes(g.kind.spec().dram_capacity) {
+                ever_fits = true;
+            } else if !oversubscribe {
+                continue;
+            }
+            if !g.probe_region() || g.residents >= self.cap as usize {
+                continue;
+            }
+            if !oversubscribe
+                && g.resident_floor_bytes + need > usable_bytes(g.kind.spec().dram_capacity)
+            {
+                continue;
+            }
+            if best.map(|(r, _)| g.residents < r).unwrap_or(true) {
+                best = Some((g.residents, gi));
+            }
+        }
+        if let Some((_, gpu)) = best {
+            return Decision::Share { gpu };
+        }
+        // (2) Overflow into committed GPUs: smallest fitting free
+        // slice (their layout was planned for jobs like these).
+        if let Some(d) = slot_place(workload, view, false) {
+            return d;
+        }
+        // (3) Nothing now. A committed GPU reverts to a whole-device
+        // probe region when it drains, so any job whose floor fits a
+        // whole GPU is eventually servable — and under oversubscribed
+        // admission everything is placeable (and OOM-killable).
+        if oversubscribe || ever_fits {
+            Decision::Wait
+        } else {
+            Decision::Reject(format!(
+                "memory floor {} exceeds every GPU in the fleet",
+                crate::util::fmt_bytes(need)
+            ))
+        }
+    }
+
+    fn shared_cap(&self) -> Option<u32> {
+        Some(self.cap)
+    }
+
+    fn probe_cap(&self) -> Option<u32> {
+        Some(self.cap)
+    }
+
+    fn probe_decision(
+        &self,
+        kind: GpuKind,
+        probes: &[planner::ProbedJob],
+    ) -> Option<Vec<InstanceShape>> {
+        match kind {
+            GpuKind::A100 => self
+                .planner
+                .miso_a100(probes, self.commit_margin)
+                .map(|ps| ps.iter().map(|&p| InstanceShape::a100(p)).collect()),
+            GpuKind::A30 => self
+                .planner
+                .miso_a30(probes, self.commit_margin)
+                .map(|ps| ps.iter().map(|&p| InstanceShape::a30(p)).collect()),
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // CLI-facing policy selection
 // ---------------------------------------------------------------------
 
-/// The five policies, parseable from the CLI.
+/// The six policies, parseable from the CLI.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PolicyKind {
     Exclusive,
@@ -551,15 +723,17 @@ pub enum PolicyKind {
     TimeSlice,
     MigStatic,
     MigDynamic,
+    MigMiso,
 }
 
 impl PolicyKind {
-    pub const ALL: [PolicyKind; 5] = [
+    pub const ALL: [PolicyKind; 6] = [
         PolicyKind::Exclusive,
         PolicyKind::Mps,
         PolicyKind::TimeSlice,
         PolicyKind::MigStatic,
         PolicyKind::MigDynamic,
+        PolicyKind::MigMiso,
     ];
 
     pub fn name(self) -> &'static str {
@@ -569,6 +743,7 @@ impl PolicyKind {
             PolicyKind::TimeSlice => "timeslice",
             PolicyKind::MigStatic => "mig-static",
             PolicyKind::MigDynamic => "mig-dynamic",
+            PolicyKind::MigMiso => "mig-miso",
         }
     }
 
@@ -576,8 +751,9 @@ impl PolicyKind {
         Self::ALL.iter().copied().find(|p| p.name() == s)
     }
 
-    /// Build the policy object. `cap` bounds shared-mode co-runners;
-    /// `a100_partition` overrides the static default (MIG policies).
+    /// Build the policy object. `cap` bounds shared-mode co-runners
+    /// (and the `mig-miso` probe region); `a100_partition` overrides
+    /// the static default (MIG policies).
     pub fn build(
         self,
         cal: &Calibration,
@@ -590,6 +766,7 @@ impl PolicyKind {
             PolicyKind::TimeSlice => Box::new(TimeSlice { cap }),
             PolicyKind::MigStatic => Box::new(MigStatic::new(a100_partition, None)),
             PolicyKind::MigDynamic => Box::new(MigDynamic::new(cal)),
+            PolicyKind::MigMiso => Box::new(MigMiso::new(cal, cap)),
         }
     }
 }
@@ -853,5 +1030,85 @@ mod tests {
         let mut v = shared_view(&[0]);
         v.gpus[0].repartitioning = true;
         assert_eq!(p.place(WorkloadSize::Small, &v), Decision::Wait);
+    }
+
+    #[test]
+    fn miso_is_hybrid_and_starts_unpartitioned() {
+        let cal = Calibration::paper();
+        let p = MigMiso::new(&cal, 7);
+        assert_eq!(p.name(), "mig-miso");
+        assert_eq!(p.share_model(), Some(ShareModel::Mps));
+        assert_eq!(p.probe_cap(), Some(7));
+        assert_eq!(p.shared_cap(), Some(7));
+        assert!(p.initial_partition(GpuKind::A100).is_empty());
+        assert!(p.initial_partition(GpuKind::A30).is_empty());
+        // Non-hybrid policies expose no probe region.
+        assert_eq!(Mps { cap: 7 }.probe_cap(), None);
+        assert_eq!(MigStatic::new(None, None).probe_cap(), None);
+        assert_eq!(
+            Mps { cap: 7 }.probe_decision(GpuKind::A100, &[]),
+            None,
+            "default probe_decision must refuse"
+        );
+    }
+
+    #[test]
+    fn miso_probes_least_loaded_unpartitioned_gpu() {
+        let cal = Calibration::paper();
+        let p = MigMiso::new(&cal, 7);
+        let d = p.place(WorkloadSize::Small, &shared_view(&[3, 1, 2]));
+        assert_eq!(d, Decision::Share { gpu: 1 });
+        // Probe cap behaves like the MPS co-runner cap.
+        let tight = MigMiso::new(&cal, 2);
+        assert_eq!(tight.place(WorkloadSize::Small, &shared_view(&[2, 2])), Decision::Wait);
+    }
+
+    #[test]
+    fn miso_overflows_into_committed_slices() {
+        use MigProfile::*;
+        let cal = Calibration::paper();
+        let p = MigMiso::new(&cal, 7);
+        // GPU 0 committed to [2g.10gb (busy), 1g.5gb (free)], no probe
+        // region anywhere: a small overflows into the free slice.
+        let mut v = mig_view(&[(P2g10gb, true), (P1g5gb, false)]);
+        assert_eq!(p.place(WorkloadSize::Small, &v), Decision::Slot { gpu: 0, slot: 1 });
+        // A medium fits no free slice: it waits for the drain-revert.
+        assert_eq!(p.place(WorkloadSize::Medium, &v), Decision::Wait);
+        // With a probe region present, probing outranks the free slice.
+        v.gpus.push(GpuView {
+            kind: GpuKind::A100,
+            repartitioning: false,
+            slots: Vec::new(),
+            residents: 0,
+            resident_floor_bytes: 0,
+        });
+        assert_eq!(p.place(WorkloadSize::Small, &v), Decision::Share { gpu: 1 });
+    }
+
+    #[test]
+    fn miso_probe_decision_commits_only_when_the_planner_wins() {
+        use crate::coordinator::planner::ProbedJob;
+        let cal = Calibration::paper();
+        let p = MigMiso::new(&cal, 7);
+        let starving: Vec<ProbedJob> = (0..7)
+            .map(|_| ProbedJob {
+                workload: WorkloadSize::Small,
+                observed_images_per_s: 0.1,
+                observed_slowdown: 2.0,
+            })
+            .collect();
+        let shapes = p
+            .probe_decision(GpuKind::A100, &starving)
+            .expect("starved probe must commit");
+        assert_eq!(shapes.len(), 7);
+        assert!(shapes.iter().all(|s| s.name == "1g.5gb"));
+        let thriving: Vec<ProbedJob> = starving
+            .iter()
+            .map(|j| ProbedJob {
+                observed_images_per_s: 1e12,
+                ..*j
+            })
+            .collect();
+        assert_eq!(p.probe_decision(GpuKind::A100, &thriving), None);
     }
 }

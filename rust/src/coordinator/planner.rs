@@ -8,11 +8,12 @@
 //! returns the configuration that maximizes aggregate throughput (or
 //! minimizes makespan), honoring each job's memory floor.
 
+use crate::mig::a30::A30Profile;
 use crate::mig::placement::PartitionSet;
 use crate::mig::profile::MigProfile;
 use crate::simgpu::calibration::Calibration;
 use crate::simgpu::engine::{InstanceResources, SimEngine};
-use crate::simgpu::spec::A100;
+use crate::simgpu::spec::{GpuSpec, A100, A30};
 use crate::workload::memory::GpuMemoryPlan;
 use crate::workload::pipeline::PipelineModel;
 use crate::workload::resnet;
@@ -45,18 +46,58 @@ pub struct Plan {
     pub unplaced: usize,
 }
 
-/// Steady-state throughput of `workload` on one instance of `profile`,
-/// or `None` if the memory floor does not fit (the OOM boundary).
-pub fn throughput(workload: WorkloadSize, profile: MigProfile, cal: &Calibration) -> Option<f64> {
-    GpuMemoryPlan::paper(workload).allocate(profile.memory_bytes())?;
+/// Steady-state throughput of `workload` on an instance of `spec`
+/// owning `sms` SMs and `mem_slices` memory slices of `memory_bytes`
+/// total framebuffer, or `None` if the memory floor does not fit (the
+/// OOM boundary). The device-agnostic core behind the A100 and A30
+/// throughput tables.
+fn instance_throughput(
+    workload: WorkloadSize,
+    spec: GpuSpec,
+    sms: u32,
+    mem_slices: u32,
+    memory_bytes: u64,
+    cal: &Calibration,
+) -> Option<f64> {
+    GpuMemoryPlan::paper(workload).allocate(memory_bytes)?;
     let w = Workload::paper(workload);
-    let engine = SimEngine::new(A100, *cal);
+    let engine = SimEngine::new(spec, *cal);
     let trace = resnet::step_trace_cached(workload);
-    let res = InstanceResources::mig(profile.sm_count(), profile.memory_slices());
+    let res = InstanceResources::mig(sms, mem_slices);
     let gpu_only = engine.run_step(trace, res, 0.0);
     let wait = PipelineModel::paper(workload).input_wait_s(gpu_only.wall_s);
     let step = engine.run_step(trace, res, wait).wall_s;
     Some(w.batch_size as f64 / step)
+}
+
+/// Steady-state throughput of `workload` on one A100 instance of
+/// `profile`, or `None` if the memory floor does not fit.
+pub fn throughput(workload: WorkloadSize, profile: MigProfile, cal: &Calibration) -> Option<f64> {
+    instance_throughput(
+        workload,
+        A100,
+        profile.sm_count(),
+        profile.memory_slices(),
+        profile.memory_bytes(),
+        cal,
+    )
+}
+
+/// A30 twin of [`throughput`]: steady-state images/s of `workload` on
+/// one A30 instance of `profile`, or `None` on a memory-floor miss.
+pub fn a30_throughput(
+    workload: WorkloadSize,
+    profile: A30Profile,
+    cal: &Calibration,
+) -> Option<f64> {
+    instance_throughput(
+        workload,
+        A30,
+        profile.sm_count(),
+        profile.memory_slices(),
+        profile.memory_bytes(),
+        cal,
+    )
 }
 
 /// Throughput of every (workload, profile) pair, computed once per
@@ -86,22 +127,82 @@ impl TputTable {
     }
 }
 
+/// A30 twin of [`TputTable`]: throughput of every (workload, A30
+/// profile) pair, memoized once per [`Planner`].
+struct A30Table {
+    vals: [[Option<f64>; 3]; 3],
+}
+
+impl A30Table {
+    fn build(cal: &Calibration) -> A30Table {
+        let mut vals = [[None; 3]; 3];
+        for (wi, w) in WorkloadSize::ALL.iter().enumerate() {
+            for (pi, p) in A30Profile::ALL.iter().enumerate() {
+                vals[wi][pi] = a30_throughput(*w, *p, cal);
+            }
+        }
+        A30Table { vals }
+    }
+
+    fn get(&self, w: WorkloadSize, p: A30Profile) -> Option<f64> {
+        let wi = WorkloadSize::ALL.iter().position(|&x| x == w).expect("known workload");
+        let pi = A30Profile::ALL.iter().position(|&x| x == p).expect("known profile");
+        self.vals[wi][pi]
+    }
+}
+
+/// One MPS-probed job, the unit of MISO-style partition scoring: its
+/// workload plus what the probe region actually observed for it —
+/// aggregate images/s under contended sharing and the contention
+/// slowdown factor ([`crate::simgpu::interference`]'s probe signal).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProbedJob {
+    pub workload: WorkloadSize,
+    /// Throughput the job sustained while sharing the probe region
+    /// (contention already folded in).
+    pub observed_images_per_s: f64,
+    /// Contention slowdown factor the probe observed (1.0 = none).
+    /// Carried as the exported probe signal for diagnostics and
+    /// future scoring refinements; the commit decision itself scores
+    /// on `observed_images_per_s`, which already folds the slowdown
+    /// into the achieved rate — using both would double-count it.
+    pub observed_slowdown: f64,
+}
+
+/// MISO commit margin: the predicted MIG aggregate must beat the
+/// observed shared aggregate by this factor before a migration is
+/// worth its one-time costs (drain + repartition downtime plus the
+/// per-job busy-time migration penalty).
+pub const MISO_COMMIT_MARGIN: f64 = 1.05;
+
 /// A reusable planner: the memoized (workload, profile) throughput
-/// table plus the calibration it was built from.
+/// tables (A100 eager, A30 lazy) plus the calibration they were built
+/// from.
 ///
-/// Building the table costs 15 simulator step evaluations; callers that
-/// plan repeatedly — `MigDynamic` re-planning on every GPU drain, or a
-/// sweep running thousands of fleet cells — construct one `Planner` and
-/// amortize that cost across every subsequent [`Planner::plan`] call.
+/// Building the A100 table costs 15 simulator step evaluations;
+/// callers that plan repeatedly — `MigDynamic` re-planning on every
+/// GPU drain, `MigMiso` scoring every probe window, or a sweep running
+/// thousands of fleet cells — construct one `Planner` and amortize
+/// that cost across every subsequent [`Planner::plan`] call. The A30
+/// table (9 more evaluations) is built on the first A30 scoring call,
+/// so pure-A100 planning never pays for it.
 pub struct Planner {
+    cal: Calibration,
     table: TputTable,
+    a30_table: std::cell::OnceCell<A30Table>,
 }
 
 impl Planner {
     pub fn new(cal: &Calibration) -> Planner {
         Planner {
+            cal: *cal,
             table: TputTable::build(cal),
+            a30_table: std::cell::OnceCell::new(),
         }
+    }
+
+    fn a30_table(&self) -> &A30Table {
+        self.a30_table.get_or_init(|| A30Table::build(&self.cal))
     }
 
     /// Find the throughput-optimal plan for a job mix.
@@ -132,6 +233,78 @@ impl Planner {
     /// Just the profile multiset the planner would configure for `jobs`.
     pub fn best_partition(&self, jobs: &[Job]) -> Vec<MigProfile> {
         self.plan(jobs).profiles
+    }
+
+    /// MISO-style A100 commit decision, conditioned on the probe
+    /// observations: plan the throughput-optimal partition for the
+    /// probed workloads and return it only when (a) every probed job
+    /// gets a slice and (b) the predicted aggregate images/s beats the
+    /// *observed* shared aggregate by at least `margin` (use
+    /// [`MISO_COMMIT_MARGIN`] unless testing). `None` means stay on
+    /// MPS — the shared baseline already wins.
+    pub fn miso_a100(&self, probes: &[ProbedJob], margin: f64) -> Option<Vec<MigProfile>> {
+        if probes.is_empty() {
+            return None;
+        }
+        let jobs: Vec<Job> = probes.iter().map(|p| Job { workload: p.workload }).collect();
+        let plan = self.plan(&jobs);
+        if plan.unplaced > 0 {
+            return None;
+        }
+        let observed: f64 = probes.iter().map(|p| p.observed_images_per_s).sum();
+        if plan.total_throughput > margin * observed {
+            Some(plan.profiles)
+        } else {
+            None
+        }
+    }
+
+    /// A30 twin of [`Planner::miso_a100`]: the A30's valid slice sets
+    /// are the homogeneous layouts (plus trivially-dominated partial
+    /// ones), so the search enumerates one candidate per profile —
+    /// `max_homogeneous` instances of it — scored from the memoized
+    /// A30 table with the same (unplaced, aggregate) objective.
+    pub fn miso_a30(&self, probes: &[ProbedJob], margin: f64) -> Option<Vec<A30Profile>> {
+        if probes.is_empty() {
+            return None;
+        }
+        let mut best: Option<(usize, f64, A30Profile)> = None; // (unplaced, total, profile)
+        for &p in &A30Profile::ALL {
+            let slots = p.max_homogeneous() as usize;
+            // Per-probe throughput on this profile; identical slots, so
+            // the best assignment just takes the top `slots` rates.
+            let mut rates: Vec<f64> = Vec::new();
+            let mut unplaced = 0usize;
+            for probe in probes {
+                match self.a30_table().get(probe.workload, p) {
+                    Some(t) => rates.push(t),
+                    None => unplaced += 1,
+                }
+            }
+            rates.sort_by(|a, b| b.total_cmp(a));
+            if rates.len() > slots {
+                unplaced += rates.len() - slots;
+                rates.truncate(slots);
+            }
+            let total: f64 = rates.iter().sum();
+            let better = match best {
+                None => true,
+                Some((bu, bt, _)) => (unplaced, -total) < (bu, -bt),
+            };
+            if better {
+                best = Some((unplaced, total, p));
+            }
+        }
+        let (unplaced, total, profile) = best?;
+        if unplaced > 0 {
+            return None;
+        }
+        let observed: f64 = probes.iter().map(|p| p.observed_images_per_s).sum();
+        if total > margin * observed {
+            Some(vec![profile; profile.max_homogeneous() as usize])
+        } else {
+            None
+        }
     }
 }
 
@@ -325,5 +498,72 @@ mod tests {
         let p = plan(&jobs(&[(WorkloadSize::Small, 9)]), &Calibration::paper());
         assert_eq!(p.unplaced, 2);
         assert_eq!(p.assignments.len(), 7);
+    }
+
+    fn probed(spec: &[(WorkloadSize, f64)]) -> Vec<ProbedJob> {
+        spec.iter()
+            .map(|&(workload, observed_images_per_s)| ProbedJob {
+                workload,
+                observed_images_per_s,
+                observed_slowdown: 1.5,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn miso_commits_when_shared_observation_is_poor() {
+        // Observed shared throughput near zero: any feasible partition
+        // beats it, so the probe must commit — and to the same layout
+        // the plain planner would pick for the mix.
+        let cal = Calibration::paper();
+        let planner = Planner::new(&cal);
+        let probes = probed(&[(WorkloadSize::Small, 0.1); 7]);
+        let partition = planner
+            .miso_a100(&probes, MISO_COMMIT_MARGIN)
+            .expect("a starved probe must commit");
+        assert_eq!(partition, vec![P1g5gb; 7]);
+    }
+
+    #[test]
+    fn miso_stays_on_mps_when_shared_observation_wins() {
+        // Observed shared throughput absurdly high: no partition can
+        // beat it, so the probe must not commit.
+        let cal = Calibration::paper();
+        let planner = Planner::new(&cal);
+        let probes = probed(&[(WorkloadSize::Small, 1e12); 3]);
+        assert_eq!(planner.miso_a100(&probes, MISO_COMMIT_MARGIN), None);
+        assert_eq!(planner.miso_a30(&probes, MISO_COMMIT_MARGIN), None);
+    }
+
+    #[test]
+    fn miso_never_commits_to_a_partition_that_strands_a_probe() {
+        // Four 2g-class jobs need 8 compute slices — more than the
+        // A100's 7 — so no full placement exists and the probe must
+        // stay on MPS no matter how poor the observation.
+        let cal = Calibration::paper();
+        let planner = Planner::new(&cal);
+        let probes = probed(&[(WorkloadSize::Medium, 0.1); 4]);
+        assert_eq!(planner.miso_a100(&probes, 0.0), None);
+        // Empty probe sets never commit either.
+        assert_eq!(planner.miso_a100(&[], 0.0), None);
+        assert_eq!(planner.miso_a30(&[], 0.0), None);
+    }
+
+    #[test]
+    fn miso_a30_picks_a_homogeneous_layout_that_fits() {
+        // Large's floor (9.4 GB) misses the 1g.6gb slice, so a starved
+        // 2-large probe commits to 2x 2g.12gb on the A30.
+        let cal = Calibration::paper();
+        let planner = Planner::new(&cal);
+        assert!(a30_throughput(WorkloadSize::Large, A30Profile::P1g6gb, &cal).is_none());
+        assert!(a30_throughput(WorkloadSize::Large, A30Profile::P2g12gb, &cal).is_some());
+        let probes = probed(&[(WorkloadSize::Large, 0.1); 2]);
+        let partition = planner
+            .miso_a30(&probes, MISO_COMMIT_MARGIN)
+            .expect("a starved A30 probe must commit");
+        assert_eq!(partition, vec![A30Profile::P2g12gb; 2]);
+        // Three larges need three >= 2g.12gb slices — impossible.
+        let three = probed(&[(WorkloadSize::Large, 0.1); 3]);
+        assert_eq!(planner.miso_a30(&three, 0.0), None);
     }
 }

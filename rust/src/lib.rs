@@ -78,6 +78,44 @@
 //! discipline-ranking table/JSON section). Under `fifo` the simulator
 //! reproduces its pre-discipline behaviour bit-for-bit.
 //!
+//! ## Predictive partitioning
+//!
+//! `mig-miso`, the sixth scheduling policy, closes the loop between
+//! the interference model and the partition planner the way MISO
+//! (arXiv 2207.11428) does on real hardware: *use MPS to predict the
+//! best MIG partition before committing to it*. New jobs land in a
+//! shared MPS **probe region** (every `mig-miso` GPU starts
+//! unpartitioned) where the contention model observes their demand
+//! profiles; after a configurable probe window
+//! ([`cluster::fleet::FleetConfig::probe_window_s`], `--probe-window`)
+//! the planner scores every valid A100/A30 slice set against the
+//! *observed* shared throughput
+//! ([`coordinator::planner::Planner::miso_a100`] /
+//! [`coordinator::planner::Planner::miso_a30`] over
+//! [`coordinator::planner::ProbedJob`]s — each carrying the achieved
+//! contention-stretched rate the decision scores on, plus the
+//! per-resident slowdown factor
+//! [`simgpu::interference::ContentionModel::observed_slowdowns`]
+//! exports as the diagnostic probe signal).
+//! When a partition beats the observed sharing by
+//! [`coordinator::planner::MISO_COMMIT_MARGIN`], the fleet drains the
+//! probe region, reconfigures, and migrates the residents into
+//! interference-free slices — each migration pays the repartition
+//! downtime plus a busy-time penalty
+//! ([`cluster::fleet::FleetConfig::migration_cost_s`]) and is counted
+//! in the `migrations` metric. When sharing already wins, the jobs
+//! simply stay on MPS: `mig-miso` degrades to the paper's
+//! best-performing collocation mode instead of below it. Committed
+//! GPUs revert to probe regions once they drain, so the
+//! probe-commit-drain cycle tracks a shifting workload mix. Surface:
+//! `migsim fleet --policy mig-miso --probe-window 15`, a `mig-miso`
+//! value on the sweep `--policies` axis (summary schema v4 with
+//! per-cell `migrations`/`probe_window_s`), and a scenario-invariant
+//! test harness (`rust/tests/scenario_invariants.rs`) that pins the
+//! cross-cutting contracts — MIG slices are interference-free,
+//! backfills never delay a blocked head, same-instant finishes outrank
+//! arrivals, and the probe knobs are inert for every other policy.
+//!
 //! ## Sweeps & benchmarking
 //!
 //! The [`sweep`] subsystem runs collocation experiments as *grids*,

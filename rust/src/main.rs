@@ -64,26 +64,29 @@ SUBCOMMANDS
         [--mix small:0.5,medium:0.3,large:0.2] [--epochs N]
         [--interference off|linear|roofline] [--admission strict|oversubscribe]
         [--queue fifo|backfill-easy|backfill-conservative|sjf]
-        [--partition 2g.10gb,2g.10gb,2g.10gb] [--trace file.csv]
-        [--dump-trace file.csv] [--out results]
+        [--probe-window 15] [--partition 2g.10gb,2g.10gb,2g.10gb]
+        [--trace file.csv] [--dump-trace file.csv] [--out results]
       Cluster-scale collocation: simulate a job stream on a fleet of
       A100/A30 GPUs under a placement policy (exclusive | mps |
-      timeslice | mig-static | mig-dynamic). --interference applies a
-      contention model to whole-GPU sharing (MIG instances stay
-      interference-free); --admission oversubscribe turns the paper's
-      memory floors soft — jobs placed beyond them are OOM-killed
-      (structured outcome) instead of queued. --queue picks the
-      admission-queue discipline: fifo places only the head (and one
-      blocked job stalls everything behind it), the backfill
+      timeslice | mig-static | mig-dynamic | mig-miso). --interference
+      applies a contention model to whole-GPU sharing (MIG instances
+      stay interference-free); --admission oversubscribe turns the
+      paper's memory floors soft — jobs placed beyond them are
+      OOM-killed (structured outcome) instead of queued. --queue picks
+      the admission-queue discipline: fifo places only the head (and
+      one blocked job stalls everything behind it), the backfill
       disciplines place delay-safe jobs past a blocked head under a
-      reservation, sjf reorders by estimated service time. Emits
-      summary JSON + per-job/per-GPU CSV.
-  sweep [--policies mps,mig-static] [--mixes 'smalls|paper']
+      reservation, sjf reorders by estimated service time. mig-miso
+      probes new jobs in a shared MPS region for --probe-window
+      simulated seconds, then migrates them into the planner's best
+      MIG partition when it beats the observed sharing. Emits summary
+      JSON + per-job/per-GPU CSV.
+  sweep [--policies mps,mig-static,mig-miso] [--mixes 'smalls|paper']
         [--gpus 2,4] [--interarrivals 0.5,2.0]
         [--interference off,roofline] [--admission strict]
         [--queues fifo,backfill-easy] [--seeds 1,2]
-        [--jobs 200] [--epochs 1] [--cap 7] [--threads N]
-        [--grid grid.json] [--out results]
+        [--jobs 200] [--epochs 1] [--cap 7] [--probe-window 15]
+        [--threads N] [--grid grid.json] [--out results]
       Expand a declarative grid (policies x mixes x fleet sizes x
       arrival rates x interference models x queue disciplines x seeds)
       into cells and run them all across worker threads. Output is
@@ -259,6 +262,11 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
     let interference = parse_interference_flag(args)?.unwrap_or(InterferenceModel::Off);
     let admission = parse_admission_flag(args)?.unwrap_or(AdmissionMode::Strict);
     let queue = parse_queue_flag(args)?.unwrap_or(QueueDiscipline::Fifo);
+    let probe_window_s = args.flag_parse("probe-window", FleetConfig::default().probe_window_s)?;
+    anyhow::ensure!(
+        probe_window_s.is_finite() && probe_window_s > 0.0,
+        "--probe-window must be finite and > 0"
+    );
     let partition = match args.flag("partition") {
         None => None,
         Some(list) => {
@@ -326,6 +334,7 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
         interference,
         admission,
         queue,
+        probe_window_s,
         ..FleetConfig::default()
     };
     let t0 = std::time::Instant::now();
@@ -407,6 +416,7 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
             "jobs",
             "epochs",
             "cap",
+            "probe-window",
         ] {
             anyhow::ensure!(
                 args.flag(flag).is_none(),
@@ -484,6 +494,7 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
         );
     }
     grid.cap = args.flag_parse("cap", grid.cap)?;
+    grid.probe_window_s = args.flag_parse("probe-window", grid.probe_window_s)?;
     grid.validate()?;
     Ok(grid)
 }
@@ -620,7 +631,8 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
 
     if json.get("grid").is_some() && json.get("cells").is_some() {
-        let cells = validate_sweep_summary(&json).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let cells = migsim::report::sweep::validate_summary(&json)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
         println!(
             "OK sweep summary {path}: schema v{}, {cells} cells",
             migsim::report::sweep::SWEEP_SCHEMA_VERSION
@@ -646,93 +658,6 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
         "{path}: unrecognized artifact (expected a BENCH_*.json report \
          or a sweep_summary.json)"
     )
-}
-
-/// Deep checks on a sweep summary: schema version, embedded grid
-/// round-trip, and per-cell consistency. Returns the cell count.
-fn validate_sweep_summary(json: &Json) -> anyhow::Result<usize> {
-    let version = json
-        .get("schema_version")
-        .and_then(|v| v.as_u64())
-        .ok_or_else(|| anyhow::anyhow!("missing schema_version"))?;
-    anyhow::ensure!(
-        version == migsim::report::sweep::SWEEP_SCHEMA_VERSION,
-        "schema_version {version} != supported {}",
-        migsim::report::sweep::SWEEP_SCHEMA_VERSION
-    );
-    let grid = GridSpec::from_json(json.get("grid").expect("checked by caller"))?;
-    anyhow::ensure!(
-        GridSpec::from_json(&grid.to_json())? == grid,
-        "embedded grid does not round-trip losslessly"
-    );
-    let cells = json
-        .get("cells")
-        .and_then(|v| v.as_arr())
-        .ok_or_else(|| anyhow::anyhow!("'cells' must be an array"))?;
-    anyhow::ensure!(
-        cells.len() == grid.cell_count(),
-        "cells array has {} entries but the grid expands to {}",
-        cells.len(),
-        grid.cell_count()
-    );
-    let declared = json
-        .get("cell_count")
-        .and_then(|v| v.as_u64())
-        .ok_or_else(|| anyhow::anyhow!("missing cell_count"))?;
-    anyhow::ensure!(
-        declared as usize == cells.len(),
-        "cell_count {declared} disagrees with the cells array ({})",
-        cells.len()
-    );
-    for (i, cell) in cells.iter().enumerate() {
-        let index = cell
-            .get("index")
-            .and_then(|v| v.as_u64())
-            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing index"))?;
-        anyhow::ensure!(index as usize == i, "cell {i}: index {index} out of order");
-        let policy = cell
-            .get("policy")
-            .and_then(|v| v.as_str())
-            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing policy"))?;
-        anyhow::ensure!(
-            PolicyKind::parse(policy).is_some(),
-            "cell {i}: unknown policy '{policy}'"
-        );
-        let interference = cell
-            .get("interference")
-            .and_then(|v| v.as_str())
-            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing interference"))?;
-        anyhow::ensure!(
-            InterferenceModel::parse(interference).is_some(),
-            "cell {i}: unknown interference model '{interference}'"
-        );
-        let queue = cell
-            .get("queue")
-            .and_then(|v| v.as_str())
-            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing queue"))?;
-        anyhow::ensure!(
-            QueueDiscipline::parse(queue).is_some(),
-            "cell {i}: unknown queue discipline '{queue}'"
-        );
-        let metrics = cell
-            .get("metrics")
-            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing metrics"))?;
-        for key in [
-            "finished",
-            "oom_killed",
-            "images_per_s",
-            "mean_slowdown",
-            "peak_slowdown",
-            "backfilled",
-            "hol_wait_s",
-        ] {
-            anyhow::ensure!(
-                metrics.get(key).and_then(|v| v.as_f64()).is_some(),
-                "cell {i}: metrics.{key} missing or not a number"
-            );
-        }
-    }
-    Ok(cells.len())
 }
 
 fn cmd_train(args: &Args, config: &Config) -> anyhow::Result<()> {

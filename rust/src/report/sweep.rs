@@ -7,7 +7,10 @@
 //! (the determinism contract `rust/tests/sweep_determinism.rs` checks).
 
 use super::{csv, render};
+use crate::cluster::policy::PolicyKind;
+use crate::cluster::queue::QueueDiscipline;
 use crate::simgpu::calibration::Calibration;
+use crate::simgpu::interference::InterferenceModel;
 use crate::sweep::engine::SweepRun;
 use crate::sweep::grid::GridSpec;
 use crate::util::json::Json;
@@ -25,7 +28,13 @@ use std::path::{Path, PathBuf};
 /// `queue_ranking` section, per-cell `backfilled`/`hol_wait_s`
 /// metrics, and `mean_slowdown` re-based to the busy-time-weighted
 /// mean (the former peak-based value now exports as `peak_slowdown`).
-pub const SWEEP_SCHEMA_VERSION: u64 = 3;
+///
+/// v4: the `mig-miso` policy — grid `probe_window_s` constant,
+/// per-cell `migrations` + `probe_window_s` metrics (25-column CSV) —
+/// and [`validate_summary`] rejecting cross-section inconsistencies
+/// (a `queue_ranking` or `ranking` row naming a queue/policy absent
+/// from every cell).
+pub const SWEEP_SCHEMA_VERSION: u64 = 4;
 
 /// Files one [`write_sweep`] call produces.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -323,12 +332,14 @@ pub fn cells_rows(run: &SweepRun) -> Vec<Vec<String>> {
                 format!("{:.4}", c.metrics.mean_gract),
                 format!("{:.3}", c.metrics.mean_slowdown),
                 format!("{:.3}", c.metrics.peak_slowdown),
+                format!("{}", c.metrics.probe_window_s),
+                c.metrics.migrations.to_string(),
             ]
         })
         .collect()
 }
 
-const CELLS_HEADER: [&str; 23] = [
+const CELLS_HEADER: [&str; 25] = [
     "index",
     "policy",
     "mix",
@@ -352,6 +363,8 @@ const CELLS_HEADER: [&str; 23] = [
     "mean_gract",
     "mean_slowdown",
     "peak_slowdown",
+    "probe_window_s",
+    "migrations",
 ];
 
 /// Write `sweep_summary.json` + `sweep_cells.csv` under `dir`.
@@ -378,6 +391,136 @@ pub fn summary_json_text(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> 
     summary_json(grid, run, cal).to_string_pretty()
 }
 
+/// Deep checks on a parsed sweep summary (the `migsim validate`
+/// backend): schema version, embedded-grid round-trip, per-cell
+/// consistency, and — new in v4 — *cross-section* consistency: every
+/// `ranking` policy and every `queue_ranking` queue must actually
+/// occur in some cell, so an aggregate row can never describe data
+/// the file does not contain. Returns the cell count.
+pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
+    let version = json
+        .get("schema_version")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow::anyhow!("missing schema_version"))?;
+    anyhow::ensure!(
+        version == SWEEP_SCHEMA_VERSION,
+        "schema_version {version} != supported {SWEEP_SCHEMA_VERSION}"
+    );
+    let grid = GridSpec::from_json(
+        json.get("grid")
+            .ok_or_else(|| anyhow::anyhow!("missing grid"))?,
+    )?;
+    anyhow::ensure!(
+        GridSpec::from_json(&grid.to_json())? == grid,
+        "embedded grid does not round-trip losslessly"
+    );
+    let cells = json
+        .get("cells")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("'cells' must be an array"))?;
+    anyhow::ensure!(
+        cells.len() == grid.cell_count(),
+        "cells array has {} entries but the grid expands to {}",
+        cells.len(),
+        grid.cell_count()
+    );
+    let declared = json
+        .get("cell_count")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow::anyhow!("missing cell_count"))?;
+    anyhow::ensure!(
+        declared as usize == cells.len(),
+        "cell_count {declared} disagrees with the cells array ({})",
+        cells.len()
+    );
+    let mut cell_policies: Vec<String> = Vec::new();
+    let mut cell_queues: Vec<String> = Vec::new();
+    for (i, cell) in cells.iter().enumerate() {
+        let index = cell
+            .get("index")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing index"))?;
+        anyhow::ensure!(index as usize == i, "cell {i}: index {index} out of order");
+        let policy = cell
+            .get("policy")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing policy"))?;
+        anyhow::ensure!(
+            PolicyKind::parse(policy).is_some(),
+            "cell {i}: unknown policy '{policy}'"
+        );
+        if !cell_policies.iter().any(|p| p == policy) {
+            cell_policies.push(policy.to_string());
+        }
+        let interference = cell
+            .get("interference")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing interference"))?;
+        anyhow::ensure!(
+            InterferenceModel::parse(interference).is_some(),
+            "cell {i}: unknown interference model '{interference}'"
+        );
+        let queue = cell
+            .get("queue")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing queue"))?;
+        anyhow::ensure!(
+            QueueDiscipline::parse(queue).is_some(),
+            "cell {i}: unknown queue discipline '{queue}'"
+        );
+        if !cell_queues.iter().any(|q| q == queue) {
+            cell_queues.push(queue.to_string());
+        }
+        let metrics = cell
+            .get("metrics")
+            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing metrics"))?;
+        for key in [
+            "finished",
+            "oom_killed",
+            "images_per_s",
+            "mean_slowdown",
+            "peak_slowdown",
+            "backfilled",
+            "hol_wait_s",
+            "migrations",
+            "probe_window_s",
+        ] {
+            anyhow::ensure!(
+                metrics.get(key).and_then(|v| v.as_f64()).is_some(),
+                "cell {i}: metrics.{key} missing or not a number"
+            );
+        }
+    }
+    // Cross-section consistency: aggregates must describe the cells.
+    // (Regression: a summary whose queue_ranking referenced a queue no
+    // cell ran used to validate cleanly.)
+    if let Some(ranking) = json.get("ranking").and_then(|v| v.as_arr()) {
+        for (i, row) in ranking.iter().enumerate() {
+            let policy = row
+                .get("policy")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("ranking row {i}: missing policy"))?;
+            anyhow::ensure!(
+                cell_policies.iter().any(|p| p == policy),
+                "ranking row {i}: policy '{policy}' appears in no cell"
+            );
+        }
+    }
+    if let Some(ranking) = json.get("queue_ranking").and_then(|v| v.as_arr()) {
+        for (i, row) in ranking.iter().enumerate() {
+            let queue = row
+                .get("queue")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("queue_ranking row {i}: missing queue"))?;
+            anyhow::ensure!(
+                cell_queues.iter().any(|q| q == queue),
+                "queue_ranking row {i}: queue '{queue}' appears in no cell"
+            );
+        }
+    }
+    Ok(cells.len())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -392,9 +535,16 @@ mod tests {
 
     fn saturated_grid() -> GridSpec {
         // Back-to-back arrivals on one GPU: the collocation policies
-        // separate cleanly, as in the paper's §5 comparison.
+        // separate cleanly, as in the paper's §5 comparison — with
+        // mig-miso riding along in the grid (the §5 ordering is stated
+        // over the classic three and must survive its presence).
         GridSpec {
-            policies: vec![PolicyKind::Mps, PolicyKind::MigStatic, PolicyKind::TimeSlice],
+            policies: vec![
+                PolicyKind::Mps,
+                PolicyKind::MigStatic,
+                PolicyKind::TimeSlice,
+                PolicyKind::MigMiso,
+            ],
             mixes: vec![MixSpec::preset("smalls").unwrap()],
             gpus: vec![1],
             interarrivals_s: vec![0.001],
@@ -405,6 +555,7 @@ mod tests {
             epochs: Some(1),
             cap: 7,
             admission: AdmissionMode::Strict,
+            probe_window_s: 15.0,
         }
     }
 
@@ -506,6 +657,61 @@ mod tests {
         // The table renders a row per (policy, model) with a delta.
         let table = interference_table(&run);
         assert!(table.contains("roofline") && table.contains("vs off"), "{table}");
+    }
+
+    #[test]
+    fn validate_summary_accepts_real_output_and_rejects_drift() {
+        let grid = saturated_grid();
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, 2).unwrap();
+        let json = Json::parse(&summary_json_text(&grid, &run, &cal)).unwrap();
+        assert_eq!(validate_summary(&json).unwrap(), grid.cell_count());
+        // A wrong schema version is drift, not a warning.
+        let mut stale = json.clone();
+        stale.set("schema_version", Json::from_u64(SWEEP_SCHEMA_VERSION - 1));
+        assert!(validate_summary(&stale).is_err());
+        // v4 requires the per-cell MISO metrics.
+        let cells = json.get("cells").unwrap().as_arr().unwrap();
+        assert!(cells[0].at(&["metrics", "migrations"]).unwrap().as_f64().is_some());
+        assert!(cells[0].at(&["metrics", "probe_window_s"]).unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn validate_summary_rejects_queue_ranking_naming_an_absent_queue() {
+        // Regression: a summary whose queue_ranking section referenced
+        // a discipline no cell ran used to validate cleanly — the
+        // cross-section check must reject it now.
+        let grid = saturated_grid();
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, 1).unwrap();
+        let mut json = Json::parse(&summary_json_text(&grid, &run, &cal)).unwrap();
+        let mut phantom = Json::obj();
+        phantom
+            .set("queue", Json::from_str_val("sjf"))
+            .set("cells", Json::from_u64(1))
+            .set("mean_images_per_s", Json::from_f64(1.0))
+            .set("mean_wait_s", Json::from_f64(0.0))
+            .set("backfilled", Json::from_u64(0));
+        let mut ranking = json.get("queue_ranking").unwrap().as_arr().unwrap().to_vec();
+        ranking.push(phantom);
+        json.set("queue_ranking", Json::Arr(ranking));
+        let err = validate_summary(&json).unwrap_err().to_string();
+        assert!(
+            err.contains("queue_ranking") && err.contains("sjf"),
+            "{err}"
+        );
+        // The same guard covers the policy ranking.
+        let run2 = run_sweep(&grid, &cal, 1).unwrap();
+        let mut json = Json::parse(&summary_json_text(&grid, &run2, &cal)).unwrap();
+        let mut phantom = Json::obj();
+        phantom
+            .set("policy", Json::from_str_val("exclusive"))
+            .set("mean_images_per_s", Json::from_f64(1.0));
+        let mut ranking = json.get("ranking").unwrap().as_arr().unwrap().to_vec();
+        ranking.push(phantom);
+        json.set("ranking", Json::Arr(ranking));
+        let err = validate_summary(&json).unwrap_err().to_string();
+        assert!(err.contains("ranking") && err.contains("exclusive"), "{err}");
     }
 
     #[test]

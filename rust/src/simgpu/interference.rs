@@ -193,6 +193,22 @@ impl ContentionModel {
         };
         factor.min(MAX_SLOWDOWN)
     }
+
+    /// The MISO probe signal: every resident's slowdown factor at
+    /// once, in resident order. This is what a shared "probe region"
+    /// observes about its tenants — `mig-miso` feeds it (with the
+    /// residents' achieved throughput) into the planner's
+    /// partition-vs-MPS commit decision.
+    pub fn observed_slowdowns(
+        &self,
+        spec: &GpuSpec,
+        cal: &Calibration,
+        residents: &[DemandProfile],
+    ) -> Vec<f64> {
+        (0..residents.len())
+            .map(|i| self.slowdown(spec, cal, residents, i))
+            .collect()
+    }
 }
 
 /// Stretch a per-step activity account by a contention `factor`:
@@ -307,6 +323,23 @@ mod tests {
         let f_light = cm.slowdown(&A100, &cal(), &crowd, 2);
         assert!(f_hog > f_light, "hog {f_hog} !> light {f_light}");
         assert!(f_hog > 1.0 && f_hog <= MAX_SLOWDOWN);
+    }
+
+    #[test]
+    fn observed_slowdowns_match_per_victim_queries() {
+        let mut r = Rng::new(99);
+        let crowd: Vec<DemandProfile> = (0..5).map(|_| random_profile(&mut r)).collect();
+        for model in InterferenceModel::ALL {
+            let cm = ContentionModel::new(model);
+            let all = cm.observed_slowdowns(&A100, &cal(), &crowd);
+            assert_eq!(all.len(), crowd.len());
+            for (i, &f) in all.iter().enumerate() {
+                assert_eq!(f, cm.slowdown(&A100, &cal(), &crowd, i), "{model} victim {i}");
+            }
+        }
+        assert!(ContentionModel::new(InterferenceModel::Roofline)
+            .observed_slowdowns(&A100, &cal(), &[])
+            .is_empty());
     }
 
     #[test]

@@ -46,6 +46,12 @@ pub struct CellMetrics {
     pub backfilled: u64,
     /// Total time any queue head spent blocked.
     pub hol_wait_s: f64,
+    /// MISO probe-to-slice migrations (0 unless the policy is
+    /// `mig-miso`).
+    pub migrations: u64,
+    /// MISO probe window the cell ran with (the grid constant; inert
+    /// for non-hybrid policies).
+    pub probe_window_s: f64,
 }
 
 impl CellMetrics {
@@ -67,6 +73,8 @@ impl CellMetrics {
             peak_slowdown: m.peak_slowdown,
             backfilled: m.backfilled,
             hol_wait_s: m.hol_wait_s,
+            migrations: m.migrations,
+            probe_window_s: m.probe_window_s,
         }
     }
 
@@ -87,7 +95,9 @@ impl CellMetrics {
             .set("mean_slowdown", Json::from_f64(self.mean_slowdown))
             .set("peak_slowdown", Json::from_f64(self.peak_slowdown))
             .set("backfilled", Json::from_u64(self.backfilled))
-            .set("hol_wait_s", Json::from_f64(self.hol_wait_s));
+            .set("hol_wait_s", Json::from_f64(self.hol_wait_s))
+            .set("migrations", Json::from_u64(self.migrations))
+            .set("probe_window_s", Json::from_f64(self.probe_window_s));
         j
     }
 }
@@ -135,6 +145,7 @@ pub fn run_cell(cell: &CellSpec, grid: &GridSpec, cal: &Calibration) -> CellMetr
         interference: cell.interference,
         admission: grid.admission,
         queue: cell.queue,
+        probe_window_s: grid.probe_window_s,
         ..FleetConfig::default()
     };
     let sim = FleetSim::new(config, policy, *cal, &trace);
@@ -224,6 +235,7 @@ mod tests {
             epochs: Some(1),
             cap: 7,
             admission: crate::cluster::policy::AdmissionMode::Strict,
+            probe_window_s: 15.0,
         }
     }
 
@@ -241,6 +253,7 @@ mod tests {
                 interference: cell.interference,
                 admission: grid.admission,
                 queue: cell.queue,
+                probe_window_s: grid.probe_window_s,
                 ..FleetConfig::default()
             },
             cell.policy.build(&cal, grid.cap, None),

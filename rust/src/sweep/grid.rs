@@ -136,11 +136,15 @@ pub struct GridSpec {
     /// Memory-floor semantics for every cell (`strict` waits at the §4
     /// floors, `oversubscribe` OOM-kills what does not fit).
     pub admission: AdmissionMode,
+    /// MISO probe window for every cell (seconds a `mig-miso` probe
+    /// region observes its residents before the commit decision; inert
+    /// for the other policies).
+    pub probe_window_s: f64,
 }
 
 impl GridSpec {
-    /// The full default grid: 5 policies × 2 mixes × 2 fleet sizes ×
-    /// 2 arrival rates × 1 seed = 40 cells.
+    /// The full default grid: 6 policies × 2 mixes × 2 fleet sizes ×
+    /// 2 arrival rates × 1 seed = 48 cells.
     pub fn default_grid() -> GridSpec {
         GridSpec {
             policies: PolicyKind::ALL.to_vec(),
@@ -157,6 +161,7 @@ impl GridSpec {
             epochs: Some(1),
             cap: 7,
             admission: AdmissionMode::Strict,
+            probe_window_s: 15.0,
         }
     }
 
@@ -175,6 +180,7 @@ impl GridSpec {
             epochs: Some(1),
             cap: 7,
             admission: AdmissionMode::Strict,
+            probe_window_s: 15.0,
         }
     }
 
@@ -211,6 +217,11 @@ impl GridSpec {
         if let Some(e) = self.epochs {
             anyhow::ensure!(e >= 1, "epochs override must be >= 1");
         }
+        anyhow::ensure!(
+            self.probe_window_s.is_finite() && self.probe_window_s > 0.0,
+            "probe_window_s must be finite and > 0 ({})",
+            self.probe_window_s
+        );
         for &g in &self.gpus {
             anyhow::ensure!(g >= 1, "grid axis 'gpus' contains a zero-GPU fleet");
         }
@@ -331,7 +342,8 @@ impl GridSpec {
             },
         )
         .set("cap", Json::from_u64(self.cap as u64))
-        .set("admission", Json::from_str_val(self.admission.name()));
+        .set("admission", Json::from_str_val(self.admission.name()))
+        .set("probe_window_s", Json::from_f64(self.probe_window_s));
         j
     }
 
@@ -356,6 +368,7 @@ impl GridSpec {
                     "epochs",
                     "cap",
                     "admission",
+                    "probe_window_s",
                 ]
                 .contains(&key.as_str()),
                 "unknown grid key '{key}'"
@@ -471,6 +484,11 @@ impl GridSpec {
         if let Some(v) = obj.get("cap") {
             grid.cap = v.as_u32().ok_or_else(|| anyhow::anyhow!("'cap' must be a u32"))?;
         }
+        if let Some(v) = obj.get("probe_window_s") {
+            grid.probe_window_s = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'probe_window_s' must be a number"))?;
+        }
         grid.validate()?;
         Ok(grid)
     }
@@ -524,10 +542,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn default_grid_expands_to_forty_ordered_cells() {
+    fn default_grid_expands_to_forty_eight_ordered_cells() {
         let grid = GridSpec::default_grid();
         let cells = grid.cells().unwrap();
-        assert_eq!(cells.len(), 40);
+        assert_eq!(cells.len(), 48, "6 policies x 2 mixes x 2 fleets x 2 gaps");
         assert_eq!(cells.len(), grid.cell_count());
         for (i, c) in cells.iter().enumerate() {
             assert_eq!(c.index, i);
@@ -578,7 +596,7 @@ mod tests {
         let mut grid = GridSpec::default_grid();
         grid.queues = vec![QueueDiscipline::Fifo, QueueDiscipline::BackfillEasy];
         let cells = grid.cells().unwrap();
-        assert_eq!(cells.len(), 80, "40 base cells x 2 queue disciplines");
+        assert_eq!(cells.len(), 96, "48 base cells x 2 queue disciplines");
         // The axis sits between interference and seed in the expansion.
         assert_eq!(cells[0].queue, QueueDiscipline::Fifo);
         assert_eq!(cells[grid.seeds.len()].queue, QueueDiscipline::BackfillEasy);
@@ -602,7 +620,7 @@ mod tests {
         grid.interference = vec![InterferenceModel::Off, InterferenceModel::Roofline];
         grid.admission = AdmissionMode::Oversubscribe;
         let cells = grid.cells().unwrap();
-        assert_eq!(cells.len(), 80, "40 base cells x 2 interference models");
+        assert_eq!(cells.len(), 96, "48 base cells x 2 interference models");
         // The axis sits between interarrival and seed in the expansion.
         assert_eq!(cells[0].interference, InterferenceModel::Off);
         assert_eq!(cells[grid.seeds.len()].interference, InterferenceModel::Roofline);
@@ -672,5 +690,25 @@ mod tests {
         let g = GridSpec::quick();
         assert!(g.validate().is_ok());
         assert!(g.cell_count() <= 8, "quick grid must stay CI-cheap");
+    }
+
+    #[test]
+    fn probe_window_round_trips_and_is_validated() {
+        let mut grid = GridSpec::default_grid();
+        grid.probe_window_s = 42.5;
+        let back = GridSpec::from_json(&grid.to_json()).unwrap();
+        assert_eq!(back, grid);
+        // Partial specs override just the window.
+        let partial = Json::parse(r#"{"probe_window_s": 7.5}"#).unwrap();
+        let g = GridSpec::from_json(&partial).unwrap();
+        assert_eq!(g.probe_window_s, 7.5);
+        // Non-positive or non-numeric windows are rejected.
+        let mut bad = GridSpec::default_grid();
+        bad.probe_window_s = 0.0;
+        let err = bad.cells().unwrap_err().to_string();
+        assert!(err.contains("probe_window_s"), "{err}");
+        assert!(
+            GridSpec::from_json(&Json::parse(r#"{"probe_window_s": "soon"}"#).unwrap()).is_err()
+        );
     }
 }

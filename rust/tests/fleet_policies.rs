@@ -356,6 +356,50 @@ fn ranking_still_holds_under_every_queue_discipline() {
 }
 
 #[test]
+fn miso_beats_static_and_stays_near_mps_on_the_mixed_workload() {
+    // The MISO acceptance scenario: on the paper's §3.4 mixed arrival
+    // stream with roofline contention modeled, predictive
+    // partitioning must dominate the rigid static partition in
+    // aggregate throughput while never suffering more contention than
+    // pure MPS — it *is* MPS until a planned partition provably beats
+    // the observed sharing, and interference-free slices afterwards.
+    // The §5 ranking over the classic trio must also survive
+    // mig-miso's presence in the same comparison grid.
+    let trace = saturating_mix_trace(40, [0.5, 0.3, 0.2]);
+    let mps = run_policy_with(PolicyKind::Mps, &trace, 2, InterferenceModel::Roofline);
+    let mig = run_policy_with(PolicyKind::MigStatic, &trace, 2, InterferenceModel::Roofline);
+    let ts = run_policy_with(PolicyKind::TimeSlice, &trace, 2, InterferenceModel::Roofline);
+    let miso = run_policy_with(PolicyKind::MigMiso, &trace, 2, InterferenceModel::Roofline);
+    for (name, m) in [("mps", &mps), ("mig-static", &mig), ("timeslice", &ts), ("mig-miso", &miso)]
+    {
+        assert_eq!(m.finished(), 40, "{name}: {}", m.summary());
+        assert_eq!(m.rejected(), 0, "{name}");
+    }
+    assert!(
+        miso.aggregate_images_per_second() >= mig.aggregate_images_per_second(),
+        "mig-miso must be >= mig-static: {} vs {}\n{}\n{}",
+        miso.aggregate_images_per_second(),
+        mig.aggregate_images_per_second(),
+        miso.summary(),
+        mig.summary()
+    );
+    assert!(
+        miso.mean_slowdown <= mps.mean_slowdown + 1e-9,
+        "mig-miso mean slowdown {} must not exceed mps {}\n{}\n{}",
+        miso.mean_slowdown,
+        mps.mean_slowdown,
+        miso.summary(),
+        mps.summary()
+    );
+    // §5 with mig-miso present: the classic ordering is untouched.
+    let t_mps = mps.aggregate_images_per_second();
+    let t_mig = mig.aggregate_images_per_second();
+    let t_ts = ts.aggregate_images_per_second();
+    assert!(t_mps >= t_mig, "Mps {t_mps} !>= MigStatic {t_mig}");
+    assert!(t_mig > t_ts, "MigStatic {t_mig} !> TimeSlice {t_ts}");
+}
+
+#[test]
 fn makespan_scales_down_with_fleet_size() {
     let trace = saturating_small_trace(28);
     let two = run_policy(PolicyKind::Mps, &trace, 2);

@@ -303,6 +303,95 @@ fn prop_non_finite_numbers_serialize_parseably() {
     );
 }
 
+/// Partition scoring in the planner is permutation-invariant:
+/// shuffling the job (or probe-profile) order never changes the chosen
+/// partition or its score. The assignment loop is most-constrained-
+/// first with deterministic tie-breaks, so the *order* jobs arrive in
+/// must carry no information — `mig-miso`'s commit decision depends on
+/// it (probe residents are listed in join order, which co-runner churn
+/// reshuffles freely).
+#[test]
+fn prop_partition_scoring_is_permutation_invariant() {
+    use migsim::coordinator::planner::{Job, Planner, ProbedJob, MISO_COMMIT_MARGIN};
+    use migsim::workload::spec::WorkloadSize;
+
+    let cal = Calibration::paper();
+    let planner = Planner::new(&cal);
+    // Synthetic observations pinned per workload so a permutation
+    // preserves the probe multiset exactly.
+    let observed = |w: WorkloadSize| match w {
+        WorkloadSize::Small => 40.0,
+        WorkloadSize::Medium => 15.0,
+        WorkloadSize::Large => 5.0,
+    };
+
+    forall_ok(
+        0x9150_CAFE,
+        30,
+        |rng| {
+            let n = 1 + rng.below(9) as usize;
+            let workloads: Vec<WorkloadSize> = (0..n)
+                .map(|_| WorkloadSize::ALL[rng.below(3) as usize])
+                .collect();
+            (workloads, rng.next_u64())
+        },
+        |(workloads, shuffle_seed)| -> Result<(), String> {
+            let jobs: Vec<Job> = workloads.iter().map(|&workload| Job { workload }).collect();
+            let base = planner.plan(&jobs);
+            let probes: Vec<ProbedJob> = workloads
+                .iter()
+                .map(|&workload| ProbedJob {
+                    workload,
+                    observed_images_per_s: observed(workload),
+                    observed_slowdown: 1.2,
+                })
+                .collect();
+            let base_commit = planner.miso_a100(&probes, MISO_COMMIT_MARGIN);
+            let base_a30 = planner.miso_a30(&probes, MISO_COMMIT_MARGIN);
+
+            let mut shuffler = Rng::new(*shuffle_seed);
+            let mut jobs_perm = jobs.clone();
+            let mut probes_perm = probes.clone();
+            for round in 0..3 {
+                // Fisher–Yates over both views with the same swaps.
+                for i in (1..jobs_perm.len()).rev() {
+                    let j = shuffler.below(i as u64 + 1) as usize;
+                    jobs_perm.swap(i, j);
+                    probes_perm.swap(i, j);
+                }
+                let plan = planner.plan(&jobs_perm);
+                if plan.profiles != base.profiles {
+                    return Err(format!(
+                        "round {round}: partition changed under permutation: \
+                         {:?} != {:?}",
+                        plan.profiles, base.profiles
+                    ));
+                }
+                if plan.total_throughput != base.total_throughput {
+                    return Err(format!(
+                        "round {round}: score changed under permutation: \
+                         {} != {}",
+                        plan.total_throughput, base.total_throughput
+                    ));
+                }
+                if plan.unplaced != base.unplaced {
+                    return Err(format!(
+                        "round {round}: unplaced changed: {} != {}",
+                        plan.unplaced, base.unplaced
+                    ));
+                }
+                if planner.miso_a100(&probes_perm, MISO_COMMIT_MARGIN) != base_commit {
+                    return Err(format!("round {round}: miso_a100 changed"));
+                }
+                if planner.miso_a30(&probes_perm, MISO_COMMIT_MARGIN) != base_a30 {
+                    return Err(format!("round {round}: miso_a30 changed"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Wave-quantization sanity: step time is monotone non-increasing in
 /// SM count AND the marginal benefit shrinks (diminishing returns) for
 /// small-grid traces — the Fig 2 mechanism, property-tested.

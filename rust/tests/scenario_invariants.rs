@@ -1,0 +1,302 @@
+//! Scenario-invariant harness: one table, every cross-cutting
+//! invariant the simulator has accumulated over PRs 1–5.
+//!
+//! Earlier PRs pinned each invariant with a bespoke test (MIG
+//! interference-freedom in PR 3, backfill head-safety in PR 4, the
+//! same-instant finish/arrival ordering in PR 3's event rework). This
+//! harness runs a grid of (policy × queue discipline × interference
+//! model) scenarios through `FleetSim` and asserts them all in one
+//! place, so a future policy — `mig-miso` is the first — gets
+//! invariant coverage by being a table row, not by growing a new test
+//! file:
+//!
+//! * every job is accounted for exactly once (finished / rejected /
+//!   OOM-killed / unserved), and strict admission never OOM-kills;
+//! * every exported metric is finite and in range (slowdowns ≥ 1 and
+//!   capped, the busy-time-weighted mean never exceeds the peak mean,
+//!   GRACT within the unit interval);
+//! * jobs resident in MIG slices never observe contention: the pure
+//!   MIG policies report slowdown exactly 1.0 under every model;
+//! * `fifo` never places out of order; `backfilled > 0` implies the
+//!   blocked head started at the same instant it would under `fifo`;
+//! * a finish at the same timestamp as an arrival releases its memory
+//!   before the arrival's admission check runs;
+//! * a fixed seed reproduces every scenario bit-for-bit, and the MISO
+//!   probe/migration knobs are inert for every policy but `mig-miso`.
+
+use migsim::cluster::fleet::{FleetConfig, FleetSim};
+use migsim::cluster::metrics::FleetMetrics;
+use migsim::cluster::policy::{AdmissionMode, MigStatic, PolicyKind};
+use migsim::cluster::queue::QueueDiscipline;
+use migsim::cluster::trace::{poisson_trace, JobSpec, TraceConfig};
+use migsim::mig::profile::MigProfile;
+use migsim::simgpu::calibration::Calibration;
+use migsim::simgpu::interference::{InterferenceModel, MAX_SLOWDOWN};
+use migsim::workload::spec::WorkloadSize;
+
+/// One row of the scenario table.
+#[derive(Debug, Clone, Copy)]
+struct Scenario {
+    policy: PolicyKind,
+    queue: QueueDiscipline,
+    interference: InterferenceModel,
+}
+
+/// The full grid: every policy × every discipline × {off, roofline}.
+fn scenario_table() -> Vec<Scenario> {
+    let mut rows = Vec::new();
+    for policy in PolicyKind::ALL {
+        for queue in QueueDiscipline::ALL {
+            for interference in [InterferenceModel::Off, InterferenceModel::Roofline] {
+                rows.push(Scenario {
+                    policy,
+                    queue,
+                    interference,
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// The shared workload every row replays: a saturating paper-mix burst
+/// on a two-GPU fleet (small enough to keep 100+ runs fast, loaded
+/// enough that queues, sharing and contention all engage).
+fn standard_trace() -> Vec<JobSpec> {
+    poisson_trace(&TraceConfig {
+        jobs: 18,
+        mean_interarrival_s: 0.01,
+        mix: [0.5, 0.3, 0.2],
+        epochs: Some(1),
+        seed: 7,
+    })
+}
+
+fn run_scenario(s: Scenario, trace: &[JobSpec]) -> FleetMetrics {
+    let cal = Calibration::paper();
+    let config = FleetConfig {
+        a100s: 2,
+        a30s: 0,
+        queue: s.queue,
+        interference: s.interference,
+        admission: AdmissionMode::Strict,
+        ..FleetConfig::default()
+    };
+    FleetSim::new(config, s.policy.build(&cal, 7, None), cal, trace).run()
+}
+
+fn is_pure_mig(policy: PolicyKind) -> bool {
+    matches!(policy, PolicyKind::MigStatic | PolicyKind::MigDynamic)
+}
+
+/// The cross-cutting assertions every row must satisfy.
+fn assert_invariants(s: Scenario, m: &FleetMetrics, jobs: usize) {
+    let tag = format!("{}/{}/{}", s.policy, s.queue, s.interference.name());
+    // (1) Conservation: every job ends in exactly one terminal state,
+    // and the standard trace is fully servable under every policy.
+    assert_eq!(
+        m.finished() + m.rejected() + m.oom_killed() + m.unserved(),
+        jobs,
+        "{tag}: job accounting"
+    );
+    assert_eq!(m.rejected(), 0, "{tag}: standard trace is servable");
+    assert_eq!(m.oom_killed(), 0, "{tag}: strict admission never OOM-kills");
+    assert_eq!(m.unserved(), 0, "{tag}: no job left behind");
+    // (2) Metric sanity: finite, non-negative, in range.
+    for (name, v) in [
+        ("makespan_s", m.makespan_s),
+        ("mean_wait_s", m.mean_wait_s()),
+        ("hol_wait_s", m.hol_wait_s),
+        ("p50_jct_s", m.p50_jct_s()),
+        ("p95_jct_s", m.p95_jct_s()),
+        ("images_per_s", m.aggregate_images_per_second()),
+        ("mean_gract", m.mean_gract()),
+    ] {
+        assert!(v.is_finite() && v >= 0.0, "{tag}: {name} = {v}");
+    }
+    assert!(m.mean_gract() <= 1.0 + 1e-9, "{tag}: gract {}", m.mean_gract());
+    assert!(
+        (1.0..=MAX_SLOWDOWN).contains(&m.mean_slowdown),
+        "{tag}: mean_slowdown {}",
+        m.mean_slowdown
+    );
+    assert!(
+        m.peak_slowdown >= m.mean_slowdown - 1e-12,
+        "{tag}: peak {} must bound mean {}",
+        m.peak_slowdown,
+        m.mean_slowdown
+    );
+    // (3) MIG residency is interference-free: the pure MIG policies
+    // report slowdown exactly 1.0 whatever the model says, and every
+    // policy does under `off`.
+    if is_pure_mig(s.policy) || s.interference == InterferenceModel::Off {
+        assert_eq!(m.mean_slowdown, 1.0, "{tag}: slowdown must be 1.0");
+        assert_eq!(m.peak_slowdown, 1.0, "{tag}: peak must be 1.0");
+    }
+    // (4) Discipline contracts: fifo never reorders; migrations only
+    // ever come from the hybrid policy.
+    if s.queue == QueueDiscipline::Fifo {
+        assert_eq!(m.backfilled, 0, "{tag}: fifo must not backfill");
+    }
+    if s.policy != PolicyKind::MigMiso {
+        assert_eq!(m.migrations, 0, "{tag}: only mig-miso migrates");
+    }
+    assert_eq!(m.queue_discipline, s.queue.name(), "{tag}");
+    assert_eq!(m.policy, s.policy.name(), "{tag}");
+}
+
+#[test]
+fn every_scenario_upholds_the_cross_cutting_invariants() {
+    let trace = standard_trace();
+    for s in scenario_table() {
+        let m = run_scenario(s, &trace);
+        assert_invariants(s, &m, trace.len());
+        // (5) Determinism: a second run is bit-identical.
+        let again = run_scenario(s, &trace);
+        assert_eq!(
+            m.to_json().to_string_pretty(),
+            again.to_json().to_string_pretty(),
+            "{}/{}/{} diverged across identical runs",
+            s.policy,
+            s.queue,
+            s.interference.name()
+        );
+    }
+}
+
+/// `backfilled > 0` implies the blocked head's start is unchanged vs
+/// `fifo` — asserted on the canonical head-of-line scenario (a large
+/// head blocked on the only large-capable instance, smalls idling
+/// behind it) for both backfill disciplines.
+#[test]
+fn backfilling_never_delays_the_blocked_head() {
+    let partition = vec![
+        MigProfile::P2g10gb,
+        MigProfile::P1g5gb,
+        MigProfile::P1g5gb,
+        MigProfile::P1g5gb,
+        MigProfile::P1g5gb,
+        MigProfile::P1g5gb,
+    ];
+    let mut trace = vec![
+        JobSpec { id: 0, arrival_s: 0.0, workload: WorkloadSize::Large, epochs: 1 },
+        JobSpec { id: 1, arrival_s: 0.1, workload: WorkloadSize::Large, epochs: 1 },
+    ];
+    for i in 0..8 {
+        trace.push(JobSpec {
+            id: 2 + i,
+            arrival_s: 0.2 + i as f64 * 0.01,
+            workload: WorkloadSize::Small,
+            epochs: 1,
+        });
+    }
+    let run_q = |queue: QueueDiscipline| -> FleetMetrics {
+        let config = FleetConfig {
+            a100s: 1,
+            a30s: 0,
+            queue,
+            ..FleetConfig::default()
+        };
+        let policy = Box::new(MigStatic::new(Some(partition.clone()), None));
+        FleetSim::new(config, policy, Calibration::paper(), &trace).run()
+    };
+    let fifo = run_q(QueueDiscipline::Fifo);
+    assert_eq!(fifo.backfilled, 0);
+    let fifo_head_start = fifo.jobs[1].start_s.expect("head runs under fifo");
+    for queue in [QueueDiscipline::BackfillEasy, QueueDiscipline::BackfillConservative] {
+        let m = run_q(queue);
+        assert_eq!(m.finished(), trace.len(), "{queue}: {}", m.summary());
+        assert!(m.backfilled > 0, "{queue}: scenario must exercise backfill");
+        assert_eq!(
+            m.jobs[1].start_s.expect("head runs"),
+            fifo_head_start,
+            "{queue}: backfilled > 0 must leave the head start unchanged"
+        );
+    }
+}
+
+/// A finish at the same timestamp as an arrival must release its
+/// memory before the arrival's admission check — for every shared
+/// policy, probed `mig-miso` included (its probe region uses the same
+/// aggregate-floor admission).
+#[test]
+fn same_instant_finish_outranks_the_arrival_for_every_shared_policy() {
+    let cal = Calibration::paper();
+    for policy in [PolicyKind::Mps, PolicyKind::TimeSlice, PolicyKind::MigMiso] {
+        let run = |trace: &[JobSpec]| -> FleetMetrics {
+            let config = FleetConfig {
+                a100s: 1,
+                a30s: 0,
+                admission: AdmissionMode::Oversubscribe,
+                ..FleetConfig::default()
+            };
+            FleetSim::new(config, policy.build(&cal, 7, None), cal, trace).run()
+        };
+        // Phase 1: four larges fill the usable framebuffer exactly.
+        let base: Vec<JobSpec> = (0..4)
+            .map(|id| JobSpec {
+                id,
+                arrival_s: 0.0,
+                workload: WorkloadSize::Large,
+                epochs: 1,
+            })
+            .collect();
+        let probe = run(&base);
+        assert_eq!(probe.finished(), 4, "{policy}: {}", probe.summary());
+        let first_finish = probe
+            .jobs
+            .iter()
+            .filter_map(|j| j.finish_s)
+            .fold(f64::INFINITY, f64::min);
+        assert!(first_finish.is_finite(), "{policy}");
+        // Phase 2: a fifth large arrives exactly at that finish.
+        let mut trace = base;
+        trace.push(JobSpec {
+            id: 4,
+            arrival_s: first_finish,
+            workload: WorkloadSize::Large,
+            epochs: 1,
+        });
+        let m = run(&trace);
+        assert_eq!(
+            m.oom_killed(),
+            0,
+            "{policy}: the same-instant finish must free its floor first: {}",
+            m.summary()
+        );
+        assert_eq!(m.finished(), 5, "{policy}");
+    }
+}
+
+/// The MISO knobs (`probe_window_s`, `migration_cost_s`) are inert for
+/// every policy except `mig-miso`: simulated outcomes are identical
+/// whatever they are set to. This is the PR-over-PR compatibility
+/// contract — adding the hybrid machinery must not perturb a single
+/// event of the existing policies' runs.
+#[test]
+fn probe_knobs_are_inert_for_non_hybrid_policies() {
+    let trace = standard_trace();
+    let cal = Calibration::paper();
+    for policy in PolicyKind::ALL {
+        if policy == PolicyKind::MigMiso {
+            continue;
+        }
+        let run_with = |probe_window_s: f64, migration_cost_s: f64| -> FleetMetrics {
+            let config = FleetConfig {
+                a100s: 2,
+                a30s: 0,
+                probe_window_s,
+                migration_cost_s,
+                ..FleetConfig::default()
+            };
+            FleetSim::new(config, policy.build(&cal, 7, None), cal, &trace).run()
+        };
+        let a = run_with(5.0, 0.0);
+        let b = run_with(500.0, 50.0);
+        assert_eq!(a.jobs, b.jobs, "{policy}: probe knobs must be inert");
+        assert_eq!(a.gpus, b.gpus, "{policy}");
+        assert_eq!(a.makespan_s, b.makespan_s, "{policy}");
+        assert_eq!(a.migrations, 0, "{policy}");
+        assert_eq!(b.migrations, 0, "{policy}");
+    }
+}

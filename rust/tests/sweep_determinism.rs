@@ -14,10 +14,12 @@ use migsim::sweep::grid::{GridSpec, MixSpec};
 use migsim::util::prop::forall_ok;
 use migsim::util::rng::Rng;
 
-/// Draw a small random grid: 1–3 policies, one preset mix, 1–2 GPUs,
-/// 1–2 interference models, either admission mode, 1–2 queue
-/// disciplines, 1–2 seeds, 10–40 jobs per cell. Small enough that the
-/// three runs per case stay fast, varied enough to exercise every
+/// Draw a small random grid: 1–3 policies (mig-miso included), one
+/// preset mix, 1–2 GPUs, 1–2 interference models, either admission
+/// mode, 1–2 queue disciplines, 1–2 seeds, 10–40 jobs per cell, and a
+/// randomized MISO probe window (short enough that commit/migration
+/// paths execute). Small enough that the three runs per case stay
+/// fast, varied enough to exercise every
 /// policy/contention/admission/discipline path.
 fn random_grid(r: &mut Rng) -> GridSpec {
     let n_policies = 1 + r.below(3) as usize;
@@ -55,6 +57,7 @@ fn random_grid(r: &mut Rng) -> GridSpec {
         epochs: Some(1),
         cap: 7,
         admission,
+        probe_window_s: 0.1 + r.next_f64() * 30.0,
     }
 }
 

@@ -1,0 +1,100 @@
+//! Golden-file test for `report::sweep`: the byte-exact artifacts of a
+//! fixed 2-cell grid are pinned under `rust/tests/fixtures/`, so a
+//! schema change (v3 → v4 here) is a *deliberate* fixture update in
+//! the diff instead of silent drift nobody reviews.
+//!
+//! Workflow: the first run on a machine without fixtures writes them
+//! (bootstrap) and passes; every later run compares byte-for-byte.
+//! After an intentional schema change, regenerate with
+//! `MIGSIM_BLESS=1 cargo test --test sweep_golden` and commit the
+//! updated files.
+
+use migsim::cluster::policy::{AdmissionMode, PolicyKind};
+use migsim::cluster::queue::QueueDiscipline;
+use migsim::report::sweep::{summary_json_text, validate_summary, write_sweep};
+use migsim::simgpu::calibration::Calibration;
+use migsim::simgpu::interference::InterferenceModel;
+use migsim::sweep::engine::run_sweep;
+use migsim::sweep::grid::{GridSpec, MixSpec};
+use migsim::util::json::Json;
+use migsim::util::tempdir::TempDir;
+use std::path::PathBuf;
+
+/// The pinned grid: 2 policies × 1 mix × 1 GPU × 1 gap × 1 seed =
+/// 2 cells. Every knob is explicit so the fixture never moves because
+/// a *default* moved — only because the schema (or the simulator's
+/// arithmetic) did, which is exactly what the test should surface.
+fn golden_grid() -> GridSpec {
+    GridSpec {
+        policies: vec![PolicyKind::Mps, PolicyKind::MigStatic],
+        mixes: vec![MixSpec::new("golden", [0.6, 0.4, 0.0])],
+        gpus: vec![1],
+        interarrivals_s: vec![0.5],
+        interference: vec![InterferenceModel::Roofline],
+        queues: vec![QueueDiscipline::BackfillEasy],
+        seeds: vec![97],
+        jobs_per_cell: 12,
+        epochs: Some(1),
+        cap: 7,
+        admission: AdmissionMode::Strict,
+        probe_window_s: 15.0,
+    }
+}
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures")
+}
+
+/// Compare `actual` against the committed fixture, bootstrapping (or
+/// re-blessing under `MIGSIM_BLESS`) when asked.
+fn check_golden(name: &str, actual: &str) {
+    let path = fixtures_dir().join(name);
+    let bless = std::env::var("MIGSIM_BLESS").is_ok();
+    if bless || !path.exists() {
+        std::fs::create_dir_all(fixtures_dir()).expect("create fixtures dir");
+        std::fs::write(&path, actual).expect("write fixture");
+        eprintln!("blessed fixture {} ({} bytes)", path.display(), actual.len());
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read fixture");
+    assert_eq!(
+        actual,
+        expected,
+        "{name} drifted from its committed fixture. If the change is \
+         intentional (schema bump, calibration change), regenerate with \
+         `MIGSIM_BLESS=1 cargo test --test sweep_golden` and commit the diff."
+    );
+}
+
+#[test]
+fn two_cell_sweep_artifacts_match_the_committed_fixtures() {
+    let grid = golden_grid();
+    let cal = Calibration::paper();
+    let run = run_sweep(&grid, &cal, 1).expect("valid grid");
+
+    // The string path and the file path must agree byte-for-byte —
+    // and both must validate under the current schema.
+    let summary = summary_json_text(&grid, &run, &cal);
+    let parsed = Json::parse(&summary).expect("summary parses");
+    assert_eq!(validate_summary(&parsed).expect("summary validates"), 2);
+
+    let dir = TempDir::new().expect("tempdir");
+    let artifacts = write_sweep(dir.path(), &grid, &run, &cal).expect("write artifacts");
+    let summary_file = std::fs::read_to_string(&artifacts.summary_json).expect("summary file");
+    assert_eq!(summary, summary_file, "writer and string paths must agree");
+    let csv = std::fs::read_to_string(&artifacts.cells_csv).expect("csv file");
+    assert_eq!(csv.lines().count(), 1 + 2, "header + one row per cell");
+    assert!(
+        csv.lines().next().unwrap().ends_with("probe_window_s,migrations"),
+        "v4 columns must be present: {}",
+        csv.lines().next().unwrap()
+    );
+
+    // A sweep at 8 threads produces the identical bytes (the fixture
+    // is thread-count-independent by construction).
+    let run8 = run_sweep(&grid, &cal, 8).expect("valid grid");
+    assert_eq!(summary, summary_json_text(&grid, &run8, &cal));
+
+    check_golden("sweep_summary.json", &summary);
+    check_golden("sweep_cells.csv", &csv);
+}
