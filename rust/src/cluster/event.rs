@@ -40,6 +40,14 @@ pub enum EventKind {
     /// whose policy exposes a probe region; stale probes (the GPU
     /// already committed, drained or lost residents) no-op on pop.
     Probe { gpu: usize },
+    /// Telemetry sampling tick: the observability layer reads the
+    /// fleet state and reschedules itself one interval later.
+    /// Scheduled only when a sampler is configured (`--sample-interval`)
+    /// — a run without one never sees this variant. Pops *last* at
+    /// equal timestamps so a sample observes the post-transition state
+    /// of its instant, and its handler never advances the simulation
+    /// clock.
+    Sample,
 }
 
 impl EventKind {
@@ -47,13 +55,16 @@ impl EventKind {
     /// A finish frees memory/slots and a repartition brings a GPU back
     /// before any same-instant arrival is admission-checked; a probe
     /// evaluates after same-instant finishes (a leaving resident must
-    /// not be migrated) but before same-instant arrivals join.
+    /// not be migrated) but before same-instant arrivals join; a
+    /// sample observes only after every same-instant transition
+    /// landed.
     fn rank(&self) -> u8 {
         match self {
             EventKind::Finish { .. } => 0,
             EventKind::Repartition { .. } => 1,
             EventKind::Probe { .. } => 2,
             EventKind::Arrival(_) => 3,
+            EventKind::Sample => 4,
         }
     }
 }
@@ -178,6 +189,7 @@ mod tests {
         // tie and the arrival's admission check would run against
         // memory that is already free. Kinds must outrank seqs.
         let mut t = Timeline::new();
+        t.push(5.0, EventKind::Sample);
         t.push(5.0, EventKind::Arrival(9));
         t.push(5.0, EventKind::Probe { gpu: 0 });
         t.push(5.0, EventKind::Repartition { gpu: 1 });
@@ -186,6 +198,8 @@ mod tests {
         assert!(matches!(t.pop().unwrap().kind, EventKind::Repartition { .. }));
         assert!(matches!(t.pop().unwrap().kind, EventKind::Probe { .. }));
         assert!(matches!(t.pop().unwrap().kind, EventKind::Arrival(9)));
+        // A same-instant sample observes after every transition landed.
+        assert!(matches!(t.pop().unwrap().kind, EventKind::Sample));
         // Within one kind, insertion order still breaks the tie.
         t.push(5.0, EventKind::Finish { job: 1, gen: 0 });
         t.push(5.0, EventKind::Finish { job: 2, gen: 0 });

@@ -58,6 +58,7 @@ use crate::simgpu::mps::mps_step;
 use crate::simgpu::spec::{GpuSpec, A100, A30};
 use crate::simgpu::timeslice::timeslice_step;
 use crate::telemetry::dcgm;
+use crate::telemetry::timeline::{FleetTimeline, TraceKind, TraceLog};
 use crate::workload::memory::GpuMemoryPlan;
 use crate::workload::pipeline::PipelineModel;
 use crate::workload::resnet;
@@ -276,6 +277,16 @@ pub struct FleetSim {
     hol_since: Option<(JobId, f64)>,
     /// Total time any queue head spent blocked over the run.
     hol_wait_s: f64,
+    /// Structured event trace ([`FleetSim::enable_tracing`]). `None`
+    /// means tracing is off and every emission site is a no-op — a
+    /// run without a sink is bit-identical to a pre-observability run.
+    trace_log: Option<TraceLog>,
+    /// Sampled DCGM-style timelines ([`FleetSim::enable_sampling`]).
+    /// `None` means no `Sample` event is ever scheduled.
+    sampler: Option<FleetTimeline>,
+    /// Per-GPU projected activity account at the previous sample tick
+    /// (the window delta's left edge).
+    sample_prev: Vec<StepStats>,
 }
 
 /// Outcome of offering one waiting job to the policy.
@@ -418,27 +429,78 @@ impl FleetSim {
             demand_cache: BTreeMap::new(),
             hol_since: None,
             hol_wait_s: 0.0,
+            trace_log: None,
+            sampler: None,
+            sample_prev: vec![StepStats::default(); n_gpus],
         })
     }
 
+    /// Turn on the structured event trace: every scheduler transition
+    /// is recorded and [`FleetSim::run_traced`] returns the log. Off
+    /// by default; when off, the emission hook is a no-op and the run
+    /// is bit-identical to an untraced one.
+    pub fn enable_tracing(&mut self) {
+        let kinds: Vec<&'static str> = self.gpus.iter().map(|g| g.kind.name()).collect();
+        self.trace_log = Some(TraceLog::new(kinds));
+    }
+
+    /// Turn on sampled timelines at `interval_s`: a `Sample` timer
+    /// event reads per-GPU GRACT/SMACT/DRAMA, memory and resident
+    /// counts plus fleet-wide queue depth on the interval, and
+    /// `FleetMetrics::timeline` carries the percentile summary.
+    /// Sampling never perturbs the simulation — the handler neither
+    /// advances the clock nor touches the accounts.
+    pub fn enable_sampling(&mut self, interval_s: f64) -> anyhow::Result<()> {
+        self.sampler = Some(FleetTimeline::new(interval_s, self.gpus.len())?);
+        Ok(())
+    }
+
     /// Run the whole trace to completion and aggregate fleet metrics.
-    pub fn run(mut self) -> FleetMetrics {
+    pub fn run(self) -> FleetMetrics {
+        self.run_traced().0
+    }
+
+    /// [`FleetSim::run`], returning the structured event trace as well
+    /// (`None` unless [`FleetSim::enable_tracing`] was called). The
+    /// metrics are identical to an untraced run's bit for bit.
+    pub fn run_traced(mut self) -> (FleetMetrics, Option<TraceLog>) {
         for job in &self.jobs {
             self.timeline.push(job.spec.arrival_s, EventKind::Arrival(job.spec.id));
         }
+        if let Some(sampler) = &self.sampler {
+            if !self.timeline.is_empty() {
+                self.timeline.push(sampler.interval_s, EventKind::Sample);
+            }
+        }
         while let Some(event) = self.timeline.pop() {
+            if event.kind == EventKind::Sample {
+                // Samples observe without participating: the clock is
+                // NOT advanced (a trailing sample must not stretch the
+                // makespan) and no account is touched.
+                self.handle_sample(event.time_s);
+                continue;
+            }
             self.now = event.time_s;
             match event.kind {
                 EventKind::Arrival(id) => {
                     self.queue.push(id);
+                    self.emit(TraceKind::Arrival, Some(id), None, None, String::new());
                     self.try_place();
                 }
                 EventKind::Finish { job, gen } => self.handle_finish(job, gen),
                 EventKind::Repartition { gpu } => self.handle_repartition(gpu),
                 EventKind::Probe { gpu } => self.handle_probe(gpu),
+                EventKind::Sample => unreachable!("handled above"),
             }
         }
-        self.collect_metrics()
+        let metrics = self.collect_metrics();
+        let mut log = self.trace_log.take();
+        if let Some(log) = log.as_mut() {
+            // Ship the sampled series with the trace so the export can
+            // render utilization counter tracks.
+            log.timeline = self.sampler.take();
+        }
+        (metrics, log)
     }
 
     // -- event handlers ------------------------------------------------
@@ -480,11 +542,13 @@ impl FleetSim {
                 }
             }
         }
+        self.emit(TraceKind::Finish, Some(id), Some(gi), slot, String::new());
         self.try_place();
     }
 
     fn handle_repartition(&mut self, gi: usize) {
         self.update_gpu(gi);
+        self.emit(TraceKind::RepartitionEnd, None, Some(gi), None, String::new());
         let g = &mut self.gpus[gi];
         debug_assert!(g.repartitioning && (self.share_model.is_none() || self.hybrid));
         g.partition = g
@@ -588,6 +652,10 @@ impl FleetSim {
         // the generation bump) and reconfigure. The repartition event
         // lands them in their slices.
         self.update_gpu(gi);
+        if self.trace_log.is_some() {
+            let detail = shapes.iter().map(|s| s.name).collect::<Vec<_>>().join("+");
+            self.emit(TraceKind::ProbeCommit, None, Some(gi), None, detail);
+        }
         let movers: Vec<JobId> = std::mem::take(&mut self.gpus[gi].residents);
         for &id in &movers {
             let j = &mut self.jobs[id];
@@ -602,6 +670,7 @@ impl FleetSim {
         g.pending_partition = shapes;
         self.timeline
             .push(self.now + self.config.repartition_s, EventKind::Repartition { gpu: gi });
+        self.emit(TraceKind::RepartitionBegin, None, Some(gi), None, String::new());
     }
 
     // -- placement -----------------------------------------------------
@@ -650,6 +719,7 @@ impl FleetSim {
             g.pending_partition = Vec::new();
             self.timeline
                 .push(self.now + self.config.repartition_s, EventKind::Repartition { gpu: gi });
+            self.emit_detail(TraceKind::RepartitionBegin, None, Some(gi), None, "revert-to-probe");
         }
     }
 
@@ -772,11 +842,13 @@ impl FleetSim {
                 self.queue.remove(id);
                 match self.oom_check_slot(id, gpu, slot) {
                     Some(reason) => {
+                        self.emit_detail(TraceKind::OomKill, Some(id), Some(gpu), Some(slot), &reason);
                         self.jobs[id].oomed = Some(reason);
                         Attempt::Terminal
                     }
                     None => {
                         self.place_slot(id, gpu, slot);
+                        self.emit(TraceKind::Place, Some(id), Some(gpu), Some(slot), String::new());
                         Attempt::Placed
                     }
                 }
@@ -786,21 +858,27 @@ impl FleetSim {
                 self.queue.remove(id);
                 match self.oom_check_share(id, gpu) {
                     Some(reason) => {
+                        self.emit_detail(TraceKind::OomKill, Some(id), Some(gpu), None, &reason);
                         self.jobs[id].oomed = Some(reason);
                         Attempt::Terminal
                     }
                     None => {
                         self.place_share(id, gpu);
+                        self.emit(TraceKind::Place, Some(id), Some(gpu), None, String::new());
                         Attempt::Placed
                     }
                 }
             }
             Decision::Reject(reason) => {
                 self.queue.remove(id);
+                self.emit_detail(TraceKind::Reject, Some(id), None, None, &reason);
                 self.jobs[id].rejected = Some(reason);
                 Attempt::Terminal
             }
-            Decision::Wait => Attempt::Blocked,
+            Decision::Wait => {
+                self.emit(TraceKind::Wait, Some(id), None, None, String::new());
+                Attempt::Blocked
+            }
         }
     }
 
@@ -839,6 +917,7 @@ impl FleetSim {
             }
             Decision::Reject(reason) => {
                 self.queue.remove(id);
+                self.emit_detail(TraceKind::Reject, Some(id), None, None, &reason);
                 self.jobs[id].rejected = Some(reason);
                 BackfillOutcome::Progress
             }
@@ -856,10 +935,26 @@ impl FleetSim {
                     match self.oom_check_slot(id, gpu, slot) {
                         // An OOM-killed candidate never ran: it is not
                         // a backfill, just an oversubscribed casualty.
-                        Some(reason) => self.jobs[id].oomed = Some(reason),
+                        Some(reason) => {
+                            self.emit_detail(
+                                TraceKind::OomKill,
+                                Some(id),
+                                Some(gpu),
+                                Some(slot),
+                                &reason,
+                            );
+                            self.jobs[id].oomed = Some(reason);
+                        }
                         None => {
                             self.place_slot(id, gpu, slot);
                             self.queue.note_backfill();
+                            self.emit(
+                                TraceKind::Backfill,
+                                Some(id),
+                                Some(gpu),
+                                Some(slot),
+                                String::new(),
+                            );
                         }
                     }
                     BackfillOutcome::Progress
@@ -886,10 +981,14 @@ impl FleetSim {
                 if safe {
                     self.queue.remove(id);
                     match self.oom_check_share(id, gpu) {
-                        Some(reason) => self.jobs[id].oomed = Some(reason),
+                        Some(reason) => {
+                            self.emit_detail(TraceKind::OomKill, Some(id), Some(gpu), None, &reason);
+                            self.jobs[id].oomed = Some(reason);
+                        }
                         None => {
                             self.place_share(id, gpu);
                             self.queue.note_backfill();
+                            self.emit(TraceKind::Backfill, Some(id), Some(gpu), None, String::new());
                         }
                     }
                     BackfillOutcome::Progress
@@ -1121,6 +1220,7 @@ impl FleetSim {
             g.pending_partition = desired;
             self.timeline
                 .push(self.now + self.config.repartition_s, EventKind::Repartition { gpu: gi });
+            self.emit(TraceKind::RepartitionBegin, None, Some(gi), None, String::new());
         }
     }
 
@@ -1217,6 +1317,7 @@ impl FleetSim {
         self.migrations += 1;
         self.jobs[id].cur_slowdown = 1.0;
         self.place_slot(id, gi, si);
+        self.emit(TraceKind::Migrate, Some(id), Some(gi), Some(si), String::new());
     }
 
     fn place_share(&mut self, id: JobId, gi: usize) {
@@ -1230,6 +1331,7 @@ impl FleetSim {
         if self.hybrid {
             self.timeline
                 .push(self.now + self.config.probe_window_s, EventKind::Probe { gpu: gi });
+            self.emit(TraceKind::ProbeStart, Some(id), Some(gi), None, String::new());
         }
     }
 
@@ -1370,6 +1472,148 @@ impl FleetSim {
         self.running_jobs(gi).is_empty()
     }
 
+    // -- observability ---------------------------------------------------
+
+    /// Read-only projection of GPU `gi`'s activity account at `t`
+    /// (>= `last_update`): exactly what [`FleetSim::update_gpu`] would
+    /// leave in `accum`, computed without mutating anything. Sampling
+    /// must observe through this instead of running the real update —
+    /// an extra update at a sample instant would regroup the floating-
+    /// point summation of `remaining_steps`/`accum` and the traced run
+    /// would no longer be bit-identical to the untraced one.
+    fn projected_accum(&self, gi: usize, t: f64) -> StepStats {
+        let g = &self.gpus[gi];
+        let mut acc = g.accum;
+        let dt = t - g.last_update;
+        if dt <= 0.0 {
+            return acc;
+        }
+        for id in self.running_jobs(gi) {
+            let j = &self.jobs[id];
+            if j.per_step.wall_s <= 0.0 {
+                continue;
+            }
+            let steps = (dt / j.per_step.wall_s).min(j.remaining_steps);
+            let mut contrib = j.per_step.scaled(steps);
+            contrib.busy_s *= j.device_frac;
+            contrib.smact_integral *= j.device_frac;
+            contrib.smocc_integral *= j.device_frac;
+            acc.merge(&contrib);
+        }
+        acc
+    }
+
+    /// One sampling tick at `t`: append the per-GPU DCGM fields over
+    /// the window since the previous tick plus the fleet-wide
+    /// counters, then re-arm the timer (only while real events remain
+    /// — the heap draining is the natural end of the series).
+    fn handle_sample(&mut self, t: f64) {
+        let Some(mut sampler) = self.sampler.take() else {
+            return;
+        };
+        let interval = sampler.interval_s;
+        let mut running_total = 0usize;
+        for gi in 0..self.gpus.len() {
+            let cur = self.projected_accum(gi, t);
+            let prev = self.sample_prev[gi];
+            self.sample_prev[gi] = cur;
+            // The window's activity delta, with the window length as
+            // the denominator — per-interval utilization, the shape a
+            // real DCGM sampler reports. Saturating on `kernels`
+            // guards the one integer field against rounding backsteps.
+            let window = StepStats {
+                wall_s: interval,
+                busy_s: cur.busy_s - prev.busy_s,
+                smact_integral: cur.smact_integral - prev.smact_integral,
+                smocc_integral: cur.smocc_integral - prev.smocc_integral,
+                dram_bytes: cur.dram_bytes - prev.dram_bytes,
+                kernels: cur.kernels.saturating_sub(prev.kernels),
+                flops: cur.flops - prev.flops,
+            };
+            let spec = self.gpus[gi].kind.spec();
+            let engine = SimEngine::new(spec, self.cal);
+            let fields =
+                dcgm::instance_fields(&engine, &window, spec.memory_slices).clamp_unit();
+            let running = self.running_jobs(gi);
+            running_total += running.len();
+            let used: u64 = running.iter().map(|&id| self.jobs[id].floor_bytes).sum();
+            sampler.push_gpu(
+                gi,
+                fields.gract,
+                fields.smact,
+                fields.drama,
+                used,
+                running.len() as u32,
+            );
+        }
+        sampler.push_fleet(t, self.queue.len() as u32, running_total as u32);
+        self.sampler = Some(sampler);
+        if !self.timeline.is_empty() {
+            self.timeline.push(t + interval, EventKind::Sample);
+        }
+    }
+
+    /// The observer hook every scheduler transition reports through.
+    /// A no-op (one branch, no allocation) when tracing is off — the
+    /// zero-overhead-when-off contract. When on, the record lands with
+    /// the fleet-state counters (queue depth, running jobs, per-GPU
+    /// free memory) captured at the same instant.
+    fn emit(
+        &mut self,
+        kind: TraceKind,
+        job: Option<JobId>,
+        gpu: Option<usize>,
+        slot: Option<usize>,
+        detail: String,
+    ) {
+        if self.trace_log.is_none() {
+            return;
+        }
+        let queue_depth = self.queue.len();
+        let mut running = 0usize;
+        let free_bytes: Vec<u64> = (0..self.gpus.len())
+            .map(|gi| {
+                let ids = self.running_jobs(gi);
+                running += ids.len();
+                let used: u64 = ids.iter().map(|&id| self.jobs[id].floor_bytes).sum();
+                usable_bytes(self.gpus[gi].kind.spec().dram_capacity).saturating_sub(used)
+            })
+            .collect();
+        let t_s = self.now;
+        let log = self.trace_log.as_mut().expect("checked above");
+        log.records.push(crate::telemetry::timeline::TraceRecord {
+            t_s,
+            kind,
+            job,
+            gpu,
+            slot,
+            detail,
+        });
+        log.counters.push(crate::telemetry::timeline::CounterSample {
+            t_s,
+            queue_depth,
+            running,
+            free_bytes,
+        });
+    }
+
+    /// [`FleetSim::emit`] for records carrying a detail string — the
+    /// string is cloned only when tracing is on, so OOM/reject reasons
+    /// cost nothing on untraced runs.
+    fn emit_detail(
+        &mut self,
+        kind: TraceKind,
+        job: Option<JobId>,
+        gpu: Option<usize>,
+        slot: Option<usize>,
+        detail: &str,
+    ) {
+        if self.trace_log.is_none() {
+            return;
+        }
+        self.emit(kind, job, gpu, slot, detail.to_string());
+    }
+
     fn view(&self) -> FleetView {
         FleetView {
             gpus: self
@@ -1422,7 +1666,7 @@ impl FleetSim {
 
     // -- reporting -----------------------------------------------------
 
-    fn collect_metrics(mut self) -> FleetMetrics {
+    fn collect_metrics(&mut self) -> FleetMetrics {
         for gi in 0..self.gpus.len() {
             self.update_gpu(gi);
         }
@@ -1518,6 +1762,7 @@ impl FleetSim {
             probe_window_s: self.config.probe_window_s,
             mean_slowdown,
             peak_slowdown,
+            timeline: self.sampler.as_ref().map(|s| s.summary()),
             jobs,
             gpus,
         }

@@ -3,6 +3,7 @@
 
 use super::trace::JobSpec;
 use crate::telemetry::dcgm::DcgmFields;
+use crate::telemetry::timeline::TimelineSummary;
 use crate::util::json::Json;
 use crate::util::safe_div;
 
@@ -99,6 +100,10 @@ pub struct FleetMetrics {
     /// Mean of per-job *peak* slowdowns — the worst-moment view this
     /// field's pre-PR-4 namesake (`mean_slowdown`) actually reported.
     pub peak_slowdown: f64,
+    /// Percentile summary of the sampled timelines (`Some` only when
+    /// the run sampled, i.e. `--sample-interval` was set — absent, the
+    /// summary JSON is byte-identical to a pre-observability run).
+    pub timeline: Option<TimelineSummary>,
     pub jobs: Vec<JobRecord>,
     pub gpus: Vec<GpuRecord>,
 }
@@ -247,6 +252,11 @@ impl FleetMetrics {
             })
             .collect();
         j.set("per_gpu", Json::Arr(gpus));
+        // Key appended only when the run sampled: untraced summaries
+        // keep their exact pre-observability bytes.
+        if let Some(tl) = &self.timeline {
+            j.set("timeline", tl.to_json());
+        }
         j
     }
 
@@ -311,6 +321,7 @@ mod tests {
             probe_window_s: 15.0,
             mean_slowdown: 1.0,
             peak_slowdown: 1.0,
+            timeline: None,
             jobs,
             gpus: Vec::new(),
         }
@@ -380,6 +391,25 @@ mod tests {
         // Trace composition rides along in the summary.
         assert_eq!(back.at(&["trace", "small"]).unwrap().as_u64(), Some(1));
         assert_eq!(back.at(&["trace", "jobs"]).unwrap().as_u64(), Some(1));
+        // Without sampling there must be no timeline key at all — the
+        // summary's bytes are the pre-observability bytes.
+        assert!(back.get("timeline").is_none());
+    }
+
+    #[test]
+    fn timeline_summary_appears_only_when_sampled() {
+        use crate::telemetry::timeline::FleetTimeline;
+        let mut m = metrics(vec![record(0, 0.0, 1.0, 2.0)]);
+        let mut tl = FleetTimeline::new(30.0, 1).unwrap();
+        tl.push_gpu(0, 0.5, 0.4, 0.2, 1 << 30, 1);
+        tl.push_fleet(30.0, 2, 1);
+        m.timeline = Some(tl.summary());
+        let back = Json::parse(&m.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.at(&["timeline", "samples"]).unwrap().as_u64(), Some(1));
+        assert_eq!(
+            back.at(&["timeline", "interval_s"]).unwrap().as_f64(),
+            Some(30.0)
+        );
     }
 
     #[test]

@@ -142,6 +142,44 @@
 //! and fails on any gated metric more than 15 % below the committed
 //! baseline — see `.github/workflows/ci.yml` for the gate and its
 //! override label. CLI front ends: `migsim sweep` and `migsim bench`.
+//!
+//! ## Observability
+//!
+//! The fleet simulator is observable without being perturbable. Two
+//! opt-in observers ride the event loop:
+//!
+//! * **Structured event trace** ([`telemetry::timeline::TraceLog`]) —
+//!   every scheduler transition (arrival, wait, place, backfill,
+//!   reject, OOM-kill, migrate, probe open/commit, repartition
+//!   begin/end, finish) is emitted as a typed
+//!   [`telemetry::timeline::TraceRecord`] with a
+//!   [`telemetry::timeline::CounterSample`] of queue depth, running
+//!   jobs and per-GPU free framebuffer taken *after* the transition.
+//!   [`report::trace`] exports the log as Chrome trace-event JSON —
+//!   one track per GPU, one for the admission queue, counter tracks
+//!   for queue depth and free memory — loadable directly in Perfetto
+//!   (`ui.perfetto.dev`) or `chrome://tracing`, plus a flat CSV for
+//!   ad-hoc analysis. `migsim validate` schema-checks trace files.
+//! * **Sampled timelines** ([`telemetry::timeline::FleetTimeline`]) —
+//!   a `Sample` timer event fires every `--sample-interval` seconds
+//!   and records DCGM-style per-GPU series (GRACT/SMACT/DRAMA over the
+//!   window, resident memory, resident jobs) plus fleet-wide queue
+//!   depth and running counts, reproducing the paper's §5.3 sampling
+//!   discipline in-sim. [`cluster::metrics::FleetMetrics`] then
+//!   carries a [`telemetry::timeline::TimelineSummary`] with
+//!   median-vs-mean percentile summaries — the same median-based
+//!   reporting §5.3 argues for under skewed utilization.
+//!
+//! Determinism is the contract: the `Sample` event ranks *after* every
+//! same-instant scheduler event and never advances the clock, so
+//! enabling either observer changes no simulated outcome — with no
+//! sink configured the hooks are no-ops and runs are bit-identical to
+//! pre-observability builds; with sinks configured the artifacts are
+//! byte-deterministic for a fixed seed at any sweep thread count
+//! (`rust/tests/observability.rs` pins all of it). Surface: `migsim
+//! fleet --trace-out trace.json --sample-interval 60`, per-cell
+//! capture on sweeps via `migsim sweep --trace-dir results/traces`,
+//! and a live `cells/s` progress line on interactive sweeps.
 
 pub mod cluster;
 pub mod config;

@@ -28,7 +28,7 @@ use migsim::report::figures;
 use migsim::runtime::artifacts::ArtifactStore;
 use migsim::runtime::trainer::{Trainer, TrainerConfig};
 use migsim::simgpu::interference::InterferenceModel;
-use migsim::sweep::engine::run_sweep;
+use migsim::sweep::engine::{run_sweep, run_sweep_opts, SweepOptions};
 use migsim::sweep::grid::{GridSpec, MixSpec};
 use migsim::util::bench::{bench, compare_reports, BenchReport};
 use migsim::util::cli::Args;
@@ -66,6 +66,7 @@ SUBCOMMANDS
         [--queue fifo|backfill-easy|backfill-conservative|sjf]
         [--probe-window 15] [--partition 2g.10gb,2g.10gb,2g.10gb]
         [--trace file.csv] [--dump-trace file.csv] [--out results]
+        [--trace-out trace.json] [--sample-interval 60]
       Cluster-scale collocation: simulate a job stream on a fleet of
       A100/A30 GPUs under a placement policy (exclusive | mps |
       timeslice | mig-static | mig-dynamic | mig-miso). --interference
@@ -80,13 +81,21 @@ SUBCOMMANDS
       probes new jobs in a shared MPS region for --probe-window
       simulated seconds, then migrates them into the planner's best
       MIG partition when it beats the observed sharing. Emits summary
-      JSON + per-job/per-GPU CSV.
+      JSON + per-job/per-GPU CSV. --trace-out additionally records
+      every scheduler transition and writes a Chrome trace-event JSON
+      (open in Perfetto / chrome://tracing) plus a flat CSV twin;
+      --sample-interval adds DCGM-style sampled timelines (per-GPU
+      GRACT/SMACT/DRAMA, memory, residents; fleet-wide queue depth)
+      every N simulated seconds and a percentile summary in the
+      output. Neither flag changes the simulation: results are
+      bit-identical with observability on or off.
   sweep [--policies mps,mig-static,mig-miso] [--mixes 'smalls|paper']
         [--gpus 2,4] [--interarrivals 0.5,2.0]
         [--interference off,roofline] [--admission strict]
         [--queues fifo,backfill-easy] [--seeds 1,2]
         [--jobs 200] [--epochs 1] [--cap 7] [--probe-window 15]
         [--threads N] [--grid grid.json] [--out results]
+        [--trace-dir results/traces] [--sample-interval 60]
       Expand a declarative grid (policies x mixes x fleet sizes x
       arrival rates x interference models x queue disciplines x seeds)
       into cells and run them all across worker threads. Output is
@@ -95,11 +104,16 @@ SUBCOMMANDS
       interference-sensitivity and queue-discipline tables when those
       axes have several values). --grid loads the spec from JSON
       instead (same keys as the axis flags; absent keys keep
-      defaults).
+      defaults). --trace-dir writes one Chrome trace-event JSON per
+      cell (cell_<index>.trace.json; opt-in — traces are per-cell
+      sized); --sample-interval adds sampled timelines inside each
+      traced cell. A progress line ticks on stderr while the sweep
+      runs (suppressed when stderr is not a terminal).
   validate <file>
       Schema-check a machine-readable artifact: BENCH_*.json reports
-      (schema v1 round-trip) and sweep_summary.json files (schema
-      version, embedded grid round-trip, per-cell consistency). Exits
+      (schema v1 round-trip), sweep_summary.json files (schema
+      version, embedded grid round-trip, per-cell consistency) and
+      Chrome trace-event files from --trace-out/--trace-dir. Exits
       nonzero on drift — CI runs this on everything it uploads.
   bench [--quick] [--json] [--name sweep] [--out .] [--threads N]
         [--iters 3] [--baseline BENCH_baseline.json]
@@ -337,11 +351,19 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
         probe_window_s,
         ..FleetConfig::default()
     };
+    let trace_out = args.flag("trace-out");
+    let sample_interval_s = parse_sample_interval_flag(args)?;
     let t0 = std::time::Instant::now();
     // try_new: a malformed external trace must exit with a proper
     // error, not a panic.
-    let sim = FleetSim::try_new(fleet_config, policy, config.calibration, &trace)?;
-    let metrics = sim.run();
+    let mut sim = FleetSim::try_new(fleet_config, policy, config.calibration, &trace)?;
+    if trace_out.is_some() {
+        sim.enable_tracing();
+    }
+    if let Some(interval_s) = sample_interval_s {
+        sim.enable_sampling(interval_s)?;
+    }
+    let (metrics, trace_log) = sim.run_traced();
     println!("{}", metrics.summary());
     let out = args.flag_or("out", &config.out_dir);
     let artifacts = migsim::report::fleet::write_fleet(std::path::Path::new(&out), &metrics)?;
@@ -352,7 +374,31 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
         artifacts.jobs_csv.display(),
         artifacts.gpus_csv.display(),
     );
+    if let (Some(path), Some(log)) = (trace_out, &trace_log) {
+        let t = migsim::report::write_trace(std::path::Path::new(path), log, &metrics)?;
+        println!(
+            "trace -> {} + {}",
+            t.trace_json.display(),
+            t.trace_csv.display()
+        );
+    }
     Ok(())
+}
+
+/// Parse the optional `--sample-interval <seconds>` flag (simulated
+/// seconds between telemetry samples; must be finite and > 0).
+fn parse_sample_interval_flag(args: &Args) -> anyhow::Result<Option<f64>> {
+    match args.flag("sample-interval") {
+        None => Ok(None),
+        Some(v) => {
+            let interval_s: f64 = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for --sample-interval: '{v}'"))?;
+            Ok(Some(migsim::telemetry::timeline::validate_interval(
+                interval_s,
+            )?))
+        }
+    }
 }
 
 /// Parse the optional `--interference off|linear|roofline` flag.
@@ -500,9 +546,24 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
 }
 
 fn cmd_sweep(args: &Args, config: &Config) -> anyhow::Result<()> {
+    use std::io::IsTerminal;
     let grid = grid_from_args(args)?;
     let threads = args.flag_parse("threads", 0usize)?;
-    let run = run_sweep(&grid, &config.calibration, threads)?;
+    let trace_dir = args.flag("trace-dir");
+    let sample_interval_s = parse_sample_interval_flag(args)?;
+    anyhow::ensure!(
+        sample_interval_s.is_none() || trace_dir.is_some(),
+        "--sample-interval requires --trace-dir on sweeps \
+         (per-cell timelines ship inside the per-cell traces)"
+    );
+    let opts = SweepOptions {
+        // Live progress only for a human watching: a redirected stderr
+        // (CI logs, pipes) gets no carriage-return spinner.
+        progress: std::io::stderr().is_terminal(),
+        trace: trace_dir.is_some(),
+        sample_interval_s,
+    };
+    let run = run_sweep_opts(&grid, &config.calibration, threads, &opts)?;
     print!("{}", migsim::report::sweep::ranking_table(&run));
     if grid.interference.len() > 1 {
         print!("{}", migsim::report::sweep::interference_table(&run));
@@ -529,6 +590,17 @@ fn cmd_sweep(args: &Args, config: &Config) -> anyhow::Result<()> {
         artifacts.summary_json.display(),
         artifacts.cells_csv.display()
     );
+    if let Some(dir) = trace_dir {
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir)?;
+        let mut written = 0usize;
+        for (cell, text) in run.cells.iter().zip(&run.traces) {
+            let Some(text) = text else { continue };
+            std::fs::write(dir.join(format!("cell_{}.trace.json", cell.spec.index)), text)?;
+            written += 1;
+        }
+        println!("traces -> {} ({written} cells)", dir.display());
+    }
     Ok(())
 }
 
@@ -624,12 +696,24 @@ fn cmd_bench(args: &Args, config: &Config) -> anyhow::Result<()> {
 /// `cells`, a bench report carries `metrics` + `provisional`.
 fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     let Some(path) = args.positional.first() else {
-        anyhow::bail!("usage: migsim validate <file> (BENCH_*.json or sweep_summary.json)");
+        anyhow::bail!(
+            "usage: migsim validate <file> \
+             (BENCH_*.json, sweep_summary.json, or *.trace.json)"
+        );
     };
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
     let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
 
+    if json.get("traceEvents").is_some() {
+        let events = migsim::report::trace::validate_trace(&json)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        println!(
+            "OK trace {path}: schema v{}, {events} events",
+            migsim::report::trace::TRACE_SCHEMA_VERSION
+        );
+        return Ok(());
+    }
     if json.get("grid").is_some() && json.get("cells").is_some() {
         let cells = migsim::report::sweep::validate_summary(&json)
             .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
@@ -655,8 +739,8 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     anyhow::bail!(
-        "{path}: unrecognized artifact (expected a BENCH_*.json report \
-         or a sweep_summary.json)"
+        "{path}: unrecognized artifact (expected a BENCH_*.json report, \
+         a sweep_summary.json, or a Chrome trace-event file)"
     )
 }
 

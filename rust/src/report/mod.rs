@@ -6,7 +6,9 @@ pub mod figures;
 pub mod fleet;
 pub mod render;
 pub mod sweep;
+pub mod trace;
 
 pub use figures::all_figures;
 pub use fleet::write_fleet;
 pub use sweep::write_sweep;
+pub use trace::write_trace;

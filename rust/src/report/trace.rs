@@ -1,0 +1,454 @@
+//! Chrome trace-event export of a fleet run's [`TraceLog`]: one JSON
+//! file loadable in Perfetto / `chrome://tracing` plus a flat CSV of
+//! the raw records, and the schema validator `migsim validate` applies
+//! to both CI uploads and user-supplied files.
+//!
+//! Track layout: pid 0 is the scheduler (tid 0 = the admission queue —
+//! arrivals, waits, rejections land here, along with the `queue_depth`
+//! and `running` counter tracks); pid 1 is the GPUs (tid = GPU index —
+//! each placed job is a complete-event span on its GPU's track,
+//! GPU-targeted transitions are instants, and each GPU carries a
+//! `free_mem` counter plus, when sampling was on, a `gract` counter
+//! from the DCGM-style timeline). Timestamps are simulated
+//! microseconds. Output is a pure function of the run: byte-identical
+//! for a fixed seed, whatever the host.
+
+use super::csv;
+use crate::cluster::metrics::FleetMetrics;
+use crate::telemetry::timeline::{TraceKind, TraceLog};
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Version stamp carried in `otherData.schema_version`; bump on any
+/// incompatible change to the track layout or record fields.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+/// Process id of the scheduler-side tracks (admission queue, counters).
+const PID_SCHED: u64 = 0;
+/// Process id of the per-GPU tracks (tid = GPU index).
+const PID_GPUS: u64 = 1;
+
+fn micros(t_s: f64) -> Json {
+    Json::from_f64(t_s * 1e6)
+}
+
+fn meta(name: &str, pid: u64, tid: Option<u64>, value: &str) -> Json {
+    let mut args = Json::obj();
+    args.set("name", Json::from_str_val(value));
+    let mut e = Json::obj();
+    e.set("ph", Json::from_str_val("M"))
+        .set("name", Json::from_str_val(name))
+        .set("pid", Json::from_u64(pid))
+        .set("args", args);
+    if let Some(tid) = tid {
+        e.set("tid", Json::from_u64(tid));
+    }
+    e
+}
+
+fn counter(name: &str, pid: u64, tid: u64, t_s: f64, key: &str, value: f64) -> Json {
+    let mut args = Json::obj();
+    args.set(key, Json::from_f64(value));
+    let mut e = Json::obj();
+    e.set("ph", Json::from_str_val("C"))
+        .set("name", Json::from_str_val(name))
+        .set("pid", Json::from_u64(pid))
+        .set("tid", Json::from_u64(tid))
+        .set("ts", micros(t_s))
+        .set("args", args);
+    e
+}
+
+/// The full Chrome trace-event document for one traced run.
+pub fn trace_json(log: &TraceLog, m: &FleetMetrics) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+
+    // Metadata: name the processes and threads so Perfetto's track
+    // labels read as the fleet, not as anonymous pids.
+    events.push(meta("process_name", PID_SCHED, None, "scheduler"));
+    events.push(meta("thread_name", PID_SCHED, Some(0), "admission-queue"));
+    events.push(meta("process_name", PID_GPUS, None, "gpus"));
+    for (gi, kind) in log.gpu_kinds.iter().enumerate() {
+        events.push(meta(
+            "thread_name",
+            PID_GPUS,
+            Some(gi as u64),
+            &format!("gpu{gi} ({kind})"),
+        ));
+    }
+
+    // One complete-event span per job that ran, on its GPU's track.
+    for j in &m.jobs {
+        let (Some(start), Some(gpu)) = (j.start_s, j.gpu) else {
+            continue;
+        };
+        let end = j.finish_s.unwrap_or(m.makespan_s);
+        let mut args = Json::obj();
+        args.set("job", Json::from_u64(j.spec.id as u64))
+            .set("workload", Json::from_str_val(j.spec.workload.name()))
+            .set("outcome", Json::from_str_val(j.outcome.label()));
+        let mut e = Json::obj();
+        e.set("ph", Json::from_str_val("X"))
+            .set(
+                "name",
+                Json::from_str_val(&format!("job {} ({})", j.spec.id, j.spec.workload.name())),
+            )
+            .set("cat", Json::from_str_val("job"))
+            .set("pid", Json::from_u64(PID_GPUS))
+            .set("tid", Json::from_u64(gpu as u64))
+            .set("ts", micros(start))
+            .set("dur", micros((end - start).max(0.0)))
+            .set("args", args);
+        events.push(e);
+    }
+
+    // Scheduler transitions as instants: GPU-targeted ones on the
+    // GPU's track, queue-side ones on the admission-queue track.
+    for r in &log.records {
+        let (pid, tid) = match r.gpu {
+            Some(gi) => (PID_GPUS, gi as u64),
+            None => (PID_SCHED, 0),
+        };
+        let mut args = Json::obj();
+        if let Some(job) = r.job {
+            args.set("job", Json::from_u64(job as u64));
+        }
+        if let Some(gpu) = r.gpu {
+            args.set("gpu", Json::from_u64(gpu as u64));
+        }
+        if let Some(slot) = r.slot {
+            args.set("slot", Json::from_u64(slot as u64));
+        }
+        if !r.detail.is_empty() {
+            args.set("detail", Json::from_str_val(&r.detail));
+        }
+        let mut e = Json::obj();
+        e.set("ph", Json::from_str_val("i"))
+            .set("name", Json::from_str_val(r.kind.name()))
+            .set("cat", Json::from_str_val("sched"))
+            .set("pid", Json::from_u64(pid))
+            .set("tid", Json::from_u64(tid))
+            .set("ts", micros(r.t_s))
+            .set("s", Json::from_str_val("t"))
+            .set("args", args);
+        events.push(e);
+    }
+
+    // Event-driven counter tracks: queue depth and running jobs on the
+    // scheduler, free framebuffer per GPU.
+    for c in &log.counters {
+        events.push(counter(
+            "queue_depth",
+            PID_SCHED,
+            0,
+            c.t_s,
+            "jobs",
+            c.queue_depth as f64,
+        ));
+        events.push(counter(
+            "running",
+            PID_SCHED,
+            0,
+            c.t_s,
+            "jobs",
+            c.running as f64,
+        ));
+        for (gi, &free) in c.free_bytes.iter().enumerate() {
+            events.push(counter(
+                &format!("gpu{gi} free_mem_mib"),
+                PID_GPUS,
+                gi as u64,
+                c.t_s,
+                "mib",
+                free as f64 / (1 << 20) as f64,
+            ));
+        }
+    }
+
+    // Sampled DCGM-style utilization as counter tracks, when on.
+    if let Some(tl) = &log.timeline {
+        for (i, &t_s) in tl.times_s.iter().enumerate() {
+            for (gi, s) in tl.per_gpu.iter().enumerate() {
+                events.push(counter(
+                    &format!("gpu{gi} gract"),
+                    PID_GPUS,
+                    gi as u64,
+                    t_s,
+                    "gract",
+                    s.gract[i],
+                ));
+            }
+        }
+    }
+
+    let mut other = Json::obj();
+    other
+        .set("schema_version", Json::from_u64(TRACE_SCHEMA_VERSION))
+        .set("policy", Json::from_str_val(&m.policy))
+        .set("seed", Json::from_u64(m.seed))
+        .set("queue_discipline", Json::from_str_val(&m.queue_discipline))
+        .set("interference", Json::from_str_val(&m.interference))
+        .set(
+            "sample_interval_s",
+            match &log.timeline {
+                Some(tl) => Json::from_f64(tl.interval_s),
+                None => Json::Null,
+            },
+        );
+    let mut doc = Json::obj();
+    doc.set("displayTimeUnit", Json::from_str_val("ms"))
+        .set("otherData", other)
+        .set("traceEvents", Json::Arr(events));
+    doc
+}
+
+/// [`trace_json`] as the exact bytes written to disk.
+pub fn trace_json_text(log: &TraceLog, m: &FleetMetrics) -> String {
+    trace_json(log, m).to_string_pretty()
+}
+
+/// Flat CSV of the raw records: one row per scheduler transition.
+pub fn trace_csv_text(log: &TraceLog) -> String {
+    let opt = |v: Option<usize>| v.map(|x| x.to_string()).unwrap_or_default();
+    let rows: Vec<Vec<String>> = log
+        .records
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{:.6}", r.t_s),
+                r.kind.name().to_string(),
+                opt(r.job),
+                opt(r.gpu),
+                opt(r.slot),
+                r.detail.clone(),
+            ]
+        })
+        .collect();
+    csv::to_csv(&["t_s", "event", "job", "gpu", "slot", "detail"], &rows)
+}
+
+/// Files one [`write_trace`] call produces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceArtifacts {
+    pub trace_json: PathBuf,
+    pub trace_csv: PathBuf,
+}
+
+/// Write the Chrome trace JSON at `path` and the record CSV next to it
+/// (same stem, `.csv` extension).
+pub fn write_trace(path: &Path, log: &TraceLog, m: &FleetMetrics) -> anyhow::Result<TraceArtifacts> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, trace_json_text(log, m))?;
+    let csv_path = path.with_extension("csv");
+    std::fs::write(&csv_path, trace_csv_text(log))?;
+    Ok(TraceArtifacts {
+        trace_json: path.to_path_buf(),
+        trace_csv: csv_path,
+    })
+}
+
+fn ensure_field(e: &Json, i: usize, field: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(e.get(field).is_some(), "event {i}: missing '{field}'");
+    Ok(())
+}
+
+/// Schema-check a Chrome trace-event document: the envelope, the
+/// version stamp, and the per-phase required fields. Returns the event
+/// count so callers can report it.
+pub fn validate_trace(json: &Json) -> anyhow::Result<usize> {
+    let events = json
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("missing 'traceEvents' array"))?;
+    let version = json
+        .at(&["otherData", "schema_version"])
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow::anyhow!("missing otherData.schema_version"))?;
+    anyhow::ensure!(
+        version == TRACE_SCHEMA_VERSION,
+        "trace schema v{version}, this binary validates v{TRACE_SCHEMA_VERSION}"
+    );
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| anyhow::anyhow!("event {i}: missing 'ph'"))?;
+        ensure_field(e, i, "name")?;
+        ensure_field(e, i, "pid")?;
+        match ph {
+            "M" => ensure_field(e, i, "args")?,
+            "X" => {
+                for f in ["ts", "dur", "tid", "args"] {
+                    ensure_field(e, i, f)?;
+                }
+            }
+            "i" => {
+                for f in ["ts", "tid", "s"] {
+                    ensure_field(e, i, f)?;
+                }
+            }
+            "C" => {
+                for f in ["ts", "tid", "args"] {
+                    ensure_field(e, i, f)?;
+                }
+                anyhow::ensure!(
+                    e.get("args").and_then(|a| a.as_obj()).is_some_and(|o| !o.is_empty()),
+                    "event {i}: counter event needs a non-empty args object"
+                );
+            }
+            other => anyhow::bail!("event {i}: unsupported phase '{other}'"),
+        }
+        if let Some(ts) = e.get("ts") {
+            let v = ts.as_f64().ok_or_else(|| anyhow::anyhow!("event {i}: non-numeric ts"))?;
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "event {i}: ts must be finite and >= 0");
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::metrics::{JobOutcome, JobRecord};
+    use crate::cluster::trace::JobSpec;
+    use crate::telemetry::timeline::{CounterSample, FleetTimeline, TraceRecord};
+    use crate::workload::spec::WorkloadSize;
+
+    fn sample_metrics() -> FleetMetrics {
+        FleetMetrics {
+            policy: "mps".into(),
+            seed: 7,
+            interference: "off".into(),
+            admission: "strict".into(),
+            queue_discipline: "fifo".into(),
+            makespan_s: 100.0,
+            peak_queue: 1,
+            backfilled: 0,
+            hol_wait_s: 0.0,
+            migrations: 0,
+            probe_window_s: 15.0,
+            mean_slowdown: 1.0,
+            peak_slowdown: 1.0,
+            timeline: None,
+            jobs: vec![JobRecord {
+                spec: JobSpec {
+                    id: 0,
+                    arrival_s: 0.0,
+                    workload: WorkloadSize::Small,
+                    epochs: 1,
+                },
+                start_s: Some(1.0),
+                finish_s: Some(90.0),
+                gpu: Some(0),
+                outcome: JobOutcome::Finished,
+            }],
+            gpus: Vec::new(),
+        }
+    }
+
+    fn sample_log() -> TraceLog {
+        let mut log = TraceLog::new(vec!["A100"]);
+        log.records.push(TraceRecord {
+            t_s: 0.0,
+            kind: TraceKind::Arrival,
+            job: Some(0),
+            gpu: None,
+            slot: None,
+            detail: String::new(),
+        });
+        log.records.push(TraceRecord {
+            t_s: 1.0,
+            kind: TraceKind::Place,
+            job: Some(0),
+            gpu: Some(0),
+            slot: None,
+            detail: String::new(),
+        });
+        log.counters.push(CounterSample {
+            t_s: 1.0,
+            queue_depth: 0,
+            running: 1,
+            free_bytes: vec![32 << 30],
+        });
+        log
+    }
+
+    #[test]
+    fn generated_trace_passes_its_own_validator() {
+        let m = sample_metrics();
+        let mut log = sample_log();
+        let text = trace_json_text(&log, &m);
+        let parsed = Json::parse(&text).unwrap();
+        let n = validate_trace(&parsed).unwrap();
+        // 4 metadata + 1 span + 2 instants + 3 counters.
+        assert_eq!(n, 10);
+
+        // Sampled timelines add one gract counter per (tick, gpu).
+        let mut tl = FleetTimeline::new(50.0, 1).unwrap();
+        tl.push_gpu(0, 0.5, 0.5, 0.2, 1 << 30, 1);
+        tl.push_fleet(50.0, 0, 1);
+        log.timeline = Some(tl);
+        let parsed = Json::parse(&trace_json_text(&log, &m)).unwrap();
+        assert_eq!(validate_trace(&parsed).unwrap(), 11);
+        assert_eq!(
+            parsed.at(&["otherData", "sample_interval_s"]).unwrap().as_f64(),
+            Some(50.0)
+        );
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        let cases = [
+            (r#"{"foo": 1}"#, "traceEvents"),
+            (r#"{"traceEvents": [], "otherData": {}}"#, "schema_version"),
+            (
+                r#"{"traceEvents": [], "otherData": {"schema_version": 99}}"#,
+                "schema v99",
+            ),
+            (
+                r#"{"traceEvents": [{"name": "x", "pid": 0}], "otherData": {"schema_version": 1}}"#,
+                "missing 'ph'",
+            ),
+            (
+                r#"{"traceEvents": [{"ph": "X", "name": "x", "pid": 0}], "otherData": {"schema_version": 1}}"#,
+                "missing 'ts'",
+            ),
+            (
+                r#"{"traceEvents": [{"ph": "Z", "name": "x", "pid": 0}], "otherData": {"schema_version": 1}}"#,
+                "unsupported phase",
+            ),
+        ];
+        for (text, needle) in cases {
+            let err = validate_trace(&Json::parse(text).unwrap())
+                .err()
+                .expect(needle);
+            assert!(err.to_string().contains(needle), "{err} !~ {needle}");
+        }
+    }
+
+    #[test]
+    fn csv_has_one_row_per_record() {
+        let log = sample_log();
+        let text = trace_csv_text(&log);
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap(), "t_s,event,job,gpu,slot,detail");
+        assert_eq!(text.lines().count(), 1 + log.records.len());
+        assert!(text.contains("arrival"));
+        assert!(text.contains("place"));
+    }
+
+    #[test]
+    fn write_trace_places_csv_next_to_json() {
+        let dir = crate::util::tempdir::TempDir::new().unwrap();
+        let path = dir.path().join("trace.json");
+        let art = write_trace(&path, &sample_log(), &sample_metrics()).unwrap();
+        assert_eq!(art.trace_csv, dir.path().join("trace.csv"));
+        let text = std::fs::read_to_string(&art.trace_json).unwrap();
+        assert_eq!(text, trace_json_text(&sample_log(), &sample_metrics()));
+        assert!(validate_trace(&Json::parse(&text).unwrap()).is_ok());
+    }
+}

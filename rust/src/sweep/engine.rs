@@ -19,8 +19,9 @@ use crate::cluster::fleet::{FleetConfig, FleetSim};
 use crate::cluster::metrics::FleetMetrics;
 use crate::cluster::trace::poisson_trace;
 use crate::simgpu::calibration::Calibration;
+use crate::telemetry::timeline::validate_interval;
 use crate::util::json::Json;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
 /// Deterministic scalar outcomes of one cell (no host timings).
 #[derive(Debug, Clone, PartialEq)]
@@ -109,10 +110,31 @@ pub struct CellOutcome {
     pub metrics: CellMetrics,
 }
 
+/// Per-run execution options that do not affect the metrics: live
+/// progress reporting and per-cell trace capture. The default (all
+/// off) reproduces the pre-observability executor exactly.
+#[derive(Debug, Clone, Default)]
+pub struct SweepOptions {
+    /// Print a live progress line to stderr (cells done/total, elapsed,
+    /// cells/s). Callers should leave this off for `--json` output or
+    /// a non-TTY stderr.
+    pub progress: bool,
+    /// Capture a Chrome trace-event JSON per cell into
+    /// [`SweepRun::traces`].
+    pub trace: bool,
+    /// Sample DCGM-style timelines at this interval inside each traced
+    /// cell. Requires `trace`; validated up front.
+    pub sample_interval_s: Option<f64>,
+}
+
 /// A completed sweep, cells in grid-expansion order.
 #[derive(Debug, Clone)]
 pub struct SweepRun {
     pub cells: Vec<CellOutcome>,
+    /// Per-cell Chrome trace-event JSON, aligned with `cells`. All
+    /// `None` unless [`SweepOptions::trace`] was set. Deterministic:
+    /// a pure function of the cell spec, independent of thread count.
+    pub traces: Vec<Option<String>>,
     /// Worker threads actually used.
     pub threads: usize,
     /// Host wall time of the execution (NOT part of the summary JSON).
@@ -136,6 +158,23 @@ pub fn default_threads() -> usize {
 /// run the discrete-event simulation. Pure function of (cell, grid,
 /// cal) — this is what makes the sweep embarrassingly parallel.
 pub fn run_cell(cell: &CellSpec, grid: &GridSpec, cal: &Calibration) -> CellMetrics {
+    run_cell_traced(cell, grid, cal, &SweepOptions::default()).0
+}
+
+/// [`run_cell`] with observability options: when `opts.trace` is set
+/// the cell's fleet run is traced (and sampled at
+/// `opts.sample_interval_s`, if any) and the Chrome trace-event JSON
+/// comes back alongside the metrics. The metrics are bit-identical
+/// either way.
+///
+/// `opts.sample_interval_s` must already be validated
+/// ([`run_sweep_opts`] does) — an invalid interval panics here.
+pub fn run_cell_traced(
+    cell: &CellSpec,
+    grid: &GridSpec,
+    cal: &Calibration,
+    opts: &SweepOptions,
+) -> (CellMetrics, Option<String>) {
     let trace = poisson_trace(&cell.trace_config(grid));
     let policy = cell.policy.build(cal, grid.cap, None);
     let config = FleetConfig {
@@ -148,14 +187,44 @@ pub fn run_cell(cell: &CellSpec, grid: &GridSpec, cal: &Calibration) -> CellMetr
         probe_window_s: grid.probe_window_s,
         ..FleetConfig::default()
     };
-    let sim = FleetSim::new(config, policy, *cal, &trace);
-    CellMetrics::from_fleet(&sim.run())
+    let mut sim = FleetSim::new(config, policy, *cal, &trace);
+    if opts.trace {
+        sim.enable_tracing();
+        if let Some(interval_s) = opts.sample_interval_s {
+            sim.enable_sampling(interval_s)
+                .expect("sample interval validated by run_sweep_opts");
+        }
+    }
+    let (metrics, log) = sim.run_traced();
+    let trace_text = log
+        .as_ref()
+        .map(|log| crate::report::trace::trace_json_text(log, &metrics));
+    (CellMetrics::from_fleet(&metrics), trace_text)
 }
 
 /// Expand `grid` and execute every cell across `threads` workers
 /// (0 = [`default_threads`]). Output order and content are independent
 /// of `threads`.
 pub fn run_sweep(grid: &GridSpec, cal: &Calibration, threads: usize) -> anyhow::Result<SweepRun> {
+    run_sweep_opts(grid, cal, threads, &SweepOptions::default())
+}
+
+/// [`run_sweep`] with observability options: optional live progress on
+/// stderr and per-cell trace capture. The metrics (and so the summary
+/// JSON) are byte-identical to a default run regardless of options.
+pub fn run_sweep_opts(
+    grid: &GridSpec,
+    cal: &Calibration,
+    threads: usize,
+    opts: &SweepOptions,
+) -> anyhow::Result<SweepRun> {
+    if let Some(interval_s) = opts.sample_interval_s {
+        anyhow::ensure!(
+            opts.trace,
+            "sample_interval_s requires trace capture to be enabled"
+        );
+        validate_interval(interval_s)?;
+    }
     let cells = grid.cells()?;
     let threads = if threads == 0 {
         default_threads()
@@ -167,44 +236,77 @@ pub fn run_sweep(grid: &GridSpec, cal: &Calibration, threads: usize) -> anyhow::
     let t0 = std::time::Instant::now();
 
     let next = AtomicUsize::new(0);
-    let merged: anyhow::Result<Vec<(usize, CellMetrics)>> = std::thread::scope(|s| {
+    let done = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
+    type CellResult = (usize, CellMetrics, Option<String>);
+    let merged: anyhow::Result<Vec<CellResult>> = std::thread::scope(|s| {
+        // Progress reporter: a sampling observer like the fleet's
+        // `Sample` event — it reads the shared counter on an interval
+        // and never touches the work distribution.
+        let reporter = opts.progress.then(|| {
+            s.spawn(|| {
+                let total = cells.len();
+                loop {
+                    let n = done.load(Ordering::Relaxed);
+                    let elapsed = t0.elapsed().as_secs_f64();
+                    let rate = crate::util::safe_div(n as f64, elapsed);
+                    eprint!("\rsweep: {n}/{total} cells  {elapsed:6.1}s  {rate:6.1} cells/s");
+                    if stop.load(Ordering::Relaxed) {
+                        eprintln!();
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                }
+            })
+        });
         let handles: Vec<_> = (0..workers)
             .map(|_| {
                 s.spawn(|| {
-                    let mut local: Vec<(usize, CellMetrics)> = Vec::new();
+                    let mut local: Vec<CellResult> = Vec::new();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= cells.len() {
                             break;
                         }
-                        local.push((i, run_cell(&cells[i], grid, cal)));
+                        let (metrics, trace) = run_cell_traced(&cells[i], grid, cal, opts);
+                        local.push((i, metrics, trace));
+                        done.fetch_add(1, Ordering::Relaxed);
                     }
                     local
                 })
             })
             .collect();
         let mut all = Vec::with_capacity(cells.len());
+        let mut panicked = false;
         for h in handles {
             match h.join() {
                 Ok(local) => all.extend(local),
-                Err(_) => anyhow::bail!("sweep worker panicked"),
+                Err(_) => panicked = true,
             }
         }
+        stop.store(true, Ordering::Relaxed);
+        if let Some(r) = reporter {
+            let _ = r.join();
+        }
+        anyhow::ensure!(!panicked, "sweep worker panicked");
         Ok(all)
     });
     let mut merged = merged?;
-    merged.sort_by_key(|&(i, _)| i);
+    merged.sort_by_key(|&(i, _, _)| i);
 
+    let mut traces = Vec::with_capacity(cells.len());
     let outcomes: Vec<CellOutcome> = cells
         .into_iter()
         .zip(merged)
-        .map(|(spec, (i, metrics))| {
+        .map(|(spec, (i, metrics, trace))| {
             debug_assert_eq!(spec.index, i);
+            traces.push(trace);
             CellOutcome { spec, metrics }
         })
         .collect();
     Ok(SweepRun {
         cells: outcomes,
+        traces,
         threads: workers,
         host_s: t0.elapsed().as_secs_f64(),
     })
@@ -274,6 +376,60 @@ mod tests {
         assert_eq!(one.cells.len(), grid.cell_count());
         // Workers are capped by the cell count.
         assert!(many.threads <= grid.cell_count());
+    }
+
+    #[test]
+    fn tracing_does_not_change_metrics() {
+        let grid = tiny_grid();
+        let cal = Calibration::paper();
+        let cell = &grid.cells().unwrap()[0];
+        let plain = run_cell(cell, &grid, &cal);
+        let opts = SweepOptions {
+            trace: true,
+            sample_interval_s: Some(5.0),
+            ..SweepOptions::default()
+        };
+        let (traced, text) = run_cell_traced(cell, &grid, &cal, &opts);
+        assert_eq!(plain, traced);
+        assert!(text.is_some());
+    }
+
+    #[test]
+    fn sample_interval_without_trace_is_rejected() {
+        let grid = tiny_grid();
+        let opts = SweepOptions {
+            sample_interval_s: Some(5.0),
+            ..SweepOptions::default()
+        };
+        let err = run_sweep_opts(&grid, &Calibration::paper(), 1, &opts)
+            .err()
+            .expect("sampling without tracing must be rejected");
+        assert!(err.to_string().contains("requires trace"), "{err}");
+
+        let bad = SweepOptions {
+            trace: true,
+            sample_interval_s: Some(0.0),
+            ..SweepOptions::default()
+        };
+        assert!(run_sweep_opts(&grid, &Calibration::paper(), 1, &bad).is_err());
+    }
+
+    #[test]
+    fn traces_align_with_cells_and_ignore_thread_count() {
+        let grid = tiny_grid();
+        let cal = Calibration::paper();
+        let opts = SweepOptions {
+            trace: true,
+            ..SweepOptions::default()
+        };
+        let one = run_sweep_opts(&grid, &cal, 1, &opts).unwrap();
+        let many = run_sweep_opts(&grid, &cal, 4, &opts).unwrap();
+        assert_eq!(one.traces.len(), one.cells.len());
+        assert!(one.traces.iter().all(|t| t.is_some()));
+        assert_eq!(one.traces, many.traces);
+        // Default options capture nothing.
+        let plain = run_sweep(&grid, &cal, 1).unwrap();
+        assert!(plain.traces.iter().all(|t| t.is_none()));
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! activity accounts, [`smi`] reports allocated GPU memory, [`host`]
 //! reports CPU% and RES, [`recorder`] emulates the periodic sampler
 //! (including the end-of-run zero-sample quirk that made the paper use
-//! medians — §5.3), and [`stats`] provides the median machinery.
+//! medians — §5.3), [`stats`] provides the median machinery, and
+//! [`timeline`] carries the fleet simulator's structured event trace
+//! and sampled per-GPU timelines (the same §5.3 median discipline,
+//! applied at cluster scale).
 
 pub mod dcgm;
 pub mod host;
@@ -15,6 +18,8 @@ pub mod recorder;
 pub mod replication;
 pub mod smi;
 pub mod stats;
+pub mod timeline;
 
 pub use dcgm::{DcgmReport, DeviceLevel, InstanceLevel};
 pub use recorder::SampleSeries;
+pub use timeline::{FleetTimeline, TimelineSummary, TraceLog};

@@ -15,11 +15,31 @@ pub struct SampleSeries {
 }
 
 impl SampleSeries {
+    /// Ceiling on samples per series: a defense against degenerate
+    /// `run_s / interval_s` ratios (a sub-second interval over a
+    /// multi-day run is ~2^20 samples; anything beyond that is a
+    /// caller bug, not a workload).
+    pub const MAX_SAMPLES: usize = 1 << 20;
+
     /// Sample a steady-state metric `value` over `run_s` seconds at
     /// `interval_s`, with small jitter and the end-of-run zero quirk.
+    ///
+    /// Degenerate inputs are clamped instead of trusted: a
+    /// non-positive or non-finite `interval_s` falls back to 1 s (the
+    /// DCGM default), a non-finite `run_s` to one interval, and the
+    /// sample count to [`SampleSeries::MAX_SAMPLES`] — the unclamped
+    /// `(run_s / interval_s) as usize` conversion used to yield a
+    /// huge allocation (or, for NaN, zero samples ahead of the
+    /// `.max(1)` floor masking it) instead of a usable series.
     pub fn sample_steady(value: f64, run_s: f64, interval_s: f64, seed: u64) -> SampleSeries {
         let mut rng = Rng::new(seed);
-        let n = ((run_s / interval_s) as usize).max(1);
+        let interval_s = if interval_s.is_finite() && interval_s > 0.0 {
+            interval_s
+        } else {
+            1.0
+        };
+        let run_s = if run_s.is_finite() { run_s } else { interval_s };
+        let n = ((run_s / interval_s) as usize).clamp(1, Self::MAX_SAMPLES);
         let mut samples = Vec::with_capacity(n + 2);
         for _ in 0..n {
             // ±1.5% sampling jitter around steady state.
@@ -79,5 +99,31 @@ mod tests {
     fn values_clamped_to_unit() {
         let s = SampleSeries::sample_steady(0.999, 100.0, 1.0, 5);
         assert!(s.samples.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn degenerate_intervals_fall_back_instead_of_exploding() {
+        // Zero, negative, NaN and infinite intervals all fall back to
+        // the 1 s default: 10 s of run -> 10 jittered samples + 2 zeros.
+        for bad in [0.0, -3.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let s = SampleSeries::sample_steady(0.5, 10.0, bad, 2);
+            assert_eq!(s.len(), 12, "interval {bad}");
+        }
+    }
+
+    #[test]
+    fn non_finite_run_falls_back_to_one_interval() {
+        for bad in [f64::NAN, f64::INFINITY] {
+            let s = SampleSeries::sample_steady(0.5, bad, 1.0, 2);
+            assert_eq!(s.len(), 3, "run {bad}");
+        }
+    }
+
+    #[test]
+    fn sample_count_is_capped() {
+        // A sub-millisecond interval over a year of run time must not
+        // attempt a multi-billion-element allocation.
+        let s = SampleSeries::sample_steady(0.5, 3.15e7, 1e-4, 2);
+        assert_eq!(s.len(), SampleSeries::MAX_SAMPLES + 2);
     }
 }

@@ -1,0 +1,372 @@
+//! Time-resolved fleet observability: the structured scheduler event
+//! trace and the sampled DCGM-style timelines behind `--trace-out` /
+//! `--sample-interval`.
+//!
+//! Two complementary views, both deterministic and both strictly
+//! opt-in (a fleet run with neither configured schedules no `Sample`
+//! events and emits nothing — bit-identical to a pre-observability
+//! run):
+//!
+//! * **Event trace** ([`TraceLog`]) — every scheduler transition
+//!   (arrival, admission decision, placement, backfill, probe
+//!   start/commit, repartition begin/end, migration, OOM kill, finish)
+//!   as a typed [`TraceRecord`] with sim-timestamp, job id and
+//!   GPU/slot, plus a [`CounterSample`] of queue depth, running jobs
+//!   and per-GPU free memory at each transition. Exported as Chrome
+//!   trace-event JSON and flat CSV by [`crate::report::trace`].
+//! * **Sampled timelines** ([`FleetTimeline`]) — per-GPU
+//!   GRACT/SMACT/DRAMA, memory used and resident counts plus
+//!   fleet-wide queue depth and running-job series, read on a fixed
+//!   interval by the fleet's `Sample` timer event, reproducing the
+//!   paper's DCGM sampling discipline. [`FleetTimeline::summary`]
+//!   reduces the series with **medians** (per §5.3: trailing zero
+//!   samples and tool drops make means lie low, so the paper reports
+//!   medians) into the [`TimelineSummary`] that rides on
+//!   `FleetMetrics`.
+
+use super::stats;
+use crate::util::json::Json;
+
+/// Validate a sampling interval: finite and strictly positive.
+/// Everything downstream divides by it or schedules events at its
+/// multiples, so a zero/negative/NaN interval must be refused at the
+/// surface instead of exploding in the event loop.
+pub fn validate_interval(interval_s: f64) -> anyhow::Result<f64> {
+    anyhow::ensure!(
+        interval_s.is_finite() && interval_s > 0.0,
+        "sample interval must be finite and > 0, got {interval_s}"
+    );
+    Ok(interval_s)
+}
+
+/// `p`-th percentile (0-100), nearest-rank on the sorted sample;
+/// 0 for an empty sample. (Local twin of `cluster::metrics::percentile`
+/// — telemetry must not depend on the cluster layer.)
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Scheduler transition kinds the fleet emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// A job entered the admission queue.
+    Arrival,
+    /// The admission decision was "nothing fits": the job stays queued.
+    Wait,
+    /// Admission control refused the job permanently.
+    Reject,
+    /// An oversubscribed placement crashed at startup (§4 OOM).
+    OomKill,
+    /// A job was placed in arrival order.
+    Place,
+    /// A job was placed past a blocked head (backfill/SJF jump).
+    Backfill,
+    /// A MISO job moved from the probe region into its MIG slice.
+    Migrate,
+    /// A probe window opened on a shared probe region.
+    ProbeStart,
+    /// The planner committed a probe region to a MIG partition.
+    ProbeCommit,
+    /// A GPU started draining/reconfiguring to a new partition.
+    RepartitionBegin,
+    /// A GPU finished reconfiguring and is serving again.
+    RepartitionEnd,
+    /// A job completed its final step.
+    Finish,
+}
+
+impl TraceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Arrival => "arrival",
+            TraceKind::Wait => "wait",
+            TraceKind::Reject => "reject",
+            TraceKind::OomKill => "oom-kill",
+            TraceKind::Place => "place",
+            TraceKind::Backfill => "backfill",
+            TraceKind::Migrate => "migrate",
+            TraceKind::ProbeStart => "probe-start",
+            TraceKind::ProbeCommit => "probe-commit",
+            TraceKind::RepartitionBegin => "repartition-begin",
+            TraceKind::RepartitionEnd => "repartition-end",
+            TraceKind::Finish => "finish",
+        }
+    }
+}
+
+/// One scheduler transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRecord {
+    /// Simulated timestamp of the transition.
+    pub t_s: f64,
+    pub kind: TraceKind,
+    pub job: Option<usize>,
+    pub gpu: Option<usize>,
+    pub slot: Option<usize>,
+    /// Free-form context (rejection reason, committed shapes, ...).
+    pub detail: String,
+}
+
+/// Fleet-state counters captured alongside each transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CounterSample {
+    pub t_s: f64,
+    /// Admission-queue depth after the transition.
+    pub queue_depth: usize,
+    /// Jobs running fleet-wide after the transition.
+    pub running: usize,
+    /// Per-GPU free framebuffer (usable minus resident memory floors).
+    pub free_bytes: Vec<u64>,
+}
+
+/// The structured event trace of one fleet run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceLog {
+    /// Device kind name per GPU index ("A100" / "A30").
+    pub gpu_kinds: Vec<&'static str>,
+    pub records: Vec<TraceRecord>,
+    pub counters: Vec<CounterSample>,
+    /// Sampled timelines, when `--sample-interval` was also on.
+    pub timeline: Option<FleetTimeline>,
+}
+
+impl TraceLog {
+    pub fn new(gpu_kinds: Vec<&'static str>) -> TraceLog {
+        TraceLog {
+            gpu_kinds,
+            ..TraceLog::default()
+        }
+    }
+}
+
+/// Sampled series of one GPU.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GpuSeries {
+    /// GRACT over each sampling window (not cumulative).
+    pub gract: Vec<f64>,
+    pub smact: Vec<f64>,
+    pub drama: Vec<f64>,
+    /// Resident memory floors at the sample instant.
+    pub mem_used_bytes: Vec<u64>,
+    /// Jobs resident (slot occupants + shared co-runners).
+    pub residents: Vec<u32>,
+}
+
+/// Sampled timelines of one fleet run: fleet-wide series plus one
+/// [`GpuSeries`] per GPU, all aligned on `times_s`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetTimeline {
+    pub interval_s: f64,
+    pub times_s: Vec<f64>,
+    pub queue_depth: Vec<u32>,
+    pub running: Vec<u32>,
+    pub per_gpu: Vec<GpuSeries>,
+}
+
+impl FleetTimeline {
+    pub fn new(interval_s: f64, n_gpus: usize) -> anyhow::Result<FleetTimeline> {
+        Ok(FleetTimeline {
+            interval_s: validate_interval(interval_s)?,
+            times_s: Vec::new(),
+            queue_depth: Vec::new(),
+            running: Vec::new(),
+            per_gpu: vec![GpuSeries::default(); n_gpus],
+        })
+    }
+
+    /// Append one GPU's window sample (call once per GPU per tick,
+    /// then seal the tick with [`FleetTimeline::push_fleet`]).
+    pub fn push_gpu(
+        &mut self,
+        gpu: usize,
+        gract: f64,
+        smact: f64,
+        drama: f64,
+        mem_used_bytes: u64,
+        residents: u32,
+    ) {
+        let s = &mut self.per_gpu[gpu];
+        s.gract.push(gract);
+        s.smact.push(smact);
+        s.drama.push(drama);
+        s.mem_used_bytes.push(mem_used_bytes);
+        s.residents.push(residents);
+    }
+
+    /// Append the fleet-wide sample, completing one tick.
+    pub fn push_fleet(&mut self, t_s: f64, queue_depth: u32, running: u32) {
+        self.times_s.push(t_s);
+        self.queue_depth.push(queue_depth);
+        self.running.push(running);
+    }
+
+    /// Ticks recorded.
+    pub fn len(&self) -> usize {
+        self.times_s.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times_s.is_empty()
+    }
+
+    /// Reduce the series into the summary that rides on
+    /// `FleetMetrics`: nearest-rank percentiles for the queue series
+    /// and **medians** for the per-GPU utilization series — the
+    /// paper's §5.3 discipline (means are dragged down by trailing
+    /// zero samples; medians survive them).
+    pub fn summary(&self) -> TimelineSummary {
+        let depths: Vec<f64> = self.queue_depth.iter().map(|&d| d as f64).collect();
+        let running: Vec<f64> = self.running.iter().map(|&r| r as f64).collect();
+        let per_gpu = self
+            .per_gpu
+            .iter()
+            .map(|s| {
+                let mem: Vec<f64> = s.mem_used_bytes.iter().map(|&b| b as f64).collect();
+                GpuUtilSummary {
+                    median_gract: stats::median(&s.gract),
+                    mean_gract: stats::mean(&s.gract),
+                    median_smact: stats::median(&s.smact),
+                    median_drama: stats::median(&s.drama),
+                    median_mem_used_bytes: stats::median(&mem),
+                }
+            })
+            .collect();
+        TimelineSummary {
+            samples: self.len(),
+            interval_s: self.interval_s,
+            p50_queue_depth: percentile(&depths, 50.0),
+            p95_queue_depth: percentile(&depths, 95.0),
+            p50_running: percentile(&running, 50.0),
+            per_gpu,
+        }
+    }
+}
+
+/// Per-GPU utilization summary: medians per §5.3, plus the mean GRACT
+/// so the median-vs-mean gap (the zero-tail signature) is visible.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuUtilSummary {
+    pub median_gract: f64,
+    pub mean_gract: f64,
+    pub median_smact: f64,
+    pub median_drama: f64,
+    pub median_mem_used_bytes: f64,
+}
+
+/// Percentile summary of one run's sampled timelines — the field
+/// `FleetMetrics::timeline` carries when sampling was on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimelineSummary {
+    /// Sampling ticks the run recorded.
+    pub samples: usize,
+    pub interval_s: f64,
+    pub p50_queue_depth: f64,
+    pub p95_queue_depth: f64,
+    pub p50_running: f64,
+    pub per_gpu: Vec<GpuUtilSummary>,
+}
+
+impl TimelineSummary {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("samples", Json::from_u64(self.samples as u64))
+            .set("interval_s", Json::from_f64(self.interval_s))
+            .set("p50_queue_depth", Json::from_f64(self.p50_queue_depth))
+            .set("p95_queue_depth", Json::from_f64(self.p95_queue_depth))
+            .set("p50_running", Json::from_f64(self.p50_running));
+        let gpus: Vec<Json> = self
+            .per_gpu
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| {
+                let mut o = Json::obj();
+                o.set("gpu", Json::from_u64(gi as u64))
+                    .set("median_gract", Json::from_f64(g.median_gract))
+                    .set("mean_gract", Json::from_f64(g.mean_gract))
+                    .set("median_smact", Json::from_f64(g.median_smact))
+                    .set("median_drama", Json::from_f64(g.median_drama))
+                    .set(
+                        "median_mem_used_bytes",
+                        Json::from_f64(g.median_mem_used_bytes),
+                    );
+                o
+            })
+            .collect();
+        j.set("per_gpu", Json::Arr(gpus));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_validation_refuses_degenerate_values() {
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert!(validate_interval(bad).is_err(), "{bad} must be refused");
+            assert!(FleetTimeline::new(bad, 1).is_err(), "{bad} must be refused");
+        }
+        assert_eq!(validate_interval(60.0).unwrap(), 60.0);
+    }
+
+    #[test]
+    fn series_align_and_summarize() {
+        let mut t = FleetTimeline::new(10.0, 2).unwrap();
+        for (i, g) in [(1u32, 0.8f64), (3, 0.6), (2, 0.4)].iter().enumerate() {
+            t.push_gpu(0, g.1, g.1, g.1 / 2.0, 1 << 30, g.0);
+            t.push_gpu(1, 0.0, 0.0, 0.0, 0, 0);
+            t.push_fleet((i as f64 + 1.0) * 10.0, g.0, g.0);
+        }
+        assert_eq!(t.len(), 3);
+        let s = t.summary();
+        assert_eq!(s.samples, 3);
+        assert_eq!(s.p50_queue_depth, 2.0);
+        assert_eq!(s.p95_queue_depth, 3.0);
+        assert_eq!(s.per_gpu.len(), 2);
+        assert!((s.per_gpu[0].median_gract - 0.6).abs() < 1e-12);
+        assert!((s.per_gpu[0].mean_gract - 0.6).abs() < 1e-12);
+        assert_eq!(s.per_gpu[1].median_gract, 0.0);
+    }
+
+    #[test]
+    fn median_survives_the_zero_tail_where_mean_does_not() {
+        // §5.3: a steady 0.9 GRACT with two trailing zero samples —
+        // the median holds, the mean lies low.
+        let mut t = FleetTimeline::new(1.0, 1).unwrap();
+        for i in 0..10 {
+            let v = if i < 8 { 0.9 } else { 0.0 };
+            t.push_gpu(0, v, v, v, 0, 1);
+            t.push_fleet(i as f64 + 1.0, 0, 1);
+        }
+        let s = t.summary();
+        assert!((s.per_gpu[0].median_gract - 0.9).abs() < 1e-12);
+        assert!(s.per_gpu[0].mean_gract < s.per_gpu[0].median_gract);
+    }
+
+    #[test]
+    fn summary_json_round_trips() {
+        let mut t = FleetTimeline::new(5.0, 1).unwrap();
+        t.push_gpu(0, 0.5, 0.4, 0.3, 2 << 30, 2);
+        t.push_fleet(5.0, 4, 2);
+        let j = t.summary().to_json();
+        let back = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(back.get("samples").unwrap().as_u64(), Some(1));
+        assert_eq!(back.get("interval_s").unwrap().as_f64(), Some(5.0));
+        assert_eq!(back.at(&["per_gpu"]).unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn percentile_matches_nearest_rank() {
+        let v: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Observability contract tests.
+//!
+//! The tentpole guarantee: tracing and sampling are *observers*. With
+//! no sink configured a run is bit-identical to a pre-observability
+//! run; with sinks configured the simulated outcomes are still bit-
+//! identical — only the extra artifacts appear, and those artifacts
+//! are themselves deterministic (same seed -> same bytes, any thread
+//! count).
+
+use migsim::cluster::fleet::{FleetConfig, FleetSim};
+use migsim::cluster::policy::PolicyKind;
+use migsim::cluster::queue::QueueDiscipline;
+use migsim::cluster::trace::{poisson_trace, TraceConfig};
+use migsim::report::sweep::summary_json_text;
+use migsim::report::trace::{trace_csv_text, trace_json_text, validate_trace};
+use migsim::simgpu::calibration::Calibration;
+use migsim::simgpu::interference::InterferenceModel;
+use migsim::sweep::engine::{run_sweep, run_sweep_opts, SweepOptions};
+use migsim::sweep::grid::{GridSpec, MixSpec};
+use migsim::util::json::Json;
+
+fn cal() -> Calibration {
+    Calibration::paper()
+}
+
+fn trace(jobs: u32) -> Vec<migsim::cluster::trace::JobSpec> {
+    poisson_trace(&TraceConfig {
+        jobs,
+        mean_interarrival_s: 0.5,
+        mix: [0.5, 0.3, 0.2],
+        epochs: Some(1),
+        seed: 7,
+    })
+}
+
+fn config(queue: QueueDiscipline) -> FleetConfig {
+    FleetConfig {
+        a100s: 2,
+        a30s: 0,
+        seed: 7,
+        interference: InterferenceModel::Roofline,
+        queue,
+        ..FleetConfig::default()
+    }
+}
+
+fn sim(kind: PolicyKind, queue: QueueDiscipline) -> FleetSim {
+    FleetSim::new(config(queue), kind.build(&cal(), 7, None), cal(), &trace(24))
+}
+
+/// Every policy x a queue discipline that exercises backfill: metrics
+/// with observability fully on equal the untraced metrics bit for bit
+/// (modulo the `timeline` summary, which only a sampled run carries).
+#[test]
+fn tracing_and_sampling_leave_metrics_bit_identical() {
+    for kind in PolicyKind::ALL {
+        for queue in [QueueDiscipline::Fifo, QueueDiscipline::BackfillEasy] {
+            let plain = sim(kind, queue).run();
+
+            let mut traced = sim(kind, queue);
+            traced.enable_tracing();
+            traced.enable_sampling(5.0).unwrap();
+            let (mut observed, log) = traced.run_traced();
+            let log = log.expect("tracing was enabled");
+
+            assert!(observed.timeline.is_some(), "{kind}: sampled run must summarize");
+            observed.timeline = None;
+            assert_eq!(
+                plain.to_json().to_string_pretty(),
+                observed.to_json().to_string_pretty(),
+                "{kind}/{}: observability changed the simulation",
+                queue.name()
+            );
+            // The observer saw the run: arrivals at minimum.
+            assert!(!log.records.is_empty(), "{kind}: empty trace");
+            assert_eq!(log.records.len(), log.counters.len());
+        }
+    }
+}
+
+/// An unsampled run must not carry a timeline summary — its summary
+/// JSON keeps the exact pre-observability bytes.
+#[test]
+fn untraced_runs_carry_no_timeline() {
+    let m = sim(PolicyKind::Mps, QueueDiscipline::Fifo).run();
+    assert!(m.timeline.is_none());
+    assert!(Json::parse(&m.to_json().to_string_pretty())
+        .unwrap()
+        .get("timeline")
+        .is_none());
+}
+
+/// Sampling pops last at its instant and never advances the clock, so
+/// the makespan cannot stretch to the next sample tick.
+#[test]
+fn sampling_does_not_stretch_the_makespan() {
+    let plain = sim(PolicyKind::MigStatic, QueueDiscipline::Fifo).run();
+    let mut sampled = sim(PolicyKind::MigStatic, QueueDiscipline::Fifo);
+    // An interval far longer than the run: at most one tick fires.
+    sampled.enable_sampling(1e6).unwrap();
+    let (m, _) = sampled.run_traced();
+    assert_eq!(plain.makespan_s.to_bits(), m.makespan_s.to_bits());
+}
+
+/// The exported trace passes the shipped validator, carries the run's
+/// identity in `otherData`, and is byte-deterministic for a fixed seed.
+#[test]
+fn exported_trace_validates_and_is_deterministic() {
+    let run_once = || {
+        let mut s = sim(PolicyKind::MigMiso, QueueDiscipline::BackfillEasy);
+        s.enable_tracing();
+        s.enable_sampling(10.0).unwrap();
+        let (m, log) = s.run_traced();
+        let log = log.unwrap();
+        (trace_json_text(&log, &m), trace_csv_text(&log), log.records.len())
+    };
+    let (json_a, csv_a, records) = run_once();
+    let (json_b, csv_b, _) = run_once();
+    assert_eq!(json_a, json_b, "trace JSON not byte-deterministic");
+    assert_eq!(csv_a, csv_b, "trace CSV not byte-deterministic");
+    assert_eq!(csv_a.lines().count(), records + 1, "one CSV row per record");
+
+    let parsed = Json::parse(&json_a).unwrap();
+    let events = validate_trace(&parsed).expect("generated trace must validate");
+    assert!(events > 0);
+    assert_eq!(
+        parsed.at(&["otherData", "policy"]).unwrap().as_str(),
+        Some("mig-miso")
+    );
+    assert_eq!(parsed.at(&["otherData", "seed"]).unwrap().as_u64(), Some(7));
+    assert_eq!(
+        parsed.at(&["otherData", "sample_interval_s"]).unwrap().as_f64(),
+        Some(10.0)
+    );
+    // The mig-miso run on a saturating stream exercises the hybrid
+    // transitions: probe windows open and the trace shows them.
+    assert!(json_a.contains("probe-start"));
+}
+
+/// The sampled timeline reproduces the §5.3 discipline: per-window
+/// utilization stays in the unit range and the series align per tick.
+#[test]
+fn sampled_timelines_are_well_formed() {
+    let mut s = sim(PolicyKind::Mps, QueueDiscipline::Fifo);
+    s.enable_tracing();
+    s.enable_sampling(2.0).unwrap();
+    let (m, log) = s.run_traced();
+    let tl = log.unwrap().timeline.expect("sampling was on");
+    assert!(tl.len() > 1, "saturated run must tick more than once");
+    assert_eq!(tl.queue_depth.len(), tl.len());
+    assert_eq!(tl.running.len(), tl.len());
+    for (gi, g) in tl.per_gpu.iter().enumerate() {
+        assert_eq!(g.gract.len(), tl.len(), "gpu {gi} series misaligned");
+        for &v in g.gract.iter().chain(&g.smact).chain(&g.drama) {
+            assert!((0.0..=1.0).contains(&v), "gpu {gi}: {v} out of unit range");
+        }
+    }
+    // Ticks land on the interval grid, strictly inside the run.
+    for (i, &t) in tl.times_s.iter().enumerate() {
+        assert!((t / 2.0 - (i as f64 + 1.0)).abs() < 1e-9, "tick {i} at {t}");
+        assert!(t <= m.makespan_s + 2.0);
+    }
+    // The summary the metrics carry matches the series it came from.
+    let summary = m.timeline.unwrap();
+    assert_eq!(summary.samples, tl.len());
+    assert_eq!(summary.per_gpu.len(), tl.per_gpu.len());
+}
+
+/// Sweep-side: capturing traces (and sampling inside the cells) must
+/// not change one byte of the summary artifact.
+#[test]
+fn sweep_summary_bytes_ignore_observability() {
+    let grid = GridSpec {
+        policies: vec![PolicyKind::Mps, PolicyKind::MigStatic],
+        mixes: vec![MixSpec::preset("smalls").unwrap()],
+        gpus: vec![1],
+        interarrivals_s: vec![0.5],
+        interference: vec![InterferenceModel::Off],
+        queues: vec![QueueDiscipline::Fifo, QueueDiscipline::BackfillEasy],
+        seeds: vec![11],
+        jobs_per_cell: 16,
+        epochs: Some(1),
+        cap: 7,
+        admission: migsim::cluster::policy::AdmissionMode::Strict,
+        probe_window_s: 15.0,
+    };
+    let cal = cal();
+    let plain = run_sweep(&grid, &cal, 1).unwrap();
+    let opts = SweepOptions {
+        trace: true,
+        sample_interval_s: Some(5.0),
+        ..SweepOptions::default()
+    };
+    let traced = run_sweep_opts(&grid, &cal, 2, &opts).unwrap();
+    assert_eq!(
+        summary_json_text(&grid, &plain, &cal),
+        summary_json_text(&grid, &traced, &cal),
+        "trace capture changed the sweep summary bytes"
+    );
+    // And every captured per-cell trace passes the validator.
+    assert_eq!(traced.traces.len(), traced.cells.len());
+    for (i, text) in traced.traces.iter().enumerate() {
+        let text = text.as_ref().expect("tracing was on");
+        let parsed = Json::parse(text).unwrap();
+        assert!(validate_trace(&parsed).is_ok(), "cell {i} trace invalid");
+    }
+}

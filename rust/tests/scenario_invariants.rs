@@ -22,7 +22,9 @@
 //! * a finish at the same timestamp as an arrival releases its memory
 //!   before the arrival's admission check runs;
 //! * a fixed seed reproduces every scenario bit-for-bit, and the MISO
-//!   probe/migration knobs are inert for every policy but `mig-miso`.
+//!   probe/migration knobs are inert for every policy but `mig-miso`;
+//! * the PR 6 observers (event trace + sampler) never perturb a
+//!   simulated outcome, for any policy.
 
 use migsim::cluster::fleet::{FleetConfig, FleetSim};
 use migsim::cluster::metrics::FleetMetrics;
@@ -160,6 +162,44 @@ fn every_scenario_upholds_the_cross_cutting_invariants() {
             s.policy,
             s.queue,
             s.interference.name()
+        );
+    }
+}
+
+/// Observability is an observer: for every policy, running the same
+/// scenario with the event trace and the sampler enabled yields the
+/// same simulated outcomes bit for bit. This rides the harness rather
+/// than `rust/tests/observability.rs` so that any *future* policy
+/// inherits the guarantee by being a table row.
+#[test]
+fn tracing_is_invisible_to_every_policy() {
+    let trace = standard_trace();
+    let cal = Calibration::paper();
+    for policy in PolicyKind::ALL {
+        let s = Scenario {
+            policy,
+            queue: QueueDiscipline::BackfillEasy,
+            interference: InterferenceModel::Roofline,
+        };
+        let plain = run_scenario(s, &trace);
+        let config = FleetConfig {
+            a100s: 2,
+            a30s: 0,
+            queue: s.queue,
+            interference: s.interference,
+            admission: AdmissionMode::Strict,
+            ..FleetConfig::default()
+        };
+        let mut sim = FleetSim::new(config, policy.build(&cal, 7, None), cal, &trace);
+        sim.enable_tracing();
+        sim.enable_sampling(5.0).unwrap();
+        let (mut observed, log) = sim.run_traced();
+        assert!(log.is_some(), "{policy}: tracing was enabled");
+        observed.timeline = None;
+        assert_eq!(
+            plain.to_json().to_string_pretty(),
+            observed.to_json().to_string_pretty(),
+            "{policy}: observability perturbed the simulation"
         );
     }
 }
