@@ -2,22 +2,99 @@
 //! fleet must stay interactive — the event loop is O(events log events)
 //! with memoized rates, so host time is decoupled from simulated time.
 //!
+//! The churn-heavy section is the incremental engine's acceptance rig:
+//! 100k jobs over 1,000 GPUs under backfill + roofline contention, so
+//! every finish exercises the dirty-GPU queue pass, the reservation
+//! caches and the O(n) contention aggregates. `--xl` opts into the
+//! 10,000-GPU / 1M-job configuration (same shape, ~10x the events) for
+//! profiling sessions; it is off by default to keep `cargo bench` fast.
+//!
 //! With `--json` (i.e. `cargo bench --bench fleet_scale -- --json`,
 //! optional `--out <path>`) the run also emits `BENCH_fleet_scale.json`
-//! in the `util::bench::BenchReport` schema, so the 10k-job bench feeds
-//! the same perf trajectory the CI gate reads from `migsim bench`.
+//! in the `util::bench::BenchReport` schema, so the scaling benches
+//! feed the same perf trajectory the CI gate reads from `migsim bench`.
 
-use migsim::cluster::fleet::{FleetConfig, FleetSim};
+use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use migsim::cluster::policy::PolicyKind;
-use migsim::cluster::trace::{poisson_trace, TraceConfig};
+use migsim::cluster::queue::QueueDiscipline;
+use migsim::cluster::trace::{poisson_trace, JobSpec, TraceConfig};
 use migsim::simgpu::calibration::Calibration;
+use migsim::simgpu::interference::InterferenceModel;
 use migsim::util::bench::{bench, section, BenchReport};
 use migsim::util::fmt_duration;
+
+/// The churn trace: an all-small stream arriving at roughly half the
+/// fleet's service capacity. Every job is short, so the run is finish
+/// churn back to back — each finish re-runs the queue pass, updates
+/// contention on its GPU and re-places from the queue — while the
+/// queue itself stays shallow (a diverging queue would measure scan
+/// depth, not per-event engine cost).
+fn churn_trace(jobs: u32, mean_interarrival_s: f64) -> Vec<JobSpec> {
+    poisson_trace(&TraceConfig {
+        jobs,
+        mean_interarrival_s,
+        mix: [1.0, 0.0, 0.0],
+        epochs: Some(1),
+        seed: migsim::util::rng::resolve_seed(None).expect("valid MIGSIM_SEED"),
+    })
+}
+
+fn churn_config(gpus: u32) -> FleetConfig {
+    FleetConfig {
+        a100s: gpus,
+        a30s: 0,
+        queue: QueueDiscipline::BackfillEasy,
+        interference: InterferenceModel::Roofline,
+        ..FleetConfig::default()
+    }
+}
+
+/// One churn cell: run, assert conservation, report host-side rates
+/// (jobs/s and events/s) plus the reservation-cache hit rate.
+fn churn_cell(report: &mut BenchReport, tag: &str, kind: PolicyKind, gpus: u32, jobs: u32) {
+    let cal = Calibration::paper();
+    // Arrival rate tracks fleet size: 0.025 job/s/GPU against the
+    // weakest policy's ~0.05 job/s/GPU of all-small capacity.
+    let trace = churn_trace(jobs, 40.0 / gpus as f64);
+    let r = bench(&format!("{tag} / {}", kind.name()), 1, 3, || {
+        let sim = FleetSim::new(churn_config(gpus), kind.build(&cal, 7, None), cal, &trace);
+        let out = sim.run_with(&RunOptions::default()).expect("valid options");
+        let m = &out.metrics;
+        assert_eq!(
+            m.finished() + m.rejected() + m.oom_killed() + m.unserved(),
+            jobs as usize
+        );
+        out
+    });
+    println!("{r}");
+    let out = {
+        let sim = FleetSim::new(churn_config(gpus), kind.build(&cal, 7, None), cal, &trace);
+        sim.run_with(&RunOptions::default()).expect("valid options")
+    };
+    let jobs_per_s = jobs as f64 / r.median_s;
+    let events_per_s = out.stats.events as f64 / r.median_s;
+    let lookups = out.stats.reservation_refreshes + out.stats.reservation_cache_hits;
+    let hit_rate = if lookups == 0 {
+        0.0
+    } else {
+        out.stats.reservation_cache_hits as f64 / lookups as f64
+    };
+    println!(
+        "  host jobs/s {jobs_per_s:.0} | events/s {events_per_s:.0} | \
+         reservations {} | cache hit rate {:.2}",
+        out.stats.reservations_computed, hit_rate
+    );
+    report.metric(&format!("jobs_per_s_{tag}_{}", kind.name()), jobs_per_s);
+    report.note(&format!("events_per_s_{tag}_{}", kind.name()), events_per_s);
+    report.note(&format!("wall_s_{tag}_{}", kind.name()), r.median_s);
+    report.note(&format!("cache_hit_rate_{tag}_{}", kind.name()), hit_rate);
+}
 
 fn main() {
     section("cluster fleet scaling");
     let args: Vec<String> = std::env::args().collect();
     let emit_json = args.iter().any(|a| a == "--json");
+    let xl = args.iter().any(|a| a == "--xl");
     let out_path = args
         .iter()
         .position(|a| a == "--out")
@@ -43,7 +120,10 @@ fn main() {
                 ..FleetConfig::default()
             };
             let sim = FleetSim::new(config, kind.build(&cal, 7, None), cal, &trace);
-            let m = sim.run();
+            let m = sim
+                .run_with(&RunOptions::default())
+                .expect("valid options")
+                .metrics;
             assert_eq!(m.finished() + m.rejected() + m.unserved(), 10_000);
             m.makespan_s
         });
@@ -54,13 +134,27 @@ fn main() {
         report.note(&format!("wall_s_{}", kind.name()), r.median_s);
     }
 
+    // The churn-heavy configuration: fleet-scale finish/backfill churn
+    // on both the shared and the sliced placement paths.
+    section("churn: 100k jobs / 1k GPUs / backfill-easy / roofline");
+    for kind in [PolicyKind::Mps, PolicyKind::MigStatic] {
+        churn_cell(&mut report, "churn_1k", kind, 1_000, 100_000);
+    }
+    if xl {
+        section("churn xl: 1M jobs / 10k GPUs (opt-in)");
+        churn_cell(&mut report, "churn_10k", PolicyKind::Mps, 10_000, 1_000_000);
+    }
+
     // One full report for the record.
     let config = FleetConfig {
         a100s: 16,
         a30s: 0,
         ..FleetConfig::default()
     };
-    let m = FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace).run();
+    let m = FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace)
+        .run_with(&RunOptions::default())
+        .expect("valid options")
+        .metrics;
     println!(
         "\nmps reference: {} finished | simulated makespan {} | {:.1} img/s",
         m.finished(),

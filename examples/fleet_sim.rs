@@ -9,7 +9,7 @@
 //! gap by re-partitioning drained GPUs for the waiting mix), default
 //! time-slicing trails everything including the exclusive baseline.
 
-use migsim::cluster::fleet::{FleetConfig, FleetSim};
+use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use migsim::cluster::policy::PolicyKind;
 use migsim::cluster::trace::{poisson_trace, TraceConfig};
 use migsim::simgpu::calibration::Calibration;
@@ -40,7 +40,10 @@ fn main() {
             ..FleetConfig::default()
         };
         let sim = FleetSim::new(config, kind.build(&cal, 7, None), cal, &trace);
-        let m = sim.run();
+        let m = sim
+            .run_with(&RunOptions::default())
+            .expect("valid options")
+            .metrics;
         println!(
             "{:<12} {:>9} {:>9} {:>10} {:>12} {:>12} {:>10.1} {:>8.2}",
             kind.name(),

@@ -16,7 +16,7 @@ use migsim::cluster::policy::AdmissionMode;
 use migsim::report::sweep::{interference_table, policy_means, ranking_table};
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::InterferenceModel;
-use migsim::sweep::engine::run_sweep;
+use migsim::sweep::engine::{run_sweep, SweepOptions};
 use migsim::sweep::grid::{GridSpec, MixSpec};
 
 fn main() {
@@ -38,7 +38,7 @@ fn main() {
         probe_window_s: 15.0,
     };
     let cal = Calibration::paper();
-    let run = run_sweep(&grid, &cal, 0).expect("valid grid");
+    let run = run_sweep(&grid, &cal, &SweepOptions::default()).expect("valid grid");
     print!("{}", ranking_table(&run));
     print!("{}", interference_table(&run));
     println!(

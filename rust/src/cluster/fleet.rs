@@ -37,6 +37,21 @@
 //! Determinism: all state lives in `Vec`s/`BTreeMap`s, event ties break
 //! by insertion order, and the only randomness is the seeded arrival
 //! trace — a fixed `--seed` reproduces a run bit-for-bit.
+//!
+//! Performance: the hot path is incremental. The simulator maintains a
+//! persistent policy [`FleetView`] and per-GPU reservation candidates,
+//! both invalidated by a per-GPU epoch bump ([`FleetSim::touch_gpu`])
+//! whenever that GPU's placement-visible state changes, so a finish on
+//! one GPU no longer pays to re-scan the untouched rest of the fleet.
+//! Contention re-evaluation folds one victim-independent
+//! [`crate::simgpu::interference::DemandAggregate`] per residency
+//! change instead of re-summing every co-runner set per victim, and
+//! the arrival stream lives in a sorted cursor array instead of the
+//! event heap. Every shortcut is behaviorally invisible: the math runs
+//! in the same order on the same values, so `FleetMetrics` and trace
+//! artifacts stay bit-identical to the from-scratch engine
+//! (`RunOptions::verify_incremental` cross-checks it after every
+//! event; `rust/tests/incremental_equivalence.rs` sweeps the grid).
 
 use super::event::{EventKind, JobId, Timeline};
 use super::metrics::{FleetMetrics, GpuRecord, JobOutcome, JobRecord};
@@ -211,6 +226,9 @@ struct GpuState {
     accum: StepStats,
     last_update: f64,
     jobs_served: u32,
+    /// Jobs currently running on the GPU (slot occupants + residents)
+    /// — the allocation-free `gpu_idle` check.
+    running: u32,
 }
 
 #[derive(Debug, Clone)]
@@ -241,11 +259,101 @@ struct JobState {
     gpu: Option<usize>,
     slot: Option<usize>,
     gen: u64,
+    /// Memoized SJF ordering estimate (`est_service_canonical`); NaN
+    /// until computed. Valid while the job is unstarted — its inputs
+    /// (initial remaining steps, canonical rate, epoch overhead) are
+    /// constants until placement.
+    est_canonical: f64,
     start_s: Option<f64>,
     finish_s: Option<f64>,
     rejected: Option<String>,
     /// Oversubscribed placement crashed the process at startup.
     oomed: Option<String>,
+}
+
+/// Options for [`FleetSim::run_with`], the single run entry point.
+/// The default runs plain: no trace, no sampling, no verification —
+/// bit-identical to the historical `run()`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunOptions {
+    /// Record the structured event trace (`RunOutput::trace`).
+    pub trace: bool,
+    /// Sample DCGM-style timelines on this interval (seconds).
+    pub sample_interval_s: Option<f64>,
+    /// Cross-check every incremental structure (persistent view,
+    /// running counters, reservation candidates) against a
+    /// from-scratch recomputation after each event. Slow; meant for
+    /// tests — the simulated outcome is identical either way.
+    pub verify_incremental: bool,
+}
+
+/// Everything one fleet run produces.
+pub struct RunOutput {
+    pub metrics: FleetMetrics,
+    /// `Some` iff [`RunOptions::trace`] was set.
+    pub trace: Option<TraceLog>,
+    /// Engine-internal counters; not part of the simulated outcome.
+    pub stats: EngineStats,
+}
+
+/// Engine-internal work counters. These describe how much the engine
+/// *computed*, never what it simulated — two runs with different
+/// counters still produce bit-identical [`FleetMetrics`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Events popped off the timeline (samples included).
+    pub events: u64,
+    /// [`Reservation`] computations (one blocked job's earliest-start
+    /// estimate each). The `place_backfill` solo-head short-circuit
+    /// and the per-GPU candidate cache exist to keep this small.
+    pub reservations_computed: u64,
+    /// Per-GPU reservation-candidate rebuilds — only GPUs whose state
+    /// changed since their last query pay one.
+    pub reservation_refreshes: u64,
+    /// Per-GPU reservation-candidate queries served from a clean cache.
+    pub reservation_cache_hits: u64,
+}
+
+/// Cached earliest-start candidates of one GPU for one workload size
+/// (MIG fleets). Valid while the owning GPU's epoch is unchanged; the
+/// free-slot start time is always "now", so only the slot index is
+/// stored.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+struct SlotCandidates {
+    /// Lowest-index free slot the workload fits.
+    free: Option<usize>,
+    /// Earliest-freeing occupied fitting slot: (occupant's expected
+    /// finish, slot index). Constant between events that touch the GPU
+    /// — a slot rate never changes once placed.
+    occ: Option<(f64, usize)>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct SlotCacheEntry {
+    /// GPU epoch the candidates were computed at; stale when it lags
+    /// the live epoch (refreshed lazily on the next query).
+    epoch: u64,
+    cand: SlotCandidates,
+}
+
+/// Cached reservation inputs of one shared-mode GPU: the residents'
+/// (expected finish, memory floor) pairs sorted by finish, plus the
+/// floor sum the backfill walk starts from. Workload-independent — the
+/// caller walks it with its own memory need.
+#[derive(Debug, Clone, Default)]
+struct ShareCacheEntry {
+    epoch: u64,
+    fins: Vec<(f64, u64)>,
+    floors: u64,
+}
+
+/// Dense index of a workload size into per-workload cache arrays.
+fn workload_index(w: WorkloadSize) -> usize {
+    match w {
+        WorkloadSize::Small => 0,
+        WorkloadSize::Medium => 1,
+        WorkloadSize::Large => 2,
+    }
 }
 
 /// The discrete-event fleet simulator.
@@ -287,6 +395,25 @@ pub struct FleetSim {
     /// Per-GPU projected activity account at the previous sample tick
     /// (the window delta's left edge).
     sample_prev: Vec<StepStats>,
+    /// Persistent policy view, kept current by [`FleetSim::touch_gpu`]
+    /// — placement decisions no longer rebuild it per offer.
+    view: FleetView,
+    /// Per-GPU change epoch: bumped whenever the GPU's placement-
+    /// visible state changes; reservation caches compare against it.
+    res_epoch: Vec<u64>,
+    /// Per-(GPU, workload) MIG reservation candidates.
+    slot_cache: Vec<[SlotCacheEntry; 3]>,
+    /// Per-GPU shared-mode reservation inputs.
+    share_cache: Vec<ShareCacheEntry>,
+    /// Engine work counters ([`RunOutput::stats`]).
+    stats: EngineStats,
+    /// Cross-check incremental state after every event (tests only).
+    verify: bool,
+    /// Reusable buffers for the per-event hot path (no per-event
+    /// allocations).
+    scratch_running: Vec<JobId>,
+    scratch_ids: Vec<JobId>,
+    scratch_profiles: Vec<DemandProfile>,
 }
 
 /// Outcome of offering one waiting job to the policy.
@@ -372,6 +499,7 @@ impl FleetSim {
                 accum: StepStats::default(),
                 last_update: 0.0,
                 jobs_served: 0,
+                running: 0,
             })
             .collect();
         let jobs: Vec<JobState> = trace
@@ -392,6 +520,7 @@ impl FleetSim {
                     gpu: None,
                     slot: None,
                     gen: 0,
+                    est_canonical: f64::NAN,
                     start_s: None,
                     finish_s: None,
                     rejected: None,
@@ -411,7 +540,7 @@ impl FleetSim {
         );
         let hybrid = policy.probe_cap().is_some();
         let n_gpus = gpus.len();
-        Ok(FleetSim {
+        let mut sim = FleetSim {
             config,
             cal,
             policy,
@@ -432,16 +561,37 @@ impl FleetSim {
             trace_log: None,
             sampler: None,
             sample_prev: vec![StepStats::default(); n_gpus],
-        })
+            view: FleetView::default(),
+            // Epoch 1 vs cache epoch 0: every entry starts stale.
+            res_epoch: vec![1; n_gpus],
+            slot_cache: vec![[SlotCacheEntry::default(); 3]; n_gpus],
+            share_cache: vec![ShareCacheEntry::default(); n_gpus],
+            stats: EngineStats::default(),
+            verify: false,
+            scratch_running: Vec::new(),
+            scratch_ids: Vec::new(),
+            scratch_profiles: Vec::new(),
+        };
+        sim.view = sim.fresh_view();
+        Ok(sim)
     }
 
-    /// Turn on the structured event trace: every scheduler transition
-    /// is recorded and [`FleetSim::run_traced`] returns the log. Off
-    /// by default; when off, the emission hook is a no-op and the run
-    /// is bit-identical to an untraced one.
-    pub fn enable_tracing(&mut self) {
+    fn setup_tracing(&mut self) {
         let kinds: Vec<&'static str> = self.gpus.iter().map(|g| g.kind.name()).collect();
         self.trace_log = Some(TraceLog::new(kinds));
+    }
+
+    fn setup_sampling(&mut self, interval_s: f64) -> anyhow::Result<()> {
+        self.sampler = Some(FleetTimeline::new(interval_s, self.gpus.len())?);
+        Ok(())
+    }
+
+    /// Turn on the structured event trace ahead of a wrapper run. Off
+    /// by default; when off, the emission hook is a no-op and the run
+    /// is bit-identical to an untraced one.
+    #[deprecated(note = "use `run_with(&RunOptions { trace: true, .. })` instead")]
+    pub fn enable_tracing(&mut self) {
+        self.setup_tracing();
     }
 
     /// Turn on sampled timelines at `interval_s`: a `Sample` timer
@@ -450,29 +600,57 @@ impl FleetSim {
     /// `FleetMetrics::timeline` carries the percentile summary.
     /// Sampling never perturbs the simulation — the handler neither
     /// advances the clock nor touches the accounts.
+    #[deprecated(note = "use `run_with` with `RunOptions::sample_interval_s` instead")]
     pub fn enable_sampling(&mut self, interval_s: f64) -> anyhow::Result<()> {
-        self.sampler = Some(FleetTimeline::new(interval_s, self.gpus.len())?);
-        Ok(())
+        self.setup_sampling(interval_s)
     }
 
     /// Run the whole trace to completion and aggregate fleet metrics.
+    #[deprecated(note = "use `run_with(&RunOptions::default())` instead")]
     pub fn run(self) -> FleetMetrics {
-        self.run_traced().0
+        self.run_with(&RunOptions::default())
+            .expect("default run options cannot fail")
+            .metrics
     }
 
-    /// [`FleetSim::run`], returning the structured event trace as well
-    /// (`None` unless [`FleetSim::enable_tracing`] was called). The
-    /// metrics are identical to an untraced run's bit for bit.
-    pub fn run_traced(mut self) -> (FleetMetrics, Option<TraceLog>) {
-        for job in &self.jobs {
-            self.timeline.push(job.spec.arrival_s, EventKind::Arrival(job.spec.id));
+    /// [`FleetSim::run`], returning the structured event trace as well.
+    #[deprecated(note = "use `run_with(&RunOptions { trace: true, .. })` instead")]
+    pub fn run_traced(self) -> (FleetMetrics, Option<TraceLog>) {
+        let out = self
+            .run_with(&RunOptions::default())
+            .expect("default run options cannot fail");
+        (out.metrics, out.trace)
+    }
+
+    /// Run the whole trace to completion under `opts` — the single run
+    /// entry point. The simulated outcome (`RunOutput::metrics`, and
+    /// the trace records when on) is bit-identical across every option
+    /// combination; options only add observers or cross-checks.
+    ///
+    /// Errors only on invalid options (a non-positive sample
+    /// interval); the defaults cannot fail.
+    pub fn run_with(mut self, opts: &RunOptions) -> anyhow::Result<RunOutput> {
+        if opts.trace && self.trace_log.is_none() {
+            self.setup_tracing();
         }
+        if let Some(interval_s) = opts.sample_interval_s {
+            if self.sampler.is_none() {
+                self.setup_sampling(interval_s)?;
+            }
+        }
+        self.verify = opts.verify_incremental;
+        // Trace ids are dense and ordered (validated in `try_new`), so
+        // job id == stream index: the whole arrival schedule goes into
+        // the timeline's sorted cursor in one shot.
+        let times: Vec<f64> = self.jobs.iter().map(|j| j.spec.arrival_s).collect();
+        self.timeline.schedule_arrivals(&times);
         if let Some(sampler) = &self.sampler {
             if !self.timeline.is_empty() {
                 self.timeline.push(sampler.interval_s, EventKind::Sample);
             }
         }
         while let Some(event) = self.timeline.pop() {
+            self.stats.events += 1;
             if event.kind == EventKind::Sample {
                 // Samples observe without participating: the clock is
                 // NOT advanced (a trailing sample must not stretch the
@@ -492,15 +670,23 @@ impl FleetSim {
                 EventKind::Probe { gpu } => self.handle_probe(gpu),
                 EventKind::Sample => unreachable!("handled above"),
             }
+            if self.verify {
+                self.verify_incremental_state();
+            }
         }
         let metrics = self.collect_metrics();
-        let mut log = self.trace_log.take();
-        if let Some(log) = log.as_mut() {
+        let stats = self.stats;
+        let mut trace = self.trace_log.take();
+        if let Some(log) = trace.as_mut() {
             // Ship the sampled series with the trace so the export can
             // render utilization counter tracks.
             log.timeline = self.sampler.take();
         }
-        (metrics, log)
+        Ok(RunOutput {
+            metrics,
+            trace,
+            stats,
+        })
     }
 
     // -- event handlers ------------------------------------------------
@@ -522,6 +708,7 @@ impl FleetSim {
             j.slot.take()
         };
         self.gpus[gi].jobs_served += 1;
+        self.gpus[gi].running -= 1;
         match slot {
             Some(si) => self.gpus[gi].partition[si].job = None,
             None => {
@@ -542,6 +729,7 @@ impl FleetSim {
                 }
             }
         }
+        self.touch_gpu(gi);
         self.emit(TraceKind::Finish, Some(id), Some(gi), slot, String::new());
         self.try_place();
     }
@@ -557,6 +745,7 @@ impl FleetSim {
             .map(|shape| Slot { shape, job: None })
             .collect();
         g.repartitioning = false;
+        self.touch_gpu(gi);
         // A MISO commit parked its probe residents here: land each in
         // its slice now that the partition exists. Largest floor first
         // onto the smallest fitting free slice — with the nested
@@ -657,6 +846,7 @@ impl FleetSim {
             self.emit(TraceKind::ProbeCommit, None, Some(gi), None, detail);
         }
         let movers: Vec<JobId> = std::mem::take(&mut self.gpus[gi].residents);
+        self.gpus[gi].running -= movers.len() as u32;
         for &id in &movers {
             let j = &mut self.jobs[id];
             j.gen += 1;
@@ -668,6 +858,7 @@ impl FleetSim {
         let g = &mut self.gpus[gi];
         g.repartitioning = true;
         g.pending_partition = shapes;
+        self.touch_gpu(gi);
         self.timeline
             .push(self.now + self.config.repartition_s, EventKind::Repartition { gpu: gi });
         self.emit(TraceKind::RepartitionBegin, None, Some(gi), None, String::new());
@@ -683,9 +874,10 @@ impl FleetSim {
     /// 7x 1g.5gb *before* the next placement locks its layout in.
     ///
     /// Runs on every arrival, finish and repartition event, so
-    /// backfill opportunities are re-scanned (and reservations
-    /// recomputed from scratch — never stale) whenever the fleet state
-    /// changes.
+    /// backfill opportunities are re-scanned whenever the fleet state
+    /// changes. Reservation candidates come from the per-GPU cache:
+    /// only GPUs touched since their last query recompute (the
+    /// epoch-checked cache can never serve stale state).
     fn try_place(&mut self) {
         self.maybe_repartition_idle_gpus();
         match self.queue.discipline() {
@@ -717,6 +909,7 @@ impl FleetSim {
             let g = &mut self.gpus[gi];
             g.repartitioning = true;
             g.pending_partition = Vec::new();
+            self.touch_gpu(gi);
             self.timeline
                 .push(self.now + self.config.repartition_s, EventKind::Repartition { gpu: gi });
             self.emit_detail(TraceKind::RepartitionBegin, None, Some(gi), None, "revert-to-probe");
@@ -796,7 +989,16 @@ impl FleetSim {
                 }
             }
             let Some(head) = self.queue.head() else { return };
-            // The head is blocked. Without a computable reservation
+            // The head is blocked. Alone in the queue, there is nothing
+            // to backfill behind it — skip the reservation computation
+            // entirely. (Regression: this used to compute the head's
+            // reservation on every finish even with an empty tail;
+            // `reservation_for` has no side effects beyond its cache,
+            // so skipping it is behaviorally invisible.)
+            if self.queue.len() == 1 {
+                return;
+            }
+            // Without a computable reservation
             // (e.g. MigDynamic waiting for a drain-and-repartition to
             // mint a fitting instance) no backfilling happens at all:
             // extra placements could postpone that drain indefinitely.
@@ -832,8 +1034,7 @@ impl FleetSim {
     /// placement, or rejected by admission control).
     fn attempt_place(&mut self, id: JobId) -> Attempt {
         let workload = self.jobs[id].spec.workload;
-        let view = self.view();
-        match self.policy.place(workload, &view) {
+        match self.policy.place(workload, &self.view) {
             Decision::Slot { gpu, slot } => {
                 assert!(
                     self.share_model.is_none() || self.hybrid,
@@ -842,7 +1043,13 @@ impl FleetSim {
                 self.queue.remove(id);
                 match self.oom_check_slot(id, gpu, slot) {
                     Some(reason) => {
-                        self.emit_detail(TraceKind::OomKill, Some(id), Some(gpu), Some(slot), &reason);
+                        self.emit_detail(
+                            TraceKind::OomKill,
+                            Some(id),
+                            Some(gpu),
+                            Some(slot),
+                            &reason,
+                        );
                         self.jobs[id].oomed = Some(reason);
                         Attempt::Terminal
                     }
@@ -899,8 +1106,7 @@ impl FleetSim {
         conservative: bool,
     ) -> BackfillOutcome {
         let workload = self.jobs[id].spec.workload;
-        let view = self.view();
-        match self.policy.place(workload, &view) {
+        match self.policy.place(workload, &self.view) {
             Decision::Wait => {
                 if !conservative {
                     return BackfillOutcome::Skipped;
@@ -982,13 +1188,25 @@ impl FleetSim {
                     self.queue.remove(id);
                     match self.oom_check_share(id, gpu) {
                         Some(reason) => {
-                            self.emit_detail(TraceKind::OomKill, Some(id), Some(gpu), None, &reason);
+                            self.emit_detail(
+                                TraceKind::OomKill,
+                                Some(id),
+                                Some(gpu),
+                                None,
+                                &reason,
+                            );
                             self.jobs[id].oomed = Some(reason);
                         }
                         None => {
                             self.place_share(id, gpu);
                             self.queue.note_backfill();
-                            self.emit(TraceKind::Backfill, Some(id), Some(gpu), None, String::new());
+                            self.emit(
+                                TraceKind::Backfill,
+                                Some(id),
+                                Some(gpu),
+                                None,
+                                String::new(),
+                            );
                         }
                     }
                     BackfillOutcome::Progress
@@ -1025,38 +1243,40 @@ impl FleetSim {
         if self.hybrid {
             return None;
         }
+        self.stats.reservations_computed += 1;
         let workload = self.jobs[id].spec.workload;
         let strict = self.config.admission == AdmissionMode::Strict;
         match self.share_model {
             None => {
-                // Earliest-freeing instance the job could take. Only
-                // fitting shapes count — unless the policy's
-                // oversubscribed fallback really would place this job
-                // into any free instance (MigStatic semantics;
-                // MigDynamic keeps servable jobs waiting for a drain,
-                // so their reservations must not claim slots they
-                // cannot use — that would defeat the no-backfill
-                // guard and starve the head).
-                let any_slot = !strict && {
-                    let view = self.view();
-                    self.policy.oversubscribed_fallback(workload, &view)
-                };
+                if !strict {
+                    // The oversubscribed fallback is a live policy
+                    // query, so which slots count can change without
+                    // any GPU being touched — not cacheable; fall back
+                    // to the from-scratch scan.
+                    return self.reservation_slot_scan(id);
+                }
+                // Fold the per-GPU cached candidates. Keys are unique
+                // ((gi, si) disambiguates equal times), so the strict-<
+                // minimum matches the from-scratch slot-order scan
+                // whatever order the candidates fold in.
+                let wi = workload_index(workload);
                 let mut best: Option<(f64, usize, usize)> = None;
-                for (gi, g) in self.gpus.iter().enumerate() {
-                    if g.repartitioning {
+                for gi in 0..self.gpus.len() {
+                    if self.gpus[gi].repartitioning {
                         continue;
                     }
-                    for (si, slot) in g.partition.iter().enumerate() {
-                        if !any_slot && !fits_instance(workload, slot.shape.memory_bytes) {
-                            continue;
+                    let cand = self.slot_candidates(gi, wi, workload);
+                    if let Some(si) = cand.free {
+                        // Free but unchosen (defensive): startable now.
+                        let key = (self.now, gi, si);
+                        if best.map(|b| key < b).unwrap_or(true) {
+                            best = Some(key);
                         }
-                        let t = match slot.job {
-                            // Free but unchosen (defensive): startable now.
-                            None => self.now,
-                            Some(occ) => self.jobs[occ].expected_finish_s,
-                        };
-                        if best.map(|b| (t, gi, si) < b).unwrap_or(true) {
-                            best = Some((t, gi, si));
+                    }
+                    if let Some((t, si)) = cand.occ {
+                        let key = (t, gi, si);
+                        if best.map(|b| key < b).unwrap_or(true) {
+                            best = Some(key);
                         }
                     }
                 }
@@ -1070,32 +1290,31 @@ impl FleetSim {
                 let need = self.jobs[id].floor_bytes;
                 let cap = self.policy.shared_cap().unwrap_or(1) as usize;
                 let mut best: Option<(f64, usize)> = None;
-                for (gi, g) in self.gpus.iter().enumerate() {
-                    if g.repartitioning {
+                for gi in 0..self.gpus.len() {
+                    if self.gpus[gi].repartitioning {
                         continue;
                     }
-                    let usable = usable_bytes(g.kind.spec().dram_capacity);
+                    let usable = usable_bytes(self.gpus[gi].kind.spec().dram_capacity);
                     if strict && need > usable {
                         continue; // can never fit this GPU
                     }
                     // Free residents in expected-finish order until the
                     // job clears both the co-runner cap and (under
                     // strict admission) the aggregate memory floors.
-                    let mut fins: Vec<(f64, u64)> = g
-                        .residents
-                        .iter()
-                        .map(|&r| (self.jobs[r].expected_finish_s, self.jobs[r].floor_bytes))
-                        .collect();
-                    fins.sort_by(|a, b| a.0.total_cmp(&b.0));
-                    let mut count = fins.len();
-                    let mut floors: u64 = fins.iter().map(|f| f.1).sum();
+                    // The sorted (finish, floor) list is cached per GPU
+                    // (workload-independent); only the walk below runs
+                    // per query.
+                    self.refresh_share_candidates(gi);
+                    let entry = &self.share_cache[gi];
+                    let mut count = entry.fins.len();
+                    let mut floors = entry.floors;
                     let mut start = self.now;
                     let fits = |count: usize, floors: u64| {
                         count < cap && (!strict || floors + need <= usable)
                     };
                     let mut found = fits(count, floors);
                     if !found {
-                        for (t, fb) in fins {
+                        for &(t, fb) in &entry.fins {
                             count -= 1;
                             floors -= fb;
                             start = t;
@@ -1116,6 +1335,112 @@ impl FleetSim {
                 })
             }
         }
+    }
+
+    /// From-scratch MIG reservation scan, kept for oversubscribed
+    /// admission (the policy's fallback is a live view query, so
+    /// per-GPU candidates cannot be cached) — and as the reference the
+    /// caching path must match bit for bit.
+    fn reservation_slot_scan(&mut self, id: JobId) -> Option<Reservation> {
+        let workload = self.jobs[id].spec.workload;
+        let strict = self.config.admission == AdmissionMode::Strict;
+        // Earliest-freeing instance the job could take. Only
+        // fitting shapes count — unless the policy's
+        // oversubscribed fallback really would place this job
+        // into any free instance (MigStatic semantics;
+        // MigDynamic keeps servable jobs waiting for a drain,
+        // so their reservations must not claim slots they
+        // cannot use — that would defeat the no-backfill
+        // guard and starve the head).
+        let any_slot = !strict && self.policy.oversubscribed_fallback(workload, &self.view);
+        let mut best: Option<(f64, usize, usize)> = None;
+        for (gi, g) in self.gpus.iter().enumerate() {
+            if g.repartitioning {
+                continue;
+            }
+            for (si, slot) in g.partition.iter().enumerate() {
+                if !any_slot && !fits_instance(workload, slot.shape.memory_bytes) {
+                    continue;
+                }
+                let t = match slot.job {
+                    // Free but unchosen (defensive): startable now.
+                    None => self.now,
+                    Some(occ) => self.jobs[occ].expected_finish_s,
+                };
+                if best.map(|b| (t, gi, si) < b).unwrap_or(true) {
+                    best = Some((t, gi, si));
+                }
+            }
+        }
+        best.map(|(start_s, gpu, slot)| Reservation {
+            start_s,
+            gpu,
+            slot: Some(slot),
+        })
+    }
+
+    /// GPU `gi`'s cached earliest-start candidates for `workload`,
+    /// recomputed only when the GPU was touched since the last query.
+    fn slot_candidates(&mut self, gi: usize, wi: usize, workload: WorkloadSize) -> SlotCandidates {
+        let epoch = self.res_epoch[gi];
+        if self.slot_cache[gi][wi].epoch == epoch {
+            self.stats.reservation_cache_hits += 1;
+            return self.slot_cache[gi][wi].cand;
+        }
+        self.stats.reservation_refreshes += 1;
+        let cand = self.compute_slot_candidates(gi, workload);
+        self.slot_cache[gi][wi] = SlotCacheEntry { epoch, cand };
+        cand
+    }
+
+    /// From-scratch candidate computation for one (GPU, workload) —
+    /// the cache fill and the `verify_incremental` reference.
+    fn compute_slot_candidates(&self, gi: usize, workload: WorkloadSize) -> SlotCandidates {
+        let mut cand = SlotCandidates::default();
+        for (si, slot) in self.gpus[gi].partition.iter().enumerate() {
+            if !fits_instance(workload, slot.shape.memory_bytes) {
+                continue;
+            }
+            match slot.job {
+                None => {
+                    if cand.free.is_none() {
+                        cand.free = Some(si);
+                    }
+                }
+                Some(occ) => {
+                    let key = (self.jobs[occ].expected_finish_s, si);
+                    if cand.occ.map(|b| key < b).unwrap_or(true) {
+                        cand.occ = Some(key);
+                    }
+                }
+            }
+        }
+        cand
+    }
+
+    /// Ensure GPU `gi`'s shared-mode reservation inputs are current.
+    fn refresh_share_candidates(&mut self, gi: usize) {
+        let epoch = self.res_epoch[gi];
+        if self.share_cache[gi].epoch == epoch {
+            self.stats.reservation_cache_hits += 1;
+            return;
+        }
+        self.stats.reservation_refreshes += 1;
+        let (fins, floors) = self.compute_share_fins(gi);
+        self.share_cache[gi] = ShareCacheEntry { epoch, fins, floors };
+    }
+
+    /// From-scratch shared-mode reservation inputs for one GPU — the
+    /// cache fill and the `verify_incremental` reference.
+    fn compute_share_fins(&self, gi: usize) -> (Vec<(f64, u64)>, u64) {
+        let mut fins: Vec<(f64, u64)> = self.gpus[gi]
+            .residents
+            .iter()
+            .map(|&r| (self.jobs[r].expected_finish_s, self.jobs[r].floor_bytes))
+            .collect();
+        fins.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let floors: u64 = fins.iter().map(|f| f.1).sum();
+        (fins, floors)
     }
 
     /// Estimated service time of unstarted job `id` in MIG instance
@@ -1139,6 +1464,15 @@ impl FleetSim {
     /// whole-device rate on the fleet's first GPU kind — a stable,
     /// placement-independent proxy (memoized like every rate).
     fn est_service_canonical(&mut self, id: JobId) -> f64 {
+        // Queued jobs have constant remaining work and overhead, so the
+        // estimate is a per-job constant until the job starts — memoize
+        // it to keep SJF's per-scan comparator off the rate tables.
+        if self.jobs[id].start_s.is_none() {
+            let memo = self.jobs[id].est_canonical;
+            if !memo.is_nan() {
+                return memo;
+            }
+        }
         let kind = self.gpus[0].kind;
         let mode = match self.share_model {
             Some(ShareModel::Mps) => RateMode::Mps { n: 1 },
@@ -1153,7 +1487,11 @@ impl FleetSim {
         };
         let workload = self.jobs[id].spec.workload;
         let stats = self.per_step(kind, workload, mode);
-        self.est_from(id, stats)
+        let est = self.est_from(id, stats);
+        if self.jobs[id].start_s.is_none() {
+            self.jobs[id].est_canonical = est;
+        }
+        est
     }
 
     /// Remaining steps at `stats`' rate, plus the fixed per-epoch
@@ -1198,26 +1536,30 @@ impl FleetSim {
         if self.share_model.is_some() || self.queue.is_empty() {
             return;
         }
-        let waiting: Vec<WorkloadSize> = self
-            .queue
-            .iter()
-            .map(|id| self.jobs[id].spec.workload)
-            .collect();
+        // Built lazily: most passes find no idle GPU, so the queue
+        // snapshot would be wasted work.
+        let mut waiting: Option<Vec<WorkloadSize>> = None;
         for gi in 0..self.gpus.len() {
-            let g = &self.gpus[gi];
-            if g.repartitioning || !self.gpu_idle(gi) {
+            if self.gpus[gi].repartitioning || !self.gpu_idle(gi) {
                 continue;
             }
-            let Some(desired) = self.policy.repartition(g.kind, &waiting) else {
+            if waiting.is_none() {
+                waiting = Some(self.queue.iter().map(|id| self.jobs[id].spec.workload).collect());
+            }
+            let Some(desired) =
+                self.policy.repartition(self.gpus[gi].kind, waiting.as_ref().unwrap())
+            else {
                 continue;
             };
-            let current: Vec<InstanceShape> = g.partition.iter().map(|s| s.shape).collect();
+            let current: Vec<InstanceShape> =
+                self.gpus[gi].partition.iter().map(|s| s.shape).collect();
             if desired == current {
                 continue;
             }
             let g = &mut self.gpus[gi];
             g.repartitioning = true;
             g.pending_partition = desired;
+            self.touch_gpu(gi);
             self.timeline
                 .push(self.now + self.config.repartition_s, EventKind::Repartition { gpu: gi });
             self.emit(TraceKind::RepartitionBegin, None, Some(gi), None, String::new());
@@ -1287,11 +1629,13 @@ impl FleetSim {
             },
         );
         self.gpus[gi].partition[si].job = Some(id);
+        self.gpus[gi].running += 1;
         // Compute-slice weight, as in dcgm::device_report: a lone busy
         // 2g.10gb instance makes the device 2/7 active, not 100%.
         let frac = shape.sms as f64 / kind.spec().mig_sm_count as f64;
         self.jobs[id].device_frac = frac.min(1.0);
         self.start_job(id, gi, Some(si), stats);
+        self.touch_gpu(gi);
     }
 
     /// Land a MISO-migrated job in MIG instance `(gi, si)`: exactly
@@ -1323,6 +1667,7 @@ impl FleetSim {
     fn place_share(&mut self, id: JobId, gi: usize) {
         self.update_gpu(gi);
         self.gpus[gi].residents.push(id);
+        self.gpus[gi].running += 1;
         self.jobs[id].gpu = Some(gi);
         // Every co-runner's rate changes (n grew), the new job included.
         self.reschedule_residents(gi);
@@ -1348,7 +1693,9 @@ impl FleetSim {
         let kind = self.gpus[gi].kind;
         let n = self.gpus[gi].residents.len() as u32;
         let model = self.share_model.expect("shared-mode GPU");
-        let ids: Vec<JobId> = self.gpus[gi].residents.clone();
+        let mut ids = std::mem::take(&mut self.scratch_ids);
+        ids.clear();
+        ids.extend(self.gpus[gi].residents.iter().copied());
         // Device share of one co-runner: MPS splits the SMs spatially;
         // time-slicing runs each client on the whole device in turn
         // (its busy integral is already device-exclusive time).
@@ -1359,21 +1706,27 @@ impl FleetSim {
             }
             ShareModel::TimeSlice => 1.0,
         };
-        let workloads: Vec<WorkloadSize> =
-            ids.iter().map(|&id| self.jobs[id].spec.workload).collect();
-        let profiles: Vec<DemandProfile> = workloads
-            .iter()
-            .map(|&w| self.demand_profile(kind, w))
-            .collect();
+        let mut profiles = std::mem::take(&mut self.scratch_profiles);
+        profiles.clear();
+        for &id in &ids {
+            let w = self.jobs[id].spec.workload;
+            let p = self.demand_profile(kind, w);
+            profiles.push(p);
+        }
         let spec = kind.spec();
+        // The crowd's demand sums are victim-independent: fold them
+        // once and reuse for every co-runner instead of re-walking the
+        // resident set per victim (identical fold order, so the factors
+        // are bit-identical to the from-scratch per-victim path).
+        let agg = self.contention.aggregate(&spec, &self.cal, &profiles);
         for (i, &id) in ids.iter().enumerate() {
-            let workload = workloads[i];
+            let workload = self.jobs[id].spec.workload;
             let mode = match model {
                 ShareModel::Mps => RateMode::Mps { n },
                 ShareModel::TimeSlice => RateMode::TimeSlice { n },
             };
             let base = self.per_step(kind, workload, mode);
-            let factor = self.contention.slowdown(&spec, &self.cal, &profiles, i);
+            let factor = self.contention.slowdown_with(&agg, &profiles[i]);
             let stats = apply_slowdown(base, factor);
             self.jobs[id].peak_slowdown = self.jobs[id].peak_slowdown.max(factor);
             // The preceding `update_gpu` accrued the old interval at
@@ -1382,6 +1735,9 @@ impl FleetSim {
             self.jobs[id].device_frac = frac;
             self.start_job(id, gi, None, stats);
         }
+        self.scratch_ids = ids;
+        self.scratch_profiles = profiles;
+        self.touch_gpu(gi);
     }
 
     /// Roofline-derived demand profile of `workload` on a whole `kind`
@@ -1429,9 +1785,21 @@ impl FleetSim {
         if dt <= 0.0 {
             return;
         }
-        let running: Vec<JobId> = self.running_jobs(gi);
+        // Idle GPUs accrue nothing: every accum field is a sum of
+        // non-negative contributions starting from +0.0, so skipping
+        // the zero merge leaves identical bits.
+        if self.gpus[gi].running == 0 {
+            return;
+        }
+        let mut running = std::mem::take(&mut self.scratch_running);
+        running.clear();
+        {
+            let g = &self.gpus[gi];
+            running.extend(g.partition.iter().filter_map(|s| s.job));
+            running.extend(g.residents.iter().copied());
+        }
         let mut accrued = StepStats::default();
-        for id in running {
+        for &id in &running {
             let j = &mut self.jobs[id];
             if j.per_step.wall_s <= 0.0 {
                 continue;
@@ -1457,6 +1825,7 @@ impl FleetSim {
         // `merge` also sums wall_s; the GPU account's denominator is
         // the run's elapsed time, set once at collection.
         self.gpus[gi].accum.merge(&accrued);
+        self.scratch_running = running;
     }
 
     fn running_jobs(&self, gi: usize) -> Vec<JobId> {
@@ -1469,7 +1838,7 @@ impl FleetSim {
     }
 
     fn gpu_idle(&self, gi: usize) -> bool {
-        self.running_jobs(gi).is_empty()
+        self.gpus[gi].running == 0
     }
 
     // -- observability ---------------------------------------------------
@@ -1614,24 +1983,88 @@ impl FleetSim {
         self.emit(kind, job, gpu, slot, detail.to_string());
     }
 
-    fn view(&self) -> FleetView {
+    /// From-scratch policy view of the whole fleet. Used once at
+    /// construction and by `verify_incremental_state`; the hot path
+    /// reads the persistent `self.view`, which `touch_gpu` keeps in
+    /// sync one GPU at a time.
+    fn fresh_view(&self) -> FleetView {
         FleetView {
-            gpus: self
-                .gpus
-                .iter()
-                .map(|g| GpuView {
-                    kind: g.kind,
-                    repartitioning: g.repartitioning,
-                    slots: g.partition.iter().map(|s| (s.shape, s.job.is_some())).collect(),
-                    residents: g.residents.len(),
-                    resident_floor_bytes: g
-                        .residents
-                        .iter()
-                        .map(|&id| self.jobs[id].floor_bytes)
-                        .sum(),
-                })
-                .collect(),
+            gpus: (0..self.gpus.len()).map(|gi| self.gpu_view(gi)).collect(),
             admission: self.config.admission,
+        }
+    }
+
+    /// From-scratch policy view of one GPU.
+    fn gpu_view(&self, gi: usize) -> GpuView {
+        let g = &self.gpus[gi];
+        GpuView {
+            kind: g.kind,
+            repartitioning: g.repartitioning,
+            slots: g.partition.iter().map(|s| (s.shape, s.job.is_some())).collect(),
+            residents: g.residents.len(),
+            resident_floor_bytes: g
+                .residents
+                .iter()
+                .map(|&id| self.jobs[id].floor_bytes)
+                .sum(),
+        }
+    }
+
+    /// Record a placement-relevant change to GPU `gi`: refresh its
+    /// slice of the persistent policy view and invalidate its cached
+    /// reservation candidates. Every mutation of a GPU's partition,
+    /// residents, or repartitioning flag must route through here —
+    /// `RunOptions::verify_incremental` audits exactly that.
+    fn touch_gpu(&mut self, gi: usize) {
+        self.res_epoch[gi] += 1;
+        self.view.gpus[gi] = self.gpu_view(gi);
+    }
+
+    /// Exhaustive audit of every incremental structure against its
+    /// from-scratch reference. Wired to `RunOptions::verify_incremental`
+    /// (run after every event) and the `incremental_equivalence`
+    /// property test; far too slow for real runs.
+    fn verify_incremental_state(&self) {
+        assert_eq!(
+            self.view,
+            self.fresh_view(),
+            "persistent FleetView diverged from from-scratch view at t={}",
+            self.now
+        );
+        for gi in 0..self.gpus.len() {
+            assert_eq!(
+                self.gpus[gi].running as usize,
+                self.running_jobs(gi).len(),
+                "running counter diverged on GPU {gi} at t={}",
+                self.now
+            );
+            for &workload in WorkloadSize::ALL.iter() {
+                let wi = workload_index(workload);
+                let entry = &self.slot_cache[gi][wi];
+                if entry.epoch == self.res_epoch[gi] {
+                    assert_eq!(
+                        entry.cand,
+                        self.compute_slot_candidates(gi, workload),
+                        "slot-candidate cache stale on GPU {gi} for {} at t={}",
+                        workload.name(),
+                        self.now
+                    );
+                }
+            }
+            let entry = &self.share_cache[gi];
+            if entry.epoch == self.res_epoch[gi] {
+                let (fins, floors) = self.compute_share_fins(gi);
+                assert_eq!(
+                    entry.fins, fins,
+                    "share-candidate cache stale on GPU {gi} at t={}",
+                    self.now
+                );
+                assert_eq!(
+                    entry.floors, floors,
+                    "share floor sum stale on GPU {gi} at t={}",
+                    self.now
+                );
+            }
         }
     }
 
@@ -1789,13 +2222,22 @@ mod tests {
         })
     }
 
+    /// Run options for every in-module test: the incremental caches are
+    /// audited against from-scratch recomputation after each event.
+    fn verify_opts() -> RunOptions {
+        RunOptions {
+            verify_incremental: true,
+            ..RunOptions::default()
+        }
+    }
+
     fn run(policy: Box<dyn SchedulingPolicy>, trace: &[JobSpec], gpus: u32) -> FleetMetrics {
         let config = FleetConfig {
             a100s: gpus,
             a30s: 0,
             ..FleetConfig::default()
         };
-        FleetSim::new(config, policy, cal(), trace).run()
+        FleetSim::new(config, policy, cal(), trace).run_with(&verify_opts()).unwrap().metrics
     }
 
     #[test]
@@ -1971,7 +2413,10 @@ mod tests {
             a30s: 1,
             ..FleetConfig::default()
         };
-        let a30 = FleetSim::new(config, Box::new(Exclusive), cal(), &trace).run();
+        let a30 = FleetSim::new(config, Box::new(Exclusive), cal(), &trace)
+            .run_with(&verify_opts())
+            .unwrap()
+            .metrics;
         assert_eq!(a30.finished(), 6);
         assert!(a30.makespan_s > a100.makespan_s);
     }
@@ -2013,7 +2458,7 @@ mod tests {
             admission,
             ..FleetConfig::default()
         };
-        FleetSim::new(config, policy, cal(), trace).run()
+        FleetSim::new(config, policy, cal(), trace).run_with(&verify_opts()).unwrap().metrics
     }
 
     #[test]
@@ -2191,7 +2636,7 @@ mod tests {
             queue,
             ..FleetConfig::default()
         };
-        FleetSim::new(config, policy, cal(), trace).run()
+        FleetSim::new(config, policy, cal(), trace).run_with(&verify_opts()).unwrap().metrics
     }
 
     #[test]
@@ -2250,7 +2695,10 @@ mod tests {
             ..FleetConfig::default()
         };
         let policy = Box::new(MigMiso::with_margin(&cal, 7, 0.0));
-        let m = FleetSim::new(config, policy, cal, &trace).run();
+        let m = FleetSim::new(config, policy, cal, &trace)
+            .run_with(&verify_opts())
+            .unwrap()
+            .metrics;
         assert_eq!(m.finished(), 4, "{}", m.summary());
         assert_eq!(m.migrations, 3, "{}", m.summary());
         assert_eq!(m.policy, "mig-miso");
@@ -2260,7 +2708,10 @@ mod tests {
         assert_eq!(m.mean_slowdown, 1.0);
         // The run is deterministic.
         let policy = Box::new(MigMiso::with_margin(&cal, 7, 0.0));
-        let b = FleetSim::new(config, policy, cal, &trace).run();
+        let b = FleetSim::new(config, policy, cal, &trace)
+            .run_with(&verify_opts())
+            .unwrap()
+            .metrics;
         assert_eq!(
             m.to_json().to_string_pretty(),
             b.to_json().to_string_pretty()
@@ -2281,7 +2732,7 @@ mod tests {
                 ..FleetConfig::default()
             };
             let policy = Box::new(MigMiso::with_margin(&cal, 7, 0.0));
-            FleetSim::new(config, policy, cal, &trace).run()
+            FleetSim::new(config, policy, cal, &trace).run_with(&verify_opts()).unwrap().metrics
         };
         let free = run_cost(0.0);
         let taxed = run_cost(10.0);
@@ -2309,8 +2760,14 @@ mod tests {
             ..FleetConfig::default()
         };
         let policy = Box::new(MigMiso::with_margin(&cal, 7, f64::INFINITY));
-        let miso = FleetSim::new(config, policy, cal, &trace).run();
-        let mps = FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace).run();
+        let miso = FleetSim::new(config, policy, cal, &trace)
+            .run_with(&verify_opts())
+            .unwrap()
+            .metrics;
+        let mps = FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace)
+            .run_with(&verify_opts())
+            .unwrap()
+            .metrics;
         assert_eq!(miso.migrations, 0);
         assert_eq!(miso.finished(), 20);
         assert_eq!(miso.makespan_s, mps.makespan_s);
@@ -2331,6 +2788,76 @@ mod tests {
             "dynamic {} !> static {}",
             dynamic.aggregate_images_per_second(),
             static_.aggregate_images_per_second()
+        );
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_match_run_with() {
+        // The legacy `run`/`run_traced`/`enable_*` surface must stay a
+        // faithful shim over `run_with`: same metrics, same trace, same
+        // sampled timeline.
+        let trace = small_trace(12, 0.001);
+        let config = FleetConfig {
+            a100s: 1,
+            a30s: 0,
+            ..FleetConfig::default()
+        };
+        let build = || FleetSim::new(config, Box::new(Mps { cap: 7 }), cal(), &trace);
+
+        let legacy_plain = build().run();
+        let unified_plain = build().run_with(&RunOptions::default()).unwrap();
+        assert!(unified_plain.trace.is_none());
+        assert_eq!(
+            legacy_plain.to_json().to_string_pretty(),
+            unified_plain.metrics.to_json().to_string_pretty()
+        );
+
+        let mut legacy_sim = build();
+        legacy_sim.enable_tracing();
+        legacy_sim.enable_sampling(5.0).unwrap();
+        let (legacy_metrics, legacy_trace) = legacy_sim.run_traced();
+        let unified = build()
+            .run_with(&RunOptions {
+                trace: true,
+                sample_interval_s: Some(5.0),
+                ..RunOptions::default()
+            })
+            .unwrap();
+        assert_eq!(
+            legacy_metrics.to_json().to_string_pretty(),
+            unified.metrics.to_json().to_string_pretty()
+        );
+        assert_eq!(legacy_trace, unified.trace);
+        assert!(unified.trace.is_some());
+        assert!(unified.trace.as_ref().unwrap().timeline.is_some());
+    }
+
+    #[test]
+    fn unblocked_solo_head_computes_no_reservations() {
+        // Regression for the `place_backfill` short-circuit: with the
+        // whole queue draining except a lone blocked head, there is
+        // nothing to backfill, so no reservation may be computed. One
+        // MPS cap-1 GPU and three staggered smalls block each arrival
+        // behind the running job; only the t=0.002 arrival sees a
+        // two-deep queue and pays exactly one reservation computation.
+        // The old code recomputed the head's reservation on every
+        // finish-triggered pass as well (3 total).
+        let trace = manual_trace(3, WorkloadSize::Small, 0.001);
+        let config = FleetConfig {
+            a100s: 1,
+            a30s: 0,
+            queue: QueueDiscipline::BackfillEasy,
+            ..FleetConfig::default()
+        };
+        let out = FleetSim::new(config, Box::new(Mps { cap: 1 }), cal(), &trace)
+            .run_with(&verify_opts())
+            .unwrap();
+        assert_eq!(out.metrics.finished(), 3);
+        assert_eq!(
+            out.stats.reservations_computed, 1,
+            "solo blocked head must not price a backfill pass: {:?}",
+            out.stats
         );
     }
 }

@@ -103,7 +103,7 @@ impl std::fmt::Display for AdmissionMode {
 }
 
 /// Read-only per-GPU state a policy decides over.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GpuView {
     pub kind: GpuKind,
     /// GPU is mid-reconfiguration; nothing can be placed on it.
@@ -128,7 +128,7 @@ impl GpuView {
 }
 
 /// Read-only fleet snapshot.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct FleetView {
     pub gpus: Vec<GpuView>,
     /// Active admission semantics: under [`AdmissionMode::Oversubscribe`]

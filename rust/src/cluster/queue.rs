@@ -31,10 +31,13 @@
 //! The queue itself stays an arrival-ordered `VecDeque`; discipline
 //! semantics (which job to offer next, reservation bookkeeping) are
 //! driven by `cluster::fleet`, which re-scans the queue on every
-//! arrival, finish and repartition event. Reservations are recomputed
-//! from scratch on each scan — there is no persistent reservation
-//! state to invalidate, so a repartition or an early finish simply
-//! yields fresh (and never stale) estimates.
+//! arrival, finish and repartition event. Reservation estimates are
+//! served from per-GPU caches invalidated by epoch: any mutation of a
+//! GPU (placement, finish, repartition) bumps its epoch, so a scan
+//! recomputes candidates only for the GPUs the triggering event
+//! touched and the estimates are never stale. A run with `RunOptions
+//! { verify_incremental: true }` asserts exactly that, rebuilding the
+//! cached state from scratch after every event.
 //!
 //! Jobs that can *never* run under the active policy are rejected when
 //! first offered instead of waiting forever — the admission-control

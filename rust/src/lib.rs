@@ -68,8 +68,9 @@
 //! reserved start), `backfill-conservative` (every blocked job holds a
 //! reservation a candidate must respect) and `sjf`
 //! (shortest-estimated-service first, no starvation protection). The
-//! queue is re-scanned on every finish and repartition event with
-//! reservations recomputed from scratch. Reports carry the
+//! queue is re-scanned on every finish and repartition event;
+//! reservation estimates are served from per-GPU caches invalidated
+//! by epoch (see *Performance* below). Reports carry the
 //! `backfilled` count, the total head-of-line blocked time
 //! (`hol_wait_s`), the busy-time-weighted `mean_slowdown` and the
 //! peak-based `peak_slowdown`. Surface: `migsim fleet --queue`, a
@@ -180,6 +181,42 @@
 //! fleet --trace-out trace.json --sample-interval 60`, per-cell
 //! capture on sweeps via `migsim sweep --trace-dir results/traces`,
 //! and a live `cells/s` progress line on interactive sweeps.
+//!
+//! ## Performance
+//!
+//! One entry point runs the fleet:
+//! [`cluster::fleet::FleetSim::run_with`] takes a
+//! [`cluster::fleet::RunOptions`] (tracing, sampling, the
+//! `verify_incremental` audit) and returns a
+//! [`cluster::fleet::RunOutput`] — the metrics, the optional trace log
+//! and [`cluster::fleet::EngineStats`] (events processed, reservations
+//! computed, reservation-cache refreshes and hits). The pre-unification
+//! `run`/`run_traced`/`enable_tracing`/`enable_sampling` methods
+//! survive as deprecated wrappers. The sweep layer mirrors the shape:
+//! [`sweep::engine::run_cell`] and [`sweep::engine::run_sweep`] each
+//! take one [`sweep::engine::SweepOptions`] (threads, progress,
+//! per-cell trace capture).
+//!
+//! Under that API the event engine is incremental. The
+//! [`cluster::policy::FleetView`] handed to policies is patched per
+//! dirty GPU instead of rebuilt per decision; contention re-evaluation
+//! folds the resident demand profiles once into a
+//! [`simgpu::interference::DemandAggregate`] and charges each victim
+//! against it — O(n) per finish instead of O(n²); backfill
+//! reservations come from per-GPU candidate caches invalidated by an
+//! epoch that every GPU mutation bumps; the arrival stream lives in a
+//! sorted cursor array merged against the event heap instead of being
+//! heap-pushed up front. Every optimization is behaviorally
+//! invisible: metrics and trace artifacts stay bit-identical to a
+//! from-scratch engine. `RunOptions { verify_incremental: true }`
+//! asserts exactly that at runtime — after every popped event the
+//! cached state is rebuilt from scratch and compared
+//! (`rust/tests/incremental_equivalence.rs`; the scenario-invariant
+//! grid runs fully audited). `benches/fleet_scale.rs` carries the
+//! churn-heavy acceptance configuration (100k jobs over 1,000 GPUs
+//! under backfill + roofline; `-- --xl` opts into 1M jobs over 10k
+//! GPUs), and the `BENCH_baseline.json` floor re-mint procedure is
+//! documented in `.github/workflows/ci.yml`.
 
 pub mod cluster;
 pub mod config;

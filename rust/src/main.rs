@@ -14,7 +14,7 @@
 //! * `bench`     — time the sweep engine and emit/gate machine-readable
 //!   `BENCH_<name>.json` perf reports (the CI regression gate).
 
-use migsim::cluster::fleet::{FleetConfig, FleetSim};
+use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use migsim::cluster::policy::{AdmissionMode, PolicyKind};
 use migsim::cluster::queue::QueueDiscipline;
 use migsim::cluster::trace::{parse_mix, parse_trace_csv, poisson_trace, trace_to_csv, TraceConfig};
@@ -28,7 +28,7 @@ use migsim::report::figures;
 use migsim::runtime::artifacts::ArtifactStore;
 use migsim::runtime::trainer::{Trainer, TrainerConfig};
 use migsim::simgpu::interference::InterferenceModel;
-use migsim::sweep::engine::{run_sweep, run_sweep_opts, SweepOptions};
+use migsim::sweep::engine::{run_sweep, SweepOptions};
 use migsim::sweep::grid::{GridSpec, MixSpec};
 use migsim::util::bench::{bench, compare_reports, BenchReport};
 use migsim::util::cli::Args;
@@ -356,14 +356,13 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     // try_new: a malformed external trace must exit with a proper
     // error, not a panic.
-    let mut sim = FleetSim::try_new(fleet_config, policy, config.calibration, &trace)?;
-    if trace_out.is_some() {
-        sim.enable_tracing();
-    }
-    if let Some(interval_s) = sample_interval_s {
-        sim.enable_sampling(interval_s)?;
-    }
-    let (metrics, trace_log) = sim.run_traced();
+    let sim = FleetSim::try_new(fleet_config, policy, config.calibration, &trace)?;
+    let run_out = sim.run_with(&RunOptions {
+        trace: trace_out.is_some(),
+        sample_interval_s,
+        ..RunOptions::default()
+    })?;
+    let (metrics, trace_log) = (run_out.metrics, run_out.trace);
     println!("{}", metrics.summary());
     let out = args.flag_or("out", &config.out_dir);
     let artifacts = migsim::report::fleet::write_fleet(std::path::Path::new(&out), &metrics)?;
@@ -557,13 +556,14 @@ fn cmd_sweep(args: &Args, config: &Config) -> anyhow::Result<()> {
          (per-cell timelines ship inside the per-cell traces)"
     );
     let opts = SweepOptions {
+        threads,
         // Live progress only for a human watching: a redirected stderr
         // (CI logs, pipes) gets no carriage-return spinner.
         progress: std::io::stderr().is_terminal(),
         trace: trace_dir.is_some(),
         sample_interval_s,
     };
-    let run = run_sweep_opts(&grid, &config.calibration, threads, &opts)?;
+    let run = run_sweep(&grid, &config.calibration, &opts)?;
     print!("{}", migsim::report::sweep::ranking_table(&run));
     if grid.interference.len() > 1 {
         print!("{}", migsim::report::sweep::interference_table(&run));
@@ -623,11 +623,14 @@ fn cmd_bench(args: &Args, config: &Config) -> anyhow::Result<()> {
         &format!("sweep of {} cells", grid.cell_count()),
         1,
         iters,
-        || run_sweep(&grid, &cal, threads).expect("grid already validated"),
+        || {
+            run_sweep(&grid, &cal, &SweepOptions::with_threads(threads))
+                .expect("grid already validated")
+        },
     );
     println!("{timing}");
     // Any run carries the simulated outcomes — they are deterministic.
-    let run = run_sweep(&grid, &cal, threads)?;
+    let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(threads))?;
 
     let mut report = BenchReport::new(&name);
     report.metric("cells_per_s", grid.cell_count() as f64 / timing.median_s);

@@ -92,7 +92,7 @@ pub fn write_fleet(dir: &Path, m: &FleetMetrics) -> anyhow::Result<FleetArtifact
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::fleet::{FleetConfig, FleetSim};
+    use crate::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
     use crate::cluster::policy::PolicyKind;
     use crate::cluster::trace::{poisson_trace, TraceConfig};
     use crate::simgpu::calibration::Calibration;
@@ -113,7 +113,10 @@ mod tests {
             a30s: 0,
             ..FleetConfig::default()
         };
-        FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace).run()
+        FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace)
+            .run_with(&RunOptions::default())
+            .unwrap()
+            .metrics
     }
 
     #[test]
@@ -165,7 +168,10 @@ mod tests {
             admission: AdmissionMode::Oversubscribe,
             ..FleetConfig::default()
         };
-        let m = FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace).run();
+        let m = FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace)
+            .run_with(&RunOptions::default())
+            .unwrap()
+            .metrics;
         let rows = jobs_rows(&m);
         assert_eq!(rows.iter().filter(|r| r[8] == "oom-killed").count(), 2);
         let json = Json::parse(&m.to_json().to_string_pretty()).unwrap();

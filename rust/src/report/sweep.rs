@@ -525,7 +525,7 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
 mod tests {
     use super::*;
     use crate::cluster::policy::PolicyKind;
-    use crate::sweep::engine::run_sweep;
+    use crate::sweep::engine::{run_sweep, SweepOptions};
     use crate::sweep::grid::MixSpec;
     use crate::util::tempdir::TempDir;
 
@@ -562,7 +562,7 @@ mod tests {
     #[test]
     fn ranking_reproduces_the_paper_ordering() {
         let grid = saturated_grid();
-        let run = run_sweep(&grid, &Calibration::paper(), 2).unwrap();
+        let run = run_sweep(&grid, &Calibration::paper(), &SweepOptions::with_threads(2)).unwrap();
         let means = policy_means(&run);
         let pos = |name: &str| means.iter().position(|(n, _)| n == name).unwrap();
         assert!(
@@ -579,7 +579,7 @@ mod tests {
     fn summary_json_is_parseable_and_versioned() {
         let grid = saturated_grid();
         let cal = Calibration::paper();
-        let run = run_sweep(&grid, &cal, 1).unwrap();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
         let text = summary_json_text(&grid, &run, &cal);
         let back = Json::parse(&text).unwrap();
         assert_eq!(
@@ -605,7 +605,7 @@ mod tests {
     fn artifacts_written_with_one_row_per_cell() {
         let grid = saturated_grid();
         let cal = Calibration::paper();
-        let run = run_sweep(&grid, &cal, 2).unwrap();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(2)).unwrap();
         let dir = TempDir::new().unwrap();
         let a = write_sweep(dir.path(), &grid, &run, &cal).unwrap();
         assert!(a.summary_json.exists() && a.cells_csv.exists());
@@ -617,7 +617,7 @@ mod tests {
     #[test]
     fn ranking_table_lists_every_policy() {
         let grid = saturated_grid();
-        let run = run_sweep(&grid, &Calibration::paper(), 1).unwrap();
+        let run = run_sweep(&grid, &Calibration::paper(), &SweepOptions::with_threads(1)).unwrap();
         let table = ranking_table(&run);
         for p in &grid.policies {
             assert!(table.contains(p.name()), "{table}");
@@ -633,7 +633,7 @@ mod tests {
         let mut grid = saturated_grid();
         grid.mixes = vec![MixSpec::preset("heavy").unwrap()];
         grid.interference = vec![InterferenceModel::Off, InterferenceModel::Roofline];
-        let run = run_sweep(&grid, &Calibration::paper(), 2).unwrap();
+        let run = run_sweep(&grid, &Calibration::paper(), &SweepOptions::with_threads(2)).unwrap();
         let sens = interference_sensitivity(&run);
         let mean = |policy: &str, model: &str| -> f64 {
             sens.iter()
@@ -663,7 +663,7 @@ mod tests {
     fn validate_summary_accepts_real_output_and_rejects_drift() {
         let grid = saturated_grid();
         let cal = Calibration::paper();
-        let run = run_sweep(&grid, &cal, 2).unwrap();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(2)).unwrap();
         let json = Json::parse(&summary_json_text(&grid, &run, &cal)).unwrap();
         assert_eq!(validate_summary(&json).unwrap(), grid.cell_count());
         // A wrong schema version is drift, not a warning.
@@ -683,7 +683,7 @@ mod tests {
         // cross-section check must reject it now.
         let grid = saturated_grid();
         let cal = Calibration::paper();
-        let run = run_sweep(&grid, &cal, 1).unwrap();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
         let mut json = Json::parse(&summary_json_text(&grid, &run, &cal)).unwrap();
         let mut phantom = Json::obj();
         phantom
@@ -701,7 +701,7 @@ mod tests {
             "{err}"
         );
         // The same guard covers the policy ranking.
-        let run2 = run_sweep(&grid, &cal, 1).unwrap();
+        let run2 = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
         let mut json = Json::parse(&summary_json_text(&grid, &run2, &cal)).unwrap();
         let mut phantom = Json::obj();
         phantom
@@ -727,7 +727,7 @@ mod tests {
         grid.mixes = vec![MixSpec::preset("paper").unwrap()];
         grid.queues = vec![QueueDiscipline::Fifo, QueueDiscipline::BackfillEasy];
         grid.jobs_per_cell = 40;
-        let run = run_sweep(&grid, &Calibration::paper(), 2).unwrap();
+        let run = run_sweep(&grid, &Calibration::paper(), &SweepOptions::with_threads(2)).unwrap();
         let means = queue_means(&run);
         assert_eq!(means.len(), 2, "{means:?}");
         // No discipline may lose jobs: the whole stream is served

@@ -146,6 +146,27 @@ impl DemandProfile {
     }
 }
 
+/// Victim-independent aggregate of one co-runner set: the resident
+/// count plus the roofline pressure terms, which depend only on the
+/// *sums* of the residents' demands. Computing the aggregate once per
+/// residency change and folding [`ContentionModel::slowdown_with`]
+/// over it per victim turns the all-residents re-evaluation from
+/// O(n²) into O(n), and — because the sums are taken in the same
+/// resident order and the final expression is the same — yields
+/// bit-identical factors to the from-scratch
+/// [`ContentionModel::slowdown`] scan.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DemandAggregate {
+    /// Resident count the aggregate was built over.
+    pub n: usize,
+    /// Excess aggregate DRAM-bandwidth demand beyond achievable
+    /// bandwidth (`Roofline` only; 0 for the other models).
+    pub bw_pressure: f64,
+    /// Excess aggregate SM demand beyond a full device (`Roofline`
+    /// only; 0 for the other models).
+    pub sm_pressure: f64,
+}
+
 /// The per-GPU contention model: resident demand profiles in, per-job
 /// slowdown factors out.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -156,6 +177,56 @@ pub struct ContentionModel {
 impl ContentionModel {
     pub fn new(model: InterferenceModel) -> ContentionModel {
         ContentionModel { model }
+    }
+
+    /// Fold the resident set into its victim-independent aggregate.
+    /// The pressure sums run in resident order, matching the order the
+    /// from-scratch [`ContentionModel::slowdown`] sums in.
+    pub fn aggregate(
+        &self,
+        spec: &GpuSpec,
+        cal: &Calibration,
+        residents: &[DemandProfile],
+    ) -> DemandAggregate {
+        let n = residents.len();
+        let (bw_pressure, sm_pressure) = match self.model {
+            InterferenceModel::Roofline if n > 1 => {
+                let capacity = spec.dram_bw * cal.bandwidth_efficiency;
+                let total_bw: f64 = residents.iter().map(|r| r.bw_demand).sum();
+                let bw_pressure = (crate::util::safe_div(total_bw, capacity) - 1.0).max(0.0);
+                let total_sm: f64 = residents.iter().map(|r| r.sm_demand).sum();
+                let sm_pressure = (total_sm - 1.0).max(0.0);
+                (bw_pressure, sm_pressure)
+            }
+            _ => (0.0, 0.0),
+        };
+        DemandAggregate {
+            n,
+            bw_pressure,
+            sm_pressure,
+        }
+    }
+
+    /// Slowdown factor for one `victim` against a precomputed
+    /// aggregate. Bit-identical to [`ContentionModel::slowdown`] with
+    /// the victim at any index of the aggregated resident set.
+    pub fn slowdown_with(&self, agg: &DemandAggregate, victim: &DemandProfile) -> f64 {
+        let n = agg.n;
+        if n <= 1 {
+            return 1.0;
+        }
+        let factor = match self.model {
+            InterferenceModel::Off => 1.0,
+            InterferenceModel::Linear => {
+                1.0 + LINEAR_SLOWDOWN_PER_CORUNNER * (n - 1) as f64
+            }
+            InterferenceModel::Roofline => {
+                1.0 + ROOFLINE_BASE_PER_CORUNNER * (n - 1) as f64
+                    + BW_PRESSURE_WEIGHT * agg.bw_pressure * victim.memory_bound_frac
+                    + SM_PRESSURE_WEIGHT * agg.sm_pressure * victim.sm_demand
+            }
+        };
+        factor.min(MAX_SLOWDOWN)
     }
 
     /// Slowdown factor (`>= 1.0`) for resident `i` among `residents`
@@ -174,39 +245,26 @@ impl ContentionModel {
         if n <= 1 {
             return 1.0;
         }
-        let factor = match self.model {
-            InterferenceModel::Off => 1.0,
-            InterferenceModel::Linear => {
-                1.0 + LINEAR_SLOWDOWN_PER_CORUNNER * (n - 1) as f64
-            }
-            InterferenceModel::Roofline => {
-                let capacity = spec.dram_bw * cal.bandwidth_efficiency;
-                let total_bw: f64 = residents.iter().map(|r| r.bw_demand).sum();
-                let bw_pressure = (crate::util::safe_div(total_bw, capacity) - 1.0).max(0.0);
-                let total_sm: f64 = residents.iter().map(|r| r.sm_demand).sum();
-                let sm_pressure = (total_sm - 1.0).max(0.0);
-                let victim = residents[i];
-                1.0 + ROOFLINE_BASE_PER_CORUNNER * (n - 1) as f64
-                    + BW_PRESSURE_WEIGHT * bw_pressure * victim.memory_bound_frac
-                    + SM_PRESSURE_WEIGHT * sm_pressure * victim.sm_demand
-            }
-        };
-        factor.min(MAX_SLOWDOWN)
+        let agg = self.aggregate(spec, cal, residents);
+        self.slowdown_with(&agg, &residents[i])
     }
 
     /// The MISO probe signal: every resident's slowdown factor at
     /// once, in resident order. This is what a shared "probe region"
     /// observes about its tenants — `mig-miso` feeds it (with the
     /// residents' achieved throughput) into the planner's
-    /// partition-vs-MPS commit decision.
+    /// partition-vs-MPS commit decision. Aggregates once, then folds —
+    /// O(n), not O(n²).
     pub fn observed_slowdowns(
         &self,
         spec: &GpuSpec,
         cal: &Calibration,
         residents: &[DemandProfile],
     ) -> Vec<f64> {
-        (0..residents.len())
-            .map(|i| self.slowdown(spec, cal, residents, i))
+        let agg = self.aggregate(spec, cal, residents);
+        residents
+            .iter()
+            .map(|victim| self.slowdown_with(&agg, victim))
             .collect()
     }
 }
@@ -340,6 +398,39 @@ mod tests {
         assert!(ContentionModel::new(InterferenceModel::Roofline)
             .observed_slowdowns(&A100, &cal(), &[])
             .is_empty());
+    }
+
+    #[test]
+    fn aggregate_fold_is_bit_identical_to_from_scratch() {
+        // The incremental fleet path computes one aggregate per
+        // residency change and folds it per victim; the factors must
+        // match the per-victim from-scratch scan to the last bit.
+        for model in InterferenceModel::ALL {
+            let cm = ContentionModel::new(model);
+            forall_ok(
+                0xA66_0715,
+                40,
+                |r| -> Vec<DemandProfile> {
+                    (0..1 + r.below(7) as usize).map(|_| random_profile(r)).collect()
+                },
+                |crowd| -> Result<(), String> {
+                    let agg = cm.aggregate(&A100, &cal(), crowd);
+                    if agg.n != crowd.len() {
+                        return Err(format!("{model}: aggregate count {}", agg.n));
+                    }
+                    for (i, victim) in crowd.iter().enumerate() {
+                        let folded = cm.slowdown_with(&agg, victim);
+                        let scratch = cm.slowdown(&A100, &cal(), crowd, i);
+                        if folded.to_bits() != scratch.to_bits() {
+                            return Err(format!(
+                                "{model} victim {i}: folded {folded} != scratch {scratch}"
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@
 //! pure function of the grid spec.
 
 use super::grid::{CellSpec, GridSpec};
-use crate::cluster::fleet::{FleetConfig, FleetSim};
+use crate::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use crate::cluster::metrics::FleetMetrics;
 use crate::cluster::trace::poisson_trace;
 use crate::simgpu::calibration::Calibration;
@@ -110,11 +110,15 @@ pub struct CellOutcome {
     pub metrics: CellMetrics,
 }
 
-/// Per-run execution options that do not affect the metrics: live
-/// progress reporting and per-cell trace capture. The default (all
-/// off) reproduces the pre-observability executor exactly.
+/// Execution options of one sweep — the single options struct both
+/// [`run_cell`] and [`run_sweep`] take. None of these affect the
+/// metrics: the default (everything off, automatic thread count)
+/// reproduces the historical positional-argument executor exactly.
 #[derive(Debug, Clone, Default)]
 pub struct SweepOptions {
+    /// Worker-thread count; 0 picks [`default_threads`]. Ignored by
+    /// [`run_cell`], which always runs inline.
+    pub threads: usize,
     /// Print a live progress line to stderr (cells done/total, elapsed,
     /// cells/s). Callers should leave this off for `--json` output or
     /// a non-TTY stderr.
@@ -125,6 +129,16 @@ pub struct SweepOptions {
     /// Sample DCGM-style timelines at this interval inside each traced
     /// cell. Requires `trace`; validated up front.
     pub sample_interval_s: Option<f64>,
+}
+
+impl SweepOptions {
+    /// Options pinned to `threads` workers, everything else default.
+    pub fn with_threads(threads: usize) -> SweepOptions {
+        SweepOptions {
+            threads,
+            ..SweepOptions::default()
+        }
+    }
 }
 
 /// A completed sweep, cells in grid-expansion order.
@@ -157,19 +171,15 @@ pub fn default_threads() -> usize {
 /// Execute one cell: generate its trace, build its policy and fleet,
 /// run the discrete-event simulation. Pure function of (cell, grid,
 /// cal) — this is what makes the sweep embarrassingly parallel.
-pub fn run_cell(cell: &CellSpec, grid: &GridSpec, cal: &Calibration) -> CellMetrics {
-    run_cell_traced(cell, grid, cal, &SweepOptions::default()).0
-}
-
-/// [`run_cell`] with observability options: when `opts.trace` is set
-/// the cell's fleet run is traced (and sampled at
-/// `opts.sample_interval_s`, if any) and the Chrome trace-event JSON
-/// comes back alongside the metrics. The metrics are bit-identical
-/// either way.
 ///
-/// `opts.sample_interval_s` must already be validated
-/// ([`run_sweep_opts`] does) — an invalid interval panics here.
-pub fn run_cell_traced(
+/// When `opts.trace` is set the cell's fleet run is traced (and
+/// sampled at `opts.sample_interval_s`, if any) and the Chrome
+/// trace-event JSON comes back alongside the metrics; otherwise the
+/// second element is `None`. The metrics are bit-identical either way.
+///
+/// `opts.sample_interval_s` must already be validated ([`run_sweep`]
+/// does) — an invalid interval panics here.
+pub fn run_cell(
     cell: &CellSpec,
     grid: &GridSpec,
     cal: &Calibration,
@@ -187,35 +197,30 @@ pub fn run_cell_traced(
         probe_window_s: grid.probe_window_s,
         ..FleetConfig::default()
     };
-    let mut sim = FleetSim::new(config, policy, *cal, &trace);
-    if opts.trace {
-        sim.enable_tracing();
-        if let Some(interval_s) = opts.sample_interval_s {
-            sim.enable_sampling(interval_s)
-                .expect("sample interval validated by run_sweep_opts");
-        }
-    }
-    let (metrics, log) = sim.run_traced();
-    let trace_text = log
+    let sim = FleetSim::new(config, policy, *cal, &trace);
+    let run_opts = RunOptions {
+        trace: opts.trace,
+        sample_interval_s: if opts.trace { opts.sample_interval_s } else { None },
+        ..RunOptions::default()
+    };
+    let out = sim
+        .run_with(&run_opts)
+        .expect("sample interval validated by run_sweep");
+    let trace_text = out
+        .trace
         .as_ref()
-        .map(|log| crate::report::trace::trace_json_text(log, &metrics));
-    (CellMetrics::from_fleet(&metrics), trace_text)
+        .map(|log| crate::report::trace::trace_json_text(log, &out.metrics));
+    (CellMetrics::from_fleet(&out.metrics), trace_text)
 }
 
-/// Expand `grid` and execute every cell across `threads` workers
-/// (0 = [`default_threads`]). Output order and content are independent
-/// of `threads`.
-pub fn run_sweep(grid: &GridSpec, cal: &Calibration, threads: usize) -> anyhow::Result<SweepRun> {
-    run_sweep_opts(grid, cal, threads, &SweepOptions::default())
-}
-
-/// [`run_sweep`] with observability options: optional live progress on
-/// stderr and per-cell trace capture. The metrics (and so the summary
-/// JSON) are byte-identical to a default run regardless of options.
-pub fn run_sweep_opts(
+/// Expand `grid` and execute every cell across `opts.threads` workers
+/// (0 = [`default_threads`]), with optional live progress on stderr
+/// and per-cell trace capture. Output order and content are
+/// independent of the thread count, and the metrics (and so the
+/// summary JSON) are byte-identical to a default-options run.
+pub fn run_sweep(
     grid: &GridSpec,
     cal: &Calibration,
-    threads: usize,
     opts: &SweepOptions,
 ) -> anyhow::Result<SweepRun> {
     if let Some(interval_s) = opts.sample_interval_s {
@@ -226,10 +231,10 @@ pub fn run_sweep_opts(
         validate_interval(interval_s)?;
     }
     let cells = grid.cells()?;
-    let threads = if threads == 0 {
+    let threads = if opts.threads == 0 {
         default_threads()
     } else {
-        threads
+        opts.threads
     };
     // More workers than cells just park on an empty ticket counter.
     let workers = threads.min(cells.len()).max(1);
@@ -268,7 +273,7 @@ pub fn run_sweep_opts(
                         if i >= cells.len() {
                             break;
                         }
-                        let (metrics, trace) = run_cell_traced(&cells[i], grid, cal, opts);
+                        let (metrics, trace) = run_cell(&cells[i], grid, cal, opts);
                         local.push((i, metrics, trace));
                         done.fetch_add(1, Ordering::Relaxed);
                     }
@@ -362,16 +367,21 @@ mod tests {
             cal,
             &trace,
         )
-        .run();
-        assert_eq!(run_cell(cell, &grid, &cal), CellMetrics::from_fleet(&direct));
+        .run_with(&crate::cluster::fleet::RunOptions::default())
+        .unwrap()
+        .metrics;
+        assert_eq!(
+            run_cell(cell, &grid, &cal, &SweepOptions::default()).0,
+            CellMetrics::from_fleet(&direct)
+        );
     }
 
     #[test]
     fn thread_count_does_not_change_results() {
         let grid = tiny_grid();
         let cal = Calibration::paper();
-        let one = run_sweep(&grid, &cal, 1).unwrap();
-        let many = run_sweep(&grid, &cal, 4).unwrap();
+        let one = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
+        let many = run_sweep(&grid, &cal, &SweepOptions::with_threads(4)).unwrap();
         assert_eq!(one.cells, many.cells);
         assert_eq!(one.cells.len(), grid.cell_count());
         // Workers are capped by the cell count.
@@ -383,13 +393,14 @@ mod tests {
         let grid = tiny_grid();
         let cal = Calibration::paper();
         let cell = &grid.cells().unwrap()[0];
-        let plain = run_cell(cell, &grid, &cal);
+        let (plain, no_text) = run_cell(cell, &grid, &cal, &SweepOptions::default());
+        assert!(no_text.is_none());
         let opts = SweepOptions {
             trace: true,
             sample_interval_s: Some(5.0),
             ..SweepOptions::default()
         };
-        let (traced, text) = run_cell_traced(cell, &grid, &cal, &opts);
+        let (traced, text) = run_cell(cell, &grid, &cal, &opts);
         assert_eq!(plain, traced);
         assert!(text.is_some());
     }
@@ -398,20 +409,22 @@ mod tests {
     fn sample_interval_without_trace_is_rejected() {
         let grid = tiny_grid();
         let opts = SweepOptions {
+            threads: 1,
             sample_interval_s: Some(5.0),
             ..SweepOptions::default()
         };
-        let err = run_sweep_opts(&grid, &Calibration::paper(), 1, &opts)
+        let err = run_sweep(&grid, &Calibration::paper(), &opts)
             .err()
             .expect("sampling without tracing must be rejected");
         assert!(err.to_string().contains("requires trace"), "{err}");
 
         let bad = SweepOptions {
+            threads: 1,
             trace: true,
             sample_interval_s: Some(0.0),
             ..SweepOptions::default()
         };
-        assert!(run_sweep_opts(&grid, &Calibration::paper(), 1, &bad).is_err());
+        assert!(run_sweep(&grid, &Calibration::paper(), &bad).is_err());
     }
 
     #[test]
@@ -419,23 +432,24 @@ mod tests {
         let grid = tiny_grid();
         let cal = Calibration::paper();
         let opts = SweepOptions {
+            threads: 1,
             trace: true,
             ..SweepOptions::default()
         };
-        let one = run_sweep_opts(&grid, &cal, 1, &opts).unwrap();
-        let many = run_sweep_opts(&grid, &cal, 4, &opts).unwrap();
+        let one = run_sweep(&grid, &cal, &opts).unwrap();
+        let many = run_sweep(&grid, &cal, &SweepOptions { threads: 4, ..opts.clone() }).unwrap();
         assert_eq!(one.traces.len(), one.cells.len());
         assert!(one.traces.iter().all(|t| t.is_some()));
         assert_eq!(one.traces, many.traces);
         // Default options capture nothing.
-        let plain = run_sweep(&grid, &cal, 1).unwrap();
+        let plain = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
         assert!(plain.traces.iter().all(|t| t.is_none()));
     }
 
     #[test]
     fn all_cells_execute_exactly_once() {
         let grid = tiny_grid();
-        let run = run_sweep(&grid, &Calibration::paper(), 3).unwrap();
+        let run = run_sweep(&grid, &Calibration::paper(), &SweepOptions::with_threads(3)).unwrap();
         let indices: Vec<usize> = run.cells.iter().map(|c| c.spec.index).collect();
         assert_eq!(indices, (0..grid.cell_count()).collect::<Vec<_>>());
         // Every cell accounted for every job of its trace.

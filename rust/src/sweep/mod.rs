@@ -20,7 +20,6 @@ pub mod engine;
 pub mod grid;
 
 pub use engine::{
-    default_threads, run_cell, run_cell_traced, run_sweep, run_sweep_opts, CellMetrics,
-    CellOutcome, SweepOptions, SweepRun,
+    default_threads, run_cell, run_sweep, CellMetrics, CellOutcome, SweepOptions, SweepRun,
 };
 pub use grid::{CellSpec, GridSpec, MixSpec};

@@ -10,7 +10,7 @@
 //! *static* partition is precisely that it cannot adapt to a flood of
 //! small jobs, while MPS packs seven co-runners per GPU.)
 
-use migsim::cluster::fleet::{FleetConfig, FleetSim};
+use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use migsim::cluster::metrics::FleetMetrics;
 use migsim::cluster::policy::{AdmissionMode, MigStatic, PolicyKind};
 use migsim::cluster::queue::QueueDiscipline;
@@ -51,7 +51,10 @@ fn run_policy_with(
         admission: AdmissionMode::Strict,
         ..FleetConfig::default()
     };
-    FleetSim::new(config, kind.build(&cal, 7, None), cal, trace).run()
+    FleetSim::new(config, kind.build(&cal, 7, None), cal, trace)
+        .run_with(&RunOptions::default())
+        .unwrap()
+        .metrics
 }
 
 /// Saturating heterogeneous stream on the paper's §3.4 arrival mix.
@@ -203,7 +206,10 @@ fn oversubscribed_admission_is_deterministic_and_structured() {
             admission: AdmissionMode::Oversubscribe,
             ..FleetConfig::default()
         };
-        FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace).run()
+        FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace)
+            .run_with(&RunOptions::default())
+            .unwrap()
+            .metrics
     };
     let a = run();
     assert_eq!(a.finished() + a.oom_killed(), 30, "{}", a.summary());
@@ -259,7 +265,10 @@ fn run_hol(queue: QueueDiscipline) -> FleetMetrics {
         ..FleetConfig::default()
     };
     let policy = Box::new(MigStatic::new(Some(partition), None));
-    FleetSim::new(config, policy, Calibration::paper(), &head_of_line_trace()).run()
+    FleetSim::new(config, policy, Calibration::paper(), &head_of_line_trace())
+        .run_with(&RunOptions::default())
+        .unwrap()
+        .metrics
 }
 
 fn mean_small_wait(m: &FleetMetrics) -> f64 {
@@ -339,7 +348,10 @@ fn ranking_still_holds_under_every_queue_discipline() {
                 queue,
                 ..FleetConfig::default()
             };
-            FleetSim::new(config, kind.build(&cal, 7, None), cal, &trace).run()
+            FleetSim::new(config, kind.build(&cal, 7, None), cal, &trace)
+                .run_with(&RunOptions::default())
+                .unwrap()
+                .metrics
         };
         let mps = run_q(PolicyKind::Mps);
         let mig = run_q(PolicyKind::MigStatic);

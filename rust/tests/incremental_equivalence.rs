@@ -1,0 +1,163 @@
+//! Incremental-equivalence property tests.
+//!
+//! The incremental engine never recomputes what an event did not
+//! touch: the fleet view handed to policies is patched per dirty GPU,
+//! per-GPU running counts are maintained by placement/finish, and the
+//! reservation caches are invalidated by epoch. `RunOptions {
+//! verify_incremental: true }` turns on the engine's internal audit —
+//! after **every** popped event it rebuilds all of that state from
+//! scratch and asserts the cached copies are equal.
+//!
+//! These tests drive that audit across randomized scenarios (policy ×
+//! queue × interference × admission × fleet shape × load), and pin the
+//! second half of the contract: the audit itself is an observer, so
+//! metrics with verification on are bit-identical to a plain run.
+
+use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
+use migsim::cluster::policy::{AdmissionMode, PolicyKind};
+use migsim::cluster::queue::QueueDiscipline;
+use migsim::cluster::trace::{poisson_trace, TraceConfig};
+use migsim::simgpu::calibration::Calibration;
+use migsim::simgpu::interference::InterferenceModel;
+use migsim::util::prop::forall_ok;
+use migsim::util::rng::Rng;
+
+/// One randomized scenario: everything that shapes the event stream.
+#[derive(Debug, Clone, Copy)]
+struct Case {
+    policy: PolicyKind,
+    queue: QueueDiscipline,
+    interference: InterferenceModel,
+    admission: AdmissionMode,
+    a100s: u32,
+    a30s: u32,
+    jobs: u32,
+    mean_interarrival_s: f64,
+    mix: [f64; 3],
+    probe_window_s: f64,
+    seed: u64,
+}
+
+fn random_case(r: &mut Rng) -> Case {
+    let policy = PolicyKind::ALL[r.below(PolicyKind::ALL.len() as u64) as usize];
+    let queue = QueueDiscipline::ALL[r.below(QueueDiscipline::ALL.len() as u64) as usize];
+    let interference = match r.below(3) {
+        0 => InterferenceModel::Off,
+        1 => InterferenceModel::Linear,
+        _ => InterferenceModel::Roofline,
+    };
+    let admission = if r.below(3) == 0 {
+        AdmissionMode::Oversubscribe
+    } else {
+        AdmissionMode::Strict
+    };
+    // Weights need not be normalized; bias toward smalls so saturated
+    // cases still finish quickly.
+    let mix = [0.5 + r.next_f64(), r.next_f64() * 0.5, r.next_f64() * 0.3];
+    Case {
+        policy,
+        queue,
+        interference,
+        admission,
+        a100s: 1 + r.below(2) as u32,
+        a30s: r.below(2) as u32,
+        jobs: 10 + r.below(21) as u32,
+        mean_interarrival_s: 0.05 + r.next_f64() * 2.0,
+        mix,
+        probe_window_s: 0.1 + r.next_f64() * 30.0,
+        seed: 1 + r.below(10_000),
+    }
+}
+
+/// Run one case and return the canonical metrics JSON.
+fn run_case(c: &Case, verify: bool) -> String {
+    let cal = Calibration::paper();
+    let trace = poisson_trace(&TraceConfig {
+        jobs: c.jobs,
+        mean_interarrival_s: c.mean_interarrival_s,
+        mix: c.mix,
+        epochs: Some(1),
+        seed: c.seed,
+    });
+    let config = FleetConfig {
+        a100s: c.a100s,
+        a30s: c.a30s,
+        interference: c.interference,
+        admission: c.admission,
+        queue: c.queue,
+        probe_window_s: c.probe_window_s,
+        ..FleetConfig::default()
+    };
+    let opts = RunOptions {
+        verify_incremental: verify,
+        ..RunOptions::default()
+    };
+    FleetSim::new(config, c.policy.build(&cal, 7, None), cal, &trace)
+        .run_with(&opts)
+        .unwrap()
+        .metrics
+        .to_json()
+        .to_string_pretty()
+}
+
+/// The headline property: the per-event audit passes (no cached state
+/// ever drifts from a from-scratch recomputation) across randomized
+/// scenarios, and turning the audit on changes nothing observable.
+#[test]
+fn incremental_state_matches_from_scratch_after_every_event() {
+    forall_ok(0xCACE_0007, 40, random_case, |c| -> Result<(), String> {
+        // `verify: true` asserts internally after every popped event;
+        // a drift panics with the offending GPU and field.
+        let audited = run_case(c, true);
+        let plain = run_case(c, false);
+        if audited != plain {
+            return Err("the verification pass perturbed the metrics".to_string());
+        }
+        Ok(())
+    });
+}
+
+/// Oversubscription is the cache-hostile admission mode (placements
+/// OOM-kill residents, MIG fallback consults the live policy): drive
+/// it through every policy × queue on a saturating heavy mix with the
+/// audit on, and check conservation while at it.
+#[test]
+fn oversubscribed_saturation_keeps_incremental_state_exact() {
+    let cal = Calibration::paper();
+    let trace = poisson_trace(&TraceConfig {
+        jobs: 14,
+        mean_interarrival_s: 0.05,
+        mix: [0.2, 0.2, 0.6],
+        epochs: Some(1),
+        seed: 11,
+    });
+    for policy in PolicyKind::ALL {
+        for queue in QueueDiscipline::ALL {
+            for interference in [InterferenceModel::Off, InterferenceModel::Roofline] {
+                let config = FleetConfig {
+                    a100s: 1,
+                    a30s: 0,
+                    interference,
+                    admission: AdmissionMode::Oversubscribe,
+                    queue,
+                    ..FleetConfig::default()
+                };
+                let opts = RunOptions {
+                    verify_incremental: true,
+                    ..RunOptions::default()
+                };
+                let m = FleetSim::new(config, policy.build(&cal, 7, None), cal, &trace)
+                    .run_with(&opts)
+                    .unwrap()
+                    .metrics;
+                assert_eq!(
+                    m.finished() + m.rejected() + m.oom_killed() + m.unserved(),
+                    trace.len(),
+                    "{policy}/{queue}/{}: {}",
+                    interference.name(),
+                    m.summary()
+                );
+            }
+        }
+    }
+}

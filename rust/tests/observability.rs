@@ -7,7 +7,7 @@
 //! are themselves deterministic (same seed -> same bytes, any thread
 //! count).
 
-use migsim::cluster::fleet::{FleetConfig, FleetSim};
+use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use migsim::cluster::policy::PolicyKind;
 use migsim::cluster::queue::QueueDiscipline;
 use migsim::cluster::trace::{poisson_trace, TraceConfig};
@@ -15,7 +15,7 @@ use migsim::report::sweep::summary_json_text;
 use migsim::report::trace::{trace_csv_text, trace_json_text, validate_trace};
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::InterferenceModel;
-use migsim::sweep::engine::{run_sweep, run_sweep_opts, SweepOptions};
+use migsim::sweep::engine::{run_sweep, SweepOptions};
 use migsim::sweep::grid::{GridSpec, MixSpec};
 use migsim::util::json::Json;
 
@@ -55,12 +55,16 @@ fn sim(kind: PolicyKind, queue: QueueDiscipline) -> FleetSim {
 fn tracing_and_sampling_leave_metrics_bit_identical() {
     for kind in PolicyKind::ALL {
         for queue in [QueueDiscipline::Fifo, QueueDiscipline::BackfillEasy] {
-            let plain = sim(kind, queue).run();
+            let plain = sim(kind, queue).run_with(&RunOptions::default()).unwrap().metrics;
 
-            let mut traced = sim(kind, queue);
-            traced.enable_tracing();
-            traced.enable_sampling(5.0).unwrap();
-            let (mut observed, log) = traced.run_traced();
+            let out = sim(kind, queue)
+                .run_with(&RunOptions {
+                    trace: true,
+                    sample_interval_s: Some(5.0),
+                    ..RunOptions::default()
+                })
+                .unwrap();
+            let (mut observed, log) = (out.metrics, out.trace);
             let log = log.expect("tracing was enabled");
 
             assert!(observed.timeline.is_some(), "{kind}: sampled run must summarize");
@@ -82,7 +86,10 @@ fn tracing_and_sampling_leave_metrics_bit_identical() {
 /// JSON keeps the exact pre-observability bytes.
 #[test]
 fn untraced_runs_carry_no_timeline() {
-    let m = sim(PolicyKind::Mps, QueueDiscipline::Fifo).run();
+    let m = sim(PolicyKind::Mps, QueueDiscipline::Fifo)
+        .run_with(&RunOptions::default())
+        .unwrap()
+        .metrics;
     assert!(m.timeline.is_none());
     assert!(Json::parse(&m.to_json().to_string_pretty())
         .unwrap()
@@ -94,11 +101,18 @@ fn untraced_runs_carry_no_timeline() {
 /// the makespan cannot stretch to the next sample tick.
 #[test]
 fn sampling_does_not_stretch_the_makespan() {
-    let plain = sim(PolicyKind::MigStatic, QueueDiscipline::Fifo).run();
-    let mut sampled = sim(PolicyKind::MigStatic, QueueDiscipline::Fifo);
+    let plain = sim(PolicyKind::MigStatic, QueueDiscipline::Fifo)
+        .run_with(&RunOptions::default())
+        .unwrap()
+        .metrics;
     // An interval far longer than the run: at most one tick fires.
-    sampled.enable_sampling(1e6).unwrap();
-    let (m, _) = sampled.run_traced();
+    let m = sim(PolicyKind::MigStatic, QueueDiscipline::Fifo)
+        .run_with(&RunOptions {
+            sample_interval_s: Some(1e6),
+            ..RunOptions::default()
+        })
+        .unwrap()
+        .metrics;
     assert_eq!(plain.makespan_s.to_bits(), m.makespan_s.to_bits());
 }
 
@@ -107,10 +121,14 @@ fn sampling_does_not_stretch_the_makespan() {
 #[test]
 fn exported_trace_validates_and_is_deterministic() {
     let run_once = || {
-        let mut s = sim(PolicyKind::MigMiso, QueueDiscipline::BackfillEasy);
-        s.enable_tracing();
-        s.enable_sampling(10.0).unwrap();
-        let (m, log) = s.run_traced();
+        let out = sim(PolicyKind::MigMiso, QueueDiscipline::BackfillEasy)
+            .run_with(&RunOptions {
+                trace: true,
+                sample_interval_s: Some(10.0),
+                ..RunOptions::default()
+            })
+            .unwrap();
+        let (m, log) = (out.metrics, out.trace);
         let log = log.unwrap();
         (trace_json_text(&log, &m), trace_csv_text(&log), log.records.len())
     };
@@ -141,10 +159,14 @@ fn exported_trace_validates_and_is_deterministic() {
 /// utilization stays in the unit range and the series align per tick.
 #[test]
 fn sampled_timelines_are_well_formed() {
-    let mut s = sim(PolicyKind::Mps, QueueDiscipline::Fifo);
-    s.enable_tracing();
-    s.enable_sampling(2.0).unwrap();
-    let (m, log) = s.run_traced();
+    let out = sim(PolicyKind::Mps, QueueDiscipline::Fifo)
+        .run_with(&RunOptions {
+            trace: true,
+            sample_interval_s: Some(2.0),
+            ..RunOptions::default()
+        })
+        .unwrap();
+    let (m, log) = (out.metrics, out.trace);
     let tl = log.unwrap().timeline.expect("sampling was on");
     assert!(tl.len() > 1, "saturated run must tick more than once");
     assert_eq!(tl.queue_depth.len(), tl.len());
@@ -185,13 +207,14 @@ fn sweep_summary_bytes_ignore_observability() {
         probe_window_s: 15.0,
     };
     let cal = cal();
-    let plain = run_sweep(&grid, &cal, 1).unwrap();
+    let plain = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
     let opts = SweepOptions {
+        threads: 2,
         trace: true,
         sample_interval_s: Some(5.0),
         ..SweepOptions::default()
     };
-    let traced = run_sweep_opts(&grid, &cal, 2, &opts).unwrap();
+    let traced = run_sweep(&grid, &cal, &opts).unwrap();
     assert_eq!(
         summary_json_text(&grid, &plain, &cal),
         summary_json_text(&grid, &traced, &cal),

@@ -26,7 +26,7 @@
 //! * the PR 6 observers (event trace + sampler) never perturb a
 //!   simulated outcome, for any policy.
 
-use migsim::cluster::fleet::{FleetConfig, FleetSim};
+use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use migsim::cluster::metrics::FleetMetrics;
 use migsim::cluster::policy::{AdmissionMode, MigStatic, PolicyKind};
 use migsim::cluster::queue::QueueDiscipline;
@@ -84,7 +84,17 @@ fn run_scenario(s: Scenario, trace: &[JobSpec]) -> FleetMetrics {
         admission: AdmissionMode::Strict,
         ..FleetConfig::default()
     };
-    FleetSim::new(config, s.policy.build(&cal, 7, None), cal, trace).run()
+    // `verify_incremental` audits the cached engine state (fleet view,
+    // run counts, reservation caches) against a from-scratch rebuild
+    // after every event, across the entire invariant grid.
+    let opts = RunOptions {
+        verify_incremental: true,
+        ..RunOptions::default()
+    };
+    FleetSim::new(config, s.policy.build(&cal, 7, None), cal, trace)
+        .run_with(&opts)
+        .unwrap()
+        .metrics
 }
 
 fn is_pure_mig(policy: PolicyKind) -> bool {
@@ -190,10 +200,14 @@ fn tracing_is_invisible_to_every_policy() {
             admission: AdmissionMode::Strict,
             ..FleetConfig::default()
         };
-        let mut sim = FleetSim::new(config, policy.build(&cal, 7, None), cal, &trace);
-        sim.enable_tracing();
-        sim.enable_sampling(5.0).unwrap();
-        let (mut observed, log) = sim.run_traced();
+        let out = FleetSim::new(config, policy.build(&cal, 7, None), cal, &trace)
+            .run_with(&RunOptions {
+                trace: true,
+                sample_interval_s: Some(5.0),
+                ..RunOptions::default()
+            })
+            .unwrap();
+        let (mut observed, log) = (out.metrics, out.trace);
         assert!(log.is_some(), "{policy}: tracing was enabled");
         observed.timeline = None;
         assert_eq!(
@@ -238,7 +252,10 @@ fn backfilling_never_delays_the_blocked_head() {
             ..FleetConfig::default()
         };
         let policy = Box::new(MigStatic::new(Some(partition.clone()), None));
-        FleetSim::new(config, policy, Calibration::paper(), &trace).run()
+        FleetSim::new(config, policy, Calibration::paper(), &trace)
+            .run_with(&RunOptions::default())
+            .unwrap()
+            .metrics
     };
     let fifo = run_q(QueueDiscipline::Fifo);
     assert_eq!(fifo.backfilled, 0);
@@ -270,7 +287,10 @@ fn same_instant_finish_outranks_the_arrival_for_every_shared_policy() {
                 admission: AdmissionMode::Oversubscribe,
                 ..FleetConfig::default()
             };
-            FleetSim::new(config, policy.build(&cal, 7, None), cal, trace).run()
+            FleetSim::new(config, policy.build(&cal, 7, None), cal, trace)
+                .run_with(&RunOptions::default())
+                .unwrap()
+                .metrics
         };
         // Phase 1: four larges fill the usable framebuffer exactly.
         let base: Vec<JobSpec> = (0..4)
@@ -329,7 +349,10 @@ fn probe_knobs_are_inert_for_non_hybrid_policies() {
                 migration_cost_s,
                 ..FleetConfig::default()
             };
-            FleetSim::new(config, policy.build(&cal, 7, None), cal, &trace).run()
+            FleetSim::new(config, policy.build(&cal, 7, None), cal, &trace)
+                .run_with(&RunOptions::default())
+                .unwrap()
+                .metrics
         };
         let a = run_with(5.0, 0.0);
         let b = run_with(500.0, 50.0);

@@ -9,7 +9,7 @@ use migsim::cluster::queue::QueueDiscipline;
 use migsim::report::sweep::summary_json_text;
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::InterferenceModel;
-use migsim::sweep::engine::run_sweep;
+use migsim::sweep::engine::{run_sweep, SweepOptions};
 use migsim::sweep::grid::{GridSpec, MixSpec};
 use migsim::util::prop::forall_ok;
 use migsim::util::rng::Rng;
@@ -69,10 +69,12 @@ fn summary_json_is_byte_identical_at_1_2_and_8_threads() {
         5,
         random_grid,
         |grid| -> Result<(), String> {
-            let reference = run_sweep(grid, &cal, 1).map_err(|e| e.to_string())?;
+            let reference = run_sweep(grid, &cal, &SweepOptions::with_threads(1))
+                .map_err(|e| e.to_string())?;
             let expected = summary_json_text(grid, &reference, &cal);
             for threads in [2usize, 8] {
-                let run = run_sweep(grid, &cal, threads).map_err(|e| e.to_string())?;
+                let run = run_sweep(grid, &cal, &SweepOptions::with_threads(threads))
+                    .map_err(|e| e.to_string())?;
                 let got = summary_json_text(grid, &run, &cal);
                 if got != expected {
                     return Err(format!(
@@ -93,8 +95,8 @@ fn quick_bench_grid_is_thread_count_invariant() {
     // not depend on the runner's core count.
     let cal = Calibration::paper();
     let grid = GridSpec::quick();
-    let one = run_sweep(&grid, &cal, 1).unwrap();
-    let eight = run_sweep(&grid, &cal, 8).unwrap();
+    let one = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
+    let eight = run_sweep(&grid, &cal, &SweepOptions::with_threads(8)).unwrap();
     assert_eq!(
         summary_json_text(&grid, &one, &cal),
         summary_json_text(&grid, &eight, &cal)

@@ -14,7 +14,7 @@ use migsim::cluster::queue::QueueDiscipline;
 use migsim::report::sweep::{summary_json_text, validate_summary, write_sweep};
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::InterferenceModel;
-use migsim::sweep::engine::run_sweep;
+use migsim::sweep::engine::{run_sweep, SweepOptions};
 use migsim::sweep::grid::{GridSpec, MixSpec};
 use migsim::util::json::Json;
 use migsim::util::tempdir::TempDir;
@@ -70,7 +70,7 @@ fn check_golden(name: &str, actual: &str) {
 fn two_cell_sweep_artifacts_match_the_committed_fixtures() {
     let grid = golden_grid();
     let cal = Calibration::paper();
-    let run = run_sweep(&grid, &cal, 1).expect("valid grid");
+    let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).expect("valid grid");
 
     // The string path and the file path must agree byte-for-byte —
     // and both must validate under the current schema.
@@ -92,7 +92,7 @@ fn two_cell_sweep_artifacts_match_the_committed_fixtures() {
 
     // A sweep at 8 threads produces the identical bytes (the fixture
     // is thread-count-independent by construction).
-    let run8 = run_sweep(&grid, &cal, 8).expect("valid grid");
+    let run8 = run_sweep(&grid, &cal, &SweepOptions::with_threads(8)).expect("valid grid");
     assert_eq!(summary, summary_json_text(&grid, &run8, &cal));
 
     check_golden("sweep_summary.json", &summary);
