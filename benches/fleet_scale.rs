@@ -36,6 +36,7 @@ fn churn_trace(jobs: u32, mean_interarrival_s: f64) -> Vec<JobSpec> {
         mix: [1.0, 0.0, 0.0],
         epochs: Some(1),
         seed: migsim::util::rng::resolve_seed(None).expect("valid MIGSIM_SEED"),
+        ..TraceConfig::default()
     })
 }
 
@@ -109,6 +110,7 @@ fn main() {
         mix: [0.6, 0.3, 0.1],
         epochs: Some(1),
         seed: migsim::util::rng::resolve_seed(None).expect("valid MIGSIM_SEED"),
+        ..TraceConfig::default()
     });
 
     let mut report = BenchReport::new("fleet_scale");

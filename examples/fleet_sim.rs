@@ -23,6 +23,7 @@ fn main() {
         mix: [0.6, 0.3, 0.1],
         epochs: Some(1),
         seed: migsim::util::rng::resolve_seed(None).expect("valid MIGSIM_SEED"),
+        ..TraceConfig::default()
     });
     println!(
         "fleet: 4x A100 | trace: {} jobs (60% small / 30% medium / 10% large), \

@@ -36,6 +36,7 @@ fn main() {
         cap: 7,
         admission: AdmissionMode::Strict,
         probe_window_s: 15.0,
+        ..GridSpec::default_grid()
     };
     let cal = Calibration::paper();
     let run = run_sweep(&grid, &cal, &SweepOptions::default()).expect("valid grid");

@@ -54,7 +54,9 @@
 //! event; `rust/tests/incremental_equivalence.rs` sweeps the grid).
 
 use super::event::{EventKind, JobId, Timeline};
-use super::metrics::{FleetMetrics, GpuRecord, JobOutcome, JobRecord};
+use super::metrics::{
+    percentile, FleetMetrics, FleetServeSummary, GpuRecord, JobOutcome, JobRecord, ServeOutcome,
+};
 use super::policy::{
     fits_instance, usable_bytes, AdmissionMode, Decision, FleetView, GpuView, SchedulingPolicy,
     ShareModel,
@@ -74,6 +76,7 @@ use crate::simgpu::spec::{GpuSpec, A100, A30};
 use crate::simgpu::timeslice::timeslice_step;
 use crate::telemetry::dcgm;
 use crate::telemetry::timeline::{FleetTimeline, TraceKind, TraceLog};
+use crate::workload::arrivals::request_offsets;
 use crate::workload::memory::GpuMemoryPlan;
 use crate::workload::pipeline::PipelineModel;
 use crate::workload::resnet;
@@ -171,6 +174,12 @@ pub struct FleetConfig {
     /// probe region into its MIG slice (checkpoint/restore of the
     /// training process). Inert for non-hybrid policies.
     pub migration_cost_s: f64,
+    /// Bound on the backfill candidate scan per placement pass: at most
+    /// this many jobs behind a blocked head are offered before the pass
+    /// gives up. `None` (the default) scans the whole tail — exact, and
+    /// bit-identical to pre-cap builds — at O(queue) cost per pass
+    /// under deep congestion.
+    pub backfill_scan_cap: Option<usize>,
 }
 
 impl Default for FleetConfig {
@@ -185,6 +194,7 @@ impl Default for FleetConfig {
             queue: QueueDiscipline::Fifo,
             probe_window_s: 15.0,
             migration_cost_s: 1.0,
+            backfill_scan_cap: None,
         }
     }
 }
@@ -231,6 +241,67 @@ struct GpuState {
     running: u32,
 }
 
+/// Request-stream state of one serving job: the open-loop arrivals
+/// (absolute times, anchored at the job's trace arrival — requests pile
+/// up while the job queues) and a single-server drain clock. Requests
+/// are scored lazily at GPU-update boundaries, between which the
+/// per-request service time is constant, so no per-request events ever
+/// enter the timeline.
+#[derive(Debug, Clone)]
+struct ServeState {
+    /// Absolute request arrival times, sorted.
+    reqs: Vec<f64>,
+    /// Next undrained request (everything before it has a latency).
+    cursor: usize,
+    /// When the replica's single server frees up: requests start at
+    /// `max(arrival, server_free_s)` and hold it for one service time.
+    server_free_s: f64,
+    /// Completed-request latencies (ms), in completion order.
+    latencies_ms: Vec<f64>,
+}
+
+impl ServeState {
+    /// Drain every request that completes by `now` at per-request
+    /// service time `svc_s`, recording latencies. Returns the number
+    /// drained. In-flight requests at a rate change are re-priced
+    /// wholly at the new rate (the drain runs before every re-rate, so
+    /// only the one boundary request is approximated).
+    fn drain(&mut self, svc_s: f64, now: f64) -> u64 {
+        let before = self.cursor;
+        while self.cursor < self.reqs.len() {
+            let req_t = self.reqs[self.cursor];
+            let start = req_t.max(self.server_free_s);
+            let done = start + svc_s;
+            if done > now {
+                break;
+            }
+            self.server_free_s = done;
+            self.latencies_ms.push((done - req_t) * 1000.0);
+            self.cursor += 1;
+        }
+        (self.cursor - before) as u64
+    }
+
+    /// Read-only twin of [`ServeState::drain`]: how many requests
+    /// *would* complete by `t`, mutating nothing — the sampling
+    /// projection (mirrors `projected_accum` vs `update_gpu`).
+    fn drained_by(&self, svc_s: f64, t: f64) -> u64 {
+        let mut cursor = self.cursor;
+        let mut free = self.server_free_s;
+        let mut n = 0u64;
+        while cursor < self.reqs.len() {
+            let done = self.reqs[cursor].max(free) + svc_s;
+            if done > t {
+                break;
+            }
+            free = done;
+            cursor += 1;
+            n += 1;
+        }
+        n
+    }
+}
+
 #[derive(Debug, Clone)]
 struct JobState {
     spec: JobSpec,
@@ -269,6 +340,8 @@ struct JobState {
     rejected: Option<String>,
     /// Oversubscribed placement crashed the process at startup.
     oomed: Option<String>,
+    /// Request-stream state; `Some` iff the spec is a serve job.
+    serve: Option<ServeState>,
 }
 
 /// Options for [`FleetSim::run_with`], the single run entry point.
@@ -312,6 +385,10 @@ pub struct EngineStats {
     pub reservation_refreshes: u64,
     /// Per-GPU reservation-candidate queries served from a clean cache.
     pub reservation_cache_hits: u64,
+    /// Backfill candidates offered to the policy past a blocked head.
+    /// [`FleetConfig::backfill_scan_cap`] bounds the per-pass share of
+    /// these — the deep-congestion O(queue) guard.
+    pub backfill_candidates_scanned: u64,
 }
 
 /// Cached earliest-start candidates of one GPU for one workload size
@@ -369,6 +446,10 @@ pub struct FleetSim {
     contention: ContentionModel,
     gpus: Vec<GpuState>,
     jobs: Vec<JobState>,
+    /// Any serve job in the trace? Gates every serving-only surface
+    /// (request sampling, the `serving` metrics block), so training
+    /// runs stay bit-identical to pre-serving builds.
+    has_serving: bool,
     /// Per-GPU jobs mid-migration: pulled out of the probe region when
     /// a commit started, placed into the new slices when the
     /// repartition event lands.
@@ -481,6 +562,26 @@ impl FleetSim {
                 "job {i}: arrival must be finite and >= 0, got {}",
                 spec.arrival_s
             );
+            if let Some(s) = spec.serve() {
+                anyhow::ensure!(
+                    s.duration_s.is_finite() && s.duration_s > 0.0,
+                    "job {i}: serve duration must be finite and > 0, got {}",
+                    s.duration_s
+                );
+                anyhow::ensure!(
+                    s.rate_rps.is_finite() && s.rate_rps > 0.0,
+                    "job {i}: serve rate must be finite and > 0, got {}",
+                    s.rate_rps
+                );
+                anyhow::ensure!(
+                    s.slo_ms.is_finite() && s.slo_ms > 0.0,
+                    "job {i}: SLO must be finite and > 0, got {}",
+                    s.slo_ms
+                );
+            }
+        }
+        if let Some(cap) = config.backfill_scan_cap {
+            anyhow::ensure!(cap > 0, "backfill scan cap must be > 0");
         }
         let share_model = policy.share_model();
         let kinds = std::iter::repeat_n(GpuKind::A100, config.a100s as usize)
@@ -506,10 +607,30 @@ impl FleetSim {
             .iter()
             .map(|spec| {
                 let w = Workload::paper(spec.workload);
+                // A serve job's whole request stream is materialized
+                // up front (deterministic in its derived seed) and
+                // anchored at the trace arrival: requests keep landing
+                // while the job waits in the admission queue.
+                let serve = spec.serve().map(|s| ServeState {
+                    reqs: request_offsets(s.shape, s.rate_rps, s.duration_s, s.seed)
+                        .into_iter()
+                        .map(|o| spec.arrival_s + o)
+                        .collect(),
+                    cursor: 0,
+                    server_free_s: 0.0,
+                    latencies_ms: Vec::new(),
+                });
+                // Serve jobs hold a wall-clock lease instead of a step
+                // budget; `remaining_steps` stays inert at 0.
+                let remaining_steps = if serve.is_some() {
+                    0.0
+                } else {
+                    (w.steps_per_epoch() * spec.epochs as u64) as f64
+                };
                 JobState {
                     spec: *spec,
                     floor_bytes: GpuMemoryPlan::paper(spec.workload).floor_bytes,
-                    remaining_steps: (w.steps_per_epoch() * spec.epochs as u64) as f64,
+                    remaining_steps,
                     per_step: StepStats::default(),
                     device_frac: 0.0,
                     peak_slowdown: 1.0,
@@ -525,6 +646,7 @@ impl FleetSim {
                     finish_s: None,
                     rejected: None,
                     oomed: None,
+                    serve,
                 }
             })
             .collect();
@@ -539,6 +661,7 @@ impl FleetSim {
             config.migration_cost_s
         );
         let hybrid = policy.probe_cap().is_some();
+        let has_serving = jobs.iter().any(|j| j.serve.is_some());
         let n_gpus = gpus.len();
         let mut sim = FleetSim {
             config,
@@ -549,6 +672,7 @@ impl FleetSim {
             contention: ContentionModel::new(config.interference),
             gpus,
             jobs,
+            has_serving,
             migrating: vec![Vec::new(); n_gpus],
             migrations: 0,
             queue: JobQueue::new(config.queue),
@@ -1007,7 +1131,13 @@ impl FleetSim {
             };
             let mut reservations = vec![head_res];
             let mut progressed = false;
-            for id in self.queue.behind_head() {
+            // The candidate walk is the O(queue) term of a pass: under
+            // deep congestion, `backfill_scan_cap` bounds how far past
+            // the head one pass looks (candidates beyond it wait for
+            // the next event's pass).
+            let cap = self.config.backfill_scan_cap.unwrap_or(usize::MAX);
+            for id in self.queue.behind_head().into_iter().take(cap) {
+                self.stats.backfill_candidates_scanned += 1;
                 match self.try_backfill(id, &mut reservations, conservative) {
                     // Placement/rejection changed the fleet or queue
                     // state: restart the scan with fresh reservations.
@@ -1499,6 +1629,11 @@ impl FleetSim {
     /// jobs already carry it inside `remaining_steps`).
     fn est_from(&self, id: JobId, stats: StepStats) -> f64 {
         let j = &self.jobs[id];
+        // A serving replica holds its placement for the full lease
+        // however fast it drains requests — rate-independent and exact.
+        if let Some(s) = j.spec.serve() {
+            return s.duration_s;
+        }
         let overhead = if j.start_s.is_none() {
             j.spec.epochs as f64 * self.cal.epoch_overhead_s
         } else {
@@ -1658,6 +1793,13 @@ impl FleetSim {
         if stats.wall_s > 0.0 {
             self.jobs[id].remaining_steps += self.config.migration_cost_s / stats.wall_s;
         }
+        // A migrated replica was down through the repartition and pays
+        // the checkpoint/restore cost before answering again — requests
+        // that landed meanwhile queue up behind the restart.
+        let restart_s = self.now + self.config.migration_cost_s;
+        if let Some(sv) = self.jobs[id].serve.as_mut() {
+            sv.server_free_s = sv.server_free_s.max(restart_s);
+        }
         self.migrations += 1;
         self.jobs[id].cur_slowdown = 1.0;
         self.place_slot(id, gi, si);
@@ -1756,20 +1898,39 @@ impl FleetSim {
     /// Commit a (re)placement: record start, apply the new rate, bump
     /// the generation and schedule the (new) finish event.
     fn start_job(&mut self, id: JobId, gi: usize, slot: Option<usize>, stats: StepStats) {
+        let now = self.now;
+        let epoch_overhead_s = self.cal.epoch_overhead_s;
         let j = &mut self.jobs[id];
+        let serve_spec = j.spec.serve().copied();
         j.gpu = Some(gi);
         j.slot = slot;
         if j.start_s.is_none() {
-            j.start_s = Some(self.now);
-            // Fold the fixed per-epoch framework overhead in as
-            // equivalent steps at the placement-time rate (exact for
-            // MIG slots, whose rate never changes; a negligible
-            // approximation under co-runner churn).
-            j.remaining_steps += j.spec.epochs as f64 * self.cal.epoch_overhead_s / stats.wall_s;
+            j.start_s = Some(now);
+            match serve_spec {
+                // The replica serves only once it is up: requests that
+                // piled up while the job queued start draining now.
+                Some(_) => {
+                    if let Some(sv) = j.serve.as_mut() {
+                        sv.server_free_s = now;
+                    }
+                }
+                // Fold the fixed per-epoch framework overhead in as
+                // equivalent steps at the placement-time rate (exact
+                // for MIG slots, whose rate never changes; a negligible
+                // approximation under co-runner churn).
+                None => {
+                    j.remaining_steps += j.spec.epochs as f64 * epoch_overhead_s / stats.wall_s;
+                }
+            }
         }
         j.per_step = stats;
         j.gen += 1;
-        let finish = self.now + j.remaining_steps * stats.wall_s;
+        let finish = match serve_spec {
+            // Wall-clock lease, pinned at the first start: re-rates
+            // re-push the event at the same instant with a fresh gen.
+            Some(s) => j.start_s.expect("set above") + s.duration_s,
+            None => now + j.remaining_steps * stats.wall_s,
+        };
         j.expected_finish_s = finish;
         let gen = j.gen;
         self.timeline.push(finish, EventKind::Finish { job: id, gen });
@@ -1798,14 +1959,25 @@ impl FleetSim {
             running.extend(g.partition.iter().filter_map(|s| s.job));
             running.extend(g.residents.iter().copied());
         }
+        let now = self.now;
         let mut accrued = StepStats::default();
         for &id in &running {
             let j = &mut self.jobs[id];
             if j.per_step.wall_s <= 0.0 {
                 continue;
             }
-            let steps = (dt / j.per_step.wall_s).min(j.remaining_steps);
-            j.remaining_steps -= steps;
+            // A serve job's "steps" are the requests completed by now
+            // at the current contention-stretched per-request service
+            // time: every rate change runs this update first, so each
+            // interval drains at the rate it actually ran under.
+            let steps = match j.serve.as_mut() {
+                Some(sv) => sv.drain(j.per_step.wall_s, now) as f64,
+                None => {
+                    let s = (dt / j.per_step.wall_s).min(j.remaining_steps);
+                    j.remaining_steps -= s;
+                    s
+                }
+            };
             // Busy-time-weighted slowdown account: weight the interval
             // actually spent stepping (≤ dt for a job that finished
             // mid-interval) by the contention factor it ran under.
@@ -1862,7 +2034,10 @@ impl FleetSim {
             if j.per_step.wall_s <= 0.0 {
                 continue;
             }
-            let steps = (dt / j.per_step.wall_s).min(j.remaining_steps);
+            let steps = match &j.serve {
+                Some(sv) => sv.drained_by(j.per_step.wall_s, t) as f64,
+                None => (dt / j.per_step.wall_s).min(j.remaining_steps),
+            };
             let mut contrib = j.per_step.scaled(steps);
             contrib.busy_s *= j.device_frac;
             contrib.smact_integral *= j.device_frac;
@@ -1914,6 +2089,29 @@ impl FleetSim {
                 used,
                 running.len() as u32,
             );
+        }
+        // Serving fleets also sample the cumulative completed-request
+        // counter (drained so far + a read-only projection for running
+        // replicas). Training-only fleets skip the series entirely, so
+        // their timeline bytes stay pre-serving.
+        if self.has_serving {
+            let mut total: u64 = 0;
+            for j in &self.jobs {
+                if let Some(sv) = &j.serve {
+                    total += sv.cursor as u64;
+                }
+            }
+            for gi in 0..self.gpus.len() {
+                for id in self.running_jobs(gi) {
+                    let j = &self.jobs[id];
+                    if let Some(sv) = &j.serve {
+                        if j.per_step.wall_s > 0.0 {
+                            total += sv.drained_by(j.per_step.wall_s, t);
+                        }
+                    }
+                }
+            }
+            sampler.push_requests(total);
         }
         sampler.push_fleet(t, self.queue.len() as u32, running_total as u32);
         self.sampler = Some(sampler);
@@ -2031,6 +2229,21 @@ impl FleetSim {
             "persistent FleetView diverged from from-scratch view at t={}",
             self.now
         );
+        for (id, j) in self.jobs.iter().enumerate() {
+            assert_eq!(
+                j.serve.is_some(),
+                j.spec.serve().is_some(),
+                "job {id}: serve state must mirror the spec kind"
+            );
+            if let Some(sv) = &j.serve {
+                assert_eq!(
+                    sv.cursor,
+                    sv.latencies_ms.len(),
+                    "job {id}: drained cursor and latency log diverged at t={}",
+                    self.now
+                );
+            }
+        }
         for gi in 0..self.gpus.len() {
             assert_eq!(
                 self.gpus[gi].running as usize,
@@ -2121,15 +2334,67 @@ impl FleetSim {
                 } else {
                     JobOutcome::Unserved
                 };
+                // Per-request digest: requests a replica never answered
+                // before its lease ended (or because it never ran at
+                // all) count as failed — and as SLO violations.
+                let serve = match (j.spec.serve(), &j.serve) {
+                    (Some(spec), Some(sv)) => Some(ServeOutcome {
+                        requests: sv.reqs.len() as u64,
+                        completed: sv.cursor as u64,
+                        within_slo: sv
+                            .latencies_ms
+                            .iter()
+                            .filter(|&&l| l <= spec.slo_ms)
+                            .count() as u64,
+                        p50_ms: percentile(&sv.latencies_ms, 50.0),
+                        p95_ms: percentile(&sv.latencies_ms, 95.0),
+                        p99_ms: percentile(&sv.latencies_ms, 99.0),
+                        slo_ms: spec.slo_ms,
+                    }),
+                    _ => None,
+                };
                 JobRecord {
                     spec: j.spec,
                     start_s: j.start_s,
                     finish_s: j.finish_s,
                     gpu: j.gpu,
                     outcome,
+                    serve,
                 }
             })
             .collect();
+        // Fleet-wide serving digest: percentiles over the *pooled*
+        // request latencies (not a mean of per-job percentiles), SLO
+        // attainment over every offered request. `None` on training-
+        // only fleets, so their summary JSON keeps pre-serving bytes.
+        let serving = if self.has_serving {
+            let mut serve_jobs = 0u64;
+            let mut requests = 0u64;
+            let mut completed = 0u64;
+            let mut within_slo = 0u64;
+            let mut pooled: Vec<f64> = Vec::new();
+            for j in &self.jobs {
+                if let (Some(spec), Some(sv)) = (j.spec.serve(), &j.serve) {
+                    serve_jobs += 1;
+                    requests += sv.reqs.len() as u64;
+                    completed += sv.cursor as u64;
+                    within_slo +=
+                        sv.latencies_ms.iter().filter(|&&l| l <= spec.slo_ms).count() as u64;
+                    pooled.extend_from_slice(&sv.latencies_ms);
+                }
+            }
+            Some(FleetServeSummary {
+                serve_jobs,
+                requests,
+                completed,
+                within_slo,
+                p50_ms: percentile(&pooled, 50.0),
+                p95_ms: percentile(&pooled, 95.0),
+                p99_ms: percentile(&pooled, 99.0),
+            })
+        } else {
+            None
+        };
         // Two slowdown views over the jobs that ran: the busy-time-
         // weighted mean (what contention cost on average) and the mean
         // of per-job peaks (how bad the worst moment was). PR 3
@@ -2196,6 +2461,7 @@ impl FleetSim {
             mean_slowdown,
             peak_slowdown,
             timeline: self.sampler.as_ref().map(|s| s.summary()),
+            serving,
             jobs,
             gpus,
         }
@@ -2206,7 +2472,8 @@ impl FleetSim {
 mod tests {
     use super::*;
     use crate::cluster::policy::{Exclusive, MigStatic, Mps, PolicyKind, TimeSlice};
-    use crate::cluster::trace::{poisson_trace, TraceConfig};
+    use crate::cluster::trace::{poisson_trace, JobKind, ServeSpec, TraceConfig};
+    use crate::workload::arrivals::ArrivalShape;
 
     fn cal() -> Calibration {
         Calibration::paper()
@@ -2219,6 +2486,7 @@ mod tests {
             mix: [1.0, 0.0, 0.0],
             epochs: Some(1),
             seed: 42,
+            ..TraceConfig::default()
         })
     }
 
@@ -2440,6 +2708,7 @@ mod tests {
                 arrival_s: id as f64 * gap_s,
                 workload,
                 epochs: 1,
+                kind: JobKind::Train,
             })
             .collect()
     }
@@ -2557,6 +2826,7 @@ mod tests {
             arrival_s: first_finish,
             workload: WorkloadSize::Large,
             epochs: 1,
+            kind: JobKind::Train,
         });
         let m = run_with(
             Box::new(Mps { cap: 7 }),
@@ -2687,6 +2957,7 @@ mod tests {
             arrival_s: 0.1,
             workload: WorkloadSize::Small,
             epochs: 1,
+            kind: JobKind::Train,
         });
         let config = FleetConfig {
             a100s: 1,
@@ -2858,6 +3129,147 @@ mod tests {
             out.stats.reservations_computed, 1,
             "solo blocked head must not price a backfill pass: {:?}",
             out.stats
+        );
+    }
+
+    fn serve_spec(id: usize, arrival_s: f64, duration_s: f64, rate_rps: f64) -> JobSpec {
+        JobSpec {
+            id,
+            arrival_s,
+            workload: WorkloadSize::Small,
+            epochs: 1,
+            kind: JobKind::Serve(ServeSpec {
+                duration_s,
+                rate_rps,
+                shape: ArrivalShape::Poisson,
+                slo_ms: 1000.0,
+                seed: 7,
+            }),
+        }
+    }
+
+    #[test]
+    fn serve_job_holds_lease_and_scores_requests() {
+        // One uncontended replica: it occupies its GPU for exactly the
+        // lease, answers nearly every request (only the tail that
+        // arrives too close to lease end can fail), and latencies are
+        // at least one service time.
+        let trace = vec![serve_spec(0, 0.0, 300.0, 2.0)];
+        let m = run(Box::new(Exclusive), &trace, 1);
+        assert_eq!(m.finished(), 1);
+        let j = &m.jobs[0];
+        let lease = j.finish_s.unwrap() - j.start_s.unwrap();
+        assert!((lease - 300.0).abs() < 1e-9, "lease {lease}");
+        let o = j.serve.as_ref().expect("serve outcome");
+        assert!(o.requests > 400, "stream ~600 requests, got {}", o.requests);
+        assert!(o.completed >= o.requests - 3, "{o:?}");
+        assert!(o.completed <= o.requests);
+        assert!(o.p50_ms > 0.0 && o.p99_ms >= o.p50_ms, "{o:?}");
+        assert!(o.slo_attainment() > 0.9, "{o:?}");
+        // Serving contributes no trained images.
+        assert_eq!(m.total_images(), 0.0);
+        let s = m.serving.as_ref().expect("fleet serving summary");
+        assert_eq!(s.requests, o.requests);
+        assert_eq!(s.completed, o.completed);
+    }
+
+    #[test]
+    fn queued_replica_pays_its_wait_in_request_latency() {
+        // Two replicas on one exclusive GPU: the second waits out the
+        // first's whole lease while its open-loop requests pile up, so
+        // its median latency carries the queue wait.
+        let trace = vec![serve_spec(0, 0.0, 120.0, 1.0), serve_spec(1, 0.1, 120.0, 1.0)];
+        let m = run(Box::new(Exclusive), &trace, 1);
+        assert_eq!(m.finished(), 2);
+        let first = m.jobs[0].serve.as_ref().unwrap();
+        let second = m.jobs[1].serve.as_ref().unwrap();
+        assert!(
+            second.p50_ms > first.p50_ms * 100.0,
+            "queued replica must show the wait: {} vs {}",
+            second.p50_ms,
+            first.p50_ms
+        );
+        assert!(second.slo_attainment() < first.slo_attainment());
+        // Many of its requests never got answered before the lease end.
+        assert!(second.failed() > 0, "{second:?}");
+    }
+
+    #[test]
+    fn mixed_serving_fleet_is_deterministic_and_audited() {
+        // serve_frac mixes kinds; verify_opts() keeps the incremental
+        // audit (and the serve drain-state check) on for the whole run.
+        let trace = poisson_trace(&TraceConfig {
+            jobs: 30,
+            mean_interarrival_s: 0.5,
+            mix: [1.0, 0.0, 0.0],
+            epochs: Some(1),
+            seed: 42,
+            serve_frac: 0.5,
+            serve_duration_s: 60.0,
+            serve_rps: 2.0,
+            ..TraceConfig::default()
+        });
+        assert!(trace.iter().any(|j| j.serve().is_some()));
+        assert!(trace.iter().any(|j| j.serve().is_none()));
+        let a = run(Box::new(Mps { cap: 7 }), &trace, 2);
+        let b = run(Box::new(Mps { cap: 7 }), &trace, 2);
+        assert_eq!(a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+        let s = a.serving.as_ref().expect("mixed fleet has a serving block");
+        assert!(s.serve_jobs > 0 && s.requests > 0);
+        assert!(s.completed + s.failed() == s.requests);
+        assert!((0.0..=1.0).contains(&s.slo_attainment()));
+    }
+
+    #[test]
+    fn training_only_runs_carry_no_serving_block() {
+        let trace = small_trace(5, 1.0);
+        let m = run(Box::new(Exclusive), &trace, 2);
+        assert!(m.serving.is_none());
+        assert!(m.jobs.iter().all(|j| j.serve.is_none()));
+        let text = m.to_json().to_string_pretty();
+        assert!(!text.contains("serving"), "training-only JSON must not mention serving");
+    }
+
+    #[test]
+    fn backfill_scan_cap_bounds_the_candidate_walk() {
+        // 60 identical jobs flood one cap-1 MPS GPU under backfill-easy:
+        // no candidate is ever safe (shared backfill is cross-GPU only),
+        // so every pass walks the whole tail — O(queue) per pass. The
+        // cap bounds the walk without changing the outcome here.
+        let trace = manual_trace(60, WorkloadSize::Small, 0.001);
+        let run_cap = |backfill_scan_cap: Option<usize>| {
+            let config = FleetConfig {
+                a100s: 1,
+                a30s: 0,
+                queue: QueueDiscipline::BackfillEasy,
+                backfill_scan_cap,
+                ..FleetConfig::default()
+            };
+            FleetSim::new(config, Box::new(Mps { cap: 1 }), cal(), &trace)
+                .run_with(&verify_opts())
+                .unwrap()
+        };
+        let unbounded = run_cap(None);
+        let capped = run_cap(Some(4));
+        assert_eq!(unbounded.metrics.finished(), 60);
+        assert_eq!(
+            unbounded.metrics.to_json().to_string_pretty(),
+            capped.metrics.to_json().to_string_pretty(),
+            "cap must not change this homogeneous outcome"
+        );
+        // Every pass now offers at most 4 candidates instead of the
+        // whole tail: the scan count drops by an O(queue) factor.
+        assert!(
+            capped.stats.backfill_candidates_scanned * 4
+                < unbounded.stats.backfill_candidates_scanned,
+            "capped {} !<< unbounded {}",
+            capped.stats.backfill_candidates_scanned,
+            unbounded.stats.backfill_candidates_scanned
+        );
+        assert!(
+            capped.stats.backfill_candidates_scanned <= capped.stats.events * 4,
+            "per-pass bound violated: {:?}",
+            capped.stats
         );
     }
 }

@@ -35,6 +35,77 @@ impl JobOutcome {
     }
 }
 
+/// Per-request digest of one serving job: what its open-loop stream
+/// offered, what the replica answered before its lease ended, and the
+/// latency percentiles of the answered requests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeOutcome {
+    /// Requests the open-loop stream offered over the lease.
+    pub requests: u64,
+    /// Requests answered before the lease ended.
+    pub completed: u64,
+    /// Answered within the latency deadline.
+    pub within_slo: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// The deadline the job was scored against.
+    pub slo_ms: f64,
+}
+
+impl ServeOutcome {
+    /// Requests never answered (the replica's lease ended first, or it
+    /// never ran at all). Failed requests count as SLO violations.
+    pub fn failed(&self) -> u64 {
+        self.requests - self.completed
+    }
+
+    /// Fraction of *offered* requests answered within the deadline —
+    /// the open-loop stance: a request the replica never got to is a
+    /// violation, not a non-event.
+    pub fn slo_attainment(&self) -> f64 {
+        safe_div(self.within_slo as f64, self.requests as f64)
+    }
+}
+
+/// Fleet-wide serving digest: pooled request latencies (percentiles
+/// over every answered request, not a mean of per-job percentiles) and
+/// aggregate SLO attainment. `None` on training-only fleets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetServeSummary {
+    pub serve_jobs: u64,
+    pub requests: u64,
+    pub completed: u64,
+    pub within_slo: u64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl FleetServeSummary {
+    pub fn failed(&self) -> u64 {
+        self.requests - self.completed
+    }
+
+    pub fn slo_attainment(&self) -> f64 {
+        safe_div(self.within_slo as f64, self.requests as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("serve_jobs", Json::from_u64(self.serve_jobs))
+            .set("requests", Json::from_u64(self.requests))
+            .set("completed", Json::from_u64(self.completed))
+            .set("failed", Json::from_u64(self.failed()))
+            .set("within_slo", Json::from_u64(self.within_slo))
+            .set("p50_latency_ms", Json::from_f64(self.p50_ms))
+            .set("p95_latency_ms", Json::from_f64(self.p95_ms))
+            .set("p99_latency_ms", Json::from_f64(self.p99_ms))
+            .set("slo_attainment", Json::from_f64(self.slo_attainment()));
+        j
+    }
+}
+
 /// Per-job record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobRecord {
@@ -43,6 +114,8 @@ pub struct JobRecord {
     pub finish_s: Option<f64>,
     pub gpu: Option<usize>,
     pub outcome: JobOutcome,
+    /// Request digest; `Some` iff the spec is a serve job.
+    pub serve: Option<ServeOutcome>,
 }
 
 impl JobRecord {
@@ -104,6 +177,9 @@ pub struct FleetMetrics {
     /// the run sampled, i.e. `--sample-interval` was set — absent, the
     /// summary JSON is byte-identical to a pre-observability run).
     pub timeline: Option<TimelineSummary>,
+    /// Fleet-wide serving digest (`Some` only when the trace carried
+    /// serve jobs — absent, the summary JSON keeps training-only bytes).
+    pub serving: Option<FleetServeSummary>,
     pub jobs: Vec<JobRecord>,
     pub gpus: Vec<GpuRecord>,
 }
@@ -172,6 +248,15 @@ impl FleetMetrics {
     /// figure of merit the policy ranking is stated in.
     pub fn aggregate_images_per_second(&self) -> f64 {
         safe_div(self.total_images(), self.makespan_s)
+    }
+
+    /// Serving throughput: requests answered per second of makespan
+    /// (0 on training-only fleets).
+    pub fn requests_per_second(&self) -> f64 {
+        match &self.serving {
+            Some(s) => safe_div(s.completed as f64, self.makespan_s),
+            None => 0.0,
+        }
     }
 
     fn waits(&self) -> Vec<f64> {
@@ -252,18 +337,40 @@ impl FleetMetrics {
             })
             .collect();
         j.set("per_gpu", Json::Arr(gpus));
-        // Key appended only when the run sampled: untraced summaries
-        // keep their exact pre-observability bytes.
+        // Keys appended only when present: training-only, untraced
+        // summaries keep their exact pre-serving bytes.
+        if let Some(sv) = &self.serving {
+            let mut o = sv.to_json();
+            o.set("requests_per_second", Json::from_f64(self.requests_per_second()));
+            j.set("serving", o);
+        }
         if let Some(tl) = &self.timeline {
             j.set("timeline", tl.to_json());
         }
         j
     }
 
-    /// One human-readable line for the CLI.
+    /// One human-readable line for the CLI (plus a serving line when
+    /// the trace carried serve jobs).
     pub fn summary(&self) -> String {
+        let serving = match &self.serving {
+            None => String::new(),
+            Some(s) => format!(
+                "\n{:<12} serving: {} replicas, {}/{} requests ({} failed) | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | SLO {:.1}% | {:.1} req/s",
+                self.policy,
+                s.serve_jobs,
+                s.completed,
+                s.requests,
+                s.failed(),
+                s.p50_ms,
+                s.p95_ms,
+                s.p99_ms,
+                100.0 * s.slo_attainment(),
+                self.requests_per_second(),
+            ),
+        };
         format!(
-            "{:<12} [{}] {} jobs: {} finished, {} rejected, {} oom, {} unserved | makespan {} | wait μ {} | hol {} | backfilled {} | migrations {} | JCT p50 {} p95 {} | {:.1} img/s | GRACT μ {:.2} | slowdown μ {:.2} peak {:.2}",
+            "{:<12} [{}] {} jobs: {} finished, {} rejected, {} oom, {} unserved | makespan {} | wait μ {} | hol {} | backfilled {} | migrations {} | JCT p50 {} p95 {} | {:.1} img/s | GRACT μ {:.2} | slowdown μ {:.2} peak {:.2}{}",
             self.policy,
             self.queue_discipline,
             self.jobs.len(),
@@ -282,6 +389,7 @@ impl FleetMetrics {
             self.mean_gract(),
             self.mean_slowdown,
             self.peak_slowdown,
+            serving,
         )
     }
 }
@@ -298,11 +406,13 @@ mod tests {
                 arrival_s: arrival,
                 workload: WorkloadSize::Small,
                 epochs: 1,
+                kind: crate::cluster::trace::JobKind::Train,
             },
             start_s: Some(start),
             finish_s: Some(finish),
             gpu: Some(0),
             outcome: JobOutcome::Finished,
+            serve: None,
         }
     }
 
@@ -322,6 +432,7 @@ mod tests {
             mean_slowdown: 1.0,
             peak_slowdown: 1.0,
             timeline: None,
+            serving: None,
             jobs,
             gpus: Vec::new(),
         }
@@ -418,5 +529,54 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("test"));
         assert!(s.contains("1 finished"));
+        // Training-only: no serving line.
+        assert!(!s.contains("serving"));
+    }
+
+    #[test]
+    fn serve_outcome_attainment_counts_failures_as_violations() {
+        let o = ServeOutcome {
+            requests: 10,
+            completed: 6,
+            within_slo: 3,
+            p50_ms: 100.0,
+            p95_ms: 400.0,
+            p99_ms: 900.0,
+            slo_ms: 250.0,
+        };
+        assert_eq!(o.failed(), 4);
+        // 3 of the 10 *offered* requests made the deadline.
+        assert!((o.slo_attainment() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serving_block_appears_only_on_serving_fleets() {
+        let mut m = metrics(vec![record(0, 0.0, 1.0, 2.0)]);
+        assert!(Json::parse(&m.to_json().to_string_pretty())
+            .unwrap()
+            .get("serving")
+            .is_none());
+        m.serving = Some(FleetServeSummary {
+            serve_jobs: 1,
+            requests: 20,
+            completed: 18,
+            within_slo: 15,
+            p50_ms: 120.0,
+            p95_ms: 300.0,
+            p99_ms: 450.0,
+        });
+        let back = Json::parse(&m.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.at(&["serving", "requests"]).unwrap().as_u64(), Some(20));
+        assert_eq!(back.at(&["serving", "failed"]).unwrap().as_u64(), Some(2));
+        assert!((back.at(&["serving", "slo_attainment"]).unwrap().as_f64().unwrap() - 0.75).abs()
+            < 1e-12);
+        // requests/s over the 100 s makespan.
+        assert!(
+            (back.at(&["serving", "requests_per_second"]).unwrap().as_f64().unwrap() - 0.18)
+                .abs()
+                < 1e-12
+        );
+        // And the human line now carries the serving digest.
+        assert!(m.summary().contains("serving:"));
     }
 }

@@ -8,7 +8,41 @@
 
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+use crate::workload::arrivals::ArrivalShape;
 use crate::workload::spec::{Workload, WorkloadSize};
+
+/// What a job does with its placement: batch training (measured in
+/// epochs) or request serving (measured in per-request latency).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobKind {
+    /// Batch training — the paper's workload, scored by JCT/throughput.
+    Train,
+    /// An inference-serving replica — holds its placement for a fixed
+    /// wall-clock lease and is scored per request.
+    Serve(ServeSpec),
+}
+
+/// The serving profile of one replica: how long it serves, what its
+/// open-loop request stream looks like, and its latency deadline. The
+/// model/memory/demand profile is the job's [`WorkloadSize`] — a
+/// serving replica of `small` occupies exactly what a small training
+/// job would, so every placement/interference/admission path applies
+/// unchanged.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeSpec {
+    /// Wall-clock lease: the replica serves for this long after its
+    /// first start, then releases its placement.
+    pub duration_s: f64,
+    /// Mean request rate (per second) of the open-loop stream.
+    pub rate_rps: f64,
+    /// Arrival process shape (poisson / diurnal / bursty).
+    pub shape: ArrivalShape,
+    /// Per-request latency deadline for SLO attainment (milliseconds).
+    pub slo_ms: f64,
+    /// Seed of the request stream (derived per job; no training job's
+    /// RNG draws move when serve jobs join a trace).
+    pub seed: u64,
+}
 
 /// One job of the input stream.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -18,15 +52,29 @@ pub struct JobSpec {
     /// Absolute arrival time (s).
     pub arrival_s: f64,
     pub workload: WorkloadSize,
-    /// Training epochs this job runs (paper schedules by default).
+    /// Training epochs this job runs (paper schedules by default;
+    /// inert for serve jobs).
     pub epochs: u32,
+    pub kind: JobKind,
 }
 
 impl JobSpec {
-    /// Images this job trains over its whole run.
+    /// Images this job trains over its whole run (0 for serving jobs —
+    /// their output is requests, not images).
     pub fn images(&self) -> f64 {
+        if self.serve().is_some() {
+            return 0.0;
+        }
         let w = Workload::paper(self.workload);
         (w.steps_per_epoch() * self.epochs as u64 * w.batch_size as u64) as f64
+    }
+
+    /// The serving profile, if this is a serve job.
+    pub fn serve(&self) -> Option<&ServeSpec> {
+        match &self.kind {
+            JobKind::Train => None,
+            JobKind::Serve(s) => Some(s),
+        }
     }
 }
 
@@ -41,6 +89,18 @@ pub struct TraceConfig {
     /// Override the paper epoch schedule (None keeps 30/5/5).
     pub epochs: Option<u32>,
     pub seed: u64,
+    /// Fraction of jobs that are serving replicas instead of training
+    /// jobs. 0.0 (the default) draws **no extra RNG values**, so
+    /// training-only traces are bit-identical to pre-serving builds.
+    pub serve_frac: f64,
+    /// Wall-clock serving lease of each serve job.
+    pub serve_duration_s: f64,
+    /// Mean request rate of each serve job's open-loop stream.
+    pub serve_rps: f64,
+    /// Per-request latency deadline (ms) of each serve job.
+    pub slo_ms: f64,
+    /// Request arrival process of each serve job.
+    pub arrival_shape: ArrivalShape,
 }
 
 impl Default for TraceConfig {
@@ -51,11 +111,18 @@ impl Default for TraceConfig {
             mix: [0.5, 0.3, 0.2],
             epochs: None,
             seed: crate::util::rng::DEFAULT_SEED,
+            serve_frac: 0.0,
+            serve_duration_s: 600.0,
+            serve_rps: 2.0,
+            slo_ms: 250.0,
+            arrival_shape: ArrivalShape::Poisson,
         }
     }
 }
 
 /// Generate a Poisson arrival stream. Deterministic in `cfg.seed`.
+/// With `serve_frac > 0` each job additionally draws a kind; at 0 the
+/// draw is skipped entirely, keeping training-only streams bit-for-bit.
 pub fn poisson_trace(cfg: &TraceConfig) -> Vec<JobSpec> {
     let mut rng = Rng::new(cfg.seed);
     let total: f64 = cfg.mix.iter().sum();
@@ -67,11 +134,23 @@ pub fn poisson_trace(cfg: &TraceConfig) -> Vec<JobSpec> {
         t += -cfg.mean_interarrival_s * (1.0 - u).max(1e-300).ln();
         let workload = pick_workload(&mut rng, &cfg.mix, total);
         let epochs = cfg.epochs.unwrap_or(Workload::paper(workload).epochs);
+        let kind = if cfg.serve_frac > 0.0 && rng.next_f64() < cfg.serve_frac {
+            JobKind::Serve(ServeSpec {
+                duration_s: cfg.serve_duration_s,
+                rate_rps: cfg.serve_rps,
+                shape: cfg.arrival_shape,
+                slo_ms: cfg.slo_ms,
+                seed: crate::workload::arrivals::derive_seed(cfg.seed, id as u64),
+            })
+        } else {
+            JobKind::Train
+        };
         out.push(JobSpec {
             id,
             arrival_s: t,
             workload,
             epochs,
+            kind,
         });
     }
     out
@@ -112,15 +191,33 @@ pub fn parse_mix(s: &str) -> anyhow::Result<[f64; 3]> {
     Ok(mix)
 }
 
-/// CSV header of a trace file.
+/// CSV header of a trace file. Serve rows extend it with
+/// `,serve,duration_s,rate_rps,shape,slo_ms,seed`; 3-field rows stay
+/// training jobs, so pre-serving trace files parse unchanged.
 pub const TRACE_HEADER: &str = "arrival_s,workload,epochs";
 
-/// Serialize a trace to the CSV trace-file format.
+/// Serialize a trace to the CSV trace-file format. Training rows keep
+/// the classic 3 fields; serve rows append their serving profile.
 pub fn trace_to_csv(trace: &[JobSpec]) -> String {
     let mut out = String::from(TRACE_HEADER);
     out.push('\n');
     for j in trace {
-        out.push_str(&format!("{},{},{}\n", j.arrival_s, j.workload.name(), j.epochs));
+        match j.serve() {
+            None => {
+                out.push_str(&format!("{},{},{}\n", j.arrival_s, j.workload.name(), j.epochs))
+            }
+            Some(s) => out.push_str(&format!(
+                "{},{},{},serve,{},{},{},{},{}\n",
+                j.arrival_s,
+                j.workload.name(),
+                j.epochs,
+                s.duration_s,
+                s.rate_rps,
+                s.shape.name(),
+                s.slo_ms,
+                s.seed
+            )),
+        }
     }
     out
 }
@@ -148,8 +245,9 @@ pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<JobSpec>> {
         }
         let fields: Vec<&str> = line.split(',').map(str::trim).collect();
         anyhow::ensure!(
-            fields.len() == 3,
-            "trace line {}: expected 3 fields, got {}",
+            fields.len() == 3 || (fields.len() == 9 && fields[3] == "serve"),
+            "trace line {}: expected 3 fields (train) or 9 fields \
+             (…,serve,duration_s,rate_rps,shape,slo_ms,seed), got {}",
             lineno + 1,
             fields.len()
         );
@@ -171,11 +269,38 @@ pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<JobSpec>> {
             "trace line {}: epochs must be >= 1 (a 0-epoch job trains nothing)",
             lineno + 1
         );
+        let kind = if fields.len() == 9 {
+            let num = |i: usize, name: &str| -> anyhow::Result<f64> {
+                let v: f64 = fields[i].parse().map_err(|_| {
+                    anyhow::anyhow!("trace line {}: bad {name} '{}'", lineno + 1, fields[i])
+                })?;
+                anyhow::ensure!(
+                    v.is_finite() && v > 0.0,
+                    "trace line {}: {name} must be finite and > 0",
+                    lineno + 1
+                );
+                Ok(v)
+            };
+            JobKind::Serve(ServeSpec {
+                duration_s: num(4, "duration_s")?,
+                rate_rps: num(5, "rate_rps")?,
+                shape: ArrivalShape::parse(fields[6]).ok_or_else(|| {
+                    anyhow::anyhow!("trace line {}: unknown shape '{}'", lineno + 1, fields[6])
+                })?,
+                slo_ms: num(7, "slo_ms")?,
+                seed: fields[8].parse().map_err(|_| {
+                    anyhow::anyhow!("trace line {}: bad seed '{}'", lineno + 1, fields[8])
+                })?,
+            })
+        } else {
+            JobKind::Train
+        };
         out.push(JobSpec {
             id: out.len(),
             arrival_s,
             workload,
             epochs,
+            kind,
         });
     }
     let sorted = out.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s);
@@ -206,6 +331,11 @@ pub fn trace_summary_json(trace: &[JobSpec]) -> Json {
     for (i, w) in WorkloadSize::ALL.iter().enumerate() {
         j.set(w.name(), Json::from_u64(counts[i]));
     }
+    // Conditional: training-only summaries keep their exact bytes.
+    let serve = trace.iter().filter(|t| t.serve().is_some()).count();
+    if serve > 0 {
+        j.set("serve", Json::from_u64(serve as u64));
+    }
     j
 }
 
@@ -220,6 +350,7 @@ mod tests {
             mix: [0.6, 0.3, 0.1],
             epochs: Some(1),
             seed: 7,
+            ..TraceConfig::default()
         }
     }
 
@@ -344,8 +475,75 @@ mod tests {
             arrival_s: 0.0,
             workload: WorkloadSize::Small,
             epochs: 30,
+            kind: JobKind::Train,
         };
         // 1406 steps x 30 epochs x 32 images.
         assert_eq!(j.images(), (1406u64 * 30 * 32) as f64);
+        // A serving replica trains nothing.
+        let s = JobSpec {
+            kind: JobKind::Serve(ServeSpec {
+                duration_s: 600.0,
+                rate_rps: 2.0,
+                shape: ArrivalShape::Poisson,
+                slo_ms: 250.0,
+                seed: 1,
+            }),
+            ..j
+        };
+        assert_eq!(s.images(), 0.0);
+        assert!(s.serve().is_some());
+    }
+
+    #[test]
+    fn serve_frac_zero_is_bit_identical_to_pre_serving_traces() {
+        // The kind draw only happens when serve_frac > 0: a training
+        // -only config must replay the exact pre-serving RNG stream.
+        let base = poisson_trace(&cfg());
+        let explicit = poisson_trace(&TraceConfig { serve_frac: 0.0, ..cfg() });
+        assert_eq!(base, explicit);
+        assert!(base.iter().all(|j| j.kind == JobKind::Train));
+        assert!(trace_summary_json(&base).get("serve").is_none());
+    }
+
+    #[test]
+    fn serve_frac_splits_kinds_without_moving_training_arrivals() {
+        let mixed = poisson_trace(&TraceConfig { serve_frac: 0.4, ..cfg() });
+        let train_only = poisson_trace(&cfg());
+        // Arrival times and workloads are drawn before the kind draw,
+        // so they match the training-only stream job for job.
+        for (a, b) in mixed.iter().zip(&train_only) {
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+            assert_eq!(a.workload, b.workload);
+        }
+        let serve = mixed.iter().filter(|j| j.serve().is_some()).count();
+        assert!(serve > 40 && serve < 120, "serve count {serve}");
+        // Every serve job gets a distinct derived request seed.
+        let seeds: std::collections::HashSet<u64> =
+            mixed.iter().filter_map(|j| j.serve().map(|s| s.seed)).collect();
+        assert_eq!(seeds.len(), serve);
+        let sj = trace_summary_json(&mixed);
+        assert_eq!(sj.get("serve").unwrap().as_u64(), Some(serve as u64));
+    }
+
+    #[test]
+    fn serve_rows_round_trip_through_csv() {
+        let t = poisson_trace(&TraceConfig { serve_frac: 0.5, ..cfg() });
+        let back = parse_trace_csv(&trace_to_csv(&t)).unwrap();
+        assert_eq!(t.len(), back.len());
+        for (a, b) in t.iter().zip(&back) {
+            assert_eq!(a.workload, b.workload);
+            assert_eq!(a.serve().is_some(), b.serve().is_some());
+            if let (Some(x), Some(y)) = (a.serve(), b.serve()) {
+                assert_eq!(x.shape, y.shape);
+                assert_eq!(x.seed, y.seed);
+                assert!((x.duration_s - y.duration_s).abs() < 1e-9);
+                assert!((x.slo_ms - y.slo_ms).abs() < 1e-9);
+            }
+        }
+        // Malformed serve rows are rejected with the line number.
+        assert!(parse_trace_csv("1.0,small,1,serve,600,2,poisson,250").is_err());
+        assert!(parse_trace_csv("1.0,small,1,serve,600,2,uniform,250,7").is_err());
+        assert!(parse_trace_csv("1.0,small,1,serve,-1,2,poisson,250,7").is_err());
+        assert!(parse_trace_csv("1.0,small,1,serve,600,2,poisson,250,x").is_err());
     }
 }

@@ -217,6 +217,42 @@
 //! under backfill + roofline; `-- --xl` opts into 1M jobs over 10k
 //! GPUs), and the `BENCH_baseline.json` floor re-mint procedure is
 //! documented in `.github/workflows/ci.yml`.
+//!
+//! ## Serving
+//!
+//! Training is throughput-bound; inference is latency-bound — and real
+//! clusters run both on the same GPUs, which is where the paper's
+//! isolation-vs-sharing trade-off actually bites. The serving
+//! subsystem makes that measurable. A job can be a
+//! [`cluster::trace::JobKind::Serve`] carrying a
+//! [`cluster::trace::ServeSpec`]: an open-loop request stream
+//! (Poisson, diurnal or bursty [`workload::arrivals::ArrivalShape`],
+//! seeded and deterministic via
+//! [`workload::arrivals::request_offsets`]) against a latency SLO for
+//! a wall-clock lease. Serving replicas occupy slices and MPS shares
+//! exactly like training residents — the same §4 memory floors,
+//! admission control, queue disciplines and placement policies apply
+//! — and each request's service time is the calibrated engine's step
+//! time stretched by the live
+//! [`simgpu::interference::ContentionModel`] slowdown, drained
+//! through a per-replica single-server queue. Per-job
+//! [`cluster::metrics::ServeOutcome`]s (p50/p95/p99 latency, SLO
+//! attainment) pool into a fleet-level
+//! [`cluster::metrics::FleetServeSummary`]; the derived ordering is
+//! the paper's trade-off restated for inference: MIG isolation wins
+//! tail latency and SLO attainment under contention while MPS keeps
+//! its aggregate-throughput edge and exclusive wastes capacity on
+//! both (`rust/tests/fleet_policies.rs`). Surface: `migsim fleet
+//! --serve-mix 0.2 --serve-rps 2 --slo-ms 250 --arrival-shape
+//! bursty`, three sweep axes (`migsim sweep --serve-fracs
+//! --arrival-shapes --slo-ms`; summary schema v5 with per-cell
+//! latency digests, an `slo_ranking` section and four serving CSV
+//! columns), serve rows in trace CSVs, a `final_requests_done`
+//! timeline counter and `requests_per_s_*` bench metrics. Everything
+//! is strictly additive: a training-only trace draws no serving
+//! randomness and produces bit-identical artifacts to the
+//! pre-serving engine, pinned by `rust/tests/scenario_invariants.rs`
+//! and the schema-v4 golden fixtures.
 
 pub mod cluster;
 pub mod config;

@@ -35,6 +35,7 @@ use migsim::util::cli::Args;
 use migsim::util::fmt_duration;
 use migsim::util::json::Json;
 use migsim::util::rng;
+use migsim::workload::arrivals::ArrivalShape;
 use migsim::workload::spec::WorkloadSize;
 
 const USAGE: &str = "\
@@ -65,6 +66,8 @@ SUBCOMMANDS
         [--interference off|linear|roofline] [--admission strict|oversubscribe]
         [--queue fifo|backfill-easy|backfill-conservative|sjf]
         [--probe-window 15] [--partition 2g.10gb,2g.10gb,2g.10gb]
+        [--serve-mix 0.2] [--serve-rps 2] [--serve-duration 600]
+        [--slo-ms 250] [--arrival-shape poisson|diurnal|bursty]
         [--trace file.csv] [--dump-trace file.csv] [--out results]
         [--trace-out trace.json] [--sample-interval 60]
       Cluster-scale collocation: simulate a job stream on a fleet of
@@ -88,22 +91,35 @@ SUBCOMMANDS
       GRACT/SMACT/DRAMA, memory, residents; fleet-wide queue depth)
       every N simulated seconds and a percentile summary in the
       output. Neither flag changes the simulation: results are
-      bit-identical with observability on or off.
+      bit-identical with observability on or off. --serve-mix turns
+      the given fraction of generated jobs into serving residents:
+      open-loop request streams (--serve-rps, --arrival-shape) against
+      a latency SLO (--slo-ms) for --serve-duration simulated seconds;
+      the summary then carries request latency percentiles and SLO
+      attainment, and the per-job CSV grows per-replica latency
+      columns. Serving rows in a --trace CSV carry the same knobs
+      per job.
   sweep [--policies mps,mig-static,mig-miso] [--mixes 'smalls|paper']
         [--gpus 2,4] [--interarrivals 0.5,2.0]
         [--interference off,roofline] [--admission strict]
         [--queues fifo,backfill-easy] [--seeds 1,2]
         [--jobs 200] [--epochs 1] [--cap 7] [--probe-window 15]
+        [--serve-fracs 0,0.25] [--arrival-shapes poisson,bursty]
+        [--slo-ms 100,250] [--serve-rps 2] [--serve-duration 600]
         [--threads N] [--grid grid.json] [--out results]
         [--trace-dir results/traces] [--sample-interval 60]
       Expand a declarative grid (policies x mixes x fleet sizes x
-      arrival rates x interference models x queue disciplines x seeds)
-      into cells and run them all across worker threads. Output is
+      arrival rates x interference models x queue disciplines x
+      serving fractions x arrival shapes x SLOs x seeds) into cells
+      and run them all across worker threads. Output is
       byte-identical at any --threads. Writes sweep_summary.json +
       sweep_cells.csv and prints the policy-ranking table (plus the
       interference-sensitivity and queue-discipline tables when those
-      axes have several values). --grid loads the spec from JSON
-      instead (same keys as the axis flags; absent keys keep
+      axes have several values, and the SLO-attainment ranking when
+      any --serve-fracs value is positive — which also bumps the
+      summary to schema v5 with per-cell latency digests; training-
+      only grids keep the exact v4 bytes). --grid loads the spec from
+      JSON instead (same keys as the axis flags; absent keys keep
       defaults). --trace-dir writes one Chrome trace-event JSON per
       cell (cell_<index>.trace.json; opt-in — traces are per-cell
       sized); --sample-interval adds sampled timelines inside each
@@ -119,7 +135,8 @@ SUBCOMMANDS
         [--iters 3] [--baseline BENCH_baseline.json]
         [--tolerance 0.15] [--write-baseline]
       Time the sweep engine (median of --iters runs) and report
-      cells/s plus per-policy images/s. --json writes the
+      cells/s plus per-policy images/s and serving requests/s (a
+      fixed pure-serve grid under contention). --json writes the
       schema-versioned BENCH_<name>.json; --baseline compares against
       a committed report and exits nonzero on any gated metric more
       than --tolerance below it (the CI perf gate; a baseline marked
@@ -306,7 +323,19 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
         Some(path) => {
             // The generator flags describe a Poisson stream; with a
             // trace file they would be silently dead — refuse instead.
-            for flag in ["jobs", "interarrival", "mix", "epochs"] {
+            // (A trace CSV carries its own serve rows, so the serving
+            // generator knobs conflict too.)
+            for flag in [
+                "jobs",
+                "interarrival",
+                "mix",
+                "epochs",
+                "serve-mix",
+                "serve-rps",
+                "serve-duration",
+                "slo-ms",
+                "arrival-shape",
+            ] {
                 anyhow::ensure!(
                     args.flag(flag).is_none(),
                     "--{flag} only applies to generated traces (conflicts with --trace)"
@@ -322,12 +351,37 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
                         .map_err(|_| anyhow::anyhow!("invalid value for --epochs: '{v}'"))
                 })
                 .transpose()?;
+            let defaults = TraceConfig::default();
+            let serve_frac = args.flag_parse("serve-mix", defaults.serve_frac)?;
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&serve_frac),
+                "--serve-mix must be a fraction in [0, 1]"
+            );
+            let serve_rps = args.flag_parse("serve-rps", defaults.serve_rps)?;
+            let serve_duration_s = args.flag_parse("serve-duration", defaults.serve_duration_s)?;
+            let slo_ms = args.flag_parse("slo-ms", defaults.slo_ms)?;
+            for (flag, v) in [
+                ("serve-rps", serve_rps),
+                ("serve-duration", serve_duration_s),
+                ("slo-ms", slo_ms),
+            ] {
+                anyhow::ensure!(v.is_finite() && v > 0.0, "--{flag} must be finite and > 0");
+            }
+            let arrival_shape = match args.flag("arrival-shape") {
+                Some(s) => ArrivalShape::parse_or_err(s.trim())?,
+                None => defaults.arrival_shape,
+            };
             poisson_trace(&TraceConfig {
                 jobs: args.flag_parse("jobs", 1000u32)?,
                 mean_interarrival_s: args.flag_parse("interarrival", 30.0f64)?,
                 mix: parse_mix(&args.flag_or("mix", "small:0.5,medium:0.3,large:0.2"))?,
                 epochs,
                 seed,
+                serve_frac,
+                serve_duration_s,
+                serve_rps,
+                slo_ms,
+                arrival_shape,
             })
         }
     };
@@ -462,6 +516,11 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
             "epochs",
             "cap",
             "probe-window",
+            "serve-fracs",
+            "arrival-shapes",
+            "slo-ms",
+            "serve-rps",
+            "serve-duration",
         ] {
             anyhow::ensure!(
                 args.flag(flag).is_none(),
@@ -540,6 +599,20 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
     }
     grid.cap = args.flag_parse("cap", grid.cap)?;
     grid.probe_window_s = args.flag_parse("probe-window", grid.probe_window_s)?;
+    if let Some(list) = args.flag("serve-fracs") {
+        grid.serve_fracs = parse_num_list(list, "serve-fracs")?;
+    }
+    if let Some(list) = args.flag("arrival-shapes") {
+        grid.arrival_shapes = list
+            .split(',')
+            .map(|s| ArrivalShape::parse_or_err(s.trim()))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
+    if let Some(list) = args.flag("slo-ms") {
+        grid.slo_ms = parse_num_list(list, "slo-ms")?;
+    }
+    grid.serve_rps = args.flag_parse("serve-rps", grid.serve_rps)?;
+    grid.serve_duration_s = args.flag_parse("serve-duration", grid.serve_duration_s)?;
     grid.validate()?;
     Ok(grid)
 }
@@ -570,6 +643,9 @@ fn cmd_sweep(args: &Args, config: &Config) -> anyhow::Result<()> {
     }
     if grid.queues.len() > 1 {
         print!("{}", migsim::report::sweep::queue_table(&run));
+    }
+    if grid.has_serving() {
+        print!("{}", migsim::report::sweep::slo_table(&run));
     }
     println!(
         "\n{} cells | {} threads | host {:.3} s | {:.1} cells/s",
@@ -602,6 +678,32 @@ fn cmd_sweep(args: &Args, config: &Config) -> anyhow::Result<()> {
         println!("traces -> {} ({written} cells)", dir.display());
     }
     Ok(())
+}
+
+/// The fixed grid behind the `requests_per_s_*` bench metrics: a
+/// pure-serve stream (frac 1.0, so every cell carries a latency
+/// digest) over the collocation policies under contention. Small
+/// enough to add negligible bench time, deterministic like any sweep.
+fn serving_bench_grid() -> GridSpec {
+    GridSpec {
+        policies: vec![PolicyKind::Mps, PolicyKind::MigStatic, PolicyKind::MigMiso],
+        mixes: vec![MixSpec::preset("smalls").expect("built-in preset")],
+        gpus: vec![2],
+        interarrivals_s: vec![0.5],
+        interference: vec![InterferenceModel::Roofline],
+        queues: vec![QueueDiscipline::Fifo],
+        seeds: vec![42],
+        jobs_per_cell: 12,
+        epochs: Some(1),
+        cap: 7,
+        admission: AdmissionMode::Strict,
+        probe_window_s: 15.0,
+        serve_fracs: vec![1.0],
+        arrival_shapes: vec![ArrivalShape::Poisson],
+        slo_ms: vec![250.0],
+        serve_rps: 2.0,
+        serve_duration_s: 30.0,
+    }
 }
 
 fn cmd_bench(args: &Args, config: &Config) -> anyhow::Result<()> {
@@ -637,10 +739,30 @@ fn cmd_bench(args: &Args, config: &Config) -> anyhow::Result<()> {
     for (policy, mean) in migsim::report::sweep::policy_means(&run) {
         report.metric(&format!("images_per_s_{policy}"), mean);
     }
+    // Serving throughput floors: a tiny pure-serve grid (frac 1.0, so
+    // every cell is guaranteed a latency digest) runs once alongside
+    // the timed sweep. requests/s is simulated — deterministic at any
+    // thread count — so the gate catches behavioral regressions, not
+    // host noise.
+    let serve_grid = serving_bench_grid();
+    let serve_run = run_sweep(&serve_grid, &cal, &SweepOptions::with_threads(threads))?;
+    for policy in &serve_grid.policies {
+        let rates: Vec<f64> = serve_run
+            .cells
+            .iter()
+            .filter(|c| c.spec.policy == *policy)
+            .filter_map(|c| c.metrics.serving.as_ref().map(|s| s.requests_per_s))
+            .collect();
+        report.metric(
+            &format!("requests_per_s_{}", policy.name()),
+            migsim::util::safe_div(rates.iter().sum(), rates.len() as f64),
+        );
+    }
     report
         .note("wall_s", timing.median_s)
         .note("threads", run.threads as f64)
-        .note("cells", grid.cell_count() as f64);
+        .note("cells", grid.cell_count() as f64)
+        .note("serve_cells", serve_grid.cell_count() as f64);
     for (key, value) in &report.metrics {
         println!("  {key:<28} {value:.1}");
     }
@@ -720,10 +842,10 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     if json.get("grid").is_some() && json.get("cells").is_some() {
         let cells = migsim::report::sweep::validate_summary(&json)
             .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-        println!(
-            "OK sweep summary {path}: schema v{}, {cells} cells",
-            migsim::report::sweep::SWEEP_SCHEMA_VERSION
-        );
+        // v4 = training-only, v5 = serving axes active; validate_summary
+        // accepted it, so the value is one of the two.
+        let version = json.get("schema_version").and_then(|v| v.as_u64()).unwrap_or(0);
+        println!("OK sweep summary {path}: schema v{version}, {cells} cells");
         return Ok(());
     }
     if json.get("metrics").is_some() && json.get("provisional").is_some() {

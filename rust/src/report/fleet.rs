@@ -23,12 +23,16 @@ fn fmt_opt(v: Option<f64>) -> String {
     v.map(|x| format!("{x:.3}")).unwrap_or_default()
 }
 
-/// Per-job CSV rows: one line per job of the trace.
+/// Per-job CSV rows: one line per job of the trace. Runs whose trace
+/// carries serve jobs append the five per-job latency columns (train
+/// rows leave them empty); training-only runs keep the 9-column v4
+/// layout byte for byte.
 pub fn jobs_rows(m: &FleetMetrics) -> Vec<Vec<String>> {
+    let serving = m.serving.is_some();
     m.jobs
         .iter()
         .map(|j| {
-            vec![
+            let mut row = vec![
                 j.spec.id.to_string(),
                 j.spec.workload.name().to_string(),
                 format!("{:.3}", j.spec.arrival_s),
@@ -38,10 +42,44 @@ pub fn jobs_rows(m: &FleetMetrics) -> Vec<Vec<String>> {
                 fmt_opt(j.jct_s()),
                 j.gpu.map(|g| g.to_string()).unwrap_or_default(),
                 j.outcome.label().to_string(),
-            ]
+            ];
+            if serving {
+                match &j.serve {
+                    Some(s) => {
+                        row.push(s.requests.to_string());
+                        row.push(s.completed.to_string());
+                        row.push(s.within_slo.to_string());
+                        row.push(format!("{:.3}", s.p50_ms));
+                        row.push(format!("{:.3}", s.p99_ms));
+                    }
+                    None => row.extend(JOBS_SERVING_COLUMNS.map(|_| String::new())),
+                }
+            }
+            row
         })
         .collect()
 }
+
+/// The per-job CSV header matching [`jobs_rows`] for this run.
+pub fn jobs_header(m: &FleetMetrics) -> Vec<&'static str> {
+    let mut header = JOBS_HEADER.to_vec();
+    if m.serving.is_some() {
+        header.extend(JOBS_SERVING_COLUMNS);
+    }
+    header
+}
+
+const JOBS_HEADER: [&str; 9] = [
+    "id", "workload", "arrival_s", "start_s", "finish_s", "wait_s", "jct_s", "gpu", "outcome",
+];
+
+const JOBS_SERVING_COLUMNS: [&str; 5] = [
+    "requests",
+    "completed",
+    "within_slo",
+    "p50_latency_ms",
+    "p99_latency_ms",
+];
 
 /// Per-GPU CSV rows.
 pub fn gpus_rows(m: &FleetMetrics) -> Vec<Vec<String>> {
@@ -68,14 +106,7 @@ pub fn write_fleet(dir: &Path, m: &FleetMetrics) -> anyhow::Result<FleetArtifact
     let summary_json = dir.join(format!("{stem}_summary.json"));
     std::fs::write(&summary_json, m.to_json().to_string_pretty())?;
     let jobs_csv = dir.join(format!("{stem}_jobs.csv"));
-    csv::write_csv(
-        &jobs_csv,
-        &[
-            "id", "workload", "arrival_s", "start_s", "finish_s", "wait_s", "jct_s", "gpu",
-            "outcome",
-        ],
-        &jobs_rows(m),
-    )?;
+    csv::write_csv(&jobs_csv, &jobs_header(m), &jobs_rows(m))?;
     let gpus_csv = dir.join(format!("{stem}_gpus.csv"));
     csv::write_csv(
         &gpus_csv,
@@ -107,6 +138,7 @@ mod tests {
             mix: [1.0, 0.0, 0.0],
             epochs: Some(1),
             seed: 3,
+            ..TraceConfig::default()
         });
         let config = FleetConfig {
             a100s: 2,
@@ -142,14 +174,70 @@ mod tests {
         let rows = jobs_rows(&m);
         assert_eq!(rows.len(), 8);
         assert!(rows.iter().all(|r| r[8] == "finished"));
+        // Training-only: the 9-column layout, no serving columns.
+        assert_eq!(jobs_header(&m).len(), 9);
+        assert!(rows.iter().all(|r| r.len() == 9));
         let grows = gpus_rows(&m);
         assert_eq!(grows.len(), 2);
     }
 
     #[test]
+    fn mixed_runs_append_per_job_latency_columns() {
+        use crate::cluster::trace::{JobKind, JobSpec, ServeSpec};
+        use crate::workload::arrivals::ArrivalShape;
+        use crate::workload::spec::WorkloadSize;
+        // One serve resident among trains: the serve row carries its
+        // latency digest, the train rows leave the columns empty.
+        let cal = Calibration::paper();
+        let mut trace: Vec<JobSpec> = vec![JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            workload: WorkloadSize::Small,
+            epochs: 1,
+            kind: JobKind::Serve(ServeSpec {
+                duration_s: 30.0,
+                rate_rps: 1.0,
+                shape: ArrivalShape::Poisson,
+                slo_ms: 250.0,
+                seed: 11,
+            }),
+        }];
+        trace.extend((1..4).map(|id| JobSpec {
+            id,
+            arrival_s: id as f64 * 0.1,
+            workload: WorkloadSize::Small,
+            epochs: 1,
+            kind: JobKind::Train,
+        }));
+        let config = FleetConfig {
+            a100s: 1,
+            a30s: 0,
+            ..FleetConfig::default()
+        };
+        let m = FleetSim::new(config, PolicyKind::Mps.build(&cal, 7, None), cal, &trace)
+            .run_with(&RunOptions::default())
+            .unwrap()
+            .metrics;
+        assert!(m.serving.is_some(), "{}", m.summary());
+        let header = jobs_header(&m);
+        assert_eq!(header.len(), 14);
+        assert_eq!(header[9], "requests");
+        let rows = jobs_rows(&m);
+        for (j, row) in m.jobs.iter().zip(&rows) {
+            assert_eq!(row.len(), 14, "job {}", j.spec.id);
+            assert_eq!(row[9].is_empty(), j.serve.is_none(), "job {}", j.spec.id);
+        }
+        // The artifact writer picks the wide header up as well.
+        let dir = TempDir::new().unwrap();
+        let a = write_fleet(dir.path(), &m).unwrap();
+        let jobs = std::fs::read_to_string(&a.jobs_csv).unwrap();
+        assert!(jobs.lines().next().unwrap().ends_with("p50_latency_ms,p99_latency_ms"));
+    }
+
+    #[test]
     fn oversubscribed_run_exports_oom_outcomes() {
         use crate::cluster::policy::AdmissionMode;
-        use crate::cluster::trace::JobSpec;
+        use crate::cluster::trace::{JobKind, JobSpec};
         use crate::workload::spec::WorkloadSize;
         // Six larges on one A100 under MPS: four fit, two OOM. The CSV
         // outcome column and the summary JSON both say so.
@@ -160,6 +248,7 @@ mod tests {
                 arrival_s: id as f64 * 0.001,
                 workload: WorkloadSize::Large,
                 epochs: 1,
+                kind: JobKind::Train,
             })
             .collect();
         let config = FleetConfig {

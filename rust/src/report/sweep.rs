@@ -36,6 +36,13 @@ use std::path::{Path, PathBuf};
 /// from every cell).
 pub const SWEEP_SCHEMA_VERSION: u64 = 4;
 
+/// v5: the serving subsystem — emitted *only* when the grid's serving
+/// axes are active ([`GridSpec::has_serving`]): grid serve keys,
+/// per-cell `serving` latency digests, four extra CSV columns and the
+/// `slo_ranking` section. Training-only grids keep the exact v4
+/// bytes, so pre-serving consumers never see the bump.
+pub const SWEEP_SERVING_SCHEMA_VERSION: u64 = 5;
+
 /// Files one [`write_sweep`] call produces.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SweepArtifacts {
@@ -237,11 +244,99 @@ pub fn queue_table(run: &SweepRun) -> String {
     )
 }
 
+/// Per-policy aggregate over the grid's *serving* cells: the SLO
+/// ranking's data, sorted best-first on mean attainment (ties break on
+/// lower p99, then name). Cells whose trace drew no serve jobs carry
+/// no latency digest and stay out of the aggregate, so a policy whose
+/// cells never served simply has no row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSummary {
+    pub policy: String,
+    /// Serving cells (cells with a latency digest) for this policy.
+    pub cells: u64,
+    /// Total requests generated across those cells.
+    pub requests: u64,
+    pub mean_slo_attainment: f64,
+    pub mean_p99_latency_ms: f64,
+}
+
+/// Aggregate every serving cell by policy (see [`SloSummary`]).
+pub fn slo_means(run: &SweepRun) -> Vec<SloSummary> {
+    let mut acc: Vec<(String, u64, u64, f64, f64)> = Vec::new();
+    for cell in &run.cells {
+        let Some(s) = &cell.metrics.serving else { continue };
+        let name = cell.spec.policy.name();
+        match acc.iter_mut().find(|(n, ..)| n == name) {
+            Some((_, cells, requests, att, p99)) => {
+                *cells += 1;
+                *requests += s.requests;
+                *att += s.slo_attainment;
+                *p99 += s.p99_latency_ms;
+            }
+            None => acc.push((
+                name.to_string(),
+                1,
+                s.requests,
+                s.slo_attainment,
+                s.p99_latency_ms,
+            )),
+        }
+    }
+    let mut means: Vec<SloSummary> = acc
+        .into_iter()
+        .map(|(policy, cells, requests, att, p99)| SloSummary {
+            policy,
+            cells,
+            requests,
+            mean_slo_attainment: safe_div(att, cells as f64),
+            mean_p99_latency_ms: safe_div(p99, cells as f64),
+        })
+        .collect();
+    means.sort_by(|a, b| {
+        b.mean_slo_attainment
+            .total_cmp(&a.mean_slo_attainment)
+            .then_with(|| a.mean_p99_latency_ms.total_cmp(&b.mean_p99_latency_ms))
+            .then_with(|| a.policy.cmp(&b.policy))
+    });
+    means
+}
+
+/// The ASCII SLO-attainment ranking table for the CLI: the serving
+/// counterpart of [`ranking_table`] — isolation (MIG) should win on
+/// tail latency and attainment while MPS keeps the throughput edge,
+/// the paper's trade-off restated for inference.
+pub fn slo_table(run: &SweepRun) -> String {
+    let rows: Vec<Vec<String>> = slo_means(run)
+        .iter()
+        .map(|s| {
+            vec![
+                s.policy.clone(),
+                s.cells.to_string(),
+                s.requests.to_string(),
+                format!("{:.4}", s.mean_slo_attainment),
+                format!("{:.1}", s.mean_p99_latency_ms),
+            ]
+        })
+        .collect();
+    render::table(
+        "SLO ranking (mean attainment across the grid's serving cells)",
+        &["policy", "cells", "requests", "attainment μ", "p99 ms μ"],
+        &rows,
+    )
+}
+
 /// The sweep summary as JSON: schema version, calibration fingerprint,
 /// the grid spec verbatim, per-cell outcomes and the policy ranking.
+/// Serving grids ([`GridSpec::has_serving`]) report schema v5 and gain
+/// the `slo_ranking` section; training-only grids keep v4 bytes.
 pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json {
+    let version = if grid.has_serving() {
+        SWEEP_SERVING_SCHEMA_VERSION
+    } else {
+        SWEEP_SCHEMA_VERSION
+    };
     let mut j = Json::obj();
-    j.set("schema_version", Json::from_u64(SWEEP_SCHEMA_VERSION))
+    j.set("schema_version", Json::from_u64(version))
         .set(
             "calibration_fingerprint",
             Json::from_str_val(&format!("{:016x}", cal.fingerprint())),
@@ -300,15 +395,33 @@ pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json 
         })
         .collect();
     j.set("queue_ranking", Json::Arr(queue_ranking));
+    if grid.has_serving() {
+        let slo_ranking: Vec<Json> = slo_means(run)
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("policy", Json::from_str_val(&s.policy))
+                    .set("cells", Json::from_u64(s.cells))
+                    .set("requests", Json::from_u64(s.requests))
+                    .set("mean_slo_attainment", Json::from_f64(s.mean_slo_attainment))
+                    .set("mean_p99_latency_ms", Json::from_f64(s.mean_p99_latency_ms));
+                o
+            })
+            .collect();
+        j.set("slo_ranking", Json::Arr(slo_ranking));
+    }
     j
 }
 
-/// Per-cell CSV rows (one line per cell, grid order).
-pub fn cells_rows(run: &SweepRun) -> Vec<Vec<String>> {
+/// Per-cell CSV rows (one line per cell, grid order). Serving grids
+/// append the four latency columns; cells whose trace drew no serve
+/// jobs leave them empty rather than faking zeros.
+pub fn cells_rows(grid: &GridSpec, run: &SweepRun) -> Vec<Vec<String>> {
+    let serving = grid.has_serving();
     run.cells
         .iter()
         .map(|c| {
-            vec![
+            let mut row = vec![
                 c.spec.index.to_string(),
                 c.spec.policy.name().to_string(),
                 c.spec.mix.name.clone(),
@@ -334,10 +447,39 @@ pub fn cells_rows(run: &SweepRun) -> Vec<Vec<String>> {
                 format!("{:.3}", c.metrics.peak_slowdown),
                 format!("{}", c.metrics.probe_window_s),
                 c.metrics.migrations.to_string(),
-            ]
+            ];
+            if serving {
+                match &c.metrics.serving {
+                    Some(s) => {
+                        row.push(format!("{:.3}", s.p50_latency_ms));
+                        row.push(format!("{:.3}", s.p99_latency_ms));
+                        row.push(format!("{:.4}", s.slo_attainment));
+                        row.push(format!("{:.3}", s.requests_per_s));
+                    }
+                    None => row.extend(SERVING_CELLS_COLUMNS.map(|_| String::new())),
+                }
+            }
+            row
         })
         .collect()
 }
+
+/// The CSV header for a given grid: the 25 v4 columns, plus the four
+/// serving columns when the grid's serving axes are active.
+pub fn cells_header(grid: &GridSpec) -> Vec<&'static str> {
+    let mut header = CELLS_HEADER.to_vec();
+    if grid.has_serving() {
+        header.extend(SERVING_CELLS_COLUMNS);
+    }
+    header
+}
+
+const SERVING_CELLS_COLUMNS: [&str; 4] = [
+    "p50_latency_ms",
+    "p99_latency_ms",
+    "slo_attainment",
+    "requests_per_s",
+];
 
 const CELLS_HEADER: [&str; 25] = [
     "index",
@@ -378,7 +520,7 @@ pub fn write_sweep(
     let summary_json = dir.join("sweep_summary.json");
     std::fs::write(&summary_json, summary_json_text(grid, run, cal))?;
     let cells_csv = dir.join("sweep_cells.csv");
-    csv::write_csv(&cells_csv, &CELLS_HEADER, &cells_rows(run))?;
+    csv::write_csv(&cells_csv, &cells_header(grid), &cells_rows(grid, run))?;
     Ok(SweepArtifacts {
         summary_json,
         cells_csv,
@@ -393,23 +535,32 @@ pub fn summary_json_text(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> 
 
 /// Deep checks on a parsed sweep summary (the `migsim validate`
 /// backend): schema version, embedded-grid round-trip, per-cell
-/// consistency, and — new in v4 — *cross-section* consistency: every
-/// `ranking` policy and every `queue_ranking` queue must actually
-/// occur in some cell, so an aggregate row can never describe data
-/// the file does not contain. Returns the cell count.
+/// consistency, and *cross-section* consistency (v4): every `ranking`
+/// policy and every `queue_ranking` queue must actually occur in some
+/// cell, so an aggregate row can never describe data the file does
+/// not contain. A v5 (serving) summary must additionally agree with
+/// its grid's serving axes, carry complete latency digests, and keep
+/// every `slo_ranking` row anchored to a cell that actually served.
+/// Returns the cell count.
 pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
     let version = json
         .get("schema_version")
         .and_then(|v| v.as_u64())
         .ok_or_else(|| anyhow::anyhow!("missing schema_version"))?;
     anyhow::ensure!(
-        version == SWEEP_SCHEMA_VERSION,
-        "schema_version {version} != supported {SWEEP_SCHEMA_VERSION}"
+        version == SWEEP_SCHEMA_VERSION || version == SWEEP_SERVING_SCHEMA_VERSION,
+        "schema_version {version} is not supported \
+         ({SWEEP_SCHEMA_VERSION} or {SWEEP_SERVING_SCHEMA_VERSION})"
     );
+    let serving = version == SWEEP_SERVING_SCHEMA_VERSION;
     let grid = GridSpec::from_json(
         json.get("grid")
             .ok_or_else(|| anyhow::anyhow!("missing grid"))?,
     )?;
+    anyhow::ensure!(
+        serving == grid.has_serving(),
+        "schema_version {version} disagrees with the grid's serving axes"
+    );
     anyhow::ensure!(
         GridSpec::from_json(&grid.to_json())? == grid,
         "embedded grid does not round-trip losslessly"
@@ -435,6 +586,7 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
     );
     let mut cell_policies: Vec<String> = Vec::new();
     let mut cell_queues: Vec<String> = Vec::new();
+    let mut serving_policies: Vec<String> = Vec::new();
     for (i, cell) in cells.iter().enumerate() {
         let index = cell
             .get("index")
@@ -490,6 +642,31 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
                 "cell {i}: metrics.{key} missing or not a number"
             );
         }
+        if let Some(digest) = metrics.get("serving") {
+            anyhow::ensure!(
+                serving,
+                "cell {i}: serving digest in a v{version} summary"
+            );
+            for key in [
+                "serve_jobs",
+                "requests",
+                "completed",
+                "within_slo",
+                "p50_latency_ms",
+                "p95_latency_ms",
+                "p99_latency_ms",
+                "slo_attainment",
+                "requests_per_s",
+            ] {
+                anyhow::ensure!(
+                    digest.get(key).and_then(|v| v.as_f64()).is_some(),
+                    "cell {i}: serving.{key} missing or not a number"
+                );
+            }
+            if !serving_policies.iter().any(|p| p == policy) {
+                serving_policies.push(policy.to_string());
+            }
+        }
     }
     // Cross-section consistency: aggregates must describe the cells.
     // (Regression: a summary whose queue_ranking referenced a queue no
@@ -517,6 +694,31 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
                 "queue_ranking row {i}: queue '{queue}' appears in no cell"
             );
         }
+    }
+    // The serving sections are a v5 surface: required (and anchored to
+    // cells that actually served) on a serving summary, forbidden on a
+    // training-only one.
+    match json.get("slo_ranking").and_then(|v| v.as_arr()) {
+        Some(rows) => {
+            anyhow::ensure!(
+                serving,
+                "slo_ranking present in a v{version} (training-only) summary"
+            );
+            for (i, row) in rows.iter().enumerate() {
+                let policy = row
+                    .get("policy")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("slo_ranking row {i}: missing policy"))?;
+                anyhow::ensure!(
+                    serving_policies.iter().any(|p| p == policy),
+                    "slo_ranking row {i}: policy '{policy}' has no serving cell"
+                );
+            }
+        }
+        None => anyhow::ensure!(
+            !serving,
+            "v{version} summary is missing its slo_ranking section"
+        ),
     }
     Ok(cells.len())
 }
@@ -556,6 +758,21 @@ mod tests {
             cap: 7,
             admission: AdmissionMode::Strict,
             probe_window_s: 15.0,
+            ..GridSpec::default_grid()
+        }
+    }
+
+    fn serving_grid() -> GridSpec {
+        // Fracs 0.0 and 1.0 bracket the serving axis deterministically:
+        // every frac-1 cell carries a latency digest and no frac-0 cell
+        // does, so both CSV branches and the v5 gate are exercised
+        // without depending on per-seed Bernoulli draws.
+        GridSpec {
+            serve_fracs: vec![0.0, 1.0],
+            slo_ms: vec![100.0],
+            serve_rps: 1.0,
+            serve_duration_s: 40.0,
+            ..saturated_grid()
         }
     }
 
@@ -749,5 +966,106 @@ mod tests {
         assert_eq!(cells[0].get("queue").unwrap().as_str(), Some("fifo"));
         assert_eq!(cells[1].get("queue").unwrap().as_str(), Some("backfill-easy"));
         assert_eq!(json.get("queue_ranking").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn serving_summary_bumps_schema_and_ranks_slo() {
+        let grid = serving_grid();
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(2)).unwrap();
+        let text = summary_json_text(&grid, &run, &cal);
+        let json = Json::parse(&text).unwrap();
+        assert_eq!(
+            json.get("schema_version").unwrap().as_u64(),
+            Some(SWEEP_SERVING_SCHEMA_VERSION)
+        );
+        assert_eq!(validate_summary(&json).unwrap(), grid.cell_count());
+        // Digest presence tracks the serving fraction, not chance.
+        for c in &run.cells {
+            assert_eq!(
+                c.metrics.serving.is_some(),
+                c.spec.serve_frac > 0.0,
+                "{}",
+                c.spec.label()
+            );
+        }
+        // The SLO ranking covers every policy with a serving cell and
+        // stays inside the unit range.
+        let means = slo_means(&run);
+        assert_eq!(means.len(), grid.policies.len(), "{means:?}");
+        for s in &means {
+            assert!((0.0..=1.0).contains(&s.mean_slo_attainment), "{s:?}");
+            assert!(s.requests > 0, "{s:?}");
+        }
+        let table = slo_table(&run);
+        for s in &means {
+            assert!(table.contains(&s.policy), "{table}");
+        }
+        // The CSV grows the four serving columns; frac-0 cells leave
+        // them empty instead of faking zeros.
+        let header = cells_header(&grid);
+        assert_eq!(header.len(), 29);
+        assert_eq!(
+            &header[25..],
+            ["p50_latency_ms", "p99_latency_ms", "slo_attainment", "requests_per_s"]
+        );
+        let rows = cells_rows(&grid, &run);
+        for (c, row) in run.cells.iter().zip(&rows) {
+            assert_eq!(row.len(), 29, "{}", c.spec.label());
+            assert_eq!(
+                row[25].is_empty(),
+                c.metrics.serving.is_none(),
+                "{}",
+                c.spec.label()
+            );
+        }
+    }
+
+    #[test]
+    fn training_only_summaries_keep_the_v4_surface() {
+        let grid = saturated_grid();
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
+        let text = summary_json_text(&grid, &run, &cal);
+        let json = Json::parse(&text).unwrap();
+        assert_eq!(
+            json.get("schema_version").unwrap().as_u64(),
+            Some(SWEEP_SCHEMA_VERSION)
+        );
+        assert!(json.get("slo_ranking").is_none());
+        assert!(
+            !text.contains("slo_attainment"),
+            "serving keys leaked into a training-only summary"
+        );
+        assert_eq!(cells_header(&grid).len(), 25);
+        assert!(cells_rows(&grid, &run).iter().all(|r| r.len() == 25));
+        assert_eq!(validate_summary(&json).unwrap(), grid.cell_count());
+    }
+
+    #[test]
+    fn validate_summary_rejects_slo_ranking_naming_an_absent_policy() {
+        let grid = serving_grid();
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
+        let mut json = Json::parse(&summary_json_text(&grid, &run, &cal)).unwrap();
+        let mut phantom = Json::obj();
+        phantom
+            .set("policy", Json::from_str_val("exclusive"))
+            .set("cells", Json::from_u64(1))
+            .set("requests", Json::from_u64(10))
+            .set("mean_slo_attainment", Json::from_f64(1.0))
+            .set("mean_p99_latency_ms", Json::from_f64(5.0));
+        let mut rows = json.get("slo_ranking").unwrap().as_arr().unwrap().to_vec();
+        rows.push(phantom);
+        json.set("slo_ranking", Json::Arr(rows));
+        let err = validate_summary(&json).unwrap_err().to_string();
+        assert!(err.contains("slo_ranking") && err.contains("exclusive"), "{err}");
+        // A training-only summary must not carry the section at all.
+        let t_grid = saturated_grid();
+        let t_run = run_sweep(&t_grid, &cal, &SweepOptions::with_threads(1)).unwrap();
+        let mut v4 = Json::parse(&summary_json_text(&t_grid, &t_run, &cal)).unwrap();
+        v4.set("slo_ranking", Json::Arr(Vec::new()));
+        let err = validate_summary(&v4).unwrap_err().to_string();
+        assert!(err.contains("slo_ranking"), "{err}");
     }
 }

@@ -314,7 +314,7 @@ pub fn validate_trace(json: &Json) -> anyhow::Result<usize> {
 mod tests {
     use super::*;
     use crate::cluster::metrics::{JobOutcome, JobRecord};
-    use crate::cluster::trace::JobSpec;
+    use crate::cluster::trace::{JobKind, JobSpec};
     use crate::telemetry::timeline::{CounterSample, FleetTimeline, TraceRecord};
     use crate::workload::spec::WorkloadSize;
 
@@ -334,17 +334,20 @@ mod tests {
             mean_slowdown: 1.0,
             peak_slowdown: 1.0,
             timeline: None,
+            serving: None,
             jobs: vec![JobRecord {
                 spec: JobSpec {
                     id: 0,
                     arrival_s: 0.0,
                     workload: WorkloadSize::Small,
                     epochs: 1,
+                    kind: JobKind::Train,
                 },
                 start_s: Some(1.0),
                 finish_s: Some(90.0),
                 gpu: Some(0),
                 outcome: JobOutcome::Finished,
+                serve: None,
             }],
             gpus: Vec::new(),
         }

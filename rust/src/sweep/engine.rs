@@ -53,6 +53,43 @@ pub struct CellMetrics {
     /// MISO probe window the cell ran with (the grid constant; inert
     /// for non-hybrid policies).
     pub probe_window_s: f64,
+    /// Serving digest (`None` on cells that placed no serving replica
+    /// — their JSON keeps its schema-v4 keys).
+    pub serving: Option<CellServing>,
+}
+
+/// Deterministic serving outcomes of one cell: the fleet's pooled
+/// request-latency digest plus the serving throughput.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellServing {
+    pub serve_jobs: u64,
+    pub requests: u64,
+    pub completed: u64,
+    pub within_slo: u64,
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    /// Fraction of *offered* requests answered within the deadline.
+    pub slo_attainment: f64,
+    /// Answered requests per simulated second — the serving figure the
+    /// bench gate tracks alongside `images_per_s`.
+    pub requests_per_s: f64,
+}
+
+impl CellServing {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("serve_jobs", Json::from_u64(self.serve_jobs))
+            .set("requests", Json::from_u64(self.requests))
+            .set("completed", Json::from_u64(self.completed))
+            .set("within_slo", Json::from_u64(self.within_slo))
+            .set("p50_latency_ms", Json::from_f64(self.p50_latency_ms))
+            .set("p95_latency_ms", Json::from_f64(self.p95_latency_ms))
+            .set("p99_latency_ms", Json::from_f64(self.p99_latency_ms))
+            .set("slo_attainment", Json::from_f64(self.slo_attainment))
+            .set("requests_per_s", Json::from_f64(self.requests_per_s));
+        j
+    }
 }
 
 impl CellMetrics {
@@ -76,6 +113,17 @@ impl CellMetrics {
             hol_wait_s: m.hol_wait_s,
             migrations: m.migrations,
             probe_window_s: m.probe_window_s,
+            serving: m.serving.as_ref().map(|s| CellServing {
+                serve_jobs: s.serve_jobs,
+                requests: s.requests,
+                completed: s.completed,
+                within_slo: s.within_slo,
+                p50_latency_ms: s.p50_ms,
+                p95_latency_ms: s.p95_ms,
+                p99_latency_ms: s.p99_ms,
+                slo_attainment: s.slo_attainment(),
+                requests_per_s: m.requests_per_second(),
+            }),
         }
     }
 
@@ -99,6 +147,9 @@ impl CellMetrics {
             .set("hol_wait_s", Json::from_f64(self.hol_wait_s))
             .set("migrations", Json::from_u64(self.migrations))
             .set("probe_window_s", Json::from_f64(self.probe_window_s));
+        if let Some(s) = &self.serving {
+            j.set("serving", s.to_json());
+        }
         j
     }
 }
@@ -343,6 +394,19 @@ mod tests {
             cap: 7,
             admission: crate::cluster::policy::AdmissionMode::Strict,
             probe_window_s: 15.0,
+            ..GridSpec::default_grid()
+        }
+    }
+
+    /// `tiny_grid` with a serving fraction: every cell mixes training
+    /// jobs and serving replicas.
+    fn tiny_serve_grid() -> GridSpec {
+        GridSpec {
+            serve_fracs: vec![0.3],
+            slo_ms: vec![50.0, 250.0],
+            serve_duration_s: 60.0,
+            serve_rps: 1.0,
+            ..tiny_grid()
         }
     }
 
@@ -444,6 +508,47 @@ mod tests {
         // Default options capture nothing.
         let plain = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
         assert!(plain.traces.iter().all(|t| t.is_none()));
+    }
+
+    #[test]
+    fn serving_cells_carry_a_digest_and_training_cells_do_not() {
+        let grid = tiny_serve_grid();
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(2)).unwrap();
+        let mut saw_serving = false;
+        for c in &run.cells {
+            // The digest is present exactly when the cell's (seeded,
+            // deterministic) trace actually drew a serving replica.
+            let trace = poisson_trace(&c.spec.trace_config(&grid));
+            let n_serve = trace.iter().filter(|j| j.serve().is_some()).count() as u64;
+            match &c.metrics.serving {
+                Some(s) => {
+                    saw_serving = true;
+                    assert_eq!(s.serve_jobs, n_serve, "{}", c.spec.label());
+                    assert!(s.completed <= s.requests, "{}", c.spec.label());
+                    assert!(s.within_slo <= s.completed, "{}", c.spec.label());
+                    assert!(
+                        (0.0..=1.0).contains(&s.slo_attainment),
+                        "{}: attainment {}",
+                        c.spec.label(),
+                        s.slo_attainment
+                    );
+                    let json = c.metrics.to_json().to_string_pretty();
+                    assert!(json.contains("\"requests_per_s\""), "{}", c.spec.label());
+                }
+                None => assert_eq!(n_serve, 0, "{}", c.spec.label()),
+            }
+        }
+        assert!(saw_serving, "the serving grid must place at least one replica");
+        // Thread count still does not change serving results.
+        let one = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
+        assert_eq!(one.cells, run.cells);
+        // Training-only cells keep their schema-v4 JSON keys.
+        let training = run_sweep(&tiny_grid(), &cal, &SweepOptions::with_threads(1)).unwrap();
+        for c in &training.cells {
+            assert!(c.metrics.serving.is_none(), "{}", c.spec.label());
+            assert!(!c.metrics.to_json().to_string_pretty().contains("serving"));
+        }
     }
 
     #[test]

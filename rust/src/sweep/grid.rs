@@ -1,13 +1,16 @@
 //! Declarative sweep grids: axes × axes × … → a flat list of cells.
 //!
-//! A [`GridSpec`] names seven axes — placement policies, workload
+//! A [`GridSpec`] names ten axes — placement policies, workload
 //! mixes, fleet sizes, mean inter-arrival gaps, interference models,
-//! queue disciplines and trace seeds — plus the per-cell constants
-//! (jobs per trace, epoch override, co-runner cap, admission mode).
-//! [`GridSpec::cells`] validates every axis and expands the cartesian
-//! product in a *fixed nested order* (policy outermost, seed innermost),
-//! so cell indices — and therefore sweep output — are a pure function
-//! of the spec, never of execution order or thread count.
+//! queue disciplines, serving fractions, request arrival shapes,
+//! latency deadlines and trace seeds — plus the per-cell constants
+//! (jobs per trace, epoch override, co-runner cap, admission mode,
+//! serving rate and lease). [`GridSpec::cells`] validates every axis
+//! and expands the cartesian product in a *fixed nested order* (policy
+//! outermost, seed innermost), so cell indices — and therefore sweep
+//! output — are a pure function of the spec, never of execution order
+//! or thread count. The three serving axes default to singletons, so a
+//! training-only grid expands to exactly its pre-serving cell list.
 //!
 //! Seeding: a cell's trace seed is its seed-axis value, untouched. Cells
 //! that differ only in policy or fleet size therefore replay the
@@ -21,6 +24,7 @@ use crate::cluster::trace::{parse_mix, TraceConfig};
 use crate::simgpu::interference::InterferenceModel;
 use crate::util::json::Json;
 use crate::util::rng::DEFAULT_SEED;
+use crate::workload::arrivals::ArrivalShape;
 use crate::workload::spec::WorkloadSize;
 
 /// A named (small, medium, large) arrival-mix weighting.
@@ -109,7 +113,7 @@ impl MixSpec {
     }
 }
 
-/// The declarative sweep grid: seven axes plus per-cell constants.
+/// The declarative sweep grid: ten axes plus per-cell constants.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GridSpec {
     pub policies: Vec<PolicyKind>,
@@ -140,6 +144,21 @@ pub struct GridSpec {
     /// region observes its residents before the commit decision; inert
     /// for the other policies).
     pub probe_window_s: f64,
+    /// Serving-mix axis: fraction of each cell's jobs that are serving
+    /// replicas. The default singleton `[0.0]` keeps the grid
+    /// training-only — no extra cells, identical indices, and the
+    /// grid's JSON / labels / summary bytes stay schema-v4.
+    pub serve_fracs: Vec<f64>,
+    /// Request arrival-process axis of the serving replicas (inert at
+    /// `serve_frac == 0`).
+    pub arrival_shapes: Vec<ArrivalShape>,
+    /// Per-request latency-deadline axis (ms) of the serving replicas
+    /// (inert at `serve_frac == 0`).
+    pub slo_ms: Vec<f64>,
+    /// Mean request rate of every serving replica (per-cell constant).
+    pub serve_rps: f64,
+    /// Wall-clock lease of every serving replica (per-cell constant).
+    pub serve_duration_s: f64,
 }
 
 impl GridSpec {
@@ -162,6 +181,11 @@ impl GridSpec {
             cap: 7,
             admission: AdmissionMode::Strict,
             probe_window_s: 15.0,
+            serve_fracs: vec![0.0],
+            arrival_shapes: vec![ArrivalShape::Poisson],
+            slo_ms: vec![250.0],
+            serve_rps: 2.0,
+            serve_duration_s: 600.0,
         }
     }
 
@@ -181,6 +205,11 @@ impl GridSpec {
             cap: 7,
             admission: AdmissionMode::Strict,
             probe_window_s: 15.0,
+            serve_fracs: vec![0.0],
+            arrival_shapes: vec![ArrivalShape::Poisson],
+            slo_ms: vec![250.0],
+            serve_rps: 2.0,
+            serve_duration_s: 600.0,
         }
     }
 
@@ -192,7 +221,30 @@ impl GridSpec {
             * self.interarrivals_s.len()
             * self.interference.len()
             * self.queues.len()
+            * self.serve_fracs.len()
+            * self.arrival_shapes.len()
+            * self.slo_ms.len()
             * self.seeds.len()
+    }
+
+    /// Whether any cell of this grid carries serving replicas. Gates
+    /// every serving surface downstream: the serve keys of the grid
+    /// JSON and cell labels, the per-cell latency metrics and the
+    /// sweep summary's schema bump — all absent on training-only
+    /// grids, whose artifacts stay byte-identical to pre-serving runs.
+    pub fn has_serving(&self) -> bool {
+        self.serve_fracs.iter().any(|&f| f > 0.0)
+    }
+
+    /// Whether every serving knob still holds its default — the
+    /// condition for omitting the serve keys from [`Self::to_json`]
+    /// without losing round-trip fidelity.
+    fn serving_knobs_are_default(&self) -> bool {
+        self.serve_fracs == [0.0]
+            && self.arrival_shapes == [ArrivalShape::Poisson]
+            && self.slo_ms == [250.0]
+            && self.serve_rps == 2.0
+            && self.serve_duration_s == 600.0
     }
 
     /// Reject empty axes and out-of-domain values with an error naming
@@ -222,6 +274,34 @@ impl GridSpec {
             "probe_window_s must be finite and > 0 ({})",
             self.probe_window_s
         );
+        anyhow::ensure!(!self.serve_fracs.is_empty(), "grid axis 'serve_fracs' is empty");
+        anyhow::ensure!(
+            !self.arrival_shapes.is_empty(),
+            "grid axis 'arrival_shapes' is empty"
+        );
+        anyhow::ensure!(!self.slo_ms.is_empty(), "grid axis 'slo_ms' is empty");
+        for &f in &self.serve_fracs {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&f),
+                "grid axis 'serve_fracs' contains {f} (must be within [0, 1])"
+            );
+        }
+        for &s in &self.slo_ms {
+            anyhow::ensure!(
+                s.is_finite() && s > 0.0,
+                "grid axis 'slo_ms' contains a non-positive deadline ({s})"
+            );
+        }
+        anyhow::ensure!(
+            self.serve_rps.is_finite() && self.serve_rps > 0.0,
+            "serve_rps must be finite and > 0 ({})",
+            self.serve_rps
+        );
+        anyhow::ensure!(
+            self.serve_duration_s.is_finite() && self.serve_duration_s > 0.0,
+            "serve_duration_s must be finite and > 0 ({})",
+            self.serve_duration_s
+        );
         for &g in &self.gpus {
             anyhow::ensure!(g >= 1, "grid axis 'gpus' contains a zero-GPU fleet");
         }
@@ -250,7 +330,10 @@ impl GridSpec {
     }
 
     /// Expand to cells in the fixed nested order: policy → mix → gpus →
-    /// interarrival → interference → queue → seed.
+    /// interarrival → interference → queue → serve_frac →
+    /// arrival_shape → slo → seed. The serving axes default to
+    /// singletons, so training-only grids expand to exactly the
+    /// pre-serving cell list, index for index.
     pub fn cells(&self) -> anyhow::Result<Vec<CellSpec>> {
         self.validate()?;
         let mut out = Vec::with_capacity(self.cell_count());
@@ -260,17 +343,26 @@ impl GridSpec {
                     for &interarrival in &self.interarrivals_s {
                         for &interference in &self.interference {
                             for &queue in &self.queues {
-                                for &seed in &self.seeds {
-                                    out.push(CellSpec {
-                                        index: out.len(),
-                                        policy,
-                                        mix: mix.clone(),
-                                        gpus,
-                                        mean_interarrival_s: interarrival,
-                                        interference,
-                                        queue,
-                                        seed,
-                                    });
+                                for &serve_frac in &self.serve_fracs {
+                                    for &arrival_shape in &self.arrival_shapes {
+                                        for &slo_ms in &self.slo_ms {
+                                            for &seed in &self.seeds {
+                                                out.push(CellSpec {
+                                                    index: out.len(),
+                                                    policy,
+                                                    mix: mix.clone(),
+                                                    gpus,
+                                                    mean_interarrival_s: interarrival,
+                                                    interference,
+                                                    queue,
+                                                    serve_frac,
+                                                    arrival_shape,
+                                                    slo_ms,
+                                                    seed,
+                                                });
+                                            }
+                                        }
+                                    }
                                 }
                             }
                         }
@@ -344,6 +436,30 @@ impl GridSpec {
         .set("cap", Json::from_u64(self.cap as u64))
         .set("admission", Json::from_str_val(self.admission.name()))
         .set("probe_window_s", Json::from_f64(self.probe_window_s));
+        // Serve keys only when a serving knob is actually set: the
+        // embedded grid of a training-only sweep keeps its schema-v4
+        // bytes.
+        if !self.serving_knobs_are_default() {
+            j.set(
+                "serve_fracs",
+                Json::Arr(self.serve_fracs.iter().map(|&f| Json::from_f64(f)).collect()),
+            )
+            .set(
+                "arrival_shapes",
+                Json::Arr(
+                    self.arrival_shapes
+                        .iter()
+                        .map(|a| Json::from_str_val(a.name()))
+                        .collect(),
+                ),
+            )
+            .set(
+                "slo_ms",
+                Json::Arr(self.slo_ms.iter().map(|&s| Json::from_f64(s)).collect()),
+            )
+            .set("serve_rps", Json::from_f64(self.serve_rps))
+            .set("serve_duration_s", Json::from_f64(self.serve_duration_s));
+        }
         j
     }
 
@@ -369,6 +485,11 @@ impl GridSpec {
                     "cap",
                     "admission",
                     "probe_window_s",
+                    "serve_fracs",
+                    "arrival_shapes",
+                    "slo_ms",
+                    "serve_rps",
+                    "serve_duration_s",
                 ]
                 .contains(&key.as_str()),
                 "unknown grid key '{key}'"
@@ -489,6 +610,51 @@ impl GridSpec {
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("'probe_window_s' must be a number"))?;
         }
+        if let Some(v) = obj.get("serve_fracs") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'serve_fracs' must be an array"))?;
+            grid.serve_fracs = arr
+                .iter()
+                .map(|f| {
+                    f.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("serve fractions must be numbers"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = obj.get("arrival_shapes") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'arrival_shapes' must be an array"))?;
+            grid.arrival_shapes = arr
+                .iter()
+                .map(|a| {
+                    let name = a
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("arrival shape entries must be strings"))?;
+                    ArrivalShape::parse_or_err(name)
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = obj.get("slo_ms") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'slo_ms' must be an array"))?;
+            grid.slo_ms = arr
+                .iter()
+                .map(|s| s.as_f64().ok_or_else(|| anyhow::anyhow!("slo_ms must be numbers")))
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = obj.get("serve_rps") {
+            grid.serve_rps = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'serve_rps' must be a number"))?;
+        }
+        if let Some(v) = obj.get("serve_duration_s") {
+            grid.serve_duration_s = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("'serve_duration_s' must be a number"))?;
+        }
         grid.validate()?;
         Ok(grid)
     }
@@ -505,6 +671,13 @@ pub struct CellSpec {
     pub mean_interarrival_s: f64,
     pub interference: InterferenceModel,
     pub queue: QueueDiscipline,
+    /// Fraction of the cell's jobs drawn as serving replicas (0.0 on
+    /// training-only grids).
+    pub serve_frac: f64,
+    /// Request arrival process of the cell's serving replicas.
+    pub arrival_shape: ArrivalShape,
+    /// Per-request deadline (ms) the cell's replicas are scored by.
+    pub slo_ms: f64,
     pub seed: u64,
 }
 
@@ -519,12 +692,18 @@ impl CellSpec {
             mix: self.mix.weights,
             epochs: grid.epochs,
             seed: self.seed,
+            serve_frac: self.serve_frac,
+            serve_duration_s: grid.serve_duration_s,
+            serve_rps: grid.serve_rps,
+            slo_ms: self.slo_ms,
+            arrival_shape: self.arrival_shape,
         }
     }
 
-    /// Short human-readable label for logs and CSV rows.
+    /// Short human-readable label for logs and CSV rows. Serving cells
+    /// append their serve segment; training-only labels are unchanged.
     pub fn label(&self) -> String {
-        format!(
+        let mut label = format!(
             "{}/{}/g{}/ia{}/{}/{}/s{}",
             self.policy.name(),
             self.mix.name,
@@ -533,7 +712,16 @@ impl CellSpec {
             self.interference.name(),
             self.queue.name(),
             self.seed
-        )
+        );
+        if self.serve_frac > 0.0 {
+            label.push_str(&format!(
+                "/sf{}/{}/slo{}",
+                self.serve_frac,
+                self.arrival_shape.name(),
+                self.slo_ms
+            ));
+        }
+        label
     }
 }
 
@@ -690,6 +878,72 @@ mod tests {
         let g = GridSpec::quick();
         assert!(g.validate().is_ok());
         assert!(g.cell_count() <= 8, "quick grid must stay CI-cheap");
+    }
+
+    #[test]
+    fn serve_axes_expand_round_trip_and_stay_invisible_when_off() {
+        // Training-only grid: no serve keys in the JSON, no serve
+        // segment in any label — schema-v4 bytes, index for index.
+        let grid = GridSpec::default_grid();
+        assert!(!grid.has_serving());
+        let text = grid.to_json().to_string_pretty();
+        for key in ["serve_fracs", "arrival_shapes", "slo_ms", "serve_rps", "serve_duration_s"] {
+            assert!(!text.contains(key), "training-only grid JSON grew '{key}'");
+        }
+        assert!(grid.cells().unwrap().iter().all(|c| !c.label().contains("/sf")));
+
+        // Serving axes multiply the cell count and sit between queue
+        // and seed in the expansion order.
+        let mut grid = GridSpec::default_grid();
+        grid.serve_fracs = vec![0.0, 0.25];
+        grid.arrival_shapes = vec![ArrivalShape::Poisson, ArrivalShape::Bursty];
+        grid.slo_ms = vec![100.0, 250.0];
+        assert!(grid.has_serving());
+        let cells = grid.cells().unwrap();
+        assert_eq!(cells.len(), 48 * 8, "48 base cells x 2 fracs x 2 shapes x 2 deadlines");
+        assert_eq!(cells[0].serve_frac, 0.0);
+        assert_eq!(cells[0].slo_ms, 100.0);
+        assert_eq!(cells[1].slo_ms, 250.0, "slo is the innermost serve axis (1 seed)");
+        assert_eq!(cells[2].arrival_shape, ArrivalShape::Bursty);
+        assert_eq!(cells[4].serve_frac, 0.25);
+        // Mixed grid: pure-training cells keep schema-v4 labels while
+        // serving cells append their serve segment.
+        assert!(!cells[0].label().contains("/sf"));
+        assert!(cells[4].label().contains("/sf0.25/poisson/slo100"), "{}", cells[4].label());
+        // The serve knobs land in the trace config.
+        let tc = cells[4].trace_config(&grid);
+        assert_eq!(tc.serve_frac, 0.25);
+        assert_eq!(tc.arrival_shape, ArrivalShape::Poisson);
+        assert_eq!(tc.slo_ms, 100.0);
+        assert_eq!(tc.serve_rps, 2.0);
+        assert_eq!(tc.serve_duration_s, 600.0);
+        // JSON round-trips the serving axes exactly.
+        let back = GridSpec::from_json(&grid.to_json()).unwrap();
+        assert_eq!(back, grid);
+        // Partial specs override just the serve axes.
+        let partial =
+            Json::parse(r#"{"serve_fracs": [0.5], "arrival_shapes": ["diurnal"]}"#).unwrap();
+        let g = GridSpec::from_json(&partial).unwrap();
+        assert_eq!(g.serve_fracs, vec![0.5]);
+        assert_eq!(g.arrival_shapes, vec![ArrivalShape::Diurnal]);
+        assert_eq!(g.slo_ms, vec![250.0]);
+        // Out-of-domain serve knobs are rejected by name.
+        let mut bad = GridSpec::default_grid();
+        bad.serve_fracs = vec![1.5];
+        let err = bad.cells().unwrap_err().to_string();
+        assert!(err.contains("serve_fracs"), "{err}");
+        let mut bad = GridSpec::default_grid();
+        bad.slo_ms = vec![0.0];
+        let err = bad.cells().unwrap_err().to_string();
+        assert!(err.contains("slo_ms"), "{err}");
+        let mut bad = GridSpec::default_grid();
+        bad.serve_rps = -1.0;
+        let err = bad.cells().unwrap_err().to_string();
+        assert!(err.contains("serve_rps"), "{err}");
+        assert!(GridSpec::from_json(
+            &Json::parse(r#"{"arrival_shapes": ["constant"]}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -166,6 +166,11 @@ pub struct FleetTimeline {
     pub times_s: Vec<f64>,
     pub queue_depth: Vec<u32>,
     pub running: Vec<u32>,
+    /// Cumulative requests answered fleet-wide at each tick. Filled
+    /// only on serving fleets ([`FleetTimeline::push_requests`] before
+    /// each `push_fleet`); empty otherwise, and the summary then omits
+    /// its keys — training-only timelines keep pre-serving bytes.
+    pub requests_done: Vec<u64>,
     pub per_gpu: Vec<GpuSeries>,
 }
 
@@ -176,6 +181,7 @@ impl FleetTimeline {
             times_s: Vec::new(),
             queue_depth: Vec::new(),
             running: Vec::new(),
+            requests_done: Vec::new(),
             per_gpu: vec![GpuSeries::default(); n_gpus],
         })
     }
@@ -204,6 +210,12 @@ impl FleetTimeline {
         self.times_s.push(t_s);
         self.queue_depth.push(queue_depth);
         self.running.push(running);
+    }
+
+    /// Append the cumulative completed-request counter for this tick
+    /// (serving fleets only — call once per tick, before `push_fleet`).
+    pub fn push_requests(&mut self, total: u64) {
+        self.requests_done.push(total);
     }
 
     /// Ticks recorded.
@@ -243,6 +255,7 @@ impl FleetTimeline {
             p50_queue_depth: percentile(&depths, 50.0),
             p95_queue_depth: percentile(&depths, 95.0),
             p50_running: percentile(&running, 50.0),
+            final_requests_done: self.requests_done.last().copied(),
             per_gpu,
         }
     }
@@ -269,6 +282,9 @@ pub struct TimelineSummary {
     pub p50_queue_depth: f64,
     pub p95_queue_depth: f64,
     pub p50_running: f64,
+    /// Cumulative completed requests at the last tick. `None` (and the
+    /// JSON key absent) unless the run sampled a serving fleet.
+    pub final_requests_done: Option<u64>,
     pub per_gpu: Vec<GpuUtilSummary>,
 }
 
@@ -280,6 +296,9 @@ impl TimelineSummary {
             .set("p50_queue_depth", Json::from_f64(self.p50_queue_depth))
             .set("p95_queue_depth", Json::from_f64(self.p95_queue_depth))
             .set("p50_running", Json::from_f64(self.p50_running));
+        if let Some(r) = self.final_requests_done {
+            j.set("final_requests_done", Json::from_u64(r));
+        }
         let gpus: Vec<Json> = self
             .per_gpu
             .iter()
@@ -360,6 +379,27 @@ mod tests {
         assert_eq!(back.get("samples").unwrap().as_u64(), Some(1));
         assert_eq!(back.get("interval_s").unwrap().as_f64(), Some(5.0));
         assert_eq!(back.at(&["per_gpu"]).unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn request_counter_appears_only_when_sampled() {
+        let mut t = FleetTimeline::new(5.0, 1).unwrap();
+        t.push_gpu(0, 0.5, 0.4, 0.3, 0, 1);
+        t.push_fleet(5.0, 0, 1);
+        let plain = t.summary();
+        assert_eq!(plain.final_requests_done, None);
+        assert!(!plain.to_json().to_string_pretty().contains("requests"));
+
+        let mut s = FleetTimeline::new(5.0, 1).unwrap();
+        for (i, n) in [3u64, 9, 17].iter().enumerate() {
+            s.push_gpu(0, 0.5, 0.4, 0.3, 0, 1);
+            s.push_requests(*n);
+            s.push_fleet((i as f64 + 1.0) * 5.0, 0, 1);
+        }
+        let sum = s.summary();
+        assert_eq!(sum.final_requests_done, Some(17));
+        let j = Json::parse(&sum.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.get("final_requests_done").unwrap().as_u64(), Some(17));
     }
 
     #[test]

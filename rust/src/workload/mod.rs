@@ -10,7 +10,10 @@
 //!   OOM floors) and host RES model.
 //! * [`dataset`] — synthetic dataset generators for the *real* training
 //!   runs driven through the PJRT runtime.
+//! * [`arrivals`] — open-loop request arrival generators (Poisson /
+//!   diurnal / bursty) for serving workloads.
 
+pub mod arrivals;
 pub mod dataset;
 pub mod memory;
 pub mod pipeline;

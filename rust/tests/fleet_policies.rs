@@ -14,11 +14,12 @@ use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use migsim::cluster::metrics::FleetMetrics;
 use migsim::cluster::policy::{AdmissionMode, MigStatic, PolicyKind};
 use migsim::cluster::queue::QueueDiscipline;
-use migsim::cluster::trace::{poisson_trace, JobSpec, TraceConfig};
+use migsim::cluster::trace::{poisson_trace, JobKind, JobSpec, ServeSpec, TraceConfig};
 use migsim::mig::profile::MigProfile;
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::InterferenceModel;
 use migsim::util::rng;
+use migsim::workload::arrivals::ArrivalShape;
 use migsim::workload::spec::WorkloadSize;
 
 /// Saturating homogeneous small-model stream: all jobs arrive within a
@@ -30,6 +31,7 @@ fn saturating_small_trace(jobs: u32) -> Vec<JobSpec> {
         mix: [1.0, 0.0, 0.0],
         epochs: Some(1),
         seed: rng::resolve_seed(None).expect("valid MIGSIM_SEED"),
+        ..TraceConfig::default()
     })
 }
 
@@ -65,6 +67,7 @@ fn saturating_mix_trace(jobs: u32, mix: [f64; 3]) -> Vec<JobSpec> {
         mix,
         epochs: Some(1),
         seed: rng::resolve_seed(None).expect("valid MIGSIM_SEED"),
+        ..TraceConfig::default()
     })
 }
 
@@ -235,8 +238,20 @@ fn oversubscribed_admission_is_deterministic_and_structured() {
 /// 1g.5gb instances sit idle.
 fn head_of_line_trace() -> Vec<JobSpec> {
     let mut trace = vec![
-        JobSpec { id: 0, arrival_s: 0.0, workload: WorkloadSize::Large, epochs: 1 },
-        JobSpec { id: 1, arrival_s: 0.1, workload: WorkloadSize::Large, epochs: 1 },
+        JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            workload: WorkloadSize::Large,
+            epochs: 1,
+            kind: JobKind::Train,
+        },
+        JobSpec {
+            id: 1,
+            arrival_s: 0.1,
+            workload: WorkloadSize::Large,
+            epochs: 1,
+            kind: JobKind::Train,
+        },
     ];
     for i in 0..10 {
         trace.push(JobSpec {
@@ -244,6 +259,7 @@ fn head_of_line_trace() -> Vec<JobSpec> {
             arrival_s: 0.2 + i as f64 * 0.01,
             workload: WorkloadSize::Small,
             epochs: 1,
+            kind: JobKind::Train,
         });
     }
     trace
@@ -409,6 +425,134 @@ fn miso_beats_static_and_stays_near_mps_on_the_mixed_workload() {
     let t_ts = ts.aggregate_images_per_second();
     assert!(t_mps >= t_mig, "Mps {t_mps} !>= MigStatic {t_mig}");
     assert!(t_mig > t_ts, "MigStatic {t_mig} !> TimeSlice {t_ts}");
+}
+
+/// Mixed train+serve stream: four small serving replicas (wall-clock
+/// lease, open-loop Poisson requests) arrive just ahead of an all-small
+/// training burst deep enough to keep every policy's placements full
+/// for the whole lease. All-small on purpose: a full MPS region of
+/// smalls is the one resident set `mig-miso`'s planner can host on a
+/// partition without stranding a probe (7x 1g.5gb), so it commits.
+fn mixed_serve_trace(slo_ms: f64) -> Vec<JobSpec> {
+    let mut trace = Vec::new();
+    for i in 0..4usize {
+        trace.push(JobSpec {
+            id: i,
+            arrival_s: i as f64 * 0.05,
+            workload: WorkloadSize::Small,
+            epochs: 1,
+            kind: JobKind::Serve(ServeSpec {
+                duration_s: 7200.0,
+                rate_rps: 2.0,
+                shape: ArrivalShape::Poisson,
+                slo_ms,
+                seed: 0xC0FFEE + i as u64,
+            }),
+        });
+    }
+    for i in 0..1500usize {
+        trace.push(JobSpec {
+            id: 4 + i,
+            arrival_s: 0.4 + i as f64 * 0.005,
+            workload: WorkloadSize::Small,
+            epochs: 1,
+            kind: JobKind::Train,
+        });
+    }
+    trace
+}
+
+#[test]
+fn serving_latency_favors_isolation_while_mps_keeps_the_throughput_edge() {
+    // The serving acceptance scenario: under roofline contention, MIG
+    // isolation (static or committed by mig-miso) buys tail latency and
+    // SLO attainment for the serving replicas, MPS keeps its aggregate
+    // training-throughput edge, and exclusive placement wastes capacity
+    // on both axes (half the replicas queue for a whole lease).
+    //
+    // Phase 1 runs with a placeholder deadline to *measure* each
+    // policy's tails — `slo_ms` only classifies requests, it never
+    // moves the dynamics — then phase 2 re-runs with the deadline
+    // pinned between the isolated policies' p99 and the MPS median, so
+    // the attainment ordering is asserted at the scenario's own scale
+    // instead of a hardcoded millisecond guess.
+    let policies = [
+        ("exclusive", PolicyKind::Exclusive),
+        ("mps", PolicyKind::Mps),
+        ("mig-static", PolicyKind::MigStatic),
+        ("mig-miso", PolicyKind::MigMiso),
+    ];
+    let run_all = |slo_ms: f64| -> Vec<FleetMetrics> {
+        let trace = mixed_serve_trace(slo_ms);
+        policies
+            .iter()
+            .map(|&(name, kind)| {
+                let m = run_policy_with(kind, &trace, 2, InterferenceModel::Roofline);
+                assert_eq!(m.rejected(), 0, "{name}");
+                assert_eq!(m.unserved(), 0, "{name}");
+                let s = m.serving.as_ref().unwrap_or_else(|| panic!("{name}: no serving digest"));
+                // Request conservation: every offered request is either
+                // answered or failed, and the per-job ledgers agree
+                // with the fleet digest.
+                assert_eq!(s.serve_jobs, 4, "{name}");
+                assert_eq!(s.requests, s.completed + s.failed(), "{name}");
+                let per_job: u64 = m
+                    .jobs
+                    .iter()
+                    .filter_map(|j| j.serve.as_ref())
+                    .map(|o| o.requests)
+                    .sum();
+                assert_eq!(per_job, s.requests, "{name}: per-job vs fleet request ledger");
+                let att = s.slo_attainment();
+                assert!((0.0..=1.0).contains(&att), "{name}: attainment {att}");
+                m
+            })
+            .collect()
+    };
+
+    let phase1 = run_all(250.0);
+    let p99 = |i: usize| phase1[i].serving.as_ref().unwrap().p99_ms;
+    let (excl, mps, mig, miso) = (0, 1, 2, 3);
+    // Tail-latency ordering: isolated slices beat the contended MPS
+    // region; exclusive queues half the replicas for a full lease.
+    assert!(
+        p99(mig) < p99(mps),
+        "mig-static p99 {} !< mps p99 {}",
+        p99(mig),
+        p99(mps)
+    );
+    assert!(
+        p99(miso) < p99(mps),
+        "mig-miso p99 {} !< mps p99 {}",
+        p99(miso),
+        p99(mps)
+    );
+    assert!(
+        p99(excl) > 100.0 * p99(mps),
+        "exclusive p99 {} must be queue-scale, not service-scale (mps {})",
+        p99(excl),
+        p99(mps)
+    );
+
+    // Pin the deadline between the isolated tails and the MPS median.
+    let lo = p99(mig).max(p99(miso));
+    let hi = phase1[mps].serving.as_ref().unwrap().p50_ms;
+    assert!(lo < hi, "isolated p99 {lo} must undercut the mps median {hi}");
+    let phase2 = run_all(0.5 * (lo + hi));
+    let att = |i: usize| phase2[i].serving.as_ref().unwrap().slo_attainment();
+    assert!(att(mig) > att(mps), "mig-static {} !> mps {}", att(mig), att(mps));
+    assert!(att(miso) > att(mps), "mig-miso {} !> mps {}", att(miso), att(mps));
+    assert!(att(excl) < att(mig), "exclusive {} !< mig-static {}", att(excl), att(mig));
+    assert!(att(excl) < att(miso), "exclusive {} !< mig-miso {}", att(excl), att(miso));
+
+    // The paper's throughput verdict survives the serving mix: MPS
+    // keeps its aggregate training edge over the static partition, and
+    // exclusive placement trails every collocation mode.
+    let tput = |i: usize| phase1[i].aggregate_images_per_second();
+    assert!(tput(mps) >= tput(mig), "mps {} !>= mig-static {}", tput(mps), tput(mig));
+    for i in [mps, mig, miso] {
+        assert!(tput(excl) < tput(i), "exclusive {} !< {} {}", tput(excl), policies[i].0, tput(i));
+    }
 }
 
 #[test]

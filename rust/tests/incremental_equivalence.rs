@@ -78,6 +78,7 @@ fn run_case(c: &Case, verify: bool) -> String {
         mix: c.mix,
         epochs: Some(1),
         seed: c.seed,
+        ..TraceConfig::default()
     });
     let config = FleetConfig {
         a100s: c.a100s,
@@ -130,6 +131,7 @@ fn oversubscribed_saturation_keeps_incremental_state_exact() {
         mix: [0.2, 0.2, 0.6],
         epochs: Some(1),
         seed: 11,
+        ..TraceConfig::default()
     });
     for policy in PolicyKind::ALL {
         for queue in QueueDiscipline::ALL {

@@ -30,6 +30,7 @@ fn trace(jobs: u32) -> Vec<migsim::cluster::trace::JobSpec> {
         mix: [0.5, 0.3, 0.2],
         epochs: Some(1),
         seed: 7,
+        ..TraceConfig::default()
     })
 }
 
@@ -205,6 +206,7 @@ fn sweep_summary_bytes_ignore_observability() {
         cap: 7,
         admission: migsim::cluster::policy::AdmissionMode::Strict,
         probe_window_s: 15.0,
+        ..GridSpec::default_grid()
     };
     let cal = cal();
     let plain = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();

@@ -24,16 +24,21 @@
 //! * a fixed seed reproduces every scenario bit-for-bit, and the MISO
 //!   probe/migration knobs are inert for every policy but `mig-miso`;
 //! * the PR 6 observers (event trace + sampler) never perturb a
-//!   simulated outcome, for any policy.
+//!   simulated outcome, for any policy;
+//! * serving replicas ride the same table (PR 8): requests conserve
+//!   (offered = answered + failed, per-job ledgers sum to the fleet
+//!   digest), SLO attainment stays within the unit interval, and the
+//!   serve knobs are inert on training-only traces.
 
 use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use migsim::cluster::metrics::FleetMetrics;
 use migsim::cluster::policy::{AdmissionMode, MigStatic, PolicyKind};
 use migsim::cluster::queue::QueueDiscipline;
-use migsim::cluster::trace::{poisson_trace, JobSpec, TraceConfig};
+use migsim::cluster::trace::{poisson_trace, JobKind, JobSpec, ServeSpec, TraceConfig};
 use migsim::mig::profile::MigProfile;
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::{InterferenceModel, MAX_SLOWDOWN};
+use migsim::workload::arrivals::{derive_seed, ArrivalShape};
 use migsim::workload::spec::WorkloadSize;
 
 /// One row of the scenario table.
@@ -71,7 +76,25 @@ fn standard_trace() -> Vec<JobSpec> {
         mix: [0.5, 0.3, 0.2],
         epochs: Some(1),
         seed: 7,
+        ..TraceConfig::default()
     })
+}
+
+/// The serving variant of the standard trace: the same burst with
+/// every third job converted to a serving replica in place (arrivals
+/// and workloads untouched, short leases so every row stays fast).
+fn mixed_serve_trace() -> Vec<JobSpec> {
+    let mut trace = standard_trace();
+    for j in trace.iter_mut().step_by(3) {
+        j.kind = JobKind::Serve(ServeSpec {
+            duration_s: 120.0,
+            rate_rps: 1.0,
+            shape: ArrivalShape::Poisson,
+            slo_ms: 250.0,
+            seed: derive_seed(7, j.id as u64),
+        });
+    }
+    trace
 }
 
 fn run_scenario(s: Scenario, trace: &[JobSpec]) -> FleetMetrics {
@@ -233,8 +256,20 @@ fn backfilling_never_delays_the_blocked_head() {
         MigProfile::P1g5gb,
     ];
     let mut trace = vec![
-        JobSpec { id: 0, arrival_s: 0.0, workload: WorkloadSize::Large, epochs: 1 },
-        JobSpec { id: 1, arrival_s: 0.1, workload: WorkloadSize::Large, epochs: 1 },
+        JobSpec {
+            id: 0,
+            arrival_s: 0.0,
+            workload: WorkloadSize::Large,
+            epochs: 1,
+            kind: JobKind::Train,
+        },
+        JobSpec {
+            id: 1,
+            arrival_s: 0.1,
+            workload: WorkloadSize::Large,
+            epochs: 1,
+            kind: JobKind::Train,
+        },
     ];
     for i in 0..8 {
         trace.push(JobSpec {
@@ -242,6 +277,7 @@ fn backfilling_never_delays_the_blocked_head() {
             arrival_s: 0.2 + i as f64 * 0.01,
             workload: WorkloadSize::Small,
             epochs: 1,
+            kind: JobKind::Train,
         });
     }
     let run_q = |queue: QueueDiscipline| -> FleetMetrics {
@@ -299,6 +335,7 @@ fn same_instant_finish_outranks_the_arrival_for_every_shared_policy() {
                 arrival_s: 0.0,
                 workload: WorkloadSize::Large,
                 epochs: 1,
+                kind: JobKind::Train,
             })
             .collect();
         let probe = run(&base);
@@ -309,13 +346,22 @@ fn same_instant_finish_outranks_the_arrival_for_every_shared_policy() {
             .filter_map(|j| j.finish_s)
             .fold(f64::INFINITY, f64::min);
         assert!(first_finish.is_finite(), "{policy}");
-        // Phase 2: a fifth large arrives exactly at that finish.
+        // Phase 2: a fifth large — a *serving* replica, so the serve
+        // admission path is pinned too — arrives exactly at that
+        // finish. Its memory floor is the workload's, same as a train.
         let mut trace = base;
         trace.push(JobSpec {
             id: 4,
             arrival_s: first_finish,
             workload: WorkloadSize::Large,
             epochs: 1,
+            kind: JobKind::Serve(ServeSpec {
+                duration_s: 30.0,
+                rate_rps: 1.0,
+                shape: ArrivalShape::Poisson,
+                slo_ms: 250.0,
+                seed: 9,
+            }),
         });
         let m = run(&trace);
         assert_eq!(
@@ -362,4 +408,82 @@ fn probe_knobs_are_inert_for_non_hybrid_policies() {
         assert_eq!(a.migrations, 0, "{policy}");
         assert_eq!(b.migrations, 0, "{policy}");
     }
+}
+
+/// Serving rows ride the same invariant table: every policy × queue ×
+/// interference cell on the mixed train+serve trace upholds the
+/// cross-cutting invariants *plus* the serving ledger — every offered
+/// request is answered or failed (never both, never neither), the
+/// per-job outcomes sum to the fleet digest, attainment stays in the
+/// unit interval, and a fixed seed still reproduces the run
+/// bit-for-bit. All under the per-event incremental audit.
+#[test]
+fn serving_rows_uphold_request_conservation_and_determinism() {
+    let trace = mixed_serve_trace();
+    let n_serve = trace.iter().filter(|j| j.serve().is_some()).count() as u64;
+    assert!(n_serve >= 3, "scenario must actually serve");
+    for s in scenario_table() {
+        let tag = format!("{}/{}/{}", s.policy, s.queue, s.interference.name());
+        let m = run_scenario(s, &trace);
+        assert_invariants(s, &m, trace.len());
+        let digest = m.serving.as_ref().unwrap_or_else(|| panic!("{tag}: no serving digest"));
+        assert_eq!(digest.serve_jobs, n_serve, "{tag}");
+        assert_eq!(digest.requests, digest.completed + digest.failed(), "{tag}");
+        assert!(digest.within_slo <= digest.completed, "{tag}");
+        let att = digest.slo_attainment();
+        assert!((0.0..=1.0).contains(&att), "{tag}: attainment {att}");
+        let (mut req, mut done, mut within) = (0, 0, 0);
+        for o in m.jobs.iter().filter_map(|j| j.serve.as_ref()) {
+            assert!(o.completed <= o.requests, "{tag}/job ledger");
+            assert!(o.within_slo <= o.completed, "{tag}/job ledger");
+            assert!(o.p50_ms <= o.p99_ms + 1e-12, "{tag}: p50 {} > p99 {}", o.p50_ms, o.p99_ms);
+            req += o.requests;
+            done += o.completed;
+            within += o.within_slo;
+        }
+        assert_eq!(
+            (req, done, within),
+            (digest.requests, digest.completed, digest.within_slo),
+            "{tag}: per-job ledger disagrees with the fleet digest"
+        );
+        let again = run_scenario(s, &trace);
+        assert_eq!(
+            m.to_json().to_string_pretty(),
+            again.to_json().to_string_pretty(),
+            "{tag}: serving run diverged across identical runs"
+        );
+    }
+}
+
+/// The serve knobs are additive: with `serve_frac == 0` the generator
+/// draws no extra RNG values and ignores every serving knob, so a
+/// training-only trace — and the summary of a run over it, which must
+/// carry no `serving` key at all — is byte-identical to a pre-serving
+/// build.
+#[test]
+fn serve_knobs_are_inert_on_training_only_traces() {
+    let base = standard_trace();
+    let knobbed = poisson_trace(&TraceConfig {
+        jobs: 18,
+        mean_interarrival_s: 0.01,
+        mix: [0.5, 0.3, 0.2],
+        epochs: Some(1),
+        seed: 7,
+        serve_duration_s: 9999.0,
+        serve_rps: 77.0,
+        slo_ms: 1.0,
+        arrival_shape: ArrivalShape::Bursty,
+        ..TraceConfig::default()
+    });
+    assert_eq!(base, knobbed, "serve knobs must be inert at serve_frac == 0");
+    let s = Scenario {
+        policy: PolicyKind::Mps,
+        queue: QueueDiscipline::Fifo,
+        interference: InterferenceModel::Roofline,
+    };
+    let m = run_scenario(s, &base);
+    assert!(m.serving.is_none(), "training-only run grew a serving digest");
+    let text = m.to_json().to_string_pretty();
+    assert!(!text.contains("\"serving\""), "training-only summary grew serving keys");
+    assert!(!text.contains("slo_attainment"), "training-only summary grew SLO keys");
 }

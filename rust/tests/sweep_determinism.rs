@@ -11,16 +11,20 @@ use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::InterferenceModel;
 use migsim::sweep::engine::{run_sweep, SweepOptions};
 use migsim::sweep::grid::{GridSpec, MixSpec};
+use migsim::util::json::Json;
 use migsim::util::prop::forall_ok;
 use migsim::util::rng::Rng;
+use migsim::workload::arrivals::ArrivalShape;
 
 /// Draw a small random grid: 1–3 policies (mig-miso included), one
 /// preset mix, 1–2 GPUs, 1–2 interference models, either admission
-/// mode, 1–2 queue disciplines, 1–2 seeds, 10–40 jobs per cell, and a
+/// mode, 1–2 queue disciplines, 1–2 seeds, 10–40 jobs per cell, a
 /// randomized MISO probe window (short enough that commit/migration
-/// paths execute). Small enough that the three runs per case stay
-/// fast, varied enough to exercise every
-/// policy/contention/admission/discipline path.
+/// paths execute) and — since the serving subsystem — a randomized
+/// serving axis (off on roughly a third of the draws, so both the v4
+/// and v5 summary paths stay covered). Small enough that the three
+/// runs per case stay fast, varied enough to exercise every
+/// policy/contention/admission/discipline/serving path.
 fn random_grid(r: &mut Rng) -> GridSpec {
     let n_policies = 1 + r.below(3) as usize;
     let policies: Vec<PolicyKind> = (0..n_policies)
@@ -45,6 +49,9 @@ fn random_grid(r: &mut Rng) -> GridSpec {
     };
     let n_seeds = 1 + r.below(2);
     let seeds: Vec<u64> = (0..n_seeds).map(|i| 1000 + i * 17 + r.below(1000)).collect();
+    let serve_fracs = vec![[0.0, 0.3, 0.6][r.below(3) as usize]];
+    let arrival_shapes = vec![ArrivalShape::ALL[r.below(ArrivalShape::ALL.len() as u64) as usize]];
+    let slo_ms = if r.below(2) == 0 { vec![250.0] } else { vec![60.0, 400.0] };
     GridSpec {
         policies,
         mixes: vec![mix],
@@ -58,6 +65,11 @@ fn random_grid(r: &mut Rng) -> GridSpec {
         cap: 7,
         admission,
         probe_window_s: 0.1 + r.next_f64() * 30.0,
+        serve_fracs,
+        arrival_shapes,
+        slo_ms,
+        serve_rps: 0.5 + r.next_f64() * 2.0,
+        serve_duration_s: 20.0 + r.next_f64() * 60.0,
     }
 }
 
@@ -97,10 +109,50 @@ fn quick_bench_grid_is_thread_count_invariant() {
     let grid = GridSpec::quick();
     let one = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
     let eight = run_sweep(&grid, &cal, &SweepOptions::with_threads(8)).unwrap();
-    assert_eq!(
-        summary_json_text(&grid, &one, &cal),
-        summary_json_text(&grid, &eight, &cal)
-    );
+    let text = summary_json_text(&grid, &one, &cal);
+    assert_eq!(text, summary_json_text(&grid, &eight, &cal));
+    // The quick grid is training-only: the serving subsystem must be
+    // invisible — schema v4 and not one serving key in the bytes.
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed.get("schema_version").unwrap().as_u64(), Some(4));
+    assert!(!text.contains("slo_ranking"), "training-only summary grew slo_ranking");
+    assert!(!text.contains("slo_attainment"), "training-only summary grew serving metrics");
+}
+
+#[test]
+fn serving_grids_stay_byte_identical_across_thread_counts() {
+    // A fixed mixed train+serve grid: the schema-v5 summary (per-cell
+    // latency digests + slo_ranking) obeys the same byte-identity
+    // contract as the training-only artifact.
+    let cal = Calibration::paper();
+    let grid = GridSpec {
+        policies: vec![PolicyKind::Mps, PolicyKind::MigStatic, PolicyKind::MigMiso],
+        mixes: vec![MixSpec::preset("smalls").expect("built-in")],
+        gpus: vec![1],
+        interarrivals_s: vec![0.4],
+        interference: vec![InterferenceModel::Off, InterferenceModel::Roofline],
+        queues: vec![QueueDiscipline::Fifo],
+        seeds: vec![5],
+        jobs_per_cell: 18,
+        epochs: Some(1),
+        cap: 7,
+        admission: AdmissionMode::Strict,
+        probe_window_s: 15.0,
+        serve_fracs: vec![0.0, 1.0],
+        arrival_shapes: vec![ArrivalShape::Bursty],
+        slo_ms: vec![120.0],
+        serve_rps: 1.5,
+        serve_duration_s: 45.0,
+    };
+    let one = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
+    let text = summary_json_text(&grid, &one, &cal);
+    for threads in [2usize, 8] {
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(threads)).unwrap();
+        assert_eq!(text, summary_json_text(&grid, &run, &cal), "{threads} threads diverged");
+    }
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed.get("schema_version").unwrap().as_u64(), Some(5));
+    assert!(parsed.get("slo_ranking").is_some(), "serving summary must rank SLO attainment");
 }
 
 #[test]

@@ -18,6 +18,7 @@ use migsim::sweep::engine::{run_sweep, SweepOptions};
 use migsim::sweep::grid::{GridSpec, MixSpec};
 use migsim::util::json::Json;
 use migsim::util::tempdir::TempDir;
+use migsim::workload::arrivals::ArrivalShape;
 use std::path::PathBuf;
 
 /// The pinned grid: 2 policies × 1 mix × 1 GPU × 1 gap × 1 seed =
@@ -38,6 +39,13 @@ fn golden_grid() -> GridSpec {
         cap: 7,
         admission: AdmissionMode::Strict,
         probe_window_s: 15.0,
+        // Serving stays off: the fixture pins the *training-only* v4
+        // bytes, which PR 8's serving surfaces must never disturb.
+        serve_fracs: vec![0.0],
+        arrival_shapes: vec![ArrivalShape::Poisson],
+        slo_ms: vec![250.0],
+        serve_rps: 2.0,
+        serve_duration_s: 600.0,
     }
 }
 
