@@ -55,21 +55,22 @@
 
 use super::event::{EventKind, JobId, Timeline};
 use super::metrics::{
-    percentile, FleetMetrics, FleetServeSummary, GpuRecord, JobOutcome, JobRecord, ServeOutcome,
+    percentile, FleetGangSummary, FleetMetrics, FleetServeSummary, GangOutcome, GpuRecord,
+    JobOutcome, JobRecord, ServeOutcome,
 };
 use super::policy::{
-    fits_instance, usable_bytes, AdmissionMode, Decision, FleetView, GpuView, SchedulingPolicy,
-    ShareModel,
+    fits_instance, usable_bytes, AdmissionMode, Decision, FleetView, GpuView, Grant,
+    SchedulingPolicy, ShareModel,
 };
 use super::queue::{JobQueue, QueueDiscipline, Reservation};
-use super::trace::JobSpec;
+use super::trace::{GangScope, JobSpec};
 use crate::coordinator::planner::ProbedJob;
 use crate::mig::a30::A30Profile;
 use crate::mig::profile::MigProfile;
 use crate::simgpu::calibration::Calibration;
 use crate::simgpu::engine::{InstanceResources, SimEngine, StepStats};
 use crate::simgpu::interference::{
-    apply_slowdown, ContentionModel, DemandProfile, InterferenceModel,
+    apply_slowdown, gang_comm_factor, ContentionModel, DemandProfile, InterferenceModel,
 };
 use crate::simgpu::mps::mps_step;
 use crate::simgpu::spec::{GpuSpec, A100, A30};
@@ -302,6 +303,29 @@ impl ServeState {
     }
 }
 
+/// Live multi-grant state of a placed gang: every resource grant the
+/// job holds (all committed atomically, all released atomically), the
+/// width actually granted (elastic shrink may cut it below the spec's
+/// `replicas`) and the all-reduce communication factor folded into the
+/// gang's busy time. `grants[0]` is the primary grant: the legacy
+/// `JobState::gpu`/`slot` fields mirror it, the job-level progress and
+/// slowdown accounts accrue when the primary GPU updates, and shared
+/// gangs key their contention factor off the primary GPU's resident
+/// mix (a documented modeling simplification).
+#[derive(Debug, Clone)]
+struct GangRun {
+    grants: Vec<Grant>,
+    /// Replicas actually granted (`min_replicas..=replicas`).
+    width: u32,
+    /// Any two grants on different GPUs?
+    cross_gpu: bool,
+    /// `gang_comm_factor(width, cross_gpu)`, fixed at placement.
+    comm_factor: f64,
+    /// Per-grant compute share of its device — the telemetry accrual
+    /// weight on each member GPU (parallel to `grants`).
+    fracs: Vec<f64>,
+}
+
 #[derive(Debug, Clone)]
 struct JobState {
     spec: JobSpec,
@@ -342,6 +366,10 @@ struct JobState {
     oomed: Option<String>,
     /// Request-stream state; `Some` iff the spec is a serve job.
     serve: Option<ServeState>,
+    /// Multi-grant state; `Some` iff the job is a gang that has been
+    /// placed (and it stays `Some` after the finish, recording the
+    /// final grant set for the report).
+    gang_run: Option<GangRun>,
 }
 
 /// Options for [`FleetSim::run_with`], the single run entry point.
@@ -424,6 +452,21 @@ struct ShareCacheEntry {
     floors: u64,
 }
 
+/// Drop repeated ids, keeping first occurrences in order. Running-job
+/// lists repeat an id once per grant when a gang holds several grants
+/// on one GPU; accrual loops must visit each job exactly once. O(n²)
+/// on a per-GPU list bounded by the co-runner cap — never hot.
+fn dedup_preserving_order(ids: &mut Vec<JobId>) {
+    let mut i = 0;
+    while i < ids.len() {
+        if ids[..i].contains(&ids[i]) {
+            ids.remove(i);
+        } else {
+            i += 1;
+        }
+    }
+}
+
 /// Dense index of a workload size into per-workload cache arrays.
 fn workload_index(w: WorkloadSize) -> usize {
     match w {
@@ -450,6 +493,10 @@ pub struct FleetSim {
     /// (request sampling, the `serving` metrics block), so training
     /// runs stay bit-identical to pre-serving builds.
     has_serving: bool,
+    /// Any gang job in the trace? Gates every gang-only surface (the
+    /// accrual dedup, the `gangs` metrics block), so gang-free runs
+    /// stay bit-identical to pre-gang builds.
+    has_gangs: bool,
     /// Per-GPU jobs mid-migration: pulled out of the probe region when
     /// a commit started, placed into the new slices when the
     /// repartition event lands.
@@ -466,12 +513,13 @@ pub struct FleetSim {
     hol_since: Option<(JobId, f64)>,
     /// Total time any queue head spent blocked over the run.
     hol_wait_s: f64,
-    /// Structured event trace ([`FleetSim::enable_tracing`]). `None`
-    /// means tracing is off and every emission site is a no-op — a
-    /// run without a sink is bit-identical to a pre-observability run.
+    /// Structured event trace ([`RunOptions::trace`]). `None` means
+    /// tracing is off and every emission site is a no-op — a run
+    /// without a sink is bit-identical to a pre-observability run.
     trace_log: Option<TraceLog>,
-    /// Sampled DCGM-style timelines ([`FleetSim::enable_sampling`]).
-    /// `None` means no `Sample` event is ever scheduled.
+    /// Sampled DCGM-style timelines
+    /// ([`RunOptions::sample_interval_s`]). `None` means no `Sample`
+    /// event is ever scheduled.
     sampler: Option<FleetTimeline>,
     /// Per-GPU projected activity account at the previous sample tick
     /// (the window delta's left edge).
@@ -579,6 +627,20 @@ impl FleetSim {
                     s.slo_ms
                 );
             }
+            if let Some(g) = spec.gang {
+                anyhow::ensure!(
+                    g.replicas >= 2,
+                    "job {i}: a gang needs at least 2 replicas, got {}",
+                    g.replicas
+                );
+                anyhow::ensure!(
+                    g.min_replicas >= 1 && g.min_replicas <= g.replicas,
+                    "job {i}: gang min replicas must be in 1..={}, got {}",
+                    g.replicas,
+                    g.min_replicas
+                );
+                anyhow::ensure!(spec.serve().is_none(), "job {i}: gangs are training-only");
+            }
         }
         if let Some(cap) = config.backfill_scan_cap {
             anyhow::ensure!(cap > 0, "backfill scan cap must be > 0");
@@ -647,6 +709,7 @@ impl FleetSim {
                     rejected: None,
                     oomed: None,
                     serve,
+                    gang_run: None,
                 }
             })
             .collect();
@@ -662,6 +725,7 @@ impl FleetSim {
         );
         let hybrid = policy.probe_cap().is_some();
         let has_serving = jobs.iter().any(|j| j.serve.is_some());
+        let has_gangs = jobs.iter().any(|j| j.spec.gang.is_some());
         let n_gpus = gpus.len();
         let mut sim = FleetSim {
             config,
@@ -673,6 +737,7 @@ impl FleetSim {
             gpus,
             jobs,
             has_serving,
+            has_gangs,
             migrating: vec![Vec::new(); n_gpus],
             migrations: 0,
             queue: JobQueue::new(config.queue),
@@ -708,42 +773,6 @@ impl FleetSim {
     fn setup_sampling(&mut self, interval_s: f64) -> anyhow::Result<()> {
         self.sampler = Some(FleetTimeline::new(interval_s, self.gpus.len())?);
         Ok(())
-    }
-
-    /// Turn on the structured event trace ahead of a wrapper run. Off
-    /// by default; when off, the emission hook is a no-op and the run
-    /// is bit-identical to an untraced one.
-    #[deprecated(note = "use `run_with(&RunOptions { trace: true, .. })` instead")]
-    pub fn enable_tracing(&mut self) {
-        self.setup_tracing();
-    }
-
-    /// Turn on sampled timelines at `interval_s`: a `Sample` timer
-    /// event reads per-GPU GRACT/SMACT/DRAMA, memory and resident
-    /// counts plus fleet-wide queue depth on the interval, and
-    /// `FleetMetrics::timeline` carries the percentile summary.
-    /// Sampling never perturbs the simulation — the handler neither
-    /// advances the clock nor touches the accounts.
-    #[deprecated(note = "use `run_with` with `RunOptions::sample_interval_s` instead")]
-    pub fn enable_sampling(&mut self, interval_s: f64) -> anyhow::Result<()> {
-        self.setup_sampling(interval_s)
-    }
-
-    /// Run the whole trace to completion and aggregate fleet metrics.
-    #[deprecated(note = "use `run_with(&RunOptions::default())` instead")]
-    pub fn run(self) -> FleetMetrics {
-        self.run_with(&RunOptions::default())
-            .expect("default run options cannot fail")
-            .metrics
-    }
-
-    /// [`FleetSim::run`], returning the structured event trace as well.
-    #[deprecated(note = "use `run_with(&RunOptions { trace: true, .. })` instead")]
-    pub fn run_traced(self) -> (FleetMetrics, Option<TraceLog>) {
-        let out = self
-            .run_with(&RunOptions::default())
-            .expect("default run options cannot fail");
-        (out.metrics, out.trace)
     }
 
     /// Run the whole trace to completion under `opts` — the single run
@@ -823,6 +852,10 @@ impl FleetSim {
                 return;
             }
         }
+        if self.jobs[id].gang_run.is_some() {
+            self.finish_gang(id);
+            return;
+        }
         let gi = self.jobs[id].gpu.expect("running job has a GPU");
         self.update_gpu(gi);
         let slot = {
@@ -855,6 +888,55 @@ impl FleetSim {
         }
         self.touch_gpu(gi);
         self.emit(TraceKind::Finish, Some(id), Some(gi), slot, String::new());
+        self.try_place();
+    }
+
+    /// Gang twin of the finish handler: every member GPU is accrual-
+    /// updated at the finish instant, every grant is released in one
+    /// atomic step (a partially-released gang is never observable),
+    /// and shared survivors on each member GPU re-rate.
+    fn finish_gang(&mut self, id: JobId) {
+        let gr = self.jobs[id].gang_run.clone().expect("finish_gang needs a placed gang");
+        let mut unique: Vec<usize> = Vec::new();
+        for g in &gr.grants {
+            if !unique.contains(&g.gpu) {
+                unique.push(g.gpu);
+            }
+        }
+        for &gi in &unique {
+            self.update_gpu(gi);
+        }
+        {
+            let j = &mut self.jobs[id];
+            j.finish_s = Some(self.now);
+            j.remaining_steps = 0.0;
+            j.slot = None;
+        }
+        for g in &gr.grants {
+            if let Some(si) = g.slot {
+                self.gpus[g.gpu].partition[si].job = None;
+            }
+            self.gpus[g.gpu].running -= 1;
+        }
+        for &gi in &unique {
+            // Removes every share-grant occurrence on the GPU at once —
+            // all of them belong to the finishing gang.
+            self.gpus[gi].residents.retain(|&r| r != id);
+        }
+        self.gpus[gr.grants[0].gpu].jobs_served += 1;
+        for &gi in &unique {
+            if !self.gpus[gi].residents.is_empty() {
+                self.reschedule_residents(gi);
+            }
+            self.touch_gpu(gi);
+        }
+        self.emit(
+            TraceKind::Finish,
+            Some(id),
+            Some(gr.grants[0].gpu),
+            gr.grants[0].slot,
+            String::new(),
+        );
         self.try_place();
     }
 
@@ -1075,16 +1157,25 @@ impl FleetSim {
         // same-size candidate is too (decisions depend only on the
         // workload and a view that placements can only shrink), so the
         // pass offers each size at most once past its first Block.
+        // Gangs sit outside the memo both ways: their grant-set
+        // decisions differ from single placements of the same size
+        // (and a narrower width may still fit), so they neither skip
+        // on a blocked size nor poison it for singles.
         let mut blocked: Vec<WorkloadSize> = Vec::new();
         for (_, id) in order {
             let workload = self.jobs[id].spec.workload;
-            if blocked.contains(&workload) {
+            let is_gang = self.jobs[id].spec.gang.is_some();
+            if !is_gang && blocked.contains(&workload) {
                 continue;
             }
             match self.attempt_place(id) {
                 Attempt::Placed => placed.push(id),
                 Attempt::Terminal => {}
-                Attempt::Blocked => blocked.push(workload),
+                Attempt::Blocked => {
+                    if !is_gang {
+                        blocked.push(workload);
+                    }
+                }
             }
         }
         // A placement jumped the arrival order only if someone who
@@ -1163,46 +1254,67 @@ impl FleetSim {
     /// `Blocked` the job leaves the queue (placed, OOM-killed at
     /// placement, or rejected by admission control).
     fn attempt_place(&mut self, id: JobId) -> Attempt {
+        if self.jobs[id].spec.gang.is_some() {
+            return self.attempt_place_gang(id);
+        }
         let workload = self.jobs[id].spec.workload;
         match self.policy.place(workload, &self.view) {
-            Decision::Slot { gpu, slot } => {
-                assert!(
-                    self.share_model.is_none() || self.hybrid,
-                    "Slot decision from a shared policy"
-                );
-                self.queue.remove(id);
-                match self.oom_check_slot(id, gpu, slot) {
-                    Some(reason) => {
-                        self.emit_detail(
-                            TraceKind::OomKill,
-                            Some(id),
-                            Some(gpu),
-                            Some(slot),
-                            &reason,
+            Decision::Place(grants) => {
+                debug_assert_eq!(grants.len(), 1, "policies place one grant per single job");
+                let Grant { gpu, slot } = grants[0];
+                match slot {
+                    Some(slot) => {
+                        assert!(
+                            self.share_model.is_none() || self.hybrid,
+                            "slot grant from a shared policy"
                         );
-                        self.jobs[id].oomed = Some(reason);
-                        Attempt::Terminal
+                        self.queue.remove(id);
+                        match self.oom_check_slot(id, gpu, slot) {
+                            Some(reason) => {
+                                self.emit_detail(
+                                    TraceKind::OomKill,
+                                    Some(id),
+                                    Some(gpu),
+                                    Some(slot),
+                                    &reason,
+                                );
+                                self.jobs[id].oomed = Some(reason);
+                                Attempt::Terminal
+                            }
+                            None => {
+                                self.place_slot(id, gpu, slot);
+                                self.emit(
+                                    TraceKind::Place,
+                                    Some(id),
+                                    Some(gpu),
+                                    Some(slot),
+                                    String::new(),
+                                );
+                                Attempt::Placed
+                            }
+                        }
                     }
                     None => {
-                        self.place_slot(id, gpu, slot);
-                        self.emit(TraceKind::Place, Some(id), Some(gpu), Some(slot), String::new());
-                        Attempt::Placed
-                    }
-                }
-            }
-            Decision::Share { gpu } => {
-                assert!(self.share_model.is_some(), "Share decision from a MIG policy");
-                self.queue.remove(id);
-                match self.oom_check_share(id, gpu) {
-                    Some(reason) => {
-                        self.emit_detail(TraceKind::OomKill, Some(id), Some(gpu), None, &reason);
-                        self.jobs[id].oomed = Some(reason);
-                        Attempt::Terminal
-                    }
-                    None => {
-                        self.place_share(id, gpu);
-                        self.emit(TraceKind::Place, Some(id), Some(gpu), None, String::new());
-                        Attempt::Placed
+                        assert!(self.share_model.is_some(), "share grant from a MIG policy");
+                        self.queue.remove(id);
+                        match self.oom_check_share(id, gpu) {
+                            Some(reason) => {
+                                self.emit_detail(
+                                    TraceKind::OomKill,
+                                    Some(id),
+                                    Some(gpu),
+                                    None,
+                                    &reason,
+                                );
+                                self.jobs[id].oomed = Some(reason);
+                                Attempt::Terminal
+                            }
+                            None => {
+                                self.place_share(id, gpu);
+                                self.emit(TraceKind::Place, Some(id), Some(gpu), None, String::new());
+                                Attempt::Placed
+                            }
+                        }
                     }
                 }
             }
@@ -1235,6 +1347,14 @@ impl FleetSim {
         reservations: &mut Vec<Reservation>,
         conservative: bool,
     ) -> BackfillOutcome {
+        // Gangs never backfill: no single-resource estimate can prove
+        // a multi-grant placement delay-safe, and a partial grant must
+        // never be observable. Under `conservative` a skipped gang
+        // cannot pin its resource set either, so nothing behind it can
+        // be proven safe — the scan stops.
+        if self.jobs[id].spec.gang.is_some() {
+            return if conservative { BackfillOutcome::Stop } else { BackfillOutcome::Skipped };
+        }
         let workload = self.jobs[id].spec.workload;
         match self.policy.place(workload, &self.view) {
             Decision::Wait => {
@@ -1257,98 +1377,98 @@ impl FleetSim {
                 self.jobs[id].rejected = Some(reason);
                 BackfillOutcome::Progress
             }
-            Decision::Slot { gpu, slot } => {
-                assert!(
-                    self.share_model.is_none() || self.hybrid,
-                    "Slot decision from a shared policy"
-                );
-                let est_finish = self.now + self.est_service_slot(id, gpu, slot);
-                let safe = reservations
-                    .iter()
-                    .all(|r| !r.claims_slot(gpu, slot) || est_finish <= r.start_s);
-                if safe {
-                    self.queue.remove(id);
-                    match self.oom_check_slot(id, gpu, slot) {
-                        // An OOM-killed candidate never ran: it is not
-                        // a backfill, just an oversubscribed casualty.
-                        Some(reason) => {
-                            self.emit_detail(
-                                TraceKind::OomKill,
-                                Some(id),
-                                Some(gpu),
-                                Some(slot),
-                                &reason,
-                            );
-                            self.jobs[id].oomed = Some(reason);
-                        }
-                        None => {
-                            self.place_slot(id, gpu, slot);
-                            self.queue.note_backfill();
-                            self.emit(
-                                TraceKind::Backfill,
-                                Some(id),
-                                Some(gpu),
-                                Some(slot),
-                                String::new(),
-                            );
-                        }
-                    }
-                    BackfillOutcome::Progress
-                } else {
-                    if conservative {
-                        reservations.push(Reservation {
-                            start_s: self.now,
-                            gpu,
-                            slot: Some(slot),
-                        });
-                    }
-                    BackfillOutcome::Skipped
-                }
-            }
-            Decision::Share { gpu } => {
-                assert!(self.share_model.is_some(), "Share decision from a MIG policy");
-                // Shared-mode backfill is cross-GPU only: joining the
-                // reserved GPU re-rates every resident at n+1
-                // co-runners, which pushes the reservation-defining
-                // finish — and so the head's start — later no matter
-                // how short the candidate is. There is no delay-free
-                // same-GPU placement to estimate.
-                let safe = reservations.iter().all(|r| !r.claims_gpu(gpu));
-                if safe {
-                    self.queue.remove(id);
-                    match self.oom_check_share(id, gpu) {
-                        Some(reason) => {
-                            self.emit_detail(
-                                TraceKind::OomKill,
-                                Some(id),
-                                Some(gpu),
-                                None,
-                                &reason,
-                            );
-                            self.jobs[id].oomed = Some(reason);
-                        }
-                        None => {
-                            self.place_share(id, gpu);
-                            self.queue.note_backfill();
-                            self.emit(
-                                TraceKind::Backfill,
-                                Some(id),
-                                Some(gpu),
-                                None,
-                                String::new(),
-                            );
+            Decision::Place(grants) => {
+                debug_assert_eq!(grants.len(), 1, "policies place one grant per single job");
+                let Grant { gpu, slot } = grants[0];
+                match slot {
+                    Some(slot) => {
+                        assert!(
+                            self.share_model.is_none() || self.hybrid,
+                            "slot grant from a shared policy"
+                        );
+                        let est_finish = self.now + self.est_service_slot(id, gpu, slot);
+                        let safe = reservations
+                            .iter()
+                            .all(|r| !r.claims_slot(gpu, slot) || est_finish <= r.start_s);
+                        if safe {
+                            self.queue.remove(id);
+                            match self.oom_check_slot(id, gpu, slot) {
+                                // An OOM-killed candidate never ran: it
+                                // is not a backfill, just an
+                                // oversubscribed casualty.
+                                Some(reason) => {
+                                    self.emit_detail(
+                                        TraceKind::OomKill,
+                                        Some(id),
+                                        Some(gpu),
+                                        Some(slot),
+                                        &reason,
+                                    );
+                                    self.jobs[id].oomed = Some(reason);
+                                }
+                                None => {
+                                    self.place_slot(id, gpu, slot);
+                                    self.queue.note_backfill();
+                                    self.emit(
+                                        TraceKind::Backfill,
+                                        Some(id),
+                                        Some(gpu),
+                                        Some(slot),
+                                        String::new(),
+                                    );
+                                }
+                            }
+                            BackfillOutcome::Progress
+                        } else {
+                            if conservative {
+                                reservations.push(Reservation::single(self.now, gpu, Some(slot)));
+                            }
+                            BackfillOutcome::Skipped
                         }
                     }
-                    BackfillOutcome::Progress
-                } else {
-                    if conservative {
-                        reservations.push(Reservation {
-                            start_s: self.now,
-                            gpu,
-                            slot: None,
-                        });
+                    None => {
+                        assert!(self.share_model.is_some(), "share grant from a MIG policy");
+                        // Shared-mode backfill is cross-GPU only:
+                        // joining the reserved GPU re-rates every
+                        // resident at n+1 co-runners, which pushes the
+                        // reservation-defining finish — and so the
+                        // head's start — later no matter how short the
+                        // candidate is. There is no delay-free same-GPU
+                        // placement to estimate.
+                        let safe = reservations.iter().all(|r| !r.claims_gpu(gpu));
+                        if safe {
+                            self.queue.remove(id);
+                            match self.oom_check_share(id, gpu) {
+                                Some(reason) => {
+                                    self.emit_detail(
+                                        TraceKind::OomKill,
+                                        Some(id),
+                                        Some(gpu),
+                                        None,
+                                        &reason,
+                                    );
+                                    self.jobs[id].oomed = Some(reason);
+                                }
+                                None => {
+                                    self.place_share(id, gpu);
+                                    self.queue.note_backfill();
+                                    self.emit(
+                                        TraceKind::Backfill,
+                                        Some(id),
+                                        Some(gpu),
+                                        None,
+                                        String::new(),
+                                    );
+                                }
+                            }
+                            BackfillOutcome::Progress
+                        } else {
+                            if conservative {
+                                reservations.push(Reservation::single(self.now, gpu, None));
+                            }
+                            BackfillOutcome::Skipped
+                        }
                     }
-                    BackfillOutcome::Skipped
                 }
             }
         }
@@ -1371,6 +1491,14 @@ impl FleetSim {
         // No reservation means no backfilling — the same safe stance
         // MigDynamic takes while waiting for a drain.
         if self.hybrid {
+            return None;
+        }
+        // Gang heads have no computable reservation either: their
+        // earliest start needs a whole resource *set* free at once,
+        // which no single finish time bounds. No reservation means no
+        // backfilling past a blocked gang head — backfill can never
+        // split a gang or starve one by nibbling its resources.
+        if self.jobs[id].spec.gang.is_some() {
             return None;
         }
         self.stats.reservations_computed += 1;
@@ -1410,11 +1538,7 @@ impl FleetSim {
                         }
                     }
                 }
-                best.map(|(start_s, gpu, slot)| Reservation {
-                    start_s,
-                    gpu,
-                    slot: Some(slot),
-                })
+                best.map(|(start_s, gpu, slot)| Reservation::single(start_s, gpu, Some(slot)))
             }
             Some(_) => {
                 let need = self.jobs[id].floor_bytes;
@@ -1458,11 +1582,7 @@ impl FleetSim {
                         best = Some((start, gi));
                     }
                 }
-                best.map(|(start_s, gpu)| Reservation {
-                    start_s,
-                    gpu,
-                    slot: None,
-                })
+                best.map(|(start_s, gpu)| Reservation::single(start_s, gpu, None))
             }
         }
     }
@@ -1502,11 +1622,7 @@ impl FleetSim {
                 }
             }
         }
-        best.map(|(start_s, gpu, slot)| Reservation {
-            start_s,
-            gpu,
-            slot: Some(slot),
-        })
+        best.map(|(start_s, gpu, slot)| Reservation::single(start_s, gpu, Some(slot)))
     }
 
     /// GPU `gi`'s cached earliest-start candidates for `workload`,
@@ -1822,6 +1938,331 @@ impl FleetSim {
         }
     }
 
+    /// Offer gang job `id`: all-or-nothing atomic placement of a grant
+    /// *set*. The width is elastic — the widest grantable width in
+    /// `min_replicas..=replicas` wins, shrinking toward the floor when
+    /// the fleet cannot grant more right now (shrink under pressure).
+    /// A gang no width of which can *ever* be granted on this fleet is
+    /// rejected with a structured outcome instead of camping on the
+    /// head of the queue forever.
+    fn attempt_place_gang(&mut self, id: JobId) -> Attempt {
+        let spec = self.jobs[id].spec;
+        let gang = spec.gang.expect("gang path requires a gang spec");
+        let workload = spec.workload;
+        let strict = self.config.admission == AdmissionMode::Strict;
+        // Structural feasibility against empty-fleet capacities, not
+        // the current occupancy: `Intra` needs one GPU able to host
+        // the minimum width, `Cross` needs that many GPUs able to
+        // host one replica each. Policies that cannot host gangs at
+        // all (mig-miso's anonymous probe region) report capacity 0.
+        let per_gpu: Vec<u32> = self
+            .gpus
+            .iter()
+            .map(|g| self.policy.gang_capacity(workload, g.kind, strict))
+            .collect();
+        let feasible = match gang.scope {
+            GangScope::Intra => per_gpu.iter().copied().max().unwrap_or(0) >= gang.min_replicas,
+            GangScope::Cross => {
+                per_gpu.iter().filter(|&&c| c >= 1).count() as u32 >= gang.min_replicas
+            }
+        };
+        if !feasible {
+            self.queue.remove(id);
+            let reason = format!(
+                "gang of {} x {} ({}) can never be granted under policy {}",
+                gang.min_replicas,
+                workload.name(),
+                gang.scope.name(),
+                self.policy.name(),
+            );
+            self.emit_detail(TraceKind::Reject, Some(id), None, None, &reason);
+            self.jobs[id].rejected = Some(reason);
+            return Attempt::Terminal;
+        }
+        for width in (gang.min_replicas..=gang.replicas).rev() {
+            let Some(grants) = self.plan_gang(workload, gang.scope, width) else {
+                continue;
+            };
+            self.queue.remove(id);
+            if let Some(reason) = self.oom_check_gang(id, &grants) {
+                self.emit_detail(
+                    TraceKind::OomKill,
+                    Some(id),
+                    Some(grants[0].gpu),
+                    grants[0].slot,
+                    &reason,
+                );
+                self.jobs[id].oomed = Some(reason);
+                return Attempt::Terminal;
+            }
+            self.commit_gang(id, grants);
+            return Attempt::Placed;
+        }
+        self.emit(TraceKind::Wait, Some(id), None, None, String::new());
+        Attempt::Blocked
+    }
+
+    /// Plan `width` grants against a scratch copy of the policy view,
+    /// masking GPUs per the scope (`Intra`: after the first grant only
+    /// its GPU stays visible; `Cross`: each granted GPU is hidden from
+    /// the next replica) — the single-grant policy composes into an
+    /// atomic multi-grant placement without learning about gangs.
+    /// `None` when this width cannot be granted right now.
+    fn plan_gang(&self, workload: WorkloadSize, scope: GangScope, width: u32) -> Option<Vec<Grant>> {
+        let mut scratch = self.view.clone();
+        let mut grants: Vec<Grant> = Vec::with_capacity(width as usize);
+        let floor = GpuMemoryPlan::paper(workload).floor_bytes;
+        for _ in 0..width {
+            let Decision::Place(g) = self.policy.place(workload, &scratch) else {
+                return None;
+            };
+            debug_assert_eq!(g.len(), 1, "policies place one grant per offer");
+            let grant = g[0];
+            let gv = &mut scratch.gpus[grant.gpu];
+            match grant.slot {
+                Some(si) => {
+                    debug_assert!(!gv.slots[si].1, "policy granted an occupied slot");
+                    gv.slots[si].1 = true;
+                }
+                None => {
+                    gv.residents += 1;
+                    gv.resident_floor_bytes += floor;
+                }
+            }
+            match scope {
+                GangScope::Cross => scratch.gpus[grant.gpu].repartitioning = true,
+                GangScope::Intra => {
+                    if grants.is_empty() {
+                        for (gi, g) in scratch.gpus.iter_mut().enumerate() {
+                            if gi != grant.gpu {
+                                g.repartitioning = true;
+                            }
+                        }
+                    }
+                }
+            }
+            grants.push(grant);
+        }
+        Some(grants)
+    }
+
+    /// All-or-nothing gang twin of the OOM checks: any replica whose
+    /// memory plan cannot allocate (slot grants) or whose GPU's
+    /// cumulative floors overflow (share grants, counting every
+    /// sibling replica landing there) kills the *whole* gang — no
+    /// partial placement is ever observable.
+    fn oom_check_gang(&self, id: JobId, grants: &[Grant]) -> Option<String> {
+        let workload = self.jobs[id].spec.workload;
+        let need = self.jobs[id].floor_bytes;
+        for g in grants {
+            if let Some(si) = g.slot {
+                let shape = self.gpus[g.gpu].partition[si].shape;
+                if GpuMemoryPlan::paper(workload).allocate(shape.memory_bytes).is_none() {
+                    debug_assert!(
+                        self.config.admission == AdmissionMode::Oversubscribe,
+                        "strict gang placement must fit every memory plan"
+                    );
+                    return Some(format!(
+                        "gang replica memory floor {} exceeds instance {} ({}) on GPU {}",
+                        crate::util::fmt_bytes(need),
+                        shape.name,
+                        crate::util::fmt_bytes(shape.memory_bytes),
+                        g.gpu,
+                    ));
+                }
+            }
+        }
+        let mut unique: Vec<usize> = Vec::new();
+        for g in grants {
+            if g.slot.is_none() && !unique.contains(&g.gpu) {
+                unique.push(g.gpu);
+            }
+        }
+        for gi in unique {
+            let replicas = grants.iter().filter(|g| g.gpu == gi && g.slot.is_none()).count() as u64;
+            let resident: u64 = self.gpus[gi]
+                .residents
+                .iter()
+                .map(|&r| self.jobs[r].floor_bytes)
+                .sum();
+            let total = resident + replicas * need;
+            let usable = usable_bytes(self.gpus[gi].kind.spec().dram_capacity);
+            if total > usable {
+                debug_assert!(
+                    self.config.admission == AdmissionMode::Oversubscribe,
+                    "strict gang placement must fit the aggregate floors"
+                );
+                return Some(format!(
+                    "gang aggregate memory floors {} exceed usable {} on GPU {gi}",
+                    crate::util::fmt_bytes(total),
+                    crate::util::fmt_bytes(usable),
+                ));
+            }
+        }
+        None
+    }
+
+    /// Commit a planned grant set: occupy every grant, re-rate every
+    /// shared co-runner the gang joined (their `n` grew), rate the gang
+    /// itself and invalidate every touched GPU's caches in one step.
+    fn commit_gang(&mut self, id: JobId, grants: Vec<Grant>) {
+        let width = grants.len() as u32;
+        let cross = grants.iter().any(|g| g.gpu != grants[0].gpu);
+        let primary = grants[0];
+        let mut unique: Vec<usize> = Vec::new();
+        for g in &grants {
+            if !unique.contains(&g.gpu) {
+                unique.push(g.gpu);
+            }
+        }
+        for &gi in &unique {
+            self.update_gpu(gi);
+        }
+        for g in &grants {
+            match g.slot {
+                Some(si) => {
+                    debug_assert!(self.gpus[g.gpu].partition[si].job.is_none());
+                    self.gpus[g.gpu].partition[si].job = Some(id);
+                }
+                None => self.gpus[g.gpu].residents.push(id),
+            }
+            self.gpus[g.gpu].running += 1;
+        }
+        self.jobs[id].gang_run = Some(GangRun {
+            grants,
+            width,
+            cross_gpu: cross,
+            comm_factor: gang_comm_factor(width, cross),
+            fracs: Vec::new(),
+        });
+        if self.share_model.is_some() {
+            // Re-rates every co-runner at the grown n; the gang itself
+            // is rated through `rate_gang`, which the pass delegates to
+            // (idempotent — the explicit call below covers MIG gangs,
+            // whose member GPUs have no residents to reschedule).
+            for &gi in &unique {
+                self.reschedule_residents(gi);
+            }
+        }
+        self.rate_gang(id);
+        for &gi in &unique {
+            self.touch_gpu(gi);
+        }
+        if self.trace_log.is_some() {
+            let detail = format!("gang x{width}{}", if cross { " cross" } else { "" });
+            self.emit(TraceKind::Place, Some(id), Some(primary.gpu), primary.slot, detail);
+        }
+    }
+
+    /// (Re-)rate a placed gang: the synchronous data-parallel step
+    /// paces at the *slowest* grant's per-replica rate, stretched by
+    /// the primary GPU's contention factor and the gang's all-reduce
+    /// communication factor (folded into busy time exactly the way
+    /// `apply_slowdown` stretches contention), and the gang retires
+    /// `width` step-equivalents per replica step. Member GPUs are
+    /// accrual-updated first, so every telemetry interval runs at one
+    /// constant rate.
+    fn rate_gang(&mut self, id: JobId) {
+        let gr = self.jobs[id].gang_run.clone().expect("rate_gang needs a placed gang");
+        let workload = self.jobs[id].spec.workload;
+        let mut unique: Vec<usize> = Vec::new();
+        for g in &gr.grants {
+            if !unique.contains(&g.gpu) {
+                unique.push(g.gpu);
+            }
+        }
+        for &gi in &unique {
+            self.update_gpu(gi);
+        }
+        let mut base: Option<StepStats> = None;
+        let mut fracs: Vec<f64> = Vec::with_capacity(gr.grants.len());
+        for g in &gr.grants {
+            let kind = self.gpus[g.gpu].kind;
+            let spec = kind.spec();
+            let (stats, frac) = match g.slot {
+                Some(si) => {
+                    let shape = self.gpus[g.gpu].partition[si].shape;
+                    let stats = self.per_step(
+                        kind,
+                        workload,
+                        RateMode::Slot {
+                            sms: shape.sms,
+                            mem_slices: shape.mem_slices,
+                        },
+                    );
+                    (stats, (shape.sms as f64 / spec.mig_sm_count as f64).min(1.0))
+                }
+                None => {
+                    let n = self.gpus[g.gpu].residents.len() as u32;
+                    let model = self.share_model.expect("share grant implies a share model");
+                    let (mode, frac) = match model {
+                        ShareModel::Mps => (
+                            RateMode::Mps { n },
+                            (spec.sm_count / n.max(1)).max(1) as f64 / spec.sm_count as f64,
+                        ),
+                        ShareModel::TimeSlice => (RateMode::TimeSlice { n }, 1.0),
+                    };
+                    (self.per_step(kind, workload, mode), frac)
+                }
+            };
+            if base.map(|b| stats.wall_s > b.wall_s).unwrap_or(true) {
+                base = Some(stats);
+            }
+            fracs.push(frac);
+        }
+        let base = base.expect("a gang holds at least one grant");
+        // Contention keys off the primary GPU's resident mix — the
+        // documented simplification; slot grants are interference-free
+        // as ever.
+        let contention = match gr.grants[0].slot {
+            Some(_) => 1.0,
+            None => {
+                let gi = gr.grants[0].gpu;
+                let kind = self.gpus[gi].kind;
+                let ws: Vec<WorkloadSize> =
+                    self.gpus[gi].residents.iter().map(|&r| self.jobs[r].spec.workload).collect();
+                let mut profiles: Vec<DemandProfile> = Vec::with_capacity(ws.len());
+                for w in ws {
+                    profiles.push(self.demand_profile(kind, w));
+                }
+                let spec = kind.spec();
+                let agg = self.contention.aggregate(&spec, &self.cal, &profiles);
+                let mine = self.demand_profile(kind, workload);
+                self.contention.slowdown_with(&agg, &mine)
+            }
+        };
+        let factor = contention * gr.comm_factor;
+        let stats = apply_slowdown(base, factor);
+        let width = gr.width as f64;
+        let now = self.now;
+        let epoch_overhead_s = self.cal.epoch_overhead_s;
+        let j = &mut self.jobs[id];
+        j.peak_slowdown = j.peak_slowdown.max(factor);
+        j.cur_slowdown = factor;
+        j.device_frac = fracs[0];
+        if let Some(run) = j.gang_run.as_mut() {
+            run.fracs = fracs;
+        }
+        j.gpu = Some(gr.grants[0].gpu);
+        j.slot = gr.grants[0].slot;
+        if j.start_s.is_none() {
+            j.start_s = Some(now);
+            // The per-epoch framework overhead is wall time the gang
+            // pays once per epoch regardless of width: fold it in as
+            // `width`x step-equivalents so the width division below
+            // cancels back to the exact wall amount.
+            if stats.wall_s > 0.0 {
+                j.remaining_steps += j.spec.epochs as f64 * epoch_overhead_s / stats.wall_s * width;
+            }
+        }
+        j.per_step = stats;
+        j.gen += 1;
+        let finish = now + j.remaining_steps * stats.wall_s / width;
+        j.expected_finish_s = finish;
+        let gen = j.gen;
+        self.timeline.push(finish, EventKind::Finish { job: id, gen });
+    }
+
     /// Recompute rates and finish events for all co-runners of `gi`.
     /// Assumes `update_gpu(gi)` already ran at `self.now`.
     ///
@@ -1861,7 +2302,18 @@ impl FleetSim {
         // resident set per victim (identical fold order, so the factors
         // are bit-identical to the from-scratch per-victim path).
         let agg = self.contention.aggregate(&spec, &self.cal, &profiles);
+        // Gang residents contribute their demand to the aggregate above
+        // but are re-rated through the gang path (slowest grant across
+        // *all* member GPUs, primary-mix contention, comm factor), not
+        // the per-resident one. Never allocates on gang-free fleets.
+        let mut gang_ids: Vec<JobId> = Vec::new();
         for (i, &id) in ids.iter().enumerate() {
+            if self.jobs[id].gang_run.is_some() {
+                if !gang_ids.contains(&id) {
+                    gang_ids.push(id);
+                }
+                continue;
+            }
             let workload = self.jobs[id].spec.workload;
             let mode = match model {
                 ShareModel::Mps => RateMode::Mps { n },
@@ -1879,6 +2331,9 @@ impl FleetSim {
         }
         self.scratch_ids = ids;
         self.scratch_profiles = profiles;
+        for id in gang_ids {
+            self.rate_gang(id);
+        }
         self.touch_gpu(gi);
     }
 
@@ -1959,6 +2414,13 @@ impl FleetSim {
             running.extend(g.partition.iter().filter_map(|s| s.job));
             running.extend(g.residents.iter().copied());
         }
+        if self.has_gangs {
+            // A gang holding several grants on this GPU appears once
+            // per grant: dedup so each job accrues exactly once (its
+            // combined compute share covers every grant here). Gang-
+            // free runs never reach this branch.
+            dedup_preserving_order(&mut running);
+        }
         let now = self.now;
         let mut accrued = StepStats::default();
         for &id in &running {
@@ -1966,32 +2428,66 @@ impl FleetSim {
             if j.per_step.wall_s <= 0.0 {
                 continue;
             }
-            // A serve job's "steps" are the requests completed by now
-            // at the current contention-stretched per-request service
-            // time: every rate change runs this update first, so each
-            // interval drains at the rate it actually ran under.
-            let steps = match j.serve.as_mut() {
-                Some(sv) => sv.drain(j.per_step.wall_s, now) as f64,
+            let (steps, frac) = match &j.gang_run {
+                // Gang accrual: the primary GPU owns the job-level
+                // progress and slowdown accounts (`width` step-
+                // equivalents retire per replica step); member GPUs
+                // accrue pure telemetry at the uncapped replica rate —
+                // exact, because every gang re-rate and the finish
+                // update member GPUs first, so each interval runs at
+                // one constant rate and ends on a boundary.
+                Some(gr) => {
+                    let width = gr.width as f64;
+                    let frac: f64 = gr
+                        .grants
+                        .iter()
+                        .zip(&gr.fracs)
+                        .filter(|(g, _)| g.gpu == gi)
+                        .map(|(_, &f)| f)
+                        .sum();
+                    if gr.grants[0].gpu == gi {
+                        let s = (dt / j.per_step.wall_s).min(j.remaining_steps / width);
+                        j.remaining_steps -= s * width;
+                        let served = s * j.per_step.wall_s;
+                        j.slowdown_integral += j.cur_slowdown * served;
+                        j.service_s += served;
+                        (s, frac)
+                    } else {
+                        (dt / j.per_step.wall_s, frac)
+                    }
+                }
                 None => {
-                    let s = (dt / j.per_step.wall_s).min(j.remaining_steps);
-                    j.remaining_steps -= s;
-                    s
+                    // A serve job's "steps" are the requests completed
+                    // by now at the current contention-stretched
+                    // per-request service time: every rate change runs
+                    // this update first, so each interval drains at the
+                    // rate it actually ran under.
+                    let steps = match j.serve.as_mut() {
+                        Some(sv) => sv.drain(j.per_step.wall_s, now) as f64,
+                        None => {
+                            let s = (dt / j.per_step.wall_s).min(j.remaining_steps);
+                            j.remaining_steps -= s;
+                            s
+                        }
+                    };
+                    // Busy-time-weighted slowdown account: weight the
+                    // interval actually spent stepping (≤ dt for a job
+                    // that finished mid-interval) by the contention
+                    // factor it ran under.
+                    let served = steps * j.per_step.wall_s;
+                    j.slowdown_integral += j.cur_slowdown * served;
+                    j.service_s += served;
+                    (steps, j.device_frac)
                 }
             };
-            // Busy-time-weighted slowdown account: weight the interval
-            // actually spent stepping (≤ dt for a job that finished
-            // mid-interval) by the contention factor it ran under.
-            let served = steps * j.per_step.wall_s;
-            j.slowdown_integral += j.cur_slowdown * served;
-            j.service_s += served;
             // Activity weighted by the placement's compute share of the
             // device (DRAM bytes stay unweighted: device-level DRAMA
             // divides by full-device bandwidth, which already encodes
             // the memory-slice share).
             let mut contrib = j.per_step.scaled(steps);
-            contrib.busy_s *= j.device_frac;
-            contrib.smact_integral *= j.device_frac;
-            contrib.smocc_integral *= j.device_frac;
+            contrib.busy_s *= frac;
+            contrib.smact_integral *= frac;
+            contrib.smocc_integral *= frac;
             accrued.merge(&contrib);
         }
         // `merge` also sums wall_s; the GPU account's denominator is
@@ -2029,19 +2525,44 @@ impl FleetSim {
         if dt <= 0.0 {
             return acc;
         }
-        for id in self.running_jobs(gi) {
+        let mut ids = self.running_jobs(gi);
+        if self.has_gangs {
+            dedup_preserving_order(&mut ids);
+        }
+        for id in ids {
             let j = &self.jobs[id];
             if j.per_step.wall_s <= 0.0 {
                 continue;
             }
-            let steps = match &j.serve {
-                Some(sv) => sv.drained_by(j.per_step.wall_s, t) as f64,
-                None => (dt / j.per_step.wall_s).min(j.remaining_steps),
+            let (steps, frac) = match &j.gang_run {
+                // Mirror of the gang arm in `update_gpu`, read-only.
+                Some(gr) => {
+                    let frac: f64 = gr
+                        .grants
+                        .iter()
+                        .zip(&gr.fracs)
+                        .filter(|(g, _)| g.gpu == gi)
+                        .map(|(_, &f)| f)
+                        .sum();
+                    let steps = if gr.grants[0].gpu == gi {
+                        (dt / j.per_step.wall_s).min(j.remaining_steps / gr.width as f64)
+                    } else {
+                        dt / j.per_step.wall_s
+                    };
+                    (steps, frac)
+                }
+                None => {
+                    let steps = match &j.serve {
+                        Some(sv) => sv.drained_by(j.per_step.wall_s, t) as f64,
+                        None => (dt / j.per_step.wall_s).min(j.remaining_steps),
+                    };
+                    (steps, j.device_frac)
+                }
             };
             let mut contrib = j.per_step.scaled(steps);
-            contrib.busy_s *= j.device_frac;
-            contrib.smact_integral *= j.device_frac;
-            contrib.smocc_integral *= j.device_frac;
+            contrib.busy_s *= frac;
+            contrib.smact_integral *= frac;
+            contrib.smocc_integral *= frac;
             acc.merge(&contrib);
         }
         acc
@@ -2243,6 +2764,70 @@ impl FleetSim {
                     self.now
                 );
             }
+            match &j.gang_run {
+                Some(gr) => {
+                    assert!(
+                        j.spec.gang.is_some(),
+                        "job {id}: gang state on a non-gang spec at t={}",
+                        self.now
+                    );
+                    assert!(!gr.grants.is_empty(), "job {id}: empty grant set");
+                    assert_eq!(
+                        gr.grants.len(),
+                        gr.width as usize,
+                        "job {id}: width and grant set diverged"
+                    );
+                    assert_eq!(
+                        gr.fracs.len(),
+                        gr.grants.len(),
+                        "job {id}: telemetry fracs and grant set diverged"
+                    );
+                    assert_eq!(
+                        j.gpu,
+                        Some(gr.grants[0].gpu),
+                        "job {id}: gpu must mirror the primary grant at t={}",
+                        self.now
+                    );
+                    if j.finish_s.is_none() {
+                        assert_eq!(
+                            j.slot, gr.grants[0].slot,
+                            "job {id}: slot must mirror the primary grant at t={}",
+                            self.now
+                        );
+                        for g in &gr.grants {
+                            if let Some(si) = g.slot {
+                                assert_eq!(
+                                    self.gpus[g.gpu].partition[si].job,
+                                    Some(id),
+                                    "job {id}: slot grant back-pointer lost at t={}",
+                                    self.now
+                                );
+                            }
+                        }
+                        for gi in 0..self.gpus.len() {
+                            let grants_here = gr
+                                .grants
+                                .iter()
+                                .filter(|g| g.gpu == gi && g.slot.is_none())
+                                .count();
+                            let resident_here =
+                                self.gpus[gi].residents.iter().filter(|&&r| r == id).count();
+                            assert_eq!(
+                                grants_here, resident_here,
+                                "job {id}: share grants and residency diverged on GPU {gi} at t={}",
+                                self.now
+                            );
+                        }
+                    }
+                }
+                None => {
+                    assert!(
+                        j.spec.gang.is_none() || j.start_s.is_none(),
+                        "job {id}: a placed gang must carry its grant set at t={}",
+                        self.now
+                    );
+                }
+            }
         }
         for gi in 0..self.gpus.len() {
             assert_eq!(
@@ -2353,6 +2938,15 @@ impl FleetSim {
                     }),
                     _ => None,
                 };
+                let gang = match (j.spec.gang, &j.gang_run) {
+                    (Some(gs), Some(gr)) => Some(GangOutcome {
+                        requested: gs.replicas,
+                        granted: gr.width,
+                        cross_gpu: gr.cross_gpu,
+                        comm_factor: gr.comm_factor,
+                    }),
+                    _ => None,
+                };
                 JobRecord {
                     spec: j.spec,
                     start_s: j.start_s,
@@ -2360,6 +2954,7 @@ impl FleetSim {
                     gpu: j.gpu,
                     outcome,
                     serve,
+                    gang,
                 }
             })
             .collect();
@@ -2391,6 +2986,48 @@ impl FleetSim {
                 p50_ms: percentile(&pooled, 50.0),
                 p95_ms: percentile(&pooled, 95.0),
                 p99_ms: percentile(&pooled, 99.0),
+            })
+        } else {
+            None
+        };
+        // Fleet-wide gang digest: how many gangs the trace carried,
+        // how many were granted (and at what communication stretch),
+        // how many spanned GPUs and how many shrank below their
+        // requested width. `None` on gang-free fleets, so their
+        // summary JSON keeps pre-gang bytes.
+        let gangs = if self.has_gangs {
+            let mut gang_jobs = 0u64;
+            let mut placed_gangs = 0u64;
+            let mut cross_gang_jobs = 0u64;
+            let mut shrunk_gangs = 0u64;
+            let mut comm_sum = 0.0;
+            for j in &self.jobs {
+                if let Some(gs) = j.spec.gang {
+                    gang_jobs += 1;
+                    if let Some(gr) = &j.gang_run {
+                        placed_gangs += 1;
+                        comm_sum += gr.comm_factor;
+                        if gr.cross_gpu {
+                            cross_gang_jobs += 1;
+                        }
+                        if gr.width < gs.replicas {
+                            shrunk_gangs += 1;
+                        }
+                    }
+                }
+            }
+            Some(FleetGangSummary {
+                gang_jobs,
+                placed_gangs,
+                cross_gang_jobs,
+                shrunk_gangs,
+                // 1.0 = no communication overhead, mirroring the
+                // slowdown convention below.
+                comm_stretch: if placed_gangs > 0 {
+                    comm_sum / placed_gangs as f64
+                } else {
+                    1.0
+                },
             })
         } else {
             None
@@ -2462,6 +3099,7 @@ impl FleetSim {
             peak_slowdown,
             timeline: self.sampler.as_ref().map(|s| s.summary()),
             serving,
+            gangs,
             jobs,
             gpus,
         }
@@ -2709,6 +3347,7 @@ mod tests {
                 workload,
                 epochs: 1,
                 kind: JobKind::Train,
+                gang: None,
             })
             .collect()
     }
@@ -2827,6 +3466,7 @@ mod tests {
             workload: WorkloadSize::Large,
             epochs: 1,
             kind: JobKind::Train,
+            gang: None,
         });
         let m = run_with(
             Box::new(Mps { cap: 7 }),
@@ -2958,6 +3598,7 @@ mod tests {
             workload: WorkloadSize::Small,
             epochs: 1,
             kind: JobKind::Train,
+            gang: None,
         });
         let config = FleetConfig {
             a100s: 1,
@@ -3063,48 +3704,6 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_wrappers_match_run_with() {
-        // The legacy `run`/`run_traced`/`enable_*` surface must stay a
-        // faithful shim over `run_with`: same metrics, same trace, same
-        // sampled timeline.
-        let trace = small_trace(12, 0.001);
-        let config = FleetConfig {
-            a100s: 1,
-            a30s: 0,
-            ..FleetConfig::default()
-        };
-        let build = || FleetSim::new(config, Box::new(Mps { cap: 7 }), cal(), &trace);
-
-        let legacy_plain = build().run();
-        let unified_plain = build().run_with(&RunOptions::default()).unwrap();
-        assert!(unified_plain.trace.is_none());
-        assert_eq!(
-            legacy_plain.to_json().to_string_pretty(),
-            unified_plain.metrics.to_json().to_string_pretty()
-        );
-
-        let mut legacy_sim = build();
-        legacy_sim.enable_tracing();
-        legacy_sim.enable_sampling(5.0).unwrap();
-        let (legacy_metrics, legacy_trace) = legacy_sim.run_traced();
-        let unified = build()
-            .run_with(&RunOptions {
-                trace: true,
-                sample_interval_s: Some(5.0),
-                ..RunOptions::default()
-            })
-            .unwrap();
-        assert_eq!(
-            legacy_metrics.to_json().to_string_pretty(),
-            unified.metrics.to_json().to_string_pretty()
-        );
-        assert_eq!(legacy_trace, unified.trace);
-        assert!(unified.trace.is_some());
-        assert!(unified.trace.as_ref().unwrap().timeline.is_some());
-    }
-
-    #[test]
     fn unblocked_solo_head_computes_no_reservations() {
         // Regression for the `place_backfill` short-circuit: with the
         // whole queue draining except a lone blocked head, there is
@@ -3145,6 +3744,7 @@ mod tests {
                 slo_ms: 1000.0,
                 seed: 7,
             }),
+            gang: None,
         }
     }
 
@@ -3271,5 +3871,219 @@ mod tests {
             "per-pass bound violated: {:?}",
             capped.stats
         );
+    }
+
+    fn gang_job(
+        id: usize,
+        arrival_s: f64,
+        workload: WorkloadSize,
+        replicas: u32,
+        min_replicas: u32,
+        scope: GangScope,
+    ) -> JobSpec {
+        use crate::cluster::trace::GangSpec;
+        JobSpec {
+            id,
+            arrival_s,
+            workload,
+            epochs: 1,
+            kind: JobKind::Train,
+            gang: Some(GangSpec {
+                replicas,
+                min_replicas,
+                scope,
+            }),
+        }
+    }
+
+    #[test]
+    fn gang_parallelism_beats_a_solo_run() {
+        // Two 2g.10gb replicas retire steps twice as fast as one, minus
+        // the intra-GPU all-reduce stretch — strictly ahead of solo.
+        let solo = run(
+            Box::new(MigStatic::new(None, None)),
+            &manual_trace(1, WorkloadSize::Small, 0.0),
+            1,
+        );
+        let gang = run(
+            Box::new(MigStatic::new(None, None)),
+            &[gang_job(0, 0.0, WorkloadSize::Small, 2, 2, GangScope::Intra)],
+            1,
+        );
+        assert_eq!(gang.finished(), 1, "{}", gang.summary());
+        assert!(
+            gang.makespan_s < solo.makespan_s,
+            "gang {} !< solo {}",
+            gang.makespan_s,
+            solo.makespan_s
+        );
+        // A gang is one job: its images count once, not per replica.
+        assert_eq!(gang.total_images(), solo.total_images());
+        let o = gang.jobs[0].gang.expect("placed gang carries an outcome");
+        assert_eq!(o.requested, 2);
+        assert_eq!(o.granted, 2);
+        assert!(!o.cross_gpu);
+        assert!(o.comm_factor > 1.0);
+    }
+
+    #[test]
+    fn cross_gpu_gang_pays_more_comm_stretch_than_intra() {
+        // Same width, same 2g.10gb per-replica rate: the only
+        // difference is the all-reduce path, so the cross-GPU gang
+        // must report a strictly higher comm stretch and take longer.
+        let intra = run(
+            Box::new(MigStatic::new(None, None)),
+            &[gang_job(0, 0.0, WorkloadSize::Small, 2, 2, GangScope::Intra)],
+            2,
+        );
+        let cross = run(
+            Box::new(MigStatic::new(None, None)),
+            &[gang_job(0, 0.0, WorkloadSize::Small, 2, 2, GangScope::Cross)],
+            2,
+        );
+        assert_eq!(intra.finished(), 1, "{}", intra.summary());
+        assert_eq!(cross.finished(), 1, "{}", cross.summary());
+        let gi = intra.gangs.as_ref().expect("gang fleet has a gang block");
+        let gc = cross.gangs.as_ref().expect("gang fleet has a gang block");
+        assert_eq!(gi.cross_gang_jobs, 0);
+        assert_eq!(gc.cross_gang_jobs, 1);
+        assert!(
+            gc.comm_stretch > gi.comm_stretch,
+            "cross {} !> intra {}",
+            gc.comm_stretch,
+            gi.comm_stretch
+        );
+        assert!(
+            cross.makespan_s > intra.makespan_s,
+            "cross {} !> intra {}",
+            cross.makespan_s,
+            intra.makespan_s
+        );
+        assert!(cross.jobs[0].gang.unwrap().cross_gpu);
+    }
+
+    #[test]
+    fn infeasible_gang_rejects_instead_of_blocking_the_queue() {
+        // A cross-GPU gang of 5 on a 2-GPU fleet can never be granted:
+        // it must be refused at admission with a structured outcome so
+        // the job behind it still runs — not block the head forever.
+        let trace = vec![
+            gang_job(0, 0.0, WorkloadSize::Small, 5, 5, GangScope::Cross),
+            JobSpec {
+                id: 1,
+                arrival_s: 0.001,
+                workload: WorkloadSize::Small,
+                epochs: 1,
+                kind: JobKind::Train,
+                gang: None,
+            },
+        ];
+        let m = run(Box::new(MigStatic::new(None, None)), &trace, 2);
+        assert_eq!(m.rejected(), 1, "{}", m.summary());
+        assert_eq!(m.finished(), 1, "{}", m.summary());
+        assert_eq!(m.unserved(), 0);
+        let r = m
+            .jobs
+            .iter()
+            .find(|j| matches!(j.outcome, JobOutcome::Rejected(_)))
+            .unwrap();
+        assert!(r.spec.gang.is_some());
+        if let JobOutcome::Rejected(reason) = &r.outcome {
+            assert!(reason.contains("can never be granted"), "{reason}");
+        }
+        // Intra-GPU: a gang wider than any single GPU's capacity is
+        // just as impossible (MPS co-runner cap 7 < 8).
+        let m = run(
+            Box::new(Mps { cap: 7 }),
+            &[gang_job(0, 0.0, WorkloadSize::Small, 8, 8, GangScope::Intra)],
+            2,
+        );
+        assert_eq!(m.rejected(), 1, "{}", m.summary());
+    }
+
+    #[test]
+    fn elastic_gang_shrinks_under_memory_pressure() {
+        // Five Large replicas want 5 x 9.4 GB of floors on one A100
+        // whose usable DRAM admits only four; the elastic minimum (2)
+        // lets the grant shrink to the widest width that fits.
+        let m = run(
+            Box::new(Mps { cap: 7 }),
+            &[gang_job(0, 0.0, WorkloadSize::Large, 5, 2, GangScope::Intra)],
+            1,
+        );
+        assert_eq!(m.finished(), 1, "{}", m.summary());
+        assert_eq!(m.oom_killed(), 0);
+        let o = m.jobs[0].gang.expect("placed gang carries an outcome");
+        assert_eq!(o.requested, 5);
+        assert_eq!(o.granted, 4, "widest width whose floors fit");
+        let g = m.gangs.as_ref().unwrap();
+        assert_eq!(g.placed_gangs, 1);
+        assert_eq!(g.shrunk_gangs, 1);
+    }
+
+    #[test]
+    fn gang_finish_releases_every_grant() {
+        // A width-3 gang fills all three 2g.10gb slots; three solo
+        // jobs arriving behind it must all start after its finish —
+        // every grant came back, atomically.
+        let mut trace = vec![gang_job(0, 0.0, WorkloadSize::Small, 3, 3, GangScope::Intra)];
+        for id in 1..4 {
+            trace.push(JobSpec {
+                id,
+                arrival_s: 0.001,
+                workload: WorkloadSize::Small,
+                epochs: 1,
+                kind: JobKind::Train,
+                gang: None,
+            });
+        }
+        let m = run(Box::new(MigStatic::new(None, None)), &trace, 1);
+        assert_eq!(m.finished(), 4, "{}", m.summary());
+        let gang_finish = m.jobs[0].finish_s.unwrap();
+        for j in &m.jobs[1..] {
+            let start = j.start_s.unwrap();
+            assert!(
+                start >= gang_finish - 1e-9,
+                "job {} started at {} before the gang freed its slots at {}",
+                j.spec.id,
+                start,
+                gang_finish
+            );
+        }
+    }
+
+    #[test]
+    fn gang_free_runs_carry_no_gang_block() {
+        let trace = small_trace(5, 1.0);
+        let m = run(Box::new(Exclusive), &trace, 2);
+        assert!(m.gangs.is_none());
+        assert!(m.jobs.iter().all(|j| j.gang.is_none()));
+        let text = m.to_json().to_string_pretty();
+        assert!(!text.contains("gang"), "gang-free JSON must not mention gangs");
+    }
+
+    #[test]
+    fn gang_runs_are_deterministic() {
+        let trace = vec![
+            gang_job(0, 0.0, WorkloadSize::Small, 2, 2, GangScope::Cross),
+            gang_job(1, 0.5, WorkloadSize::Medium, 3, 2, GangScope::Intra),
+            JobSpec {
+                id: 2,
+                arrival_s: 1.0,
+                workload: WorkloadSize::Small,
+                epochs: 1,
+                kind: JobKind::Train,
+                gang: None,
+            },
+        ];
+        for kind in [PolicyKind::MigStatic, PolicyKind::Mps, PolicyKind::TimeSlice] {
+            let a = run(kind.build(&cal(), 7, None), &trace, 2);
+            let b = run(kind.build(&cal(), 7, None), &trace, 2);
+            assert_eq!(
+                a.to_json().to_string_pretty(),
+                b.to_json().to_string_pretty(),
+                "{kind} not deterministic with gangs"
+            );
+        }
     }
 }

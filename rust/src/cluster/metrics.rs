@@ -106,6 +106,52 @@ impl FleetServeSummary {
     }
 }
 
+/// Multi-grant digest of one gang job: what width it asked for, what
+/// the all-or-nothing grant actually gave it, and the all-reduce
+/// communication stretch it paid for the privilege.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GangOutcome {
+    /// Replicas the spec asked for.
+    pub requested: u32,
+    /// Replicas actually granted (elastic shrink: `min_replicas <=
+    /// granted <= requested`).
+    pub granted: u32,
+    /// Whether the grant set spans more than one GPU.
+    pub cross_gpu: bool,
+    /// All-reduce step stretch the gang ran under (1.0 = free).
+    pub comm_factor: f64,
+}
+
+/// Fleet-wide gang digest. `None` on gang-free fleets, so their
+/// summary JSON keeps pre-gang bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetGangSummary {
+    /// Jobs whose spec carried a gang.
+    pub gang_jobs: u64,
+    /// Gangs that received a grant set (each counted once, regardless
+    /// of width).
+    pub placed_gangs: u64,
+    /// Placed gangs whose grants span more than one GPU.
+    pub cross_gang_jobs: u64,
+    /// Placed gangs granted fewer replicas than requested.
+    pub shrunk_gangs: u64,
+    /// Mean communication stretch over placed gangs (1.0 when none
+    /// placed — no overhead observed).
+    pub comm_stretch: f64,
+}
+
+impl FleetGangSummary {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("gang_jobs", Json::from_u64(self.gang_jobs))
+            .set("placed_gangs", Json::from_u64(self.placed_gangs))
+            .set("cross_gang_jobs", Json::from_u64(self.cross_gang_jobs))
+            .set("shrunk_gangs", Json::from_u64(self.shrunk_gangs))
+            .set("comm_stretch", Json::from_f64(self.comm_stretch));
+        j
+    }
+}
+
 /// Per-job record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobRecord {
@@ -116,6 +162,8 @@ pub struct JobRecord {
     pub outcome: JobOutcome,
     /// Request digest; `Some` iff the spec is a serve job.
     pub serve: Option<ServeOutcome>,
+    /// Grant digest; `Some` iff the spec is a gang job that was placed.
+    pub gang: Option<GangOutcome>,
 }
 
 impl JobRecord {
@@ -180,6 +228,9 @@ pub struct FleetMetrics {
     /// Fleet-wide serving digest (`Some` only when the trace carried
     /// serve jobs — absent, the summary JSON keeps training-only bytes).
     pub serving: Option<FleetServeSummary>,
+    /// Fleet-wide gang digest (`Some` only when the trace carried gang
+    /// jobs — absent, the summary JSON keeps gang-free bytes).
+    pub gangs: Option<FleetGangSummary>,
     pub jobs: Vec<JobRecord>,
     pub gpus: Vec<GpuRecord>,
 }
@@ -344,6 +395,9 @@ impl FleetMetrics {
             o.set("requests_per_second", Json::from_f64(self.requests_per_second()));
             j.set("serving", o);
         }
+        if let Some(g) = &self.gangs {
+            j.set("gangs", g.to_json());
+        }
         if let Some(tl) = &self.timeline {
             j.set("timeline", tl.to_json());
         }
@@ -369,8 +423,20 @@ impl FleetMetrics {
                 self.requests_per_second(),
             ),
         };
+        let gangs = match &self.gangs {
+            None => String::new(),
+            Some(g) => format!(
+                "\n{:<12} gangs: {}/{} placed ({} cross-GPU, {} shrunk) | comm stretch μ {:.3}",
+                self.policy,
+                g.placed_gangs,
+                g.gang_jobs,
+                g.cross_gang_jobs,
+                g.shrunk_gangs,
+                g.comm_stretch,
+            ),
+        };
         format!(
-            "{:<12} [{}] {} jobs: {} finished, {} rejected, {} oom, {} unserved | makespan {} | wait μ {} | hol {} | backfilled {} | migrations {} | JCT p50 {} p95 {} | {:.1} img/s | GRACT μ {:.2} | slowdown μ {:.2} peak {:.2}{}",
+            "{:<12} [{}] {} jobs: {} finished, {} rejected, {} oom, {} unserved | makespan {} | wait μ {} | hol {} | backfilled {} | migrations {} | JCT p50 {} p95 {} | {:.1} img/s | GRACT μ {:.2} | slowdown μ {:.2} peak {:.2}{}{}",
             self.policy,
             self.queue_discipline,
             self.jobs.len(),
@@ -390,6 +456,7 @@ impl FleetMetrics {
             self.mean_slowdown,
             self.peak_slowdown,
             serving,
+            gangs,
         )
     }
 }
@@ -407,12 +474,14 @@ mod tests {
                 workload: WorkloadSize::Small,
                 epochs: 1,
                 kind: crate::cluster::trace::JobKind::Train,
+                gang: None,
             },
             start_s: Some(start),
             finish_s: Some(finish),
             gpu: Some(0),
             outcome: JobOutcome::Finished,
             serve: None,
+            gang: None,
         }
     }
 
@@ -433,6 +502,7 @@ mod tests {
             peak_slowdown: 1.0,
             timeline: None,
             serving: None,
+            gangs: None,
             jobs,
             gpus: Vec::new(),
         }
@@ -578,5 +648,32 @@ mod tests {
         );
         // And the human line now carries the serving digest.
         assert!(m.summary().contains("serving:"));
+    }
+
+    #[test]
+    fn gang_block_appears_only_on_gang_fleets() {
+        let mut m = metrics(vec![record(0, 0.0, 1.0, 2.0)]);
+        let text = m.to_json().to_string_pretty();
+        assert!(
+            Json::parse(&text).unwrap().get("gangs").is_none(),
+            "gang-free summaries keep pre-gang bytes"
+        );
+        assert!(!m.summary().contains("gangs:"));
+        m.gangs = Some(FleetGangSummary {
+            gang_jobs: 3,
+            placed_gangs: 2,
+            cross_gang_jobs: 1,
+            shrunk_gangs: 1,
+            comm_stretch: 1.075,
+        });
+        let back = Json::parse(&m.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.at(&["gangs", "gang_jobs"]).unwrap().as_u64(), Some(3));
+        assert_eq!(back.at(&["gangs", "placed_gangs"]).unwrap().as_u64(), Some(2));
+        assert_eq!(back.at(&["gangs", "cross_gang_jobs"]).unwrap().as_u64(), Some(1));
+        assert_eq!(back.at(&["gangs", "shrunk_gangs"]).unwrap().as_u64(), Some(1));
+        assert!(
+            (back.at(&["gangs", "comm_stretch"]).unwrap().as_f64().unwrap() - 1.075).abs() < 1e-12
+        );
+        assert!(m.summary().contains("gangs:"));
     }
 }

@@ -43,17 +43,62 @@ use crate::simgpu::calibration::Calibration;
 use crate::workload::memory::{GpuMemoryPlan, USABLE_FRACTION};
 use crate::workload::spec::WorkloadSize;
 
+/// One resource grant: a MIG slot or a whole-GPU co-runner share on
+/// some GPU. A classic job holds exactly one; a gang holds one per
+/// replica (its `Placement` is the grant set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Grant {
+    pub gpu: usize,
+    /// `Some(slot)` = MIG instance `slot` of `gpu`; `None` = join
+    /// `gpu` as a whole-device (MPS/time-slice) co-runner.
+    pub slot: Option<usize>,
+}
+
+impl Grant {
+    /// A MIG-slot grant.
+    pub fn slot(gpu: usize, slot: usize) -> Grant {
+        Grant { gpu, slot: Some(slot) }
+    }
+
+    /// A whole-GPU co-runner grant.
+    pub fn share(gpu: usize) -> Grant {
+        Grant { gpu, slot: None }
+    }
+}
+
 /// Where the offered waiting job goes.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Decision {
-    /// Place into MIG instance `slot` of GPU `gpu`.
-    Slot { gpu: usize, slot: usize },
-    /// Join GPU `gpu` as a whole-device co-runner.
-    Share { gpu: usize },
+    /// Claim this grant set, atomically (never empty; single-grant for
+    /// classic policies, one grant per replica for a gang).
+    Place(Vec<Grant>),
     /// Nothing fits right now; stay queued (head-of-line).
     Wait,
     /// Can never run under this policy on this fleet.
     Reject(String),
+}
+
+impl Decision {
+    /// Single-grant placement into MIG instance `slot` of GPU `gpu` —
+    /// the classic `Slot` decision.
+    pub fn slot(gpu: usize, slot: usize) -> Decision {
+        Decision::Place(vec![Grant::slot(gpu, slot)])
+    }
+
+    /// Single-grant placement joining GPU `gpu` as a whole-device
+    /// co-runner — the classic `Share` decision.
+    pub fn share(gpu: usize) -> Decision {
+        Decision::Place(vec![Grant::share(gpu)])
+    }
+
+    /// The grant of a single-grant placement (`None` for Wait/Reject
+    /// and for multi-grant gang placements).
+    pub fn single(&self) -> Option<Grant> {
+        match self {
+            Decision::Place(grants) if grants.len() == 1 => Some(grants[0]),
+            _ => None,
+        }
+    }
 }
 
 /// How whole-GPU co-runners interfere (policies without MIG slots).
@@ -216,6 +261,31 @@ pub trait SchedulingPolicy {
     ) -> Option<Vec<InstanceShape>> {
         None
     }
+
+    /// Upper bound on how many gang replicas of `workload` one *empty*
+    /// GPU of `kind` could ever hold under this policy — the gang
+    /// admission-feasibility check. `strict` applies the paper's
+    /// memory floors; oversubscribed admission only counts concurrency
+    /// limits. `0` means this policy cannot host gang replicas at all
+    /// (hybrid probe-first policies: a probe region observes one job's
+    /// demand, not a lockstepped gang), so gangs are rejected with a
+    /// structured outcome at admission.
+    ///
+    /// The shared-mode default mirrors [`shared_place`]: the co-runner
+    /// cap, floored by how many replica memory floors fit the usable
+    /// capacity under strict admission.
+    fn gang_capacity(&self, workload: WorkloadSize, kind: GpuKind, strict: bool) -> u32 {
+        let cap = match self.shared_cap() {
+            Some(cap) => cap,
+            None => return 0,
+        };
+        if !strict {
+            return cap;
+        }
+        let need = floor_bytes(workload);
+        let fit = usable_bytes(kind.spec().dram_capacity) / need.max(1);
+        cap.min(fit.min(u32::MAX as u64) as u32)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -251,7 +321,7 @@ fn shared_place(cap: u32, workload: WorkloadSize, view: &FleetView) -> Decision 
         }
     }
     match best {
-        Some((_, gi)) => Decision::Share { gpu: gi },
+        Some((_, gi)) => Decision::share(gi),
         None if ever_fits => Decision::Wait,
         None => Decision::Reject(format!(
             "memory floor {} exceeds every GPU in the fleet",
@@ -384,11 +454,11 @@ fn slot_place(
         }
     }
     if let Some((_, gpu, slot)) = best {
-        return Some(Decision::Slot { gpu, slot });
+        return Some(Decision::slot(gpu, slot));
     }
     if oversubscribe_fallback {
         if let Some((_, gpu, slot)) = largest {
-            return Some(Decision::Slot { gpu, slot });
+            return Some(Decision::slot(gpu, slot));
         }
     }
     None
@@ -466,6 +536,15 @@ impl SchedulingPolicy for MigStatic {
         // oversubscribed (the §4 crash): every slot is takeable.
         true
     }
+
+    fn gang_capacity(&self, workload: WorkloadSize, kind: GpuKind, strict: bool) -> u32 {
+        // The partition never changes: replicas-per-GPU is the number
+        // of (fitting, under strict admission) instances it carries.
+        self.initial_partition(kind)
+            .iter()
+            .filter(|s| !strict || fits_instance(workload, s.memory_bytes))
+            .count() as u32
+    }
 }
 
 /// Planner-driven repartitioning: drained GPUs are reconfigured for the
@@ -540,6 +619,26 @@ impl SchedulingPolicy for MigDynamic {
         !view.gpus.iter().any(|g| {
             fits_instance(workload, g.kind.largest_instance_bytes())
         })
+    }
+
+    fn gang_capacity(&self, workload: WorkloadSize, kind: GpuKind, strict: bool) -> u32 {
+        // A drained GPU can be repartitioned into any homogeneous
+        // layout: the bound is the best replica count over the
+        // profiles the workload fits (all profiles, oversubscribed).
+        match kind {
+            GpuKind::A100 => MigProfile::ALL
+                .iter()
+                .filter(|p| !strict || fits_instance(workload, p.memory_bytes()))
+                .map(|p| p.max_homogeneous())
+                .max()
+                .unwrap_or(0),
+            GpuKind::A30 => A30Profile::ALL
+                .iter()
+                .filter(|p| !strict || fits_instance(workload, p.memory_bytes()))
+                .map(|p| p.max_homogeneous())
+                .max()
+                .unwrap_or(0),
+        }
     }
 
     fn repartition(&self, kind: GpuKind, waiting: &[WorkloadSize]) -> Option<Vec<InstanceShape>> {
@@ -664,7 +763,7 @@ impl SchedulingPolicy for MigMiso {
             }
         }
         if let Some((_, gpu)) = best {
-            return Decision::Share { gpu };
+            return Decision::share(gpu);
         }
         // (2) Overflow into committed GPUs: smallest fitting free
         // slice (their layout was planned for jobs like these).
@@ -691,6 +790,14 @@ impl SchedulingPolicy for MigMiso {
 
     fn probe_cap(&self) -> Option<u32> {
         Some(self.cap)
+    }
+
+    fn gang_capacity(&self, _workload: WorkloadSize, _kind: GpuKind, _strict: bool) -> u32 {
+        // MISO's probe loop observes one job's solo demand profile to
+        // plan a partition for it; a lockstepped gang has no
+        // per-replica identity the planner could score. Gangs are
+        // rejected at admission under mig-miso (documented limitation).
+        0
     }
 
     fn probe_decision(
@@ -814,7 +921,7 @@ mod tests {
     fn mps_picks_least_loaded() {
         let p = Mps { cap: 7 };
         let d = p.place(WorkloadSize::Small, &shared_view(&[3, 1, 2]));
-        assert_eq!(d, Decision::Share { gpu: 1 });
+        assert_eq!(d, Decision::share(1));
     }
 
     #[test]
@@ -849,7 +956,7 @@ mod tests {
         let p = Exclusive;
         assert_eq!(
             p.place(WorkloadSize::Large, &shared_view(&[1, 0])),
-            Decision::Share { gpu: 1 }
+            Decision::share(1)
         );
         assert_eq!(p.place(WorkloadSize::Large, &shared_view(&[1, 1])), Decision::Wait);
     }
@@ -860,9 +967,9 @@ mod tests {
         let p = MigStatic::new(None, None);
         // Small fits 1g.5gb: prefer it over the free 3g.20gb.
         let v = mig_view(&[(P3g20gb, false), (P1g5gb, false)]);
-        assert_eq!(p.place(WorkloadSize::Small, &v), Decision::Slot { gpu: 0, slot: 1 });
+        assert_eq!(p.place(WorkloadSize::Small, &v), Decision::slot(0, 1));
         // Medium does not fit 1g.5gb: the 3g.20gb slot wins.
-        assert_eq!(p.place(WorkloadSize::Medium, &v), Decision::Slot { gpu: 0, slot: 0 });
+        assert_eq!(p.place(WorkloadSize::Medium, &v), Decision::slot(0, 0));
     }
 
     #[test]
@@ -979,7 +1086,7 @@ mod tests {
             }],
             admission: AdmissionMode::Oversubscribe,
         };
-        assert_eq!(p.place(WorkloadSize::Large, &v), Decision::Share { gpu: 0 });
+        assert_eq!(p.place(WorkloadSize::Large, &v), Decision::share(0));
         // The co-runner cap is a concurrency limit, not a memory floor:
         // it still applies.
         v.gpus[0].residents = 7;
@@ -994,7 +1101,7 @@ mod tests {
         v.admission = AdmissionMode::Oversubscribe;
         // Strict rejects (large never fits 1g.5gb); oversubscribed
         // placement picks a free instance and lets the fleet OOM-kill.
-        assert_eq!(p.place(WorkloadSize::Large, &v), Decision::Slot { gpu: 0, slot: 0 });
+        assert_eq!(p.place(WorkloadSize::Large, &v), Decision::slot(0, 0));
         // With every slot busy the job waits for a free one.
         let mut busy = mig_view(&[(P1g5gb, true), (P1g5gb, true)]);
         busy.admission = AdmissionMode::Oversubscribe;
@@ -1003,7 +1110,7 @@ mod tests {
         // fallback under oversubscription.
         let mut mixed = mig_view(&[(P3g20gb, false), (P1g5gb, false)]);
         mixed.admission = AdmissionMode::Oversubscribe;
-        assert_eq!(p.place(WorkloadSize::Small, &mixed), Decision::Slot { gpu: 0, slot: 1 });
+        assert_eq!(p.place(WorkloadSize::Small, &mixed), Decision::slot(0, 1));
     }
 
     #[test]
@@ -1021,7 +1128,7 @@ mod tests {
         // A fitting free slot is still taken directly.
         let mut fits = mig_view(&[(P3g20gb, false), (P1g5gb, false)]);
         fits.admission = AdmissionMode::Oversubscribe;
-        assert_eq!(p.place(WorkloadSize::Large, &fits), Decision::Slot { gpu: 0, slot: 0 });
+        assert_eq!(p.place(WorkloadSize::Large, &fits), Decision::slot(0, 0));
     }
 
     #[test]
@@ -1057,7 +1164,7 @@ mod tests {
         let cal = Calibration::paper();
         let p = MigMiso::new(&cal, 7);
         let d = p.place(WorkloadSize::Small, &shared_view(&[3, 1, 2]));
-        assert_eq!(d, Decision::Share { gpu: 1 });
+        assert_eq!(d, Decision::share(1));
         // Probe cap behaves like the MPS co-runner cap.
         let tight = MigMiso::new(&cal, 2);
         assert_eq!(tight.place(WorkloadSize::Small, &shared_view(&[2, 2])), Decision::Wait);
@@ -1071,7 +1178,7 @@ mod tests {
         // GPU 0 committed to [2g.10gb (busy), 1g.5gb (free)], no probe
         // region anywhere: a small overflows into the free slice.
         let mut v = mig_view(&[(P2g10gb, true), (P1g5gb, false)]);
-        assert_eq!(p.place(WorkloadSize::Small, &v), Decision::Slot { gpu: 0, slot: 1 });
+        assert_eq!(p.place(WorkloadSize::Small, &v), Decision::slot(0, 1));
         // A medium fits no free slice: it waits for the drain-revert.
         assert_eq!(p.place(WorkloadSize::Medium, &v), Decision::Wait);
         // With a probe region present, probing outranks the free slice.
@@ -1082,7 +1189,7 @@ mod tests {
             residents: 0,
             resident_floor_bytes: 0,
         });
-        assert_eq!(p.place(WorkloadSize::Small, &v), Decision::Share { gpu: 1 });
+        assert_eq!(p.place(WorkloadSize::Small, &v), Decision::share(1));
     }
 
     #[test]
@@ -1110,5 +1217,56 @@ mod tests {
             })
             .collect();
         assert_eq!(p.probe_decision(GpuKind::A100, &thriving), None);
+    }
+
+    #[test]
+    fn grant_constructors_build_single_grant_placements() {
+        assert_eq!(
+            Decision::slot(2, 1),
+            Decision::Place(vec![Grant { gpu: 2, slot: Some(1) }])
+        );
+        assert_eq!(
+            Decision::share(3),
+            Decision::Place(vec![Grant { gpu: 3, slot: None }])
+        );
+        assert_eq!(Decision::slot(2, 1).single(), Some(Grant::slot(2, 1)));
+        assert_eq!(Decision::share(3).single(), Some(Grant::share(3)));
+        assert_eq!(Decision::Wait.single(), None);
+        let gang = Decision::Place(vec![Grant::share(0), Grant::share(1)]);
+        assert_eq!(gang.single(), None);
+    }
+
+    #[test]
+    fn gang_capacity_bounds_per_gpu_replicas() {
+        let cal = Calibration::paper();
+        // Shared policies: the co-runner cap, floored by the memory
+        // floors under strict admission. Seven small floors (4.4 GB)
+        // exceed the A100's 38 GB usable: 38/4.4 = 8 -> cap wins; for
+        // large (9.4 GB) floors only 4 fit.
+        let mps = Mps { cap: 7 };
+        assert_eq!(mps.gang_capacity(WorkloadSize::Small, GpuKind::A100, true), 7);
+        assert_eq!(mps.gang_capacity(WorkloadSize::Large, GpuKind::A100, true), 4);
+        assert_eq!(mps.gang_capacity(WorkloadSize::Large, GpuKind::A100, false), 7);
+        assert_eq!(Exclusive.gang_capacity(WorkloadSize::Small, GpuKind::A100, true), 1);
+        // MigStatic counts fitting instances of the fixed partition:
+        // the default 3x 2g.10gb fits every paper workload, while an
+        // all-1g layout fits no large replica under strict admission.
+        let stat = MigStatic::new(None, None);
+        assert_eq!(stat.gang_capacity(WorkloadSize::Small, GpuKind::A100, true), 3);
+        assert_eq!(stat.gang_capacity(WorkloadSize::Large, GpuKind::A100, true), 3);
+        let ones = MigStatic::new(Some(vec![MigProfile::P1g5gb; 7]), None);
+        assert_eq!(ones.gang_capacity(WorkloadSize::Large, GpuKind::A100, true), 0);
+        assert_eq!(ones.gang_capacity(WorkloadSize::Large, GpuKind::A100, false), 7);
+        // MigDynamic can mint any homogeneous layout: 7x 1g.5gb for
+        // smalls, 3x 2g.10gb for larges.
+        let dynamic = MigDynamic::new(&cal);
+        assert_eq!(dynamic.gang_capacity(WorkloadSize::Small, GpuKind::A100, true), 7);
+        assert_eq!(dynamic.gang_capacity(WorkloadSize::Large, GpuKind::A100, true), 3);
+        assert_eq!(dynamic.gang_capacity(WorkloadSize::Small, GpuKind::A30, true), 4);
+        // MigMiso cannot host gangs: the probe loop has no per-replica
+        // identity to plan around.
+        let miso = MigMiso::new(&cal, 7);
+        assert_eq!(miso.gang_capacity(WorkloadSize::Small, GpuKind::A100, true), 0);
+        assert_eq!(miso.gang_capacity(WorkloadSize::Small, GpuKind::A100, false), 0);
     }
 }

@@ -44,6 +44,7 @@
 //! half of the paper's OOM boundary (§4).
 
 use super::event::JobId;
+use super::policy::Grant;
 use std::collections::VecDeque;
 
 /// Ordering policy of the admission queue.
@@ -111,30 +112,42 @@ impl std::fmt::Display for QueueDiscipline {
     }
 }
 
-/// A blocked job's earliest-start estimate and the resource it expects
-/// to take: a specific MIG instance (`slot: Some`) or a whole-GPU
-/// co-runner seat (`slot: None`). Backfill candidates must either stay
-/// off the reserved resource or finish before `start_s`.
-#[derive(Debug, Clone, Copy, PartialEq)]
+/// A blocked job's earliest-start estimate and the resource *set* it
+/// expects to take — one [`Grant`] per replica (single-grant for
+/// classic jobs): each a specific MIG instance (`slot: Some`) or a
+/// whole-GPU co-runner seat (`slot: None`). Backfill candidates must
+/// either stay off every claimed resource or finish before `start_s`,
+/// so a backfill can never split a reserved gang.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Reservation {
     /// Estimated earliest start (absolute simulated seconds).
     pub start_s: f64,
-    pub gpu: usize,
-    /// Reserved MIG instance; `None` reserves shared-GPU capacity.
-    pub slot: Option<usize>,
+    /// The claimed resource set (never empty).
+    pub claims: Vec<Grant>,
 }
 
 impl Reservation {
-    /// Would a MIG placement into `(gpu, slot)` contend with this
-    /// reservation?
-    pub fn claims_slot(&self, gpu: usize, slot: usize) -> bool {
-        self.gpu == gpu && self.slot.map(|s| s == slot).unwrap_or(true)
+    /// The classic single-resource reservation: one MIG instance
+    /// (`slot: Some`) or one whole-GPU seat (`slot: None`) on `gpu`.
+    pub fn single(start_s: f64, gpu: usize, slot: Option<usize>) -> Reservation {
+        Reservation {
+            start_s,
+            claims: vec![Grant { gpu, slot }],
+        }
     }
 
-    /// Would a whole-GPU co-runner placement on `gpu` contend with this
-    /// reservation?
+    /// Would a MIG placement into `(gpu, slot)` contend with any claim
+    /// of this reservation?
+    pub fn claims_slot(&self, gpu: usize, slot: usize) -> bool {
+        self.claims
+            .iter()
+            .any(|c| c.gpu == gpu && c.slot.map(|s| s == slot).unwrap_or(true))
+    }
+
+    /// Would a whole-GPU co-runner placement on `gpu` contend with any
+    /// claim of this reservation?
     pub fn claims_gpu(&self, gpu: usize) -> bool {
-        self.gpu == gpu
+        self.claims.iter().any(|c| c.gpu == gpu)
     }
 }
 
@@ -304,22 +317,31 @@ mod tests {
 
     #[test]
     fn reservation_claims() {
-        let slot_res = Reservation {
-            start_s: 5.0,
-            gpu: 1,
-            slot: Some(2),
-        };
+        let slot_res = Reservation::single(5.0, 1, Some(2));
         assert!(slot_res.claims_slot(1, 2));
         assert!(!slot_res.claims_slot(1, 3));
         assert!(!slot_res.claims_slot(0, 2));
-        let gpu_res = Reservation {
-            start_s: 5.0,
-            gpu: 1,
-            slot: None,
-        };
+        let gpu_res = Reservation::single(5.0, 1, None);
         assert!(gpu_res.claims_gpu(1));
         assert!(!gpu_res.claims_gpu(0));
         // A whole-GPU reservation claims every slot of that GPU.
         assert!(gpu_res.claims_slot(1, 0));
+    }
+
+    #[test]
+    fn gang_reservation_claims_every_grant() {
+        // A reserved gang claims all of its grants: a backfill that
+        // would touch any member resource contends, so no backfill can
+        // split the gang.
+        let gang = Reservation {
+            start_s: 9.0,
+            claims: vec![Grant::slot(0, 1), Grant::slot(2, 0), Grant::share(3)],
+        };
+        assert!(gang.claims_slot(0, 1));
+        assert!(gang.claims_slot(2, 0));
+        assert!(!gang.claims_slot(0, 0));
+        assert!(gang.claims_slot(3, 5), "a share claim covers every slot");
+        assert!(gang.claims_gpu(0) && gang.claims_gpu(2) && gang.claims_gpu(3));
+        assert!(!gang.claims_gpu(1));
     }
 }

@@ -44,6 +44,49 @@ pub struct ServeSpec {
     pub seed: u64,
 }
 
+/// Where a gang prefers its replicas to land.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GangScope {
+    /// Pack all replicas onto one GPU (NVLink-free all-reduce; cheap).
+    Intra,
+    /// Spread replicas across distinct GPUs (cross-GPU all-reduce;
+    /// pays the interconnect penalty but sees more free capacity).
+    Cross,
+}
+
+impl GangScope {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GangScope::Intra => "intra",
+            GangScope::Cross => "cross",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GangScope> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "intra" => Some(GangScope::Intra),
+            "cross" => Some(GangScope::Cross),
+            _ => None,
+        }
+    }
+}
+
+/// The gang profile of a multi-replica training job: it runs
+/// data-parallel over `replicas` resource grants (each a MIG slot or an
+/// MPS share), placed **all-or-nothing** — the fleet never starts a
+/// partial gang. Under queue pressure the gang may elastically shrink
+/// down to `min_replicas` at placement time. Gangs are train-only;
+/// serving replicas scale out as independent jobs instead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GangSpec {
+    /// Preferred replica count (>= 2 to be a real gang).
+    pub replicas: u32,
+    /// Smallest width the gang accepts (elastic shrink floor; >= 1).
+    pub min_replicas: u32,
+    /// Intra- vs cross-GPU placement preference.
+    pub scope: GangScope,
+}
+
 /// One job of the input stream.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct JobSpec {
@@ -56,6 +99,9 @@ pub struct JobSpec {
     /// inert for serve jobs).
     pub epochs: u32,
     pub kind: JobKind,
+    /// Multi-replica gang profile (`None` — the overwhelming default —
+    /// is the classic one-job-one-grant contract).
+    pub gang: Option<GangSpec>,
 }
 
 impl JobSpec {
@@ -101,6 +147,16 @@ pub struct TraceConfig {
     pub slo_ms: f64,
     /// Request arrival process of each serve job.
     pub arrival_shape: ArrivalShape,
+    /// Fraction of *training* jobs that are multi-replica gangs. 0.0
+    /// (the default) draws **no extra RNG values**, so gang-free
+    /// traces are bit-identical to pre-gang builds.
+    pub gang_frac: f64,
+    /// Preferred replica count of each generated gang.
+    pub gang_replicas: u32,
+    /// Elastic shrink floor of each generated gang.
+    pub gang_min_replicas: u32,
+    /// Placement scope preference of each generated gang.
+    pub gang_scope: GangScope,
 }
 
 impl Default for TraceConfig {
@@ -116,6 +172,10 @@ impl Default for TraceConfig {
             serve_rps: 2.0,
             slo_ms: 250.0,
             arrival_shape: ArrivalShape::Poisson,
+            gang_frac: 0.0,
+            gang_replicas: 2,
+            gang_min_replicas: 1,
+            gang_scope: GangScope::Intra,
         }
     }
 }
@@ -145,12 +205,30 @@ pub fn poisson_trace(cfg: &TraceConfig) -> Vec<JobSpec> {
         } else {
             JobKind::Train
         };
+        // The gang coin is drawn for every job when the axis is active
+        // (so kind splits never shift later draws) but only training
+        // jobs become gangs; at 0.0 no extra RNG value is consumed.
+        let gang = if cfg.gang_frac > 0.0 {
+            let hit = rng.next_f64() < cfg.gang_frac;
+            if hit && kind == JobKind::Train && cfg.gang_replicas >= 2 {
+                Some(GangSpec {
+                    replicas: cfg.gang_replicas,
+                    min_replicas: cfg.gang_min_replicas.clamp(1, cfg.gang_replicas),
+                    scope: cfg.gang_scope,
+                })
+            } else {
+                None
+            }
+        } else {
+            None
+        };
         out.push(JobSpec {
             id,
             arrival_s: t,
             workload,
             epochs,
             kind,
+            gang,
         });
     }
     out
@@ -192,20 +270,36 @@ pub fn parse_mix(s: &str) -> anyhow::Result<[f64; 3]> {
 }
 
 /// CSV header of a trace file. Serve rows extend it with
-/// `,serve,duration_s,rate_rps,shape,slo_ms,seed`; 3-field rows stay
+/// `,serve,duration_s,rate_rps,shape,slo_ms,seed`, gang rows with
+/// `,gang,replicas,min_replicas,scope`; 3-field rows stay plain
 /// training jobs, so pre-serving trace files parse unchanged.
 pub const TRACE_HEADER: &str = "arrival_s,workload,epochs";
 
-/// Serialize a trace to the CSV trace-file format. Training rows keep
-/// the classic 3 fields; serve rows append their serving profile.
+/// Serialize a trace to the CSV trace-file format. Plain training rows
+/// keep the classic 3 fields; serve rows append their serving profile
+/// and gang rows their gang profile.
 pub fn trace_to_csv(trace: &[JobSpec]) -> String {
     let mut out = String::from(TRACE_HEADER);
     out.push('\n');
     for j in trace {
         match j.serve() {
-            None => {
-                out.push_str(&format!("{},{},{}\n", j.arrival_s, j.workload.name(), j.epochs))
-            }
+            None => match &j.gang {
+                None => out.push_str(&format!(
+                    "{},{},{}\n",
+                    j.arrival_s,
+                    j.workload.name(),
+                    j.epochs
+                )),
+                Some(g) => out.push_str(&format!(
+                    "{},{},{},gang,{},{},{}\n",
+                    j.arrival_s,
+                    j.workload.name(),
+                    j.epochs,
+                    g.replicas,
+                    g.min_replicas,
+                    g.scope.name()
+                )),
+            },
             Some(s) => out.push_str(&format!(
                 "{},{},{},serve,{},{},{},{},{}\n",
                 j.arrival_s,
@@ -245,9 +339,12 @@ pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<JobSpec>> {
         }
         let fields: Vec<&str> = line.split(',').map(str::trim).collect();
         anyhow::ensure!(
-            fields.len() == 3 || (fields.len() == 9 && fields[3] == "serve"),
-            "trace line {}: expected 3 fields (train) or 9 fields \
-             (…,serve,duration_s,rate_rps,shape,slo_ms,seed), got {}",
+            fields.len() == 3
+                || (fields.len() == 9 && fields[3] == "serve")
+                || (fields.len() == 7 && fields[3] == "gang"),
+            "trace line {}: expected 3 fields (train), 9 fields \
+             (…,serve,duration_s,rate_rps,shape,slo_ms,seed) or 7 fields \
+             (…,gang,replicas,min_replicas,scope), got {}",
             lineno + 1,
             fields.len()
         );
@@ -295,12 +392,41 @@ pub fn parse_trace_csv(text: &str) -> anyhow::Result<Vec<JobSpec>> {
         } else {
             JobKind::Train
         };
+        let gang = if fields.len() == 7 {
+            let int = |i: usize, name: &str| -> anyhow::Result<u32> {
+                fields[i].parse().map_err(|_| {
+                    anyhow::anyhow!("trace line {}: bad {name} '{}'", lineno + 1, fields[i])
+                })
+            };
+            let replicas = int(4, "replicas")?;
+            let min_replicas = int(5, "min_replicas")?;
+            anyhow::ensure!(
+                replicas >= 2,
+                "trace line {}: a gang needs replicas >= 2",
+                lineno + 1
+            );
+            anyhow::ensure!(
+                (1..=replicas).contains(&min_replicas),
+                "trace line {}: min_replicas must be in 1..=replicas",
+                lineno + 1
+            );
+            Some(GangSpec {
+                replicas,
+                min_replicas,
+                scope: GangScope::parse(fields[6]).ok_or_else(|| {
+                    anyhow::anyhow!("trace line {}: unknown scope '{}'", lineno + 1, fields[6])
+                })?,
+            })
+        } else {
+            None
+        };
         out.push(JobSpec {
             id: out.len(),
             arrival_s,
             workload,
             epochs,
             kind,
+            gang,
         });
     }
     let sorted = out.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s);
@@ -335,6 +461,10 @@ pub fn trace_summary_json(trace: &[JobSpec]) -> Json {
     let serve = trace.iter().filter(|t| t.serve().is_some()).count();
     if serve > 0 {
         j.set("serve", Json::from_u64(serve as u64));
+    }
+    let gang = trace.iter().filter(|t| t.gang.is_some()).count();
+    if gang > 0 {
+        j.set("gang", Json::from_u64(gang as u64));
     }
     j
 }
@@ -476,6 +606,7 @@ mod tests {
             workload: WorkloadSize::Small,
             epochs: 30,
             kind: JobKind::Train,
+            gang: None,
         };
         // 1406 steps x 30 epochs x 32 images.
         assert_eq!(j.images(), (1406u64 * 30 * 32) as f64);
@@ -545,5 +676,101 @@ mod tests {
         assert!(parse_trace_csv("1.0,small,1,serve,600,2,uniform,250,7").is_err());
         assert!(parse_trace_csv("1.0,small,1,serve,-1,2,poisson,250,7").is_err());
         assert!(parse_trace_csv("1.0,small,1,serve,600,2,poisson,250,x").is_err());
+    }
+
+    #[test]
+    fn gang_frac_zero_is_bit_identical_to_pre_gang_traces() {
+        // The gang coin only flips when gang_frac > 0: a gang-free
+        // config must replay the exact pre-gang RNG stream even with
+        // the other gang knobs set.
+        let base = poisson_trace(&cfg());
+        let knobbed = poisson_trace(&TraceConfig {
+            gang_frac: 0.0,
+            gang_replicas: 4,
+            gang_min_replicas: 2,
+            gang_scope: GangScope::Cross,
+            ..cfg()
+        });
+        assert_eq!(base, knobbed);
+        assert!(base.iter().all(|j| j.gang.is_none()));
+        assert!(trace_summary_json(&base).get("gang").is_none());
+    }
+
+    #[test]
+    fn gang_frac_marks_training_jobs_without_moving_arrivals() {
+        let ganged = poisson_trace(&TraceConfig {
+            gang_frac: 0.4,
+            gang_replicas: 3,
+            gang_min_replicas: 2,
+            gang_scope: GangScope::Cross,
+            ..cfg()
+        });
+        let plain = poisson_trace(&cfg());
+        // Arrivals and workloads are drawn before the gang coin, so
+        // they match the gang-free stream job for job.
+        for (a, b) in ganged.iter().zip(&plain) {
+            assert_eq!(a.arrival_s.to_bits(), b.arrival_s.to_bits());
+            assert_eq!(a.workload, b.workload);
+        }
+        let gangs = ganged.iter().filter(|j| j.gang.is_some()).count();
+        assert!(gangs > 40 && gangs < 120, "gang count {gangs}");
+        for g in ganged.iter().filter_map(|j| j.gang.as_ref()) {
+            assert_eq!(g.replicas, 3);
+            assert_eq!(g.min_replicas, 2);
+            assert_eq!(g.scope, GangScope::Cross);
+        }
+        let sj = trace_summary_json(&ganged);
+        assert_eq!(sj.get("gang").unwrap().as_u64(), Some(gangs as u64));
+        // Gangs are train-only: serve jobs never carry a gang spec.
+        let mixed = poisson_trace(&TraceConfig {
+            serve_frac: 0.5,
+            gang_frac: 0.5,
+            ..cfg()
+        });
+        assert!(mixed.iter().all(|j| j.serve().is_none() || j.gang.is_none()));
+        assert!(mixed.iter().any(|j| j.gang.is_some()));
+        assert!(mixed.iter().any(|j| j.serve().is_some()));
+    }
+
+    #[test]
+    fn gang_rows_round_trip_through_csv() {
+        let t = poisson_trace(&TraceConfig {
+            gang_frac: 0.5,
+            gang_replicas: 3,
+            gang_min_replicas: 1,
+            ..cfg()
+        });
+        let back = parse_trace_csv(&trace_to_csv(&t)).unwrap();
+        assert_eq!(t.len(), back.len());
+        for (a, b) in t.iter().zip(&back) {
+            assert_eq!(a.workload, b.workload);
+            assert_eq!(a.gang, b.gang);
+        }
+        // Malformed gang rows are rejected with structured errors.
+        assert!(parse_trace_csv("1.0,small,1,gang,3,1").is_err());
+        assert!(parse_trace_csv("1.0,small,1,gang,1,1,intra").is_err());
+        assert!(parse_trace_csv("1.0,small,1,gang,3,4,intra").is_err());
+        assert!(parse_trace_csv("1.0,small,1,gang,3,0,intra").is_err());
+        assert!(parse_trace_csv("1.0,small,1,gang,3,1,diagonal").is_err());
+        assert!(parse_trace_csv("1.0,small,1,gang,x,1,intra").is_err());
+        // Well-formed rows parse to the exact spec.
+        let one = parse_trace_csv("1.0,small,1,gang,3,2,cross").unwrap();
+        assert_eq!(
+            one[0].gang,
+            Some(GangSpec {
+                replicas: 3,
+                min_replicas: 2,
+                scope: GangScope::Cross,
+            })
+        );
+    }
+
+    #[test]
+    fn gang_scope_names_round_trip() {
+        for s in [GangScope::Intra, GangScope::Cross] {
+            assert_eq!(GangScope::parse(s.name()), Some(s));
+        }
+        assert_eq!(GangScope::parse(" CROSS "), Some(GangScope::Cross));
+        assert!(GangScope::parse("both").is_none());
     }
 }

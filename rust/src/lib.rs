@@ -191,8 +191,8 @@
 //! [`cluster::fleet::RunOutput`] — the metrics, the optional trace log
 //! and [`cluster::fleet::EngineStats`] (events processed, reservations
 //! computed, reservation-cache refreshes and hits). The pre-unification
-//! `run`/`run_traced`/`enable_tracing`/`enable_sampling` methods
-//! survive as deprecated wrappers. The sweep layer mirrors the shape:
+//! `run`/`run_traced`/`enable_tracing`/`enable_sampling` wrappers have
+//! been removed — `run_with` is the API. The sweep layer mirrors the shape:
 //! [`sweep::engine::run_cell`] and [`sweep::engine::run_sweep`] each
 //! take one [`sweep::engine::SweepOptions`] (threads, progress,
 //! per-cell trace capture).
@@ -253,6 +253,40 @@
 //! randomness and produces bit-identical artifacts to the
 //! pre-serving engine, pinned by `rust/tests/scenario_invariants.rs`
 //! and the schema-v4 golden fixtures.
+//!
+//! ## Gang scheduling
+//!
+//! Distributed data-parallel training holds *several* slots at once,
+//! so the scheduler speaks grant sets instead of single slots. A
+//! [`cluster::trace::JobSpec`] may carry a
+//! [`cluster::trace::GangSpec`] — preferred replica count, an elastic
+//! shrink floor ([`cluster::trace::GangSpec::min_replicas`]) and a
+//! [`cluster::trace::GangScope`] (`Intra`: all replicas on one GPU;
+//! `Cross`: replicas may span GPUs at a higher all-reduce penalty).
+//! [`cluster::policy::Decision::Place`] is a `Vec` of
+//! [`cluster::policy::Grant`]s (each a MIG slot or an MPS/timeslice
+//! share), placement is all-or-nothing atomic — no partial gangs ever
+//! run, and backfill reservations claim whole resource sets so a gang
+//! is never split — and a gang that can structurally never be granted
+//! (wider than the policy's per-GPU capacity times the fleet) is
+//! rejected at admission with a structured outcome instead of
+//! blocking the queue head. Each step's wall time is the slowest
+//! grant's step stretched by an all-reduce communication factor
+//! (`simgpu::interference::gang_comm_factor`; cross-GPU gangs pay
+//! more), folded into busy time exactly like the contention slowdown;
+//! under memory pressure a gang shrinks elastically down to its floor
+//! before waiting. Per-job [`cluster::metrics::GangOutcome`]s
+//! (requested/granted width, scope, comm factor) pool into a
+//! [`cluster::metrics::FleetGangSummary`] (`gang_jobs`,
+//! `comm_stretch`, shrink/cross counts). Surface: `migsim fleet
+//! --gang-frac 0.2 --gang-replicas 2 --gang-scope cross --gang-min
+//! 1`, a sweep gang axis (`migsim sweep --gang-fracs 0,0.2`; summary
+//! schema v6 with per-cell gang digests and two gang CSV columns),
+//! gang rows in trace CSVs and the multi-grant state audited by
+//! `verify_incremental`. Strictly additive like serving: a gang-free
+//! trace draws no gang randomness and produces bit-identical
+//! artifacts to the pre-gang engine
+//! (`rust/tests/scenario_invariants.rs`, `rust/tests/sweep_golden.rs`).
 
 pub mod cluster;
 pub mod config;

@@ -17,7 +17,9 @@
 use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use migsim::cluster::policy::{AdmissionMode, PolicyKind};
 use migsim::cluster::queue::QueueDiscipline;
-use migsim::cluster::trace::{parse_mix, parse_trace_csv, poisson_trace, trace_to_csv, TraceConfig};
+use migsim::cluster::trace::{
+    parse_mix, parse_trace_csv, poisson_trace, trace_to_csv, GangScope, TraceConfig,
+};
 use migsim::config::Config;
 use migsim::coordinator::experiment::{run_experiment, DeviceGroup, ExperimentSpec};
 use migsim::coordinator::matrix::{paper_matrix, run_matrix};
@@ -68,6 +70,8 @@ SUBCOMMANDS
         [--probe-window 15] [--partition 2g.10gb,2g.10gb,2g.10gb]
         [--serve-mix 0.2] [--serve-rps 2] [--serve-duration 600]
         [--slo-ms 250] [--arrival-shape poisson|diurnal|bursty]
+        [--gang-frac 0.2] [--gang-replicas 2] [--gang-min 1]
+        [--gang-scope intra|cross]
         [--trace file.csv] [--dump-trace file.csv] [--out results]
         [--trace-out trace.json] [--sample-interval 60]
       Cluster-scale collocation: simulate a job stream on a fleet of
@@ -98,7 +102,14 @@ SUBCOMMANDS
       the summary then carries request latency percentiles and SLO
       attainment, and the per-job CSV grows per-replica latency
       columns. Serving rows in a --trace CSV carry the same knobs
-      per job.
+      per job. --gang-frac turns the given fraction of training jobs
+      into multi-replica gangs (--gang-replicas wide, placed
+      all-or-nothing with an all-reduce communication penalty;
+      --gang-scope cross allows replicas to span GPUs at a higher
+      penalty; --gang-min lets a gang elastically shrink under
+      pressure); the summary then carries a gangs block
+      (gang_jobs, comm_stretch, ...). Gang rows in a --trace CSV
+      carry the same knobs per job.
   sweep [--policies mps,mig-static,mig-miso] [--mixes 'smalls|paper']
         [--gpus 2,4] [--interarrivals 0.5,2.0]
         [--interference off,roofline] [--admission strict]
@@ -106,6 +117,8 @@ SUBCOMMANDS
         [--jobs 200] [--epochs 1] [--cap 7] [--probe-window 15]
         [--serve-fracs 0,0.25] [--arrival-shapes poisson,bursty]
         [--slo-ms 100,250] [--serve-rps 2] [--serve-duration 600]
+        [--gang-fracs 0,0.2] [--gang-replicas 2] [--gang-min 1]
+        [--gang-scope intra|cross]
         [--threads N] [--grid grid.json] [--out results]
         [--trace-dir results/traces] [--sample-interval 60]
       Expand a declarative grid (policies x mixes x fleet sizes x
@@ -118,7 +131,12 @@ SUBCOMMANDS
       axes have several values, and the SLO-attainment ranking when
       any --serve-fracs value is positive — which also bumps the
       summary to schema v5 with per-cell latency digests; training-
-      only grids keep the exact v4 bytes). --grid loads the spec from
+      only grids keep the exact v4 bytes). A positive --gang-fracs
+      value adds a gang axis (--gang-replicas/--gang-min/--gang-scope
+      shape the generated gangs) and bumps the summary to schema v6
+      with per-cell gang digests and gang_jobs/comm_stretch CSV
+      columns; gang-free grids keep their v5/v4 bytes. --grid loads
+      the spec from
       JSON instead (same keys as the axis flags; absent keys keep
       defaults). --trace-dir writes one Chrome trace-event JSON per
       cell (cell_<index>.trace.json; opt-in — traces are per-cell
@@ -335,6 +353,10 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
                 "serve-duration",
                 "slo-ms",
                 "arrival-shape",
+                "gang-frac",
+                "gang-replicas",
+                "gang-min",
+                "gang-scope",
             ] {
                 anyhow::ensure!(
                     args.flag(flag).is_none(),
@@ -371,6 +393,29 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
                 Some(s) => ArrivalShape::parse_or_err(s.trim())?,
                 None => defaults.arrival_shape,
             };
+            let gang_frac = args.flag_parse("gang-frac", defaults.gang_frac)?;
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&gang_frac),
+                "--gang-frac must be a fraction in [0, 1]"
+            );
+            let gang_replicas = args.flag_parse("gang-replicas", defaults.gang_replicas)?;
+            let gang_min_replicas = args.flag_parse("gang-min", defaults.gang_min_replicas)?;
+            if gang_frac > 0.0 {
+                anyhow::ensure!(
+                    gang_replicas >= 2,
+                    "--gang-replicas must be >= 2 when --gang-frac is positive"
+                );
+                anyhow::ensure!(
+                    gang_min_replicas >= 1 && gang_min_replicas <= gang_replicas,
+                    "--gang-min must be in [1, --gang-replicas]"
+                );
+            }
+            let gang_scope = match args.flag("gang-scope") {
+                Some(s) => GangScope::parse(s.trim()).ok_or_else(|| {
+                    anyhow::anyhow!("unknown gang scope '{s}' (expected intra | cross)")
+                })?,
+                None => defaults.gang_scope,
+            };
             poisson_trace(&TraceConfig {
                 jobs: args.flag_parse("jobs", 1000u32)?,
                 mean_interarrival_s: args.flag_parse("interarrival", 30.0f64)?,
@@ -382,6 +427,10 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
                 serve_rps,
                 slo_ms,
                 arrival_shape,
+                gang_frac,
+                gang_replicas,
+                gang_min_replicas,
+                gang_scope,
             })
         }
     };
@@ -521,6 +570,10 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
             "slo-ms",
             "serve-rps",
             "serve-duration",
+            "gang-fracs",
+            "gang-replicas",
+            "gang-min",
+            "gang-scope",
         ] {
             anyhow::ensure!(
                 args.flag(flag).is_none(),
@@ -613,6 +666,16 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
     }
     grid.serve_rps = args.flag_parse("serve-rps", grid.serve_rps)?;
     grid.serve_duration_s = args.flag_parse("serve-duration", grid.serve_duration_s)?;
+    if let Some(list) = args.flag("gang-fracs") {
+        grid.gang_fracs = parse_num_list(list, "gang-fracs")?;
+    }
+    grid.gang_replicas = args.flag_parse("gang-replicas", grid.gang_replicas)?;
+    grid.gang_min_replicas = args.flag_parse("gang-min", grid.gang_min_replicas)?;
+    if let Some(s) = args.flag("gang-scope") {
+        grid.gang_scope = GangScope::parse(s.trim()).ok_or_else(|| {
+            anyhow::anyhow!("unknown gang scope '{s}' (expected intra | cross)")
+        })?;
+    }
     grid.validate()?;
     Ok(grid)
 }
@@ -703,6 +766,10 @@ fn serving_bench_grid() -> GridSpec {
         slo_ms: vec![250.0],
         serve_rps: 2.0,
         serve_duration_s: 30.0,
+        gang_fracs: vec![0.0],
+        gang_replicas: 2,
+        gang_min_replicas: 1,
+        gang_scope: GangScope::Intra,
     }
 }
 
@@ -842,8 +909,9 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
     if json.get("grid").is_some() && json.get("cells").is_some() {
         let cells = migsim::report::sweep::validate_summary(&json)
             .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-        // v4 = training-only, v5 = serving axes active; validate_summary
-        // accepted it, so the value is one of the two.
+        // v4 = training-only, v5 = serving axes active, v6 = gang axis
+        // active; validate_summary accepted it, so the value is one of
+        // the three.
         let version = json.get("schema_version").and_then(|v| v.as_u64()).unwrap_or(0);
         println!("OK sweep summary {path}: schema v{version}, {cells} cells");
         return Ok(());

@@ -201,6 +201,7 @@ mod tests {
                 slo_ms: 250.0,
                 seed: 11,
             }),
+            gang: None,
         }];
         trace.extend((1..4).map(|id| JobSpec {
             id,
@@ -208,6 +209,7 @@ mod tests {
             workload: WorkloadSize::Small,
             epochs: 1,
             kind: JobKind::Train,
+            gang: None,
         }));
         let config = FleetConfig {
             a100s: 1,
@@ -249,6 +251,7 @@ mod tests {
                 workload: WorkloadSize::Large,
                 epochs: 1,
                 kind: JobKind::Train,
+                gang: None,
             })
             .collect();
         let config = FleetConfig {

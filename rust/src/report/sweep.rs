@@ -43,6 +43,13 @@ pub const SWEEP_SCHEMA_VERSION: u64 = 4;
 /// bytes, so pre-serving consumers never see the bump.
 pub const SWEEP_SERVING_SCHEMA_VERSION: u64 = 5;
 
+/// v6: gang scheduling — emitted *only* when the grid's gang axis is
+/// active ([`GridSpec::has_gangs`]): grid gang keys, per-cell `gang`
+/// digests and two extra CSV columns (`gang_jobs`, `comm_stretch`).
+/// Gang-free grids keep their exact v5 (or v4) bytes, so pre-gang
+/// consumers never see the bump.
+pub const SWEEP_GANG_SCHEMA_VERSION: u64 = 6;
+
 /// Files one [`write_sweep`] call produces.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SweepArtifacts {
@@ -325,16 +332,28 @@ pub fn slo_table(run: &SweepRun) -> String {
     )
 }
 
-/// The sweep summary as JSON: schema version, calibration fingerprint,
-/// the grid spec verbatim, per-cell outcomes and the policy ranking.
-/// Serving grids ([`GridSpec::has_serving`]) report schema v5 and gain
-/// the `slo_ranking` section; training-only grids keep v4 bytes.
-pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json {
-    let version = if grid.has_serving() {
+/// The schema version a grid's summary carries: gang grids
+/// ([`GridSpec::has_gangs`]) report v6, serving grids
+/// ([`GridSpec::has_serving`]) v5, and training-only grids keep v4 —
+/// each surface is emitted only when its axis is active, so older
+/// consumers never see a bump they cannot read.
+pub fn schema_version_for(grid: &GridSpec) -> u64 {
+    if grid.has_gangs() {
+        SWEEP_GANG_SCHEMA_VERSION
+    } else if grid.has_serving() {
         SWEEP_SERVING_SCHEMA_VERSION
     } else {
         SWEEP_SCHEMA_VERSION
-    };
+    }
+}
+
+/// The sweep summary as JSON: schema version, calibration fingerprint,
+/// the grid spec verbatim, per-cell outcomes and the policy ranking.
+/// Serving grids ([`GridSpec::has_serving`]) report schema v5 and gain
+/// the `slo_ranking` section; gang grids ([`GridSpec::has_gangs`])
+/// report v6; gang-free training-only grids keep v4 bytes.
+pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json {
+    let version = schema_version_for(grid);
     let mut j = Json::obj();
     j.set("schema_version", Json::from_u64(version))
         .set(
@@ -415,9 +434,11 @@ pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json 
 
 /// Per-cell CSV rows (one line per cell, grid order). Serving grids
 /// append the four latency columns; cells whose trace drew no serve
-/// jobs leave them empty rather than faking zeros.
+/// jobs leave them empty rather than faking zeros. Gang grids append
+/// `gang_jobs`/`comm_stretch` under the same contract.
 pub fn cells_rows(grid: &GridSpec, run: &SweepRun) -> Vec<Vec<String>> {
     let serving = grid.has_serving();
+    let gangs = grid.has_gangs();
     run.cells
         .iter()
         .map(|c| {
@@ -459,17 +480,30 @@ pub fn cells_rows(grid: &GridSpec, run: &SweepRun) -> Vec<Vec<String>> {
                     None => row.extend(SERVING_CELLS_COLUMNS.map(|_| String::new())),
                 }
             }
+            if gangs {
+                match &c.metrics.gang {
+                    Some(g) => {
+                        row.push(g.gang_jobs.to_string());
+                        row.push(format!("{:.4}", g.comm_stretch));
+                    }
+                    None => row.extend(GANG_CELLS_COLUMNS.map(|_| String::new())),
+                }
+            }
             row
         })
         .collect()
 }
 
 /// The CSV header for a given grid: the 25 v4 columns, plus the four
-/// serving columns when the grid's serving axes are active.
+/// serving columns when the grid's serving axes are active, plus the
+/// two gang columns when the gang axis is.
 pub fn cells_header(grid: &GridSpec) -> Vec<&'static str> {
     let mut header = CELLS_HEADER.to_vec();
     if grid.has_serving() {
         header.extend(SERVING_CELLS_COLUMNS);
+    }
+    if grid.has_gangs() {
+        header.extend(GANG_CELLS_COLUMNS);
     }
     header
 }
@@ -480,6 +514,8 @@ const SERVING_CELLS_COLUMNS: [&str; 4] = [
     "slo_attainment",
     "requests_per_s",
 ];
+
+const GANG_CELLS_COLUMNS: [&str; 2] = ["gang_jobs", "comm_stretch"];
 
 const CELLS_HEADER: [&str; 25] = [
     "index",
@@ -541,6 +577,8 @@ pub fn summary_json_text(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> 
 /// not contain. A v5 (serving) summary must additionally agree with
 /// its grid's serving axes, carry complete latency digests, and keep
 /// every `slo_ranking` row anchored to a cell that actually served.
+/// A v6 (gang) summary must agree with its grid's gang axis and carry
+/// complete gang digests on cells that drew gang jobs.
 /// Returns the cell count.
 pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
     let version = json
@@ -548,19 +586,25 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
         .and_then(|v| v.as_u64())
         .ok_or_else(|| anyhow::anyhow!("missing schema_version"))?;
     anyhow::ensure!(
-        version == SWEEP_SCHEMA_VERSION || version == SWEEP_SERVING_SCHEMA_VERSION,
+        version == SWEEP_SCHEMA_VERSION
+            || version == SWEEP_SERVING_SCHEMA_VERSION
+            || version == SWEEP_GANG_SCHEMA_VERSION,
         "schema_version {version} is not supported \
-         ({SWEEP_SCHEMA_VERSION} or {SWEEP_SERVING_SCHEMA_VERSION})"
+         ({SWEEP_SCHEMA_VERSION}, {SWEEP_SERVING_SCHEMA_VERSION} or \
+         {SWEEP_GANG_SCHEMA_VERSION})"
     );
-    let serving = version == SWEEP_SERVING_SCHEMA_VERSION;
     let grid = GridSpec::from_json(
         json.get("grid")
             .ok_or_else(|| anyhow::anyhow!("missing grid"))?,
     )?;
+    let expected = schema_version_for(&grid);
     anyhow::ensure!(
-        serving == grid.has_serving(),
-        "schema_version {version} disagrees with the grid's serving axes"
+        version == expected,
+        "schema_version {version} disagrees with the grid's axes \
+         (serving/gang axes imply v{expected})"
     );
+    let serving = grid.has_serving();
+    let gangs = grid.has_gangs();
     anyhow::ensure!(
         GridSpec::from_json(&grid.to_json())? == grid,
         "embedded grid does not round-trip losslessly"
@@ -665,6 +709,24 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
             }
             if !serving_policies.iter().any(|p| p == policy) {
                 serving_policies.push(policy.to_string());
+            }
+        }
+        if let Some(digest) = metrics.get("gang") {
+            anyhow::ensure!(
+                gangs,
+                "cell {i}: gang digest in a v{version} (gang-free) summary"
+            );
+            for key in [
+                "gang_jobs",
+                "placed_gangs",
+                "cross_gang_jobs",
+                "shrunk_gangs",
+                "comm_stretch",
+            ] {
+                anyhow::ensure!(
+                    digest.get(key).and_then(|v| v.as_f64()).is_some(),
+                    "cell {i}: gang.{key} missing or not a number"
+                );
             }
         }
     }
@@ -1022,6 +1084,76 @@ mod tests {
     }
 
     #[test]
+    fn gang_summary_bumps_schema_and_exports() {
+        // Fracs 0.0 and 1.0 bracket the gang axis deterministically:
+        // every frac-1 cell's training jobs are all gangs and no
+        // frac-0 cell has any, so both CSV branches and the v6 gate
+        // are exercised without depending on per-seed coin flips.
+        let grid = GridSpec {
+            gang_fracs: vec![0.0, 1.0],
+            gang_replicas: 2,
+            gang_min_replicas: 1,
+            gang_scope: crate::cluster::trace::GangScope::Intra,
+            ..saturated_grid()
+        };
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(2)).unwrap();
+        let text = summary_json_text(&grid, &run, &cal);
+        let json = Json::parse(&text).unwrap();
+        assert_eq!(
+            json.get("schema_version").unwrap().as_u64(),
+            Some(SWEEP_GANG_SCHEMA_VERSION)
+        );
+        assert_eq!(validate_summary(&json).unwrap(), grid.cell_count());
+        // Digest presence tracks the gang fraction, not chance.
+        for c in &run.cells {
+            assert_eq!(
+                c.metrics.gang.is_some(),
+                c.spec.gang_frac > 0.0,
+                "{}",
+                c.spec.label()
+            );
+        }
+        // The CSV grows the two gang columns; frac-0 cells leave them
+        // empty instead of faking zeros.
+        let header = cells_header(&grid);
+        assert_eq!(header.len(), 27);
+        assert_eq!(&header[25..], ["gang_jobs", "comm_stretch"]);
+        let rows = cells_rows(&grid, &run);
+        for (c, row) in run.cells.iter().zip(&rows) {
+            assert_eq!(row.len(), 27, "{}", c.spec.label());
+            assert_eq!(
+                row[25].is_empty(),
+                c.metrics.gang.is_none(),
+                "{}",
+                c.spec.label()
+            );
+        }
+        // A wrongly-downgraded version is drift, not a warning.
+        let mut stale = json.clone();
+        stale.set("schema_version", Json::from_u64(SWEEP_SERVING_SCHEMA_VERSION));
+        let err = validate_summary(&stale).unwrap_err().to_string();
+        assert!(err.contains("disagrees"), "{err}");
+        // Serving and gang axes coexist on v6: the summary validates
+        // and the CSV carries both column sets.
+        let both = GridSpec {
+            serve_fracs: vec![0.0, 1.0],
+            slo_ms: vec![100.0],
+            serve_rps: 1.0,
+            serve_duration_s: 40.0,
+            ..grid.clone()
+        };
+        let run2 = run_sweep(&both, &cal, &SweepOptions::with_threads(2)).unwrap();
+        let json2 = Json::parse(&summary_json_text(&both, &run2, &cal)).unwrap();
+        assert_eq!(
+            json2.get("schema_version").unwrap().as_u64(),
+            Some(SWEEP_GANG_SCHEMA_VERSION)
+        );
+        assert_eq!(validate_summary(&json2).unwrap(), both.cell_count());
+        assert_eq!(cells_header(&both).len(), 31);
+    }
+
+    #[test]
     fn training_only_summaries_keep_the_v4_surface() {
         let grid = saturated_grid();
         let cal = Calibration::paper();
@@ -1036,6 +1168,10 @@ mod tests {
         assert!(
             !text.contains("slo_attainment"),
             "serving keys leaked into a training-only summary"
+        );
+        assert!(
+            !text.contains("gang"),
+            "gang keys leaked into a gang-free summary"
         );
         assert_eq!(cells_header(&grid).len(), 25);
         assert!(cells_rows(&grid, &run).iter().all(|r| r.len() == 25));

@@ -335,6 +335,7 @@ mod tests {
             peak_slowdown: 1.0,
             timeline: None,
             serving: None,
+            gangs: None,
             jobs: vec![JobRecord {
                 spec: JobSpec {
                     id: 0,
@@ -342,12 +343,14 @@ mod tests {
                     workload: WorkloadSize::Small,
                     epochs: 1,
                     kind: JobKind::Train,
+                    gang: None,
                 },
                 start_s: Some(1.0),
                 finish_s: Some(90.0),
                 gpu: Some(0),
                 outcome: JobOutcome::Finished,
                 serve: None,
+                gang: None,
             }],
             gpus: Vec::new(),
         }

@@ -103,6 +103,41 @@ pub const SM_PRESSURE_WEIGHT: f64 = 0.05;
 /// Physical sanity cap on any contention factor.
 pub const MAX_SLOWDOWN: f64 = 2.5;
 
+/// All-reduce stretch per unit of ring traffic when every replica of a
+/// gang shares one GPU (slice-to-slice copies through on-die fabric /
+/// NVLink-class bandwidth — cheap but not free).
+pub const GANG_INTRA_COMM_WEIGHT: f64 = 0.02;
+
+/// All-reduce stretch per unit of ring traffic when a gang spans GPUs
+/// (PCIe/NVLink hops between devices — an order of magnitude pricier
+/// than staying on-die).
+pub const GANG_CROSS_COMM_WEIGHT: f64 = 0.15;
+
+/// Communication stretch factor (`>= 1.0`) of a data-parallel gang
+/// running a ring all-reduce over `replicas` grants. The traffic term
+/// is the classic ring volume `2(n-1)/n` (each replica sends and
+/// receives the gradient buffer minus its own shard), weighted by
+/// where the ring runs: [`GANG_INTRA_COMM_WEIGHT`] when every replica
+/// shares one GPU, [`GANG_CROSS_COMM_WEIGHT`] when the gang spans
+/// GPUs. Exactly 1.0 for a single replica (nothing to reduce);
+/// strictly larger cross- than intra-GPU for any `replicas >= 2`; and
+/// monotone non-decreasing in the replica count. The fleet folds this
+/// factor into busy time through [`apply_slowdown`], exactly like a
+/// contention factor.
+pub fn gang_comm_factor(replicas: u32, cross_gpu: bool) -> f64 {
+    if replicas <= 1 {
+        return 1.0;
+    }
+    let n = replicas as f64;
+    let ring_traffic = 2.0 * (n - 1.0) / n;
+    let weight = if cross_gpu {
+        GANG_CROSS_COMM_WEIGHT
+    } else {
+        GANG_INTRA_COMM_WEIGHT
+    };
+    (1.0 + weight * ring_traffic).min(MAX_SLOWDOWN)
+}
+
 /// Roofline-derived resource appetite of one resident job, measured on
 /// the whole (unshared) device so profiles compose additively.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -455,6 +490,45 @@ mod tests {
         assert_eq!(slowed.flops, stats.flops);
         // Factor 1.0 is the identity.
         assert_eq!(apply_slowdown(stats, 1.0), stats);
+    }
+
+    #[test]
+    fn gang_comm_factor_prices_cross_gpu_above_intra() {
+        // A single replica reduces nothing.
+        assert_eq!(gang_comm_factor(1, false), 1.0);
+        assert_eq!(gang_comm_factor(1, true), 1.0);
+        assert_eq!(gang_comm_factor(0, true), 1.0);
+        // Cross-GPU all-reduce is strictly pricier at every width, and
+        // both curves are monotone in the replica count and capped.
+        let mut last_intra = 1.0;
+        let mut last_cross = 1.0;
+        for n in 2..=16 {
+            let intra = gang_comm_factor(n, false);
+            let cross = gang_comm_factor(n, true);
+            assert!(cross > intra, "n={n}: cross {cross} !> intra {intra}");
+            assert!(intra > 1.0 && cross <= MAX_SLOWDOWN, "n={n}");
+            assert!(intra >= last_intra && cross >= last_cross, "n={n}");
+            last_intra = intra;
+            last_cross = cross;
+        }
+        // The ring volume term: a 2-replica ring moves half the
+        // traffic-per-replica of an infinite one (2(n-1)/n -> 2).
+        assert!((gang_comm_factor(2, true) - (1.0 + GANG_CROSS_COMM_WEIGHT)).abs() < 1e-12);
+        // Folding through apply_slowdown stretches busy time only,
+        // exactly like a contention factor.
+        let stats = StepStats {
+            wall_s: 1.0,
+            busy_s: 0.6,
+            smact_integral: 0.5,
+            smocc_integral: 0.4,
+            dram_bytes: 1e9,
+            kernels: 40,
+            flops: 1e12,
+        };
+        let f = gang_comm_factor(4, true);
+        let slowed = apply_slowdown(stats, f);
+        assert!((slowed.busy_s - 0.6 * f).abs() < 1e-12);
+        assert!(((slowed.wall_s - slowed.busy_s) - 0.4).abs() < 1e-12);
     }
 
     #[test]

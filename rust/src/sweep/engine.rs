@@ -56,6 +56,9 @@ pub struct CellMetrics {
     /// Serving digest (`None` on cells that placed no serving replica
     /// — their JSON keeps its schema-v4 keys).
     pub serving: Option<CellServing>,
+    /// Gang digest (`None` on cells whose trace carried no gang jobs —
+    /// their JSON keeps its pre-gang keys byte for byte).
+    pub gang: Option<CellGang>,
 }
 
 /// Deterministic serving outcomes of one cell: the fleet's pooled
@@ -92,6 +95,33 @@ impl CellServing {
     }
 }
 
+/// Deterministic gang outcomes of one cell: how many gangs asked,
+/// how many were granted, and what the all-reduce communication
+/// penalty cost them on average.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellGang {
+    pub gang_jobs: u64,
+    pub placed_gangs: u64,
+    pub cross_gang_jobs: u64,
+    pub shrunk_gangs: u64,
+    /// Mean all-reduce stretch factor over placed gangs (1.0 = no
+    /// communication penalty) — the gang figure the sweep CSV carries
+    /// alongside `images_per_s`.
+    pub comm_stretch: f64,
+}
+
+impl CellGang {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("gang_jobs", Json::from_u64(self.gang_jobs))
+            .set("placed_gangs", Json::from_u64(self.placed_gangs))
+            .set("cross_gang_jobs", Json::from_u64(self.cross_gang_jobs))
+            .set("shrunk_gangs", Json::from_u64(self.shrunk_gangs))
+            .set("comm_stretch", Json::from_f64(self.comm_stretch));
+        j
+    }
+}
+
 impl CellMetrics {
     pub fn from_fleet(m: &FleetMetrics) -> CellMetrics {
         CellMetrics {
@@ -124,6 +154,13 @@ impl CellMetrics {
                 slo_attainment: s.slo_attainment(),
                 requests_per_s: m.requests_per_second(),
             }),
+            gang: m.gangs.as_ref().map(|g| CellGang {
+                gang_jobs: g.gang_jobs,
+                placed_gangs: g.placed_gangs,
+                cross_gang_jobs: g.cross_gang_jobs,
+                shrunk_gangs: g.shrunk_gangs,
+                comm_stretch: g.comm_stretch,
+            }),
         }
     }
 
@@ -149,6 +186,9 @@ impl CellMetrics {
             .set("probe_window_s", Json::from_f64(self.probe_window_s));
         if let Some(s) = &self.serving {
             j.set("serving", s.to_json());
+        }
+        if let Some(g) = &self.gang {
+            j.set("gang", g.to_json());
         }
         j
     }
@@ -548,6 +588,82 @@ mod tests {
         for c in &training.cells {
             assert!(c.metrics.serving.is_none(), "{}", c.spec.label());
             assert!(!c.metrics.to_json().to_string_pretty().contains("serving"));
+        }
+    }
+
+    /// `tiny_grid` with a gang axis: half the cells request width-2
+    /// elastic gangs, the other half stay gang-free.
+    fn tiny_gang_grid() -> GridSpec {
+        GridSpec {
+            gang_fracs: vec![0.0, 0.5],
+            gang_replicas: 2,
+            gang_min_replicas: 1,
+            gang_scope: crate::cluster::trace::GangScope::Intra,
+            ..tiny_grid()
+        }
+    }
+
+    #[test]
+    fn gang_cells_carry_a_digest_and_survive_the_incremental_audit() {
+        let grid = tiny_gang_grid();
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(2)).unwrap();
+        let mut saw_gangs = false;
+        for c in &run.cells {
+            // The digest is present exactly when the cell's (seeded,
+            // deterministic) trace actually drew a gang job.
+            let trace = poisson_trace(&c.spec.trace_config(&grid));
+            let n_gang = trace.iter().filter(|j| j.gang.is_some()).count() as u64;
+            match &c.metrics.gang {
+                Some(g) => {
+                    saw_gangs = true;
+                    assert_eq!(g.gang_jobs, n_gang, "{}", c.spec.label());
+                    assert!(g.placed_gangs <= g.gang_jobs, "{}", c.spec.label());
+                    assert!(g.cross_gang_jobs <= g.placed_gangs, "{}", c.spec.label());
+                    assert!(g.shrunk_gangs <= g.placed_gangs, "{}", c.spec.label());
+                    assert!(g.comm_stretch >= 1.0, "{}", c.spec.label());
+                    let json = c.metrics.to_json().to_string_pretty();
+                    assert!(json.contains("\"comm_stretch\""), "{}", c.spec.label());
+                }
+                None => assert_eq!(n_gang, 0, "{}", c.spec.label()),
+            }
+            // Acceptance gate: the per-event incremental audit passes
+            // on every cell of the gang grid, and turning it on does
+            // not perturb the metrics.
+            let policy = c.spec.policy.build(&cal, grid.cap, None);
+            let config = FleetConfig {
+                a100s: c.spec.gpus,
+                a30s: 0,
+                seed: c.spec.seed,
+                interference: c.spec.interference,
+                admission: grid.admission,
+                queue: c.spec.queue,
+                probe_window_s: grid.probe_window_s,
+                ..FleetConfig::default()
+            };
+            let audited = FleetSim::new(config, policy, cal, &trace)
+                .run_with(&RunOptions {
+                    verify_incremental: true,
+                    ..RunOptions::default()
+                })
+                .unwrap()
+                .metrics;
+            assert_eq!(
+                CellMetrics::from_fleet(&audited),
+                c.metrics,
+                "{}",
+                c.spec.label()
+            );
+        }
+        assert!(saw_gangs, "the gang grid must draw at least one gang job");
+        // Thread count still does not change gang results.
+        let one = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
+        assert_eq!(one.cells, run.cells);
+        // Gang-free cells keep their pre-gang JSON keys.
+        let plain = run_sweep(&tiny_grid(), &cal, &SweepOptions::with_threads(1)).unwrap();
+        for c in &plain.cells {
+            assert!(c.metrics.gang.is_none(), "{}", c.spec.label());
+            assert!(!c.metrics.to_json().to_string_pretty().contains("gang"));
         }
     }
 

@@ -20,7 +20,7 @@
 
 use crate::cluster::policy::{AdmissionMode, PolicyKind};
 use crate::cluster::queue::QueueDiscipline;
-use crate::cluster::trace::{parse_mix, TraceConfig};
+use crate::cluster::trace::{parse_mix, GangScope, TraceConfig};
 use crate::simgpu::interference::InterferenceModel;
 use crate::util::json::Json;
 use crate::util::rng::DEFAULT_SEED;
@@ -159,6 +159,21 @@ pub struct GridSpec {
     pub serve_rps: f64,
     /// Wall-clock lease of every serving replica (per-cell constant).
     pub serve_duration_s: f64,
+    /// Gang-mix axis: fraction of each cell's training jobs that are
+    /// multi-replica gangs. The default singleton `[0.0]` keeps the
+    /// grid gang-free — no extra cells, identical indices, and the
+    /// grid's JSON / labels / summary bytes stay at the pre-gang
+    /// schema.
+    pub gang_fracs: Vec<f64>,
+    /// Preferred replica count of every generated gang (per-cell
+    /// constant; inert at `gang_frac == 0`).
+    pub gang_replicas: u32,
+    /// Elastic shrink floor of every generated gang (per-cell
+    /// constant; inert at `gang_frac == 0`).
+    pub gang_min_replicas: u32,
+    /// Placement scope of every generated gang (per-cell constant;
+    /// inert at `gang_frac == 0`).
+    pub gang_scope: GangScope,
 }
 
 impl GridSpec {
@@ -186,6 +201,10 @@ impl GridSpec {
             slo_ms: vec![250.0],
             serve_rps: 2.0,
             serve_duration_s: 600.0,
+            gang_fracs: vec![0.0],
+            gang_replicas: 2,
+            gang_min_replicas: 1,
+            gang_scope: GangScope::Intra,
         }
     }
 
@@ -210,6 +229,10 @@ impl GridSpec {
             slo_ms: vec![250.0],
             serve_rps: 2.0,
             serve_duration_s: 600.0,
+            gang_fracs: vec![0.0],
+            gang_replicas: 2,
+            gang_min_replicas: 1,
+            gang_scope: GangScope::Intra,
         }
     }
 
@@ -224,6 +247,7 @@ impl GridSpec {
             * self.serve_fracs.len()
             * self.arrival_shapes.len()
             * self.slo_ms.len()
+            * self.gang_fracs.len()
             * self.seeds.len()
     }
 
@@ -245,6 +269,25 @@ impl GridSpec {
             && self.slo_ms == [250.0]
             && self.serve_rps == 2.0
             && self.serve_duration_s == 600.0
+    }
+
+    /// Whether any cell of this grid carries gang jobs. Gates every
+    /// gang surface downstream — gang keys in the grid JSON and cell
+    /// labels, per-cell gang metrics and the sweep summary's schema
+    /// bump — all absent on gang-free grids, whose artifacts stay
+    /// byte-identical to pre-gang runs.
+    pub fn has_gangs(&self) -> bool {
+        self.gang_fracs.iter().any(|&f| f > 0.0)
+    }
+
+    /// Whether every gang knob still holds its default — the condition
+    /// for omitting the gang keys from [`Self::to_json`] without
+    /// losing round-trip fidelity.
+    fn gang_knobs_are_default(&self) -> bool {
+        self.gang_fracs == [0.0]
+            && self.gang_replicas == 2
+            && self.gang_min_replicas == 1
+            && self.gang_scope == GangScope::Intra
     }
 
     /// Reject empty axes and out-of-domain values with an error naming
@@ -302,6 +345,26 @@ impl GridSpec {
             "serve_duration_s must be finite and > 0 ({})",
             self.serve_duration_s
         );
+        anyhow::ensure!(!self.gang_fracs.is_empty(), "grid axis 'gang_fracs' is empty");
+        for &f in &self.gang_fracs {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&f),
+                "grid axis 'gang_fracs' contains {f} (must be within [0, 1])"
+            );
+        }
+        if self.has_gangs() {
+            anyhow::ensure!(
+                self.gang_replicas >= 2,
+                "gang_replicas must be >= 2 ({})",
+                self.gang_replicas
+            );
+            anyhow::ensure!(
+                (1..=self.gang_replicas).contains(&self.gang_min_replicas),
+                "gang_min_replicas ({}) must be within [1, gang_replicas = {}]",
+                self.gang_min_replicas,
+                self.gang_replicas
+            );
+        }
         for &g in &self.gpus {
             anyhow::ensure!(g >= 1, "grid axis 'gpus' contains a zero-GPU fleet");
         }
@@ -331,9 +394,9 @@ impl GridSpec {
 
     /// Expand to cells in the fixed nested order: policy → mix → gpus →
     /// interarrival → interference → queue → serve_frac →
-    /// arrival_shape → slo → seed. The serving axes default to
-    /// singletons, so training-only grids expand to exactly the
-    /// pre-serving cell list, index for index.
+    /// arrival_shape → slo → gang_frac → seed. The serving and gang
+    /// axes default to singletons, so training-only grids expand to
+    /// exactly the pre-serving cell list, index for index.
     pub fn cells(&self) -> anyhow::Result<Vec<CellSpec>> {
         self.validate()?;
         let mut out = Vec::with_capacity(self.cell_count());
@@ -346,20 +409,23 @@ impl GridSpec {
                                 for &serve_frac in &self.serve_fracs {
                                     for &arrival_shape in &self.arrival_shapes {
                                         for &slo_ms in &self.slo_ms {
-                                            for &seed in &self.seeds {
-                                                out.push(CellSpec {
-                                                    index: out.len(),
-                                                    policy,
-                                                    mix: mix.clone(),
-                                                    gpus,
-                                                    mean_interarrival_s: interarrival,
-                                                    interference,
-                                                    queue,
-                                                    serve_frac,
-                                                    arrival_shape,
-                                                    slo_ms,
-                                                    seed,
-                                                });
+                                            for &gang_frac in &self.gang_fracs {
+                                                for &seed in &self.seeds {
+                                                    out.push(CellSpec {
+                                                        index: out.len(),
+                                                        policy,
+                                                        mix: mix.clone(),
+                                                        gpus,
+                                                        mean_interarrival_s: interarrival,
+                                                        interference,
+                                                        queue,
+                                                        serve_frac,
+                                                        arrival_shape,
+                                                        slo_ms,
+                                                        gang_frac,
+                                                        seed,
+                                                    });
+                                                }
                                             }
                                         }
                                     }
@@ -460,6 +526,20 @@ impl GridSpec {
             .set("serve_rps", Json::from_f64(self.serve_rps))
             .set("serve_duration_s", Json::from_f64(self.serve_duration_s));
         }
+        // Gang keys only when a gang knob is actually set: the
+        // embedded grid of a gang-free sweep keeps its pre-gang bytes.
+        if !self.gang_knobs_are_default() {
+            j.set(
+                "gang_fracs",
+                Json::Arr(self.gang_fracs.iter().map(|&f| Json::from_f64(f)).collect()),
+            )
+            .set("gang_replicas", Json::from_u64(self.gang_replicas as u64))
+            .set(
+                "gang_min_replicas",
+                Json::from_u64(self.gang_min_replicas as u64),
+            )
+            .set("gang_scope", Json::from_str_val(self.gang_scope.name()));
+        }
         j
     }
 
@@ -490,6 +570,10 @@ impl GridSpec {
                     "slo_ms",
                     "serve_rps",
                     "serve_duration_s",
+                    "gang_fracs",
+                    "gang_replicas",
+                    "gang_min_replicas",
+                    "gang_scope",
                 ]
                 .contains(&key.as_str()),
                 "unknown grid key '{key}'"
@@ -655,6 +739,35 @@ impl GridSpec {
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("'serve_duration_s' must be a number"))?;
         }
+        if let Some(v) = obj.get("gang_fracs") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("'gang_fracs' must be an array"))?;
+            grid.gang_fracs = arr
+                .iter()
+                .map(|f| {
+                    f.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("gang fractions must be numbers"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        if let Some(v) = obj.get("gang_replicas") {
+            grid.gang_replicas = v
+                .as_u32()
+                .ok_or_else(|| anyhow::anyhow!("'gang_replicas' must be a u32"))?;
+        }
+        if let Some(v) = obj.get("gang_min_replicas") {
+            grid.gang_min_replicas = v
+                .as_u32()
+                .ok_or_else(|| anyhow::anyhow!("'gang_min_replicas' must be a u32"))?;
+        }
+        if let Some(v) = obj.get("gang_scope") {
+            let name = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("'gang_scope' must be a string"))?;
+            grid.gang_scope = GangScope::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown gang scope '{name}' (intra | cross)"))?;
+        }
         grid.validate()?;
         Ok(grid)
     }
@@ -678,6 +791,9 @@ pub struct CellSpec {
     pub arrival_shape: ArrivalShape,
     /// Per-request deadline (ms) the cell's replicas are scored by.
     pub slo_ms: f64,
+    /// Fraction of the cell's training jobs drawn as multi-replica
+    /// gangs (0.0 on gang-free grids).
+    pub gang_frac: f64,
     pub seed: u64,
 }
 
@@ -697,11 +813,16 @@ impl CellSpec {
             serve_rps: grid.serve_rps,
             slo_ms: self.slo_ms,
             arrival_shape: self.arrival_shape,
+            gang_frac: self.gang_frac,
+            gang_replicas: grid.gang_replicas,
+            gang_min_replicas: grid.gang_min_replicas,
+            gang_scope: grid.gang_scope,
         }
     }
 
     /// Short human-readable label for logs and CSV rows. Serving cells
-    /// append their serve segment; training-only labels are unchanged.
+    /// append their serve segment, gang cells their gang segment;
+    /// training-only labels are unchanged.
     pub fn label(&self) -> String {
         let mut label = format!(
             "{}/{}/g{}/ia{}/{}/{}/s{}",
@@ -720,6 +841,9 @@ impl CellSpec {
                 self.arrival_shape.name(),
                 self.slo_ms
             ));
+        }
+        if self.gang_frac > 0.0 {
+            label.push_str(&format!("/gf{}", self.gang_frac));
         }
         label
     }
@@ -944,6 +1068,70 @@ mod tests {
             &Json::parse(r#"{"arrival_shapes": ["constant"]}"#).unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn gang_axis_expands_round_trips_and_stays_invisible_when_off() {
+        // Gang-free grid: no gang keys in the JSON, no gang segment in
+        // any label — pre-gang bytes, index for index.
+        let grid = GridSpec::default_grid();
+        assert!(!grid.has_gangs());
+        let text = grid.to_json().to_string_pretty();
+        for key in ["gang_fracs", "gang_replicas", "gang_min_replicas", "gang_scope"] {
+            assert!(!text.contains(key), "gang-free grid JSON grew '{key}'");
+        }
+        assert!(grid.cells().unwrap().iter().all(|c| !c.label().contains("/gf")));
+
+        // The gang axis multiplies the cell count and sits between slo
+        // and seed in the expansion order.
+        let mut grid = GridSpec::default_grid();
+        grid.gang_fracs = vec![0.0, 0.25];
+        grid.gang_replicas = 3;
+        grid.gang_min_replicas = 2;
+        grid.gang_scope = GangScope::Cross;
+        assert!(grid.has_gangs());
+        let cells = grid.cells().unwrap();
+        assert_eq!(cells.len(), 48 * 2, "48 base cells x 2 gang fractions");
+        assert_eq!(cells.len(), grid.cell_count());
+        assert_eq!(cells[0].gang_frac, 0.0);
+        assert_eq!(cells[1].gang_frac, 0.25, "gang_frac is just outside seed (1 seed)");
+        // Mixed grid: gang-free cells keep pre-gang labels while gang
+        // cells append their gang segment.
+        assert!(!cells[0].label().contains("/gf"));
+        assert!(cells[1].label().ends_with("/gf0.25"), "{}", cells[1].label());
+        // The gang knobs land in the trace config.
+        let tc = cells[1].trace_config(&grid);
+        assert_eq!(tc.gang_frac, 0.25);
+        assert_eq!(tc.gang_replicas, 3);
+        assert_eq!(tc.gang_min_replicas, 2);
+        assert_eq!(tc.gang_scope, GangScope::Cross);
+        // JSON round-trips the gang axis exactly.
+        let back = GridSpec::from_json(&grid.to_json()).unwrap();
+        assert_eq!(back, grid);
+        // Partial specs override just the gang knobs.
+        let partial = Json::parse(r#"{"gang_fracs": [0.5], "gang_scope": "cross"}"#).unwrap();
+        let g = GridSpec::from_json(&partial).unwrap();
+        assert_eq!(g.gang_fracs, vec![0.5]);
+        assert_eq!(g.gang_scope, GangScope::Cross);
+        assert_eq!(g.gang_replicas, 2);
+        // Out-of-domain gang knobs are rejected by name.
+        let mut bad = GridSpec::default_grid();
+        bad.gang_fracs = vec![1.5];
+        let err = bad.cells().unwrap_err().to_string();
+        assert!(err.contains("gang_fracs"), "{err}");
+        let mut bad = GridSpec::default_grid();
+        bad.gang_fracs = vec![0.5];
+        bad.gang_replicas = 1;
+        let err = bad.cells().unwrap_err().to_string();
+        assert!(err.contains("gang_replicas"), "{err}");
+        let mut bad = GridSpec::default_grid();
+        bad.gang_fracs = vec![0.5];
+        bad.gang_min_replicas = 5;
+        let err = bad.cells().unwrap_err().to_string();
+        assert!(err.contains("gang_min_replicas"), "{err}");
+        assert!(
+            GridSpec::from_json(&Json::parse(r#"{"gang_scope": "rack"}"#).unwrap()).is_err()
+        );
     }
 
     #[test]

@@ -244,6 +244,7 @@ fn head_of_line_trace() -> Vec<JobSpec> {
             workload: WorkloadSize::Large,
             epochs: 1,
             kind: JobKind::Train,
+            gang: None,
         },
         JobSpec {
             id: 1,
@@ -251,6 +252,7 @@ fn head_of_line_trace() -> Vec<JobSpec> {
             workload: WorkloadSize::Large,
             epochs: 1,
             kind: JobKind::Train,
+            gang: None,
         },
     ];
     for i in 0..10 {
@@ -260,6 +262,7 @@ fn head_of_line_trace() -> Vec<JobSpec> {
             workload: WorkloadSize::Small,
             epochs: 1,
             kind: JobKind::Train,
+            gang: None,
         });
     }
     trace
@@ -448,6 +451,7 @@ fn mixed_serve_trace(slo_ms: f64) -> Vec<JobSpec> {
                 slo_ms,
                 seed: 0xC0FFEE + i as u64,
             }),
+            gang: None,
         });
     }
     for i in 0..1500usize {
@@ -457,6 +461,7 @@ fn mixed_serve_trace(slo_ms: f64) -> Vec<JobSpec> {
             workload: WorkloadSize::Small,
             epochs: 1,
             kind: JobKind::Train,
+            gang: None,
         });
     }
     trace

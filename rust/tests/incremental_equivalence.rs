@@ -16,7 +16,7 @@
 use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use migsim::cluster::policy::{AdmissionMode, PolicyKind};
 use migsim::cluster::queue::QueueDiscipline;
-use migsim::cluster::trace::{poisson_trace, TraceConfig};
+use migsim::cluster::trace::{poisson_trace, GangScope, TraceConfig};
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::InterferenceModel;
 use migsim::util::prop::forall_ok;
@@ -36,6 +36,10 @@ struct Case {
     mix: [f64; 3],
     probe_window_s: f64,
     seed: u64,
+    gang_frac: f64,
+    gang_replicas: u32,
+    gang_min_replicas: u32,
+    gang_scope: GangScope,
 }
 
 fn random_case(r: &mut Rng) -> Case {
@@ -54,6 +58,11 @@ fn random_case(r: &mut Rng) -> Case {
     // Weights need not be normalized; bias toward smalls so saturated
     // cases still finish quickly.
     let mix = [0.5 + r.next_f64(), r.next_f64() * 0.5, r.next_f64() * 0.3];
+    // Roughly half the cases carry gangs, exercising the multi-grant
+    // state (grant sets, member-GPU accrual, atomic finish) under the
+    // same per-event audit; an elastic floor of 1 keeps every policy
+    // but mig-miso able to grant them.
+    let gang_replicas = 2 + r.below(3) as u32;
     Case {
         policy,
         queue,
@@ -66,6 +75,14 @@ fn random_case(r: &mut Rng) -> Case {
         mix,
         probe_window_s: 0.1 + r.next_f64() * 30.0,
         seed: 1 + r.below(10_000),
+        gang_frac: if r.below(2) == 0 { 0.0 } else { 0.2 + r.next_f64() * 0.3 },
+        gang_replicas,
+        gang_min_replicas: 1 + r.below(gang_replicas as u64) as u32,
+        gang_scope: if r.below(2) == 0 {
+            GangScope::Intra
+        } else {
+            GangScope::Cross
+        },
     }
 }
 
@@ -78,6 +95,10 @@ fn run_case(c: &Case, verify: bool) -> String {
         mix: c.mix,
         epochs: Some(1),
         seed: c.seed,
+        gang_frac: c.gang_frac,
+        gang_replicas: c.gang_replicas,
+        gang_min_replicas: c.gang_min_replicas,
+        gang_scope: c.gang_scope,
         ..TraceConfig::default()
     });
     let config = FleetConfig {

@@ -31,10 +31,12 @@
 //!   serve knobs are inert on training-only traces.
 
 use migsim::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
-use migsim::cluster::metrics::FleetMetrics;
+use migsim::cluster::metrics::{FleetMetrics, JobOutcome};
 use migsim::cluster::policy::{AdmissionMode, MigStatic, PolicyKind};
 use migsim::cluster::queue::QueueDiscipline;
-use migsim::cluster::trace::{poisson_trace, JobKind, JobSpec, ServeSpec, TraceConfig};
+use migsim::cluster::trace::{
+    poisson_trace, GangScope, GangSpec, JobKind, JobSpec, ServeSpec, TraceConfig,
+};
 use migsim::mig::profile::MigProfile;
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::{InterferenceModel, MAX_SLOWDOWN};
@@ -93,6 +95,28 @@ fn mixed_serve_trace() -> Vec<JobSpec> {
             slo_ms: 250.0,
             seed: derive_seed(7, j.id as u64),
         });
+    }
+    trace
+}
+
+/// The gang variant of the standard trace: every fourth job becomes a
+/// two-replica gang, alternating intra- and cross-GPU scope, with an
+/// elastic floor of one so every policy that can host jobs at all can
+/// host the gang (arrivals and workloads untouched).
+fn mixed_gang_trace() -> Vec<JobSpec> {
+    let mut trace = standard_trace();
+    for (i, j) in trace.iter_mut().enumerate() {
+        if i % 4 == 0 {
+            j.gang = Some(GangSpec {
+                replicas: 2,
+                min_replicas: 1,
+                scope: if i % 8 == 0 {
+                    GangScope::Intra
+                } else {
+                    GangScope::Cross
+                },
+            });
+        }
     }
     trace
 }
@@ -262,6 +286,7 @@ fn backfilling_never_delays_the_blocked_head() {
             workload: WorkloadSize::Large,
             epochs: 1,
             kind: JobKind::Train,
+            gang: None,
         },
         JobSpec {
             id: 1,
@@ -269,6 +294,7 @@ fn backfilling_never_delays_the_blocked_head() {
             workload: WorkloadSize::Large,
             epochs: 1,
             kind: JobKind::Train,
+            gang: None,
         },
     ];
     for i in 0..8 {
@@ -278,6 +304,7 @@ fn backfilling_never_delays_the_blocked_head() {
             workload: WorkloadSize::Small,
             epochs: 1,
             kind: JobKind::Train,
+            gang: None,
         });
     }
     let run_q = |queue: QueueDiscipline| -> FleetMetrics {
@@ -336,6 +363,7 @@ fn same_instant_finish_outranks_the_arrival_for_every_shared_policy() {
                 workload: WorkloadSize::Large,
                 epochs: 1,
                 kind: JobKind::Train,
+                gang: None,
             })
             .collect();
         let probe = run(&base);
@@ -362,6 +390,7 @@ fn same_instant_finish_outranks_the_arrival_for_every_shared_policy() {
                 slo_ms: 250.0,
                 seed: 9,
             }),
+            gang: None,
         });
         let m = run(&trace);
         assert_eq!(
@@ -486,4 +515,115 @@ fn serve_knobs_are_inert_on_training_only_traces() {
     let text = m.to_json().to_string_pretty();
     assert!(!text.contains("\"serving\""), "training-only summary grew serving keys");
     assert!(!text.contains("slo_attainment"), "training-only summary grew SLO keys");
+}
+
+/// Gang rows ride the same invariant table: every policy × queue ×
+/// interference cell on the mixed gang trace upholds conservation —
+/// a gang is *one* job however many grants it holds — plus the gang
+/// ledger: no partial placement is ever observable (a placed gang's
+/// width respects its elastic bounds, an unplaced one holds zero
+/// grants), rejections are structural (only the hybrid policy, whose
+/// anonymous probe region cannot host gangs, ever refuses one), and a
+/// fixed seed reproduces the run bit-for-bit. All under the per-event
+/// incremental audit.
+#[test]
+fn gang_rows_uphold_conservation_and_determinism() {
+    let trace = mixed_gang_trace();
+    let n_gang = trace.iter().filter(|j| j.gang.is_some()).count() as u64;
+    assert!(n_gang >= 4, "scenario must actually gang");
+    for s in scenario_table() {
+        let tag = format!("{}/{}/{}", s.policy, s.queue, s.interference.name());
+        let m = run_scenario(s, &trace);
+        // Conservation: each gang counted exactly once.
+        assert_eq!(
+            m.finished() + m.rejected() + m.oom_killed() + m.unserved(),
+            trace.len(),
+            "{tag}: job accounting"
+        );
+        assert_eq!(m.oom_killed(), 0, "{tag}: strict admission never OOM-kills");
+        assert_eq!(m.unserved(), 0, "{tag}: an infeasible gang must reject, not block");
+        for j in &m.jobs {
+            if matches!(j.outcome, JobOutcome::Rejected(_)) {
+                assert!(
+                    j.spec.gang.is_some() && s.policy == PolicyKind::MigMiso,
+                    "{tag}: job {} rejected outside the hybrid-gang exception",
+                    j.spec.id
+                );
+            }
+        }
+        // Gang ledger: the per-job outcomes sum to the fleet digest
+        // and every grant respects the elastic bounds.
+        let digest = m.gangs.as_ref().unwrap_or_else(|| panic!("{tag}: no gang digest"));
+        assert_eq!(digest.gang_jobs, n_gang, "{tag}");
+        let mut placed = 0u64;
+        let mut cross = 0u64;
+        for j in &m.jobs {
+            match (j.spec.gang, j.gang) {
+                (Some(gs), Some(o)) => {
+                    placed += 1;
+                    cross += o.cross_gpu as u64;
+                    assert_eq!(o.requested, gs.replicas, "{tag}/job {}", j.spec.id);
+                    assert!(
+                        (gs.min_replicas..=gs.replicas).contains(&o.granted),
+                        "{tag}/job {}: granted {} outside [{}, {}]",
+                        j.spec.id,
+                        o.granted,
+                        gs.min_replicas,
+                        gs.replicas
+                    );
+                    assert!(o.comm_factor >= 1.0, "{tag}/job {}", j.spec.id);
+                }
+                (Some(_), None) => assert!(
+                    !matches!(j.outcome, JobOutcome::Finished),
+                    "{tag}/job {}: a finished gang must carry its grant outcome",
+                    j.spec.id
+                ),
+                (None, Some(_)) => panic!("{tag}/job {}: gang outcome without a gang spec", j.spec.id),
+                (None, None) => {}
+            }
+        }
+        assert_eq!(digest.placed_gangs, placed, "{tag}: placement ledger");
+        assert_eq!(digest.cross_gang_jobs, cross, "{tag}: cross-GPU ledger");
+        assert!(digest.shrunk_gangs <= digest.placed_gangs, "{tag}");
+        assert!(digest.comm_stretch >= 1.0, "{tag}: stretch {}", digest.comm_stretch);
+        // Determinism: a second run is bit-identical.
+        let again = run_scenario(s, &trace);
+        assert_eq!(
+            m.to_json().to_string_pretty(),
+            again.to_json().to_string_pretty(),
+            "{tag}: gang run diverged across identical runs"
+        );
+    }
+}
+
+/// The gang knobs are additive: with `gang_frac == 0` the generator
+/// draws no extra RNG values and ignores every gang knob, so a
+/// gang-free trace — and the summary of a run over it, which must
+/// carry no `gangs` key at all — is byte-identical to a pre-gang
+/// build.
+#[test]
+fn gang_knobs_are_inert_on_gang_free_traces() {
+    let base = standard_trace();
+    let knobbed = poisson_trace(&TraceConfig {
+        jobs: 18,
+        mean_interarrival_s: 0.01,
+        mix: [0.5, 0.3, 0.2],
+        epochs: Some(1),
+        seed: 7,
+        gang_replicas: 7,
+        gang_min_replicas: 3,
+        gang_scope: GangScope::Cross,
+        ..TraceConfig::default()
+    });
+    assert_eq!(base, knobbed, "gang knobs must be inert at gang_frac == 0");
+    let s = Scenario {
+        policy: PolicyKind::Mps,
+        queue: QueueDiscipline::Fifo,
+        interference: InterferenceModel::Roofline,
+    };
+    let m = run_scenario(s, &base);
+    assert!(m.gangs.is_none(), "gang-free run grew a gang digest");
+    let text = m.to_json().to_string_pretty();
+    assert!(!text.contains("\"gangs\""), "gang-free summary grew gang keys");
+    assert!(!text.contains("comm_stretch"), "gang-free summary grew comm keys");
 }

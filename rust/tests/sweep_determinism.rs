@@ -6,6 +6,7 @@
 
 use migsim::cluster::policy::{AdmissionMode, PolicyKind};
 use migsim::cluster::queue::QueueDiscipline;
+use migsim::cluster::trace::GangScope;
 use migsim::report::sweep::summary_json_text;
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::InterferenceModel;
@@ -52,6 +53,10 @@ fn random_grid(r: &mut Rng) -> GridSpec {
     let serve_fracs = vec![[0.0, 0.3, 0.6][r.below(3) as usize]];
     let arrival_shapes = vec![ArrivalShape::ALL[r.below(ArrivalShape::ALL.len() as u64) as usize]];
     let slo_ms = if r.below(2) == 0 { vec![250.0] } else { vec![60.0, 400.0] };
+    // Gang axis off on roughly two thirds of the draws, so the v4/v5
+    // and v6 summary paths both stay covered.
+    let gang_fracs = vec![[0.0, 0.0, 0.4][r.below(3) as usize]];
+    let gang_scope = if r.below(2) == 0 { GangScope::Intra } else { GangScope::Cross };
     GridSpec {
         policies,
         mixes: vec![mix],
@@ -70,6 +75,10 @@ fn random_grid(r: &mut Rng) -> GridSpec {
         slo_ms,
         serve_rps: 0.5 + r.next_f64() * 2.0,
         serve_duration_s: 20.0 + r.next_f64() * 60.0,
+        gang_fracs,
+        gang_replicas: 2 + r.below(2) as u32,
+        gang_min_replicas: 1,
+        gang_scope,
     }
 }
 
@@ -143,6 +152,10 @@ fn serving_grids_stay_byte_identical_across_thread_counts() {
         slo_ms: vec![120.0],
         serve_rps: 1.5,
         serve_duration_s: 45.0,
+        gang_fracs: vec![0.0],
+        gang_replicas: 2,
+        gang_min_replicas: 1,
+        gang_scope: GangScope::Intra,
     };
     let one = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
     let text = summary_json_text(&grid, &one, &cal);

@@ -11,6 +11,7 @@
 
 use migsim::cluster::policy::{AdmissionMode, PolicyKind};
 use migsim::cluster::queue::QueueDiscipline;
+use migsim::cluster::trace::GangScope;
 use migsim::report::sweep::{summary_json_text, validate_summary, write_sweep};
 use migsim::simgpu::calibration::Calibration;
 use migsim::simgpu::interference::InterferenceModel;
@@ -46,6 +47,12 @@ fn golden_grid() -> GridSpec {
         slo_ms: vec![250.0],
         serve_rps: 2.0,
         serve_duration_s: 600.0,
+        // Gangs stay off too: the gang subsystem (schema v6) must be
+        // equally invisible on this gang-free grid.
+        gang_fracs: vec![0.0],
+        gang_replicas: 2,
+        gang_min_replicas: 1,
+        gang_scope: GangScope::Intra,
     }
 }
 
@@ -85,6 +92,11 @@ fn two_cell_sweep_artifacts_match_the_committed_fixtures() {
     let summary = summary_json_text(&grid, &run, &cal);
     let parsed = Json::parse(&summary).expect("summary parses");
     assert_eq!(validate_summary(&parsed).expect("summary validates"), 2);
+    // The gang-free grid keeps the pre-gang surface: schema v4 and not
+    // one gang key (or serving key) anywhere in the bytes.
+    assert_eq!(parsed.get("schema_version").unwrap().as_u64(), Some(4));
+    assert!(!summary.contains("gang"), "gang keys leaked into the gang-free fixture");
+    assert!(!summary.contains("slo_"), "serving keys leaked into the training-only fixture");
 
     let dir = TempDir::new().expect("tempdir");
     let artifacts = write_sweep(dir.path(), &grid, &run, &cal).expect("write artifacts");
