@@ -503,6 +503,10 @@ pub struct FleetSim {
     migrating: Vec<Vec<JobId>>,
     /// Probe-to-slice migrations over the run.
     migrations: u64,
+    /// Gang jobs that bypassed the hybrid probe loop: gangs place
+    /// straight onto whole GPUs, so mig-miso's anonymous probe region
+    /// never sees them and the offer resolves without a probe window.
+    probe_skipped_gangs: u64,
     queue: JobQueue,
     timeline: Timeline,
     now: f64,
@@ -740,6 +744,7 @@ impl FleetSim {
             has_gangs,
             migrating: vec![Vec::new(); n_gpus],
             migrations: 0,
+            probe_skipped_gangs: 0,
             queue: JobQueue::new(config.queue),
             timeline: Timeline::new(),
             now: 0.0,
@@ -1966,6 +1971,15 @@ impl FleetSim {
                 per_gpu.iter().filter(|&&c| c >= 1).count() as u32 >= gang.min_replicas
             }
         };
+        if self.hybrid {
+            // The probe loop is how every non-gang job reaches a
+            // hybrid fleet; gangs skip it entirely (the anonymous
+            // probe region cannot host an atomic grant set), and the
+            // bypass is accounted so it shows up in the trace and the
+            // gang summary instead of vanishing into a plain reject.
+            self.probe_skipped_gangs += 1;
+            self.emit(TraceKind::ProbeSkip, Some(id), None, None, String::new());
+        }
         if !feasible {
             self.queue.remove(id);
             let reason = format!(
@@ -3028,6 +3042,7 @@ impl FleetSim {
                 } else {
                     1.0
                 },
+                probe_skipped_gangs: self.probe_skipped_gangs,
             })
         } else {
             None
@@ -3092,6 +3107,7 @@ impl FleetSim {
             makespan_s: elapsed,
             peak_queue: self.queue.peak_len(),
             backfilled: self.queue.backfilled(),
+            backfill_candidates_scanned: self.stats.backfill_candidates_scanned,
             hol_wait_s: self.hol_wait_s,
             migrations: self.migrations,
             probe_window_s: self.config.probe_window_s,
@@ -3999,6 +4015,62 @@ mod tests {
             2,
         );
         assert_eq!(m.rejected(), 1, "{}", m.summary());
+    }
+
+    #[test]
+    fn hybrid_fleet_accounts_gangs_that_skip_the_probe_loop() {
+        use crate::cluster::policy::MigMiso;
+        // mig-miso routes every solo job through the shared probe
+        // region, but a gang's atomic grant set can never live there —
+        // the offer bypasses the probe loop entirely. The bypass must
+        // be counted and traced, not folded into a plain reject.
+        let trace = vec![
+            gang_job(0, 0.0, WorkloadSize::Small, 2, 2, GangScope::Intra),
+            JobSpec {
+                id: 1,
+                arrival_s: 0.001,
+                workload: WorkloadSize::Small,
+                epochs: 1,
+                kind: JobKind::Train,
+                gang: None,
+            },
+        ];
+        let config = FleetConfig {
+            a100s: 1,
+            a30s: 0,
+            ..FleetConfig::default()
+        };
+        let policy = Box::new(MigMiso::with_margin(&cal(), 7, 0.0));
+        let out = FleetSim::new(config, policy, cal(), &trace)
+            .run_with(&RunOptions {
+                trace: true,
+                ..verify_opts()
+            })
+            .unwrap();
+        let m = out.metrics;
+        assert_eq!(m.rejected(), 1, "{}", m.summary());
+        assert_eq!(m.finished(), 1, "{}", m.summary());
+        let g = m.gangs.as_ref().expect("gang fleet has a gang block");
+        assert_eq!(g.gang_jobs, 1);
+        assert_eq!(g.probe_skipped_gangs, 1);
+        assert!(m.summary().contains("probe-skipped 1"), "{}", m.summary());
+        let log = out.trace.expect("trace was requested");
+        assert!(
+            log.records
+                .iter()
+                .any(|r| r.kind == TraceKind::ProbeSkip && r.job == Some(0)),
+            "probe-skip record missing from the event trace"
+        );
+
+        // A non-hybrid fleet has no probe loop to skip: the counter
+        // stays 0 even when the gang is rejected for other reasons.
+        let m = run(
+            Box::new(Mps { cap: 7 }),
+            &[gang_job(0, 0.0, WorkloadSize::Small, 8, 8, GangScope::Intra)],
+            1,
+        );
+        assert_eq!(m.rejected(), 1, "{}", m.summary());
+        assert_eq!(m.gangs.as_ref().unwrap().probe_skipped_gangs, 0);
     }
 
     #[test]

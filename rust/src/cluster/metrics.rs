@@ -138,6 +138,10 @@ pub struct FleetGangSummary {
     /// Mean communication stretch over placed gangs (1.0 when none
     /// placed — no overhead observed).
     pub comm_stretch: f64,
+    /// Gang jobs that bypassed the hybrid probe loop (mig-miso's
+    /// anonymous probe region cannot host an atomic grant set; 0 on
+    /// non-hybrid fleets where there is no probe loop to skip).
+    pub probe_skipped_gangs: u64,
 }
 
 impl FleetGangSummary {
@@ -147,7 +151,8 @@ impl FleetGangSummary {
             .set("placed_gangs", Json::from_u64(self.placed_gangs))
             .set("cross_gang_jobs", Json::from_u64(self.cross_gang_jobs))
             .set("shrunk_gangs", Json::from_u64(self.shrunk_gangs))
-            .set("comm_stretch", Json::from_f64(self.comm_stretch));
+            .set("comm_stretch", Json::from_f64(self.comm_stretch))
+            .set("probe_skipped_gangs", Json::from_u64(self.probe_skipped_gangs));
         j
     }
 }
@@ -206,6 +211,10 @@ pub struct FleetMetrics {
     pub peak_queue: usize,
     /// Placements that jumped the arrival order (0 under `fifo`).
     pub backfilled: u64,
+    /// Backfill candidates offered to the policy past a blocked head
+    /// over the whole run. `backfill_scan_cap` bounds the per-pass
+    /// share of these, so the counter shows what a cap actually saved.
+    pub backfill_candidates_scanned: u64,
     /// Total time any queue head spent blocked — the head-of-line
     /// exposure backfilling works around.
     pub hol_wait_s: f64,
@@ -356,6 +365,10 @@ impl FleetMetrics {
             .set("makespan_s", Json::from_f64(self.makespan_s))
             .set("peak_queue", Json::from_u64(self.peak_queue as u64))
             .set("backfilled", Json::from_u64(self.backfilled))
+            .set(
+                "backfill_candidates_scanned",
+                Json::from_u64(self.backfill_candidates_scanned),
+            )
             .set("hol_wait_s", Json::from_f64(self.hol_wait_s))
             .set("migrations", Json::from_u64(self.migrations))
             .set("probe_window_s", Json::from_f64(self.probe_window_s))
@@ -426,13 +439,14 @@ impl FleetMetrics {
         let gangs = match &self.gangs {
             None => String::new(),
             Some(g) => format!(
-                "\n{:<12} gangs: {}/{} placed ({} cross-GPU, {} shrunk) | comm stretch μ {:.3}",
+                "\n{:<12} gangs: {}/{} placed ({} cross-GPU, {} shrunk) | comm stretch μ {:.3} | probe-skipped {}",
                 self.policy,
                 g.placed_gangs,
                 g.gang_jobs,
                 g.cross_gang_jobs,
                 g.shrunk_gangs,
                 g.comm_stretch,
+                g.probe_skipped_gangs,
             ),
         };
         format!(
@@ -495,6 +509,7 @@ mod tests {
             makespan_s: 100.0,
             peak_queue: 2,
             backfilled: 0,
+            backfill_candidates_scanned: 0,
             hol_wait_s: 0.0,
             migrations: 0,
             probe_window_s: 15.0,
@@ -665,6 +680,7 @@ mod tests {
             cross_gang_jobs: 1,
             shrunk_gangs: 1,
             comm_stretch: 1.075,
+            probe_skipped_gangs: 3,
         });
         let back = Json::parse(&m.to_json().to_string_pretty()).unwrap();
         assert_eq!(back.at(&["gangs", "gang_jobs"]).unwrap().as_u64(), Some(3));
@@ -674,6 +690,11 @@ mod tests {
         assert!(
             (back.at(&["gangs", "comm_stretch"]).unwrap().as_f64().unwrap() - 1.075).abs() < 1e-12
         );
+        assert_eq!(
+            back.at(&["gangs", "probe_skipped_gangs"]).unwrap().as_u64(),
+            Some(3)
+        );
         assert!(m.summary().contains("gangs:"));
+        assert!(m.summary().contains("probe-skipped 3"));
     }
 }

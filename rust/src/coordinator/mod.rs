@@ -8,11 +8,15 @@
 //!   training processes concurrently (tokio) with deterministic results.
 //! * [`planner`] — heterogeneous-partition reconfiguration planner
 //!   (the paper's §6 future work; Tan et al.-style scheduling).
+//! * [`oracle`] — branch-and-bound optimal-placement oracle bounding
+//!   the aggregate throughput any policy can reach (Turkkan et al.,
+//!   2024); feeds the sweep layer's `--regret` reporting.
 //! * [`results`] — serializable result records consumed by `report`.
 
 pub mod colocation;
 pub mod experiment;
 pub mod matrix;
+pub mod oracle;
 pub mod planner;
 pub mod results;
 

@@ -205,6 +205,20 @@ impl Planner {
         self.a30_table.get_or_init(|| A30Table::build(&self.cal))
     }
 
+    /// Memoized A100 throughput lookup — the (workload, profile) table
+    /// [`Planner::new`] built, exposed so other searches (the
+    /// optimal-placement oracle in [`crate::coordinator::oracle`]) can
+    /// reuse it instead of re-running the simulator.
+    pub fn table_throughput(&self, w: WorkloadSize, p: MigProfile) -> Option<f64> {
+        self.table.get(w, p)
+    }
+
+    /// A30 twin of [`Planner::table_throughput`] (builds the lazy A30
+    /// table on first use).
+    pub fn a30_table_throughput(&self, w: WorkloadSize, p: A30Profile) -> Option<f64> {
+        self.a30_table().get(w, p)
+    }
+
     /// Find the throughput-optimal plan for a job mix.
     ///
     /// Search space: every valid profile multiset (≤ 7 instances —

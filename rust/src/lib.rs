@@ -287,6 +287,36 @@
 //! trace draws no gang randomness and produces bit-identical
 //! artifacts to the pre-gang engine
 //! (`rust/tests/scenario_invariants.rs`, `rust/tests/sweep_golden.rs`).
+//!
+//! ## Optimal placement & regret
+//!
+//! Policy rankings say who wins; they do not say how far *everyone*
+//! is from optimal. The [`coordinator::oracle`] closes that gap with
+//! a branch-and-bound search over the full partition × placement
+//! space — every MIG slice set the [`coordinator::planner`] admits,
+//! every MPS/timeslice co-runner count up to the cap, on every
+//! A100/A30 in the cell — reusing the planner's memoized throughput
+//! tables, with admissibility pruning and a node budget
+//! ([`coordinator::oracle::ORACLE_NODE_BUDGET`]) that degrades to a
+//! *looser but still sound* bound instead of a wrong one. The result
+//! ([`coordinator::oracle::OracleBound`]) is a certified upper bound
+//! on the aggregate images/s any policy could sustain, so per-cell
+//! `regret = bound − achieved` is non-negative by construction
+//! (property-tested, alongside permutation invariance mirroring the
+//! planner's). Surface: `migsim sweep --regret` scores every cell,
+//! bumps the summary to schema v7
+//! ([`report::sweep::SWEEP_REGRET_SCHEMA_VERSION`]) with per-cell
+//! `oracle_images_per_s`/`regret`, two oracle CSV columns and a
+//! `regret_ranking` section naming the policy that leaves the most
+//! throughput on the table per mix; sibling cells share the
+//! bit-identical bound, grids above the oracle's search ceiling
+//! ([`coordinator::oracle::ORACLE_MAX_GPUS`]) are rejected up front
+//! naming the offending cell, and regret-free sweeps keep their
+//! exact v4/v5/v6 bytes. Scheduling fixes ride along:
+//! `--backfill-scan-cap` bounds one backfill pass's queue walk
+//! (surfaced as `backfill_candidates_scanned`), and gang jobs
+//! bypassing `mig-miso`'s probe loop are counted
+//! (`probe_skipped_gangs`) and traced as `probe-skip` events.
 
 pub mod cluster;
 pub mod config;

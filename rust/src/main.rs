@@ -67,6 +67,7 @@ SUBCOMMANDS
         [--mix small:0.5,medium:0.3,large:0.2] [--epochs N]
         [--interference off|linear|roofline] [--admission strict|oversubscribe]
         [--queue fifo|backfill-easy|backfill-conservative|sjf]
+        [--backfill-scan-cap N]
         [--probe-window 15] [--partition 2g.10gb,2g.10gb,2g.10gb]
         [--serve-mix 0.2] [--serve-rps 2] [--serve-duration 600]
         [--slo-ms 250] [--arrival-shape poisson|diurnal|bursty]
@@ -84,7 +85,10 @@ SUBCOMMANDS
       the admission-queue discipline: fifo places only the head (and
       one blocked job stalls everything behind it), the backfill
       disciplines place delay-safe jobs past a blocked head under a
-      reservation, sjf reorders by estimated service time. mig-miso
+      reservation (--backfill-scan-cap bounds how many queued jobs one
+      backfill pass examines; unset scans the whole queue — the
+      summary's backfill_candidates_scanned shows the cap's effect),
+      sjf reorders by estimated service time. mig-miso
       probes new jobs in a shared MPS region for --probe-window
       simulated seconds, then migrates them into the planner's best
       MIG partition when it beats the observed sharing. Emits summary
@@ -118,7 +122,7 @@ SUBCOMMANDS
         [--serve-fracs 0,0.25] [--arrival-shapes poisson,bursty]
         [--slo-ms 100,250] [--serve-rps 2] [--serve-duration 600]
         [--gang-fracs 0,0.2] [--gang-replicas 2] [--gang-min 1]
-        [--gang-scope intra|cross]
+        [--gang-scope intra|cross] [--backfill-scan-cap N] [--regret]
         [--threads N] [--grid grid.json] [--out results]
         [--trace-dir results/traces] [--sample-interval 60]
       Expand a declarative grid (policies x mixes x fleet sizes x
@@ -135,10 +139,19 @@ SUBCOMMANDS
       value adds a gang axis (--gang-replicas/--gang-min/--gang-scope
       shape the generated gangs) and bumps the summary to schema v6
       with per-cell gang digests and gang_jobs/comm_stretch CSV
-      columns; gang-free grids keep their v5/v4 bytes. --grid loads
-      the spec from
+      columns; gang-free grids keep their v5/v4 bytes. --regret
+      additionally runs the branch-and-bound optimal-placement oracle
+      on every cell: the summary bumps to schema v7 with per-cell
+      oracle_images_per_s/regret values, two extra CSV columns and a
+      regret_ranking section naming the policy leaving the most on
+      the table per mix (regret-free sweeps keep their exact bytes;
+      cells above the oracle's GPU ceiling are rejected up front).
+      --backfill-scan-cap applies the fleet scan cap to every cell.
+      --grid loads the spec from
       JSON instead (same keys as the axis flags; absent keys keep
-      defaults). --trace-dir writes one Chrome trace-event JSON per
+      defaults; --regret may still be given alongside it to opt the
+      loaded grid into the oracle pass). --trace-dir writes one Chrome
+      trace-event JSON per
       cell (cell_<index>.trace.json; opt-in — traces are per-cell
       sized); --sample-interval adds sampled timelines inside each
       traced cell. A progress line ticks on stderr while the sweep
@@ -316,6 +329,16 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
         probe_window_s.is_finite() && probe_window_s > 0.0,
         "--probe-window must be finite and > 0"
     );
+    let backfill_scan_cap = match args.flag("backfill-scan-cap") {
+        None => None,
+        Some(v) => {
+            let cap: usize = v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value for --backfill-scan-cap: '{v}'"))?;
+            anyhow::ensure!(cap >= 1, "--backfill-scan-cap must be >= 1");
+            Some(cap)
+        }
+    };
     let partition = match args.flag("partition") {
         None => None,
         Some(list) => {
@@ -452,6 +475,7 @@ fn cmd_fleet(args: &Args, config: &Config) -> anyhow::Result<()> {
         admission,
         queue,
         probe_window_s,
+        backfill_scan_cap,
         ..FleetConfig::default()
     };
     let trace_out = args.flag("trace-out");
@@ -574,6 +598,7 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
             "gang-replicas",
             "gang-min",
             "gang-scope",
+            "backfill-scan-cap",
         ] {
             anyhow::ensure!(
                 args.flag(flag).is_none(),
@@ -589,6 +614,11 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
         // contract still applies when the file does not pin seeds.
         if json.get("seeds").is_none() {
             grid.seeds = vec![rng::resolve_seed(args.seed()?)?];
+        }
+        // A run-mode switch, not a grid axis: a saved grid file may be
+        // re-run with the oracle pass layered on top.
+        if args.has("regret") {
+            grid.regret = true;
         }
         return Ok(grid);
     }
@@ -676,6 +706,15 @@ fn grid_from_args(args: &Args) -> anyhow::Result<GridSpec> {
             anyhow::anyhow!("unknown gang scope '{s}' (expected intra | cross)")
         })?;
     }
+    if let Some(v) = args.flag("backfill-scan-cap") {
+        let cap: usize = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("invalid value for --backfill-scan-cap: '{v}'"))?;
+        grid.backfill_scan_cap = Some(cap);
+    }
+    if args.has("regret") {
+        grid.regret = true;
+    }
     grid.validate()?;
     Ok(grid)
 }
@@ -709,6 +748,9 @@ fn cmd_sweep(args: &Args, config: &Config) -> anyhow::Result<()> {
     }
     if grid.has_serving() {
         print!("{}", migsim::report::sweep::slo_table(&run));
+    }
+    if grid.regret {
+        print!("{}", migsim::report::sweep::regret_table(&run));
     }
     println!(
         "\n{} cells | {} threads | host {:.3} s | {:.1} cells/s",
@@ -770,6 +812,8 @@ fn serving_bench_grid() -> GridSpec {
         gang_replicas: 2,
         gang_min_replicas: 1,
         gang_scope: GangScope::Intra,
+        backfill_scan_cap: None,
+        regret: false,
     }
 }
 
@@ -910,8 +954,8 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
         let cells = migsim::report::sweep::validate_summary(&json)
             .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
         // v4 = training-only, v5 = serving axes active, v6 = gang axis
-        // active; validate_summary accepted it, so the value is one of
-        // the three.
+        // active, v7 = oracle regret surfaces present; validate_summary
+        // accepted it, so the value is one of the four.
         let version = json.get("schema_version").and_then(|v| v.as_u64()).unwrap_or(0);
         println!("OK sweep summary {path}: schema v{version}, {cells} cells");
         return Ok(());

@@ -50,6 +50,15 @@ pub const SWEEP_SERVING_SCHEMA_VERSION: u64 = 5;
 /// consumers never see the bump.
 pub const SWEEP_GANG_SCHEMA_VERSION: u64 = 6;
 
+/// v7: the optimal-placement oracle — emitted *only* when the sweep
+/// ran with `--regret` ([`GridSpec`]'s `regret` flag): the grid's
+/// `regret` key, per-cell `oracle` digests (`oracle_images_per_s`,
+/// `regret`, `exact`), two extra CSV columns and the `regret_ranking`
+/// section naming the policy leaving the most on the table per mix.
+/// Regret-free sweeps keep their exact v4/v5/v6 bytes, pinned by the
+/// golden fixture.
+pub const SWEEP_REGRET_SCHEMA_VERSION: u64 = 7;
+
 /// Files one [`write_sweep`] call produces.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SweepArtifacts {
@@ -332,13 +341,98 @@ pub fn slo_table(run: &SweepRun) -> String {
     )
 }
 
-/// The schema version a grid's summary carries: gang grids
-/// ([`GridSpec::has_gangs`]) report v6, serving grids
+/// Per-(mix, policy) aggregate over a regret sweep's cells: the
+/// regret ranking's data, grouped by mix (name order) and sorted
+/// worst-first on mean regret within each mix (ties break on policy
+/// name) — the top row of each mix names the policy leaving the most
+/// on the table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegretSummary {
+    pub mix: String,
+    pub policy: String,
+    /// Cells carrying an oracle digest for this (mix, policy).
+    pub cells: u64,
+    /// Mean `oracle_images_per_s - images_per_s` across those cells;
+    /// non-negative because the oracle bound is admissible.
+    pub mean_regret: f64,
+    pub mean_oracle_images_per_s: f64,
+}
+
+/// Aggregate every oracle-scored cell by (mix, policy) (see
+/// [`RegretSummary`]). Empty unless the sweep ran with `--regret`.
+pub fn regret_means(run: &SweepRun) -> Vec<RegretSummary> {
+    let mut acc: Vec<(String, String, f64, f64, u64)> = Vec::new();
+    for cell in &run.cells {
+        let Some(o) = &cell.metrics.oracle else { continue };
+        let mix = cell.spec.mix.name.as_str();
+        let policy = cell.spec.policy.name();
+        match acc.iter_mut().find(|(m, p, ..)| m == mix && p == policy) {
+            Some((_, _, regret, oracle, count)) => {
+                *regret += o.regret;
+                *oracle += o.oracle_images_per_s;
+                *count += 1;
+            }
+            None => acc.push((
+                mix.to_string(),
+                policy.to_string(),
+                o.regret,
+                o.oracle_images_per_s,
+                1,
+            )),
+        }
+    }
+    let mut means: Vec<RegretSummary> = acc
+        .into_iter()
+        .map(|(mix, policy, regret, oracle, count)| RegretSummary {
+            mix,
+            policy,
+            cells: count,
+            mean_regret: safe_div(regret, count as f64),
+            mean_oracle_images_per_s: safe_div(oracle, count as f64),
+        })
+        .collect();
+    means.sort_by(|a, b| {
+        a.mix
+            .cmp(&b.mix)
+            .then_with(|| b.mean_regret.total_cmp(&a.mean_regret))
+            .then_with(|| a.policy.cmp(&b.policy))
+    });
+    means
+}
+
+/// The ASCII regret-ranking table for the CLI: per mix, which policy
+/// leaves the most aggregate throughput on the table against the
+/// branch-and-bound oracle bound.
+pub fn regret_table(run: &SweepRun) -> String {
+    let rows: Vec<Vec<String>> = regret_means(run)
+        .iter()
+        .map(|r| {
+            vec![
+                r.mix.clone(),
+                r.policy.clone(),
+                r.cells.to_string(),
+                format!("{:.1}", r.mean_oracle_images_per_s),
+                format!("{:.1}", r.mean_regret),
+            ]
+        })
+        .collect();
+    render::table(
+        "regret ranking (mean images/s left vs the oracle bound, worst first)",
+        &["mix", "policy", "cells", "oracle img/s μ", "regret μ"],
+        &rows,
+    )
+}
+
+/// The schema version a grid's summary carries: regret sweeps (the
+/// grid's `regret` flag) report v7, gang grids
+/// ([`GridSpec::has_gangs`]) v6, serving grids
 /// ([`GridSpec::has_serving`]) v5, and training-only grids keep v4 —
 /// each surface is emitted only when its axis is active, so older
 /// consumers never see a bump they cannot read.
 pub fn schema_version_for(grid: &GridSpec) -> u64 {
-    if grid.has_gangs() {
+    if grid.regret {
+        SWEEP_REGRET_SCHEMA_VERSION
+    } else if grid.has_gangs() {
         SWEEP_GANG_SCHEMA_VERSION
     } else if grid.has_serving() {
         SWEEP_SERVING_SCHEMA_VERSION
@@ -429,6 +523,24 @@ pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json 
             .collect();
         j.set("slo_ranking", Json::Arr(slo_ranking));
     }
+    if grid.regret {
+        let regret_ranking: Vec<Json> = regret_means(run)
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("mix", Json::from_str_val(&r.mix))
+                    .set("policy", Json::from_str_val(&r.policy))
+                    .set("cells", Json::from_u64(r.cells))
+                    .set(
+                        "mean_oracle_images_per_s",
+                        Json::from_f64(r.mean_oracle_images_per_s),
+                    )
+                    .set("mean_regret", Json::from_f64(r.mean_regret));
+                o
+            })
+            .collect();
+        j.set("regret_ranking", Json::Arr(regret_ranking));
+    }
     j
 }
 
@@ -439,6 +551,7 @@ pub fn summary_json(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> Json 
 pub fn cells_rows(grid: &GridSpec, run: &SweepRun) -> Vec<Vec<String>> {
     let serving = grid.has_serving();
     let gangs = grid.has_gangs();
+    let regret = grid.regret;
     run.cells
         .iter()
         .map(|c| {
@@ -489,6 +602,15 @@ pub fn cells_rows(grid: &GridSpec, run: &SweepRun) -> Vec<Vec<String>> {
                     None => row.extend(GANG_CELLS_COLUMNS.map(|_| String::new())),
                 }
             }
+            if regret {
+                match &c.metrics.oracle {
+                    Some(o) => {
+                        row.push(format!("{:.1}", o.oracle_images_per_s));
+                        row.push(format!("{:.3}", o.regret));
+                    }
+                    None => row.extend(ORACLE_CELLS_COLUMNS.map(|_| String::new())),
+                }
+            }
             row
         })
         .collect()
@@ -496,7 +618,8 @@ pub fn cells_rows(grid: &GridSpec, run: &SweepRun) -> Vec<Vec<String>> {
 
 /// The CSV header for a given grid: the 25 v4 columns, plus the four
 /// serving columns when the grid's serving axes are active, plus the
-/// two gang columns when the gang axis is.
+/// two gang columns when the gang axis is, plus the two oracle
+/// columns when the sweep ran with `--regret` (always last).
 pub fn cells_header(grid: &GridSpec) -> Vec<&'static str> {
     let mut header = CELLS_HEADER.to_vec();
     if grid.has_serving() {
@@ -504,6 +627,9 @@ pub fn cells_header(grid: &GridSpec) -> Vec<&'static str> {
     }
     if grid.has_gangs() {
         header.extend(GANG_CELLS_COLUMNS);
+    }
+    if grid.regret {
+        header.extend(ORACLE_CELLS_COLUMNS);
     }
     header
 }
@@ -516,6 +642,8 @@ const SERVING_CELLS_COLUMNS: [&str; 4] = [
 ];
 
 const GANG_CELLS_COLUMNS: [&str; 2] = ["gang_jobs", "comm_stretch"];
+
+const ORACLE_CELLS_COLUMNS: [&str; 2] = ["oracle_images_per_s", "regret"];
 
 const CELLS_HEADER: [&str; 25] = [
     "index",
@@ -578,7 +706,9 @@ pub fn summary_json_text(grid: &GridSpec, run: &SweepRun, cal: &Calibration) -> 
 /// its grid's serving axes, carry complete latency digests, and keep
 /// every `slo_ranking` row anchored to a cell that actually served.
 /// A v6 (gang) summary must agree with its grid's gang axis and carry
-/// complete gang digests on cells that drew gang jobs.
+/// complete gang digests on cells that drew gang jobs. A v7 (regret)
+/// summary must carry an oracle digest on *every* cell and keep every
+/// `regret_ranking` row anchored to a (mix, policy) some cell ran.
 /// Returns the cell count.
 pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
     let version = json
@@ -588,10 +718,11 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
     anyhow::ensure!(
         version == SWEEP_SCHEMA_VERSION
             || version == SWEEP_SERVING_SCHEMA_VERSION
-            || version == SWEEP_GANG_SCHEMA_VERSION,
+            || version == SWEEP_GANG_SCHEMA_VERSION
+            || version == SWEEP_REGRET_SCHEMA_VERSION,
         "schema_version {version} is not supported \
-         ({SWEEP_SCHEMA_VERSION}, {SWEEP_SERVING_SCHEMA_VERSION} or \
-         {SWEEP_GANG_SCHEMA_VERSION})"
+         ({SWEEP_SCHEMA_VERSION}, {SWEEP_SERVING_SCHEMA_VERSION}, \
+         {SWEEP_GANG_SCHEMA_VERSION} or {SWEEP_REGRET_SCHEMA_VERSION})"
     );
     let grid = GridSpec::from_json(
         json.get("grid")
@@ -601,10 +732,11 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
     anyhow::ensure!(
         version == expected,
         "schema_version {version} disagrees with the grid's axes \
-         (serving/gang axes imply v{expected})"
+         (serving/gang/regret surfaces imply v{expected})"
     );
     let serving = grid.has_serving();
     let gangs = grid.has_gangs();
+    let regret = grid.regret;
     anyhow::ensure!(
         GridSpec::from_json(&grid.to_json())? == grid,
         "embedded grid does not round-trip losslessly"
@@ -630,6 +762,7 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
     );
     let mut cell_policies: Vec<String> = Vec::new();
     let mut cell_queues: Vec<String> = Vec::new();
+    let mut cell_mixes: Vec<String> = Vec::new();
     let mut serving_policies: Vec<String> = Vec::new();
     for (i, cell) in cells.iter().enumerate() {
         let index = cell
@@ -647,6 +780,13 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
         );
         if !cell_policies.iter().any(|p| p == policy) {
             cell_policies.push(policy.to_string());
+        }
+        let mix = cell
+            .get("mix")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("cell {i}: missing mix"))?;
+        if !cell_mixes.iter().any(|m| m == mix) {
+            cell_mixes.push(mix.to_string());
         }
         let interference = cell
             .get("interference")
@@ -729,6 +869,30 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
                 );
             }
         }
+        // The oracle digest is all-or-nothing: a regret sweep scores
+        // every cell, a regret-free one scores none.
+        match metrics.get("oracle") {
+            Some(digest) => {
+                anyhow::ensure!(
+                    regret,
+                    "cell {i}: oracle digest in a v{version} (regret-free) summary"
+                );
+                for key in ["oracle_images_per_s", "regret"] {
+                    anyhow::ensure!(
+                        digest.get(key).and_then(|v| v.as_f64()).is_some(),
+                        "cell {i}: oracle.{key} missing or not a number"
+                    );
+                }
+                anyhow::ensure!(
+                    digest.get("exact").and_then(|v| v.as_bool()).is_some(),
+                    "cell {i}: oracle.exact missing or not a boolean"
+                );
+            }
+            None => anyhow::ensure!(
+                !regret,
+                "cell {i}: v{version} (regret) summary is missing its oracle digest"
+            ),
+        }
     }
     // Cross-section consistency: aggregates must describe the cells.
     // (Regression: a summary whose queue_ranking referenced a queue no
@@ -780,6 +944,39 @@ pub fn validate_summary(json: &Json) -> anyhow::Result<usize> {
         None => anyhow::ensure!(
             !serving,
             "v{version} summary is missing its slo_ranking section"
+        ),
+    }
+    // The regret ranking is a v7 surface: required on a regret
+    // summary, forbidden otherwise, and every row must name a (mix,
+    // policy) some cell actually ran.
+    match json.get("regret_ranking").and_then(|v| v.as_arr()) {
+        Some(rows) => {
+            anyhow::ensure!(
+                regret,
+                "regret_ranking present in a v{version} (regret-free) summary"
+            );
+            for (i, row) in rows.iter().enumerate() {
+                let policy = row
+                    .get("policy")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("regret_ranking row {i}: missing policy"))?;
+                anyhow::ensure!(
+                    cell_policies.iter().any(|p| p == policy),
+                    "regret_ranking row {i}: policy '{policy}' appears in no cell"
+                );
+                let mix = row
+                    .get("mix")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("regret_ranking row {i}: missing mix"))?;
+                anyhow::ensure!(
+                    cell_mixes.iter().any(|m| m == mix),
+                    "regret_ranking row {i}: mix '{mix}' appears in no cell"
+                );
+            }
+        }
+        None => anyhow::ensure!(
+            !regret,
+            "v{version} summary is missing its regret_ranking section"
         ),
     }
     Ok(cells.len())
@@ -1176,6 +1373,135 @@ mod tests {
         assert_eq!(cells_header(&grid).len(), 25);
         assert!(cells_rows(&grid, &run).iter().all(|r| r.len() == 25));
         assert_eq!(validate_summary(&json).unwrap(), grid.cell_count());
+    }
+
+    /// The acceptance scenario: the paper's small/medium mix, two
+    /// GPUs, saturated arrivals, the three §5 policies plus the
+    /// opt-in oracle pass.
+    fn regret_grid() -> GridSpec {
+        GridSpec {
+            policies: vec![PolicyKind::Mps, PolicyKind::MigStatic, PolicyKind::TimeSlice],
+            mixes: vec![MixSpec::new("small-medium", [0.5, 0.5, 0.0])],
+            gpus: vec![2],
+            jobs_per_cell: 30,
+            regret: true,
+            ..saturated_grid()
+        }
+    }
+
+    #[test]
+    fn regret_summary_bumps_schema_ranks_policies_and_exports() {
+        let grid = regret_grid();
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(2)).unwrap();
+        let text = summary_json_text(&grid, &run, &cal);
+        let json = Json::parse(&text).unwrap();
+        assert_eq!(
+            json.get("schema_version").unwrap().as_u64(),
+            Some(SWEEP_REGRET_SCHEMA_VERSION)
+        );
+        assert_eq!(validate_summary(&json).unwrap(), grid.cell_count());
+        // Every cell is scored, every regret is non-negative, and the
+        // oracle bound is shared by sibling cells (same trace, same
+        // fleet — only the policy differs).
+        let bound = run.cells[0].metrics.oracle.as_ref().unwrap().oracle_images_per_s;
+        for c in &run.cells {
+            let o = c.metrics.oracle.as_ref().expect("regret sweep scores every cell");
+            assert!(o.regret >= -1e-9, "{}: regret {}", c.spec.label(), o.regret);
+            assert_eq!(o.oracle_images_per_s, bound, "{}", c.spec.label());
+        }
+        // The acceptance criterion: the best-ranked policy sits near
+        // the bound while timeslice leaves strictly more on the table.
+        let means = regret_means(&run);
+        assert_eq!(means.len(), grid.policies.len(), "{means:?}");
+        let best = means.last().unwrap();
+        let worst = &means[0];
+        let ts = means.iter().find(|r| r.policy == "timeslice").unwrap();
+        assert!(
+            ts.mean_regret > 0.0,
+            "timeslice must leave throughput on the table: {means:?}"
+        );
+        assert!(
+            best.mean_regret < ts.mean_regret,
+            "the best-ranked policy must beat timeslice: {means:?}"
+        );
+        assert!(
+            best.mean_regret <= 0.5 * best.mean_oracle_images_per_s,
+            "the best-ranked policy must realize most of the bound: {means:?}"
+        );
+        assert!(worst.mean_regret >= best.mean_regret, "{means:?}");
+        // The table and the JSON section agree on coverage.
+        let table = regret_table(&run);
+        for r in &means {
+            assert!(table.contains(&r.policy), "{table}");
+        }
+        assert_eq!(
+            json.get("regret_ranking").unwrap().as_arr().unwrap().len(),
+            means.len()
+        );
+        // The CSV appends the two oracle columns, populated on every
+        // row.
+        let header = cells_header(&grid);
+        assert_eq!(header.len(), 27);
+        assert_eq!(&header[25..], ["oracle_images_per_s", "regret"]);
+        let rows = cells_rows(&grid, &run);
+        for (c, row) in run.cells.iter().zip(&rows) {
+            assert_eq!(row.len(), 27, "{}", c.spec.label());
+            assert!(!row[25].is_empty() && !row[26].is_empty(), "{}", c.spec.label());
+        }
+        // Regret-free summaries keep their pre-oracle surface.
+        let plain = saturated_grid();
+        let plain_run = run_sweep(&plain, &cal, &SweepOptions::with_threads(1)).unwrap();
+        let plain_text = summary_json_text(&plain, &plain_run, &cal);
+        assert!(!plain_text.contains("regret"), "regret keys leaked into a v4 summary");
+        assert!(!plain_text.contains("oracle"), "oracle keys leaked into a v4 summary");
+    }
+
+    #[test]
+    fn validate_summary_rejects_regret_ranking_naming_an_absent_policy() {
+        let grid = regret_grid();
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
+        let mut json = Json::parse(&summary_json_text(&grid, &run, &cal)).unwrap();
+        // "exclusive" is a real policy, but no cell of this grid ran it.
+        let mut phantom = Json::obj();
+        phantom
+            .set("mix", Json::from_str_val("small-medium"))
+            .set("policy", Json::from_str_val("exclusive"))
+            .set("cells", Json::from_u64(1))
+            .set("mean_oracle_images_per_s", Json::from_f64(100.0))
+            .set("mean_regret", Json::from_f64(5.0));
+        let mut rows = json.get("regret_ranking").unwrap().as_arr().unwrap().to_vec();
+        rows.push(phantom);
+        json.set("regret_ranking", Json::Arr(rows));
+        let err = validate_summary(&json).unwrap_err().to_string();
+        assert!(err.contains("regret_ranking") && err.contains("exclusive"), "{err}");
+        // A phantom mix is drift too.
+        let mut json = Json::parse(&summary_json_text(&grid, &run, &cal)).unwrap();
+        let mut phantom = Json::obj();
+        phantom
+            .set("mix", Json::from_str_val("heavy"))
+            .set("policy", Json::from_str_val("mps"))
+            .set("cells", Json::from_u64(1))
+            .set("mean_oracle_images_per_s", Json::from_f64(100.0))
+            .set("mean_regret", Json::from_f64(5.0));
+        let mut rows = json.get("regret_ranking").unwrap().as_arr().unwrap().to_vec();
+        rows.push(phantom);
+        json.set("regret_ranking", Json::Arr(rows));
+        let err = validate_summary(&json).unwrap_err().to_string();
+        assert!(err.contains("regret_ranking") && err.contains("heavy"), "{err}");
+        // Dropping the section from a v7 summary is drift, not a
+        // downgrade; planting it in a v4 one is too.
+        let mut missing = Json::parse(&summary_json_text(&grid, &run, &cal)).unwrap();
+        missing.set("regret_ranking", Json::Null);
+        let err = validate_summary(&missing).unwrap_err().to_string();
+        assert!(err.contains("regret_ranking"), "{err}");
+        let t_grid = saturated_grid();
+        let t_run = run_sweep(&t_grid, &cal, &SweepOptions::with_threads(1)).unwrap();
+        let mut v4 = Json::parse(&summary_json_text(&t_grid, &t_run, &cal)).unwrap();
+        v4.set("regret_ranking", Json::Arr(Vec::new()));
+        let err = validate_summary(&v4).unwrap_err().to_string();
+        assert!(err.contains("regret_ranking"), "{err}");
     }
 
     #[test]

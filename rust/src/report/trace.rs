@@ -328,6 +328,7 @@ mod tests {
             makespan_s: 100.0,
             peak_queue: 1,
             backfilled: 0,
+            backfill_candidates_scanned: 0,
             hol_wait_s: 0.0,
             migrations: 0,
             probe_window_s: 15.0,

@@ -17,7 +17,9 @@
 use super::grid::{CellSpec, GridSpec};
 use crate::cluster::fleet::{FleetConfig, FleetSim, RunOptions};
 use crate::cluster::metrics::FleetMetrics;
-use crate::cluster::trace::poisson_trace;
+use crate::cluster::trace::{poisson_trace, JobSpec};
+use crate::coordinator::oracle::{Oracle, ORACLE_MAX_GPUS, ORACLE_NODE_BUDGET};
+use crate::coordinator::planner::Job;
 use crate::simgpu::calibration::Calibration;
 use crate::telemetry::timeline::validate_interval;
 use crate::util::json::Json;
@@ -59,6 +61,40 @@ pub struct CellMetrics {
     /// Gang digest (`None` on cells whose trace carried no gang jobs —
     /// their JSON keeps its pre-gang keys byte for byte).
     pub gang: Option<CellGang>,
+    /// Optimal-placement oracle digest (`None` unless the sweep ran
+    /// with `--regret` — regret-free cell JSON keeps its exact bytes).
+    pub oracle: Option<CellOracle>,
+}
+
+/// The optimal-placement oracle's verdict on one cell: a
+/// branch-and-bound upper bound on the aggregate training throughput
+/// *any* placement could sustain, and the gap the cell's heuristic
+/// left against it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellOracle {
+    /// Interference-aware upper bound on aggregate images/s over the
+    /// cell's training jobs (serving replicas excluded — see
+    /// [`crate::coordinator::oracle`]).
+    pub oracle_images_per_s: f64,
+    /// `oracle_images_per_s - images_per_s`; non-negative by
+    /// construction because the bound is admissible.
+    pub regret: f64,
+    /// Whether the search closed. `false` means the node budget ran
+    /// out and the bound is a looser (but still valid) ceiling.
+    pub exact: bool,
+}
+
+impl CellOracle {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set(
+            "oracle_images_per_s",
+            Json::from_f64(self.oracle_images_per_s),
+        )
+        .set("regret", Json::from_f64(self.regret))
+        .set("exact", Json::Bool(self.exact));
+        j
+    }
 }
 
 /// Deterministic serving outcomes of one cell: the fleet's pooled
@@ -161,6 +197,7 @@ impl CellMetrics {
                 shrunk_gangs: g.shrunk_gangs,
                 comm_stretch: g.comm_stretch,
             }),
+            oracle: None,
         }
     }
 
@@ -189,6 +226,9 @@ impl CellMetrics {
         }
         if let Some(g) = &self.gang {
             j.set("gang", g.to_json());
+        }
+        if let Some(o) = &self.oracle {
+            j.set("oracle", o.to_json());
         }
         j
     }
@@ -286,6 +326,7 @@ pub fn run_cell(
         admission: grid.admission,
         queue: cell.queue,
         probe_window_s: grid.probe_window_s,
+        backfill_scan_cap: grid.backfill_scan_cap,
         ..FleetConfig::default()
     };
     let sim = FleetSim::new(config, policy, *cal, &trace);
@@ -301,7 +342,39 @@ pub fn run_cell(
         .trace
         .as_ref()
         .map(|log| crate::report::trace::trace_json_text(log, &out.metrics));
-    (CellMetrics::from_fleet(&out.metrics), trace_text)
+    let mut metrics = CellMetrics::from_fleet(&out.metrics);
+    if grid.regret {
+        metrics.oracle = Some(oracle_digest(cell, grid, cal, &trace, metrics.images_per_s));
+    }
+    (metrics, trace_text)
+}
+
+/// Run the optimal-placement oracle on one cell's training job set and
+/// score the heuristic's gap against the bound. Serving replicas are
+/// excluded (they retire no images and can only slow co-runners); a
+/// gang contributes one workload copy per preferred replica.
+fn oracle_digest(
+    cell: &CellSpec,
+    grid: &GridSpec,
+    cal: &Calibration,
+    trace: &[JobSpec],
+    images_per_s: f64,
+) -> CellOracle {
+    let jobs: Vec<Job> = trace
+        .iter()
+        .filter(|j| j.serve().is_none())
+        .flat_map(|j| {
+            let copies = j.gang.as_ref().map_or(1, |g| g.replicas as usize);
+            std::iter::repeat_n(Job { workload: j.workload }, copies)
+        })
+        .collect();
+    let oracle = Oracle::new(cal, cell.interference, grid.cap);
+    let bound = oracle.bound(&jobs, cell.gpus, 0, ORACLE_NODE_BUDGET);
+    CellOracle {
+        oracle_images_per_s: bound.images_per_s,
+        regret: bound.images_per_s - images_per_s,
+        exact: bound.exact,
+    }
 }
 
 /// Expand `grid` and execute every cell across `opts.threads` workers
@@ -322,6 +395,20 @@ pub fn run_sweep(
         validate_interval(interval_s)?;
     }
     let cells = grid.cells()?;
+    // Regret is all-or-nothing: refuse up front rather than emit a
+    // summary whose oracle column silently degrades on oversized
+    // cells. The error names the first offending cell.
+    if grid.regret {
+        if let Some(c) = cells.iter().find(|c| c.gpus > ORACLE_MAX_GPUS) {
+            anyhow::bail!(
+                "--regret: cell {} ({}) spans {} GPUs, above the oracle's \
+                 {ORACLE_MAX_GPUS}-GPU search ceiling — shrink the 'gpus' axis or drop --regret",
+                c.index,
+                c.label(),
+                c.gpus
+            );
+        }
+    }
     let threads = if opts.threads == 0 {
         default_threads()
     } else {
@@ -465,6 +552,7 @@ mod tests {
                 admission: grid.admission,
                 queue: cell.queue,
                 probe_window_s: grid.probe_window_s,
+                backfill_scan_cap: grid.backfill_scan_cap,
                 ..FleetConfig::default()
             },
             cell.policy.build(&cal, grid.cap, None),
@@ -639,6 +727,7 @@ mod tests {
                 admission: grid.admission,
                 queue: c.spec.queue,
                 probe_window_s: grid.probe_window_s,
+                backfill_scan_cap: grid.backfill_scan_cap,
                 ..FleetConfig::default()
             };
             let audited = FleetSim::new(config, policy, cal, &trace)
@@ -665,6 +754,51 @@ mod tests {
             assert!(c.metrics.gang.is_none(), "{}", c.spec.label());
             assert!(!c.metrics.to_json().to_string_pretty().contains("gang"));
         }
+    }
+
+    #[test]
+    fn regret_cells_carry_an_oracle_digest_and_plain_cells_do_not() {
+        let mut grid = tiny_grid();
+        // One policy / queue / interference combo keeps the opt-in
+        // oracle pass test-cheap.
+        grid.policies = vec![PolicyKind::TimeSlice];
+        grid.interference = vec![crate::simgpu::interference::InterferenceModel::Off];
+        grid.queues = vec![crate::cluster::queue::QueueDiscipline::Fifo];
+        grid.seeds = vec![11];
+        grid.regret = true;
+        let cal = Calibration::paper();
+        let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
+        for c in &run.cells {
+            let o = c.metrics.oracle.as_ref().expect("regret sweep must score every cell");
+            assert!(o.oracle_images_per_s >= c.metrics.images_per_s - 1e-9, "{}", c.spec.label());
+            assert!(o.regret >= -1e-9, "{}: regret {}", c.spec.label(), o.regret);
+            assert!(o.exact, "tiny cells must close their search");
+            let json = c.metrics.to_json().to_string_pretty();
+            assert!(json.contains("\"oracle_images_per_s\""), "{}", c.spec.label());
+        }
+        // Regret-free sweeps keep their exact bytes: no oracle key.
+        let plain = run_sweep(&tiny_grid(), &cal, &SweepOptions::with_threads(1)).unwrap();
+        for c in &plain.cells {
+            assert!(c.metrics.oracle.is_none(), "{}", c.spec.label());
+            assert!(!c.metrics.to_json().to_string_pretty().contains("oracle"));
+        }
+    }
+
+    #[test]
+    fn regret_on_an_oversized_fleet_is_rejected_by_cell() {
+        let mut grid = tiny_grid();
+        grid.regret = true;
+        grid.gpus = vec![1, ORACLE_MAX_GPUS + 1];
+        let err = run_sweep(&grid, &Calibration::paper(), &SweepOptions::with_threads(1))
+            .err()
+            .expect("an oversized regret grid must be refused up front");
+        let msg = err.to_string();
+        assert!(msg.contains("--regret"), "{msg}");
+        assert!(msg.contains(&format!("{} GPUs", ORACLE_MAX_GPUS + 1)), "{msg}");
+        // Without regret the same grid is fine (no oracle ceiling).
+        grid.regret = false;
+        grid.jobs_per_cell = 5;
+        assert!(run_sweep(&grid, &Calibration::paper(), &SweepOptions::with_threads(2)).is_ok());
     }
 
     #[test]

@@ -174,6 +174,16 @@ pub struct GridSpec {
     /// Placement scope of every generated gang (per-cell constant;
     /// inert at `gang_frac == 0`).
     pub gang_scope: GangScope,
+    /// Optional cap on how many queued jobs one backfill pass may
+    /// examine per scheduling round (per-cell constant; `None` scans
+    /// the whole queue). The JSON key is absent when unset, so
+    /// cap-free grids keep their exact bytes.
+    pub backfill_scan_cap: Option<usize>,
+    /// Whether every cell also computes the optimal-placement oracle
+    /// bound and its regret (`--regret`). Bumps the summary to schema
+    /// v7; the JSON key is absent when off, so regret-free grids keep
+    /// their exact v4/v5/v6 bytes.
+    pub regret: bool,
 }
 
 impl GridSpec {
@@ -205,6 +215,8 @@ impl GridSpec {
             gang_replicas: 2,
             gang_min_replicas: 1,
             gang_scope: GangScope::Intra,
+            backfill_scan_cap: None,
+            regret: false,
         }
     }
 
@@ -233,6 +245,8 @@ impl GridSpec {
             gang_replicas: 2,
             gang_min_replicas: 1,
             gang_scope: GangScope::Intra,
+            backfill_scan_cap: None,
+            regret: false,
         }
     }
 
@@ -364,6 +378,9 @@ impl GridSpec {
                 self.gang_min_replicas,
                 self.gang_replicas
             );
+        }
+        if let Some(cap) = self.backfill_scan_cap {
+            anyhow::ensure!(cap >= 1, "backfill_scan_cap must be >= 1");
         }
         for &g in &self.gpus {
             anyhow::ensure!(g >= 1, "grid axis 'gpus' contains a zero-GPU fleet");
@@ -540,6 +557,14 @@ impl GridSpec {
             )
             .set("gang_scope", Json::from_str_val(self.gang_scope.name()));
         }
+        // Scan-cap and regret keys only when actually set: cap-free /
+        // regret-free grids keep their exact pre-oracle bytes.
+        if let Some(cap) = self.backfill_scan_cap {
+            j.set("backfill_scan_cap", Json::from_u64(cap as u64));
+        }
+        if self.regret {
+            j.set("regret", Json::Bool(true));
+        }
         j
     }
 
@@ -574,6 +599,8 @@ impl GridSpec {
                     "gang_replicas",
                     "gang_min_replicas",
                     "gang_scope",
+                    "backfill_scan_cap",
+                    "regret",
                 ]
                 .contains(&key.as_str()),
                 "unknown grid key '{key}'"
@@ -767,6 +794,17 @@ impl GridSpec {
                 .ok_or_else(|| anyhow::anyhow!("'gang_scope' must be a string"))?;
             grid.gang_scope = GangScope::parse(name)
                 .ok_or_else(|| anyhow::anyhow!("unknown gang scope '{name}' (intra | cross)"))?;
+        }
+        if let Some(v) = obj.get("backfill_scan_cap") {
+            let cap = v
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("'backfill_scan_cap' must be a positive integer"))?;
+            grid.backfill_scan_cap = Some(cap as usize);
+        }
+        if let Some(v) = obj.get("regret") {
+            grid.regret = v
+                .as_bool()
+                .ok_or_else(|| anyhow::anyhow!("'regret' must be a boolean"))?;
         }
         grid.validate()?;
         Ok(grid)
@@ -1132,6 +1170,40 @@ mod tests {
         assert!(
             GridSpec::from_json(&Json::parse(r#"{"gang_scope": "rack"}"#).unwrap()).is_err()
         );
+    }
+
+    #[test]
+    fn scan_cap_and_regret_round_trip_and_stay_invisible_when_off() {
+        // Defaults: neither key appears in the JSON — pre-oracle bytes.
+        let grid = GridSpec::default_grid();
+        let text = grid.to_json().to_string_pretty();
+        assert!(!text.contains("backfill_scan_cap"), "cap-free grid JSON grew a cap key");
+        assert!(!text.contains("regret"), "regret-free grid JSON grew a regret key");
+
+        // Set knobs round-trip exactly.
+        let mut grid = GridSpec::default_grid();
+        grid.backfill_scan_cap = Some(8);
+        grid.regret = true;
+        let text = grid.to_json().to_string_pretty();
+        assert!(text.contains("backfill_scan_cap"));
+        assert!(text.contains("regret"));
+        let back = GridSpec::from_json(&grid.to_json()).unwrap();
+        assert_eq!(back, grid);
+        // Partial specs override just these knobs.
+        let partial = Json::parse(r#"{"backfill_scan_cap": 4, "regret": true}"#).unwrap();
+        let g = GridSpec::from_json(&partial).unwrap();
+        assert_eq!(g.backfill_scan_cap, Some(4));
+        assert!(g.regret);
+        // Out-of-domain values are rejected by name.
+        let mut bad = GridSpec::default_grid();
+        bad.backfill_scan_cap = Some(0);
+        let err = bad.cells().unwrap_err().to_string();
+        assert!(err.contains("backfill_scan_cap"), "{err}");
+        assert!(GridSpec::from_json(
+            &Json::parse(r#"{"backfill_scan_cap": "all"}"#).unwrap()
+        )
+        .is_err());
+        assert!(GridSpec::from_json(&Json::parse(r#"{"regret": 1}"#).unwrap()).is_err());
     }
 
     #[test]

@@ -73,6 +73,9 @@ pub enum TraceKind {
     ProbeStart,
     /// The planner committed a probe region to a MIG partition.
     ProbeCommit,
+    /// A gang job bypassed the mig-miso probe loop (gangs place
+    /// straight onto whole GPUs; the probe region never sees them).
+    ProbeSkip,
     /// A GPU started draining/reconfiguring to a new partition.
     RepartitionBegin,
     /// A GPU finished reconfiguring and is serving again.
@@ -93,6 +96,7 @@ impl TraceKind {
             TraceKind::Migrate => "migrate",
             TraceKind::ProbeStart => "probe-start",
             TraceKind::ProbeCommit => "probe-commit",
+            TraceKind::ProbeSkip => "probe-skip",
             TraceKind::RepartitionBegin => "repartition-begin",
             TraceKind::RepartitionEnd => "repartition-end",
             TraceKind::Finish => "finish",

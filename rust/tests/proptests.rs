@@ -392,6 +392,115 @@ fn prop_partition_scoring_is_permutation_invariant() {
     );
 }
 
+/// The optimal-placement oracle never reports negative regret: its
+/// bound is a supremum over every placement any policy can reach, so
+/// no simulated cell may beat it — for any policy, mix, fleet size or
+/// seed (tolerance only for f64 subtraction noise).
+#[test]
+fn prop_oracle_regret_is_never_negative() {
+    use migsim::cluster::policy::PolicyKind;
+    use migsim::cluster::queue::QueueDiscipline;
+    use migsim::simgpu::interference::InterferenceModel;
+    use migsim::sweep::engine::{run_sweep, SweepOptions};
+    use migsim::sweep::grid::{GridSpec, MixSpec};
+
+    forall_ok(
+        0x04AC_1E00,
+        6,
+        |rng| {
+            let mix = match rng.below(3) {
+                0 => MixSpec::new("p-smalls", [1.0, 0.0, 0.0]),
+                1 => MixSpec::new("p-blend", [0.5, 0.3, 0.2]),
+                _ => MixSpec::new("p-heavy", [0.2, 0.3, 0.5]),
+            };
+            (mix, 1 + rng.below(2) as u32, 1 + rng.below(1000))
+        },
+        |(mix, gpus, seed)| -> Result<(), String> {
+            let grid = GridSpec {
+                policies: PolicyKind::ALL.to_vec(),
+                mixes: vec![mix.clone()],
+                gpus: vec![*gpus],
+                interarrivals_s: vec![1.0],
+                interference: vec![InterferenceModel::Roofline],
+                queues: vec![QueueDiscipline::Fifo],
+                seeds: vec![*seed],
+                jobs_per_cell: 8,
+                epochs: Some(1),
+                regret: true,
+                ..GridSpec::default_grid()
+            };
+            let cal = Calibration::paper();
+            let run = run_sweep(&grid, &cal, &SweepOptions::with_threads(1))
+                .map_err(|e| e.to_string())?;
+            for c in &run.cells {
+                let o = c
+                    .metrics
+                    .oracle
+                    .as_ref()
+                    .ok_or_else(|| format!("cell {} has no oracle digest", c.spec.index))?;
+                if o.regret < -1e-9 {
+                    return Err(format!(
+                        "cell {} ({} on {} GPUs, seed {seed}): negative regret {} \
+                         (bound {} < achieved {})",
+                        c.spec.index,
+                        c.spec.policy.name(),
+                        gpus,
+                        o.regret,
+                        o.oracle_images_per_s,
+                        c.metrics.images_per_s,
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The oracle's bound is permutation-invariant in the job list — it
+/// scores a workload *multiset*, so the order jobs arrive in must
+/// carry no information (mirror of the planner's permutation
+/// property; the sweep feeds it trace order, which is arbitrary).
+#[test]
+fn prop_oracle_bound_is_permutation_invariant() {
+    use migsim::coordinator::oracle::{Oracle, ORACLE_NODE_BUDGET};
+    use migsim::coordinator::planner::Job;
+    use migsim::simgpu::interference::InterferenceModel;
+    use migsim::workload::spec::WorkloadSize;
+
+    let cal = Calibration::paper();
+    forall_ok(
+        0x0B0B_CAFE,
+        30,
+        |rng| {
+            let n = 1 + rng.below(9) as usize;
+            let workloads: Vec<WorkloadSize> = (0..n)
+                .map(|_| WorkloadSize::ALL[rng.below(3) as usize])
+                .collect();
+            (workloads, rng.next_u64())
+        },
+        |(workloads, shuffle_seed)| -> Result<(), String> {
+            let oracle = Oracle::new(&cal, InterferenceModel::Roofline, 7);
+            let jobs: Vec<Job> = workloads.iter().map(|&workload| Job { workload }).collect();
+            let base = oracle.bound(&jobs, 2, 1, ORACLE_NODE_BUDGET);
+            let mut shuffler = Rng::new(*shuffle_seed);
+            let mut perm = jobs.clone();
+            for round in 0..3 {
+                for i in (1..perm.len()).rev() {
+                    let j = shuffler.below(i as u64 + 1) as usize;
+                    perm.swap(i, j);
+                }
+                let b = oracle.bound(&perm, 2, 1, ORACLE_NODE_BUDGET);
+                if b != base {
+                    return Err(format!(
+                        "round {round}: bound changed under permutation: {b:?} != {base:?}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// Wave-quantization sanity: step time is monotone non-increasing in
 /// SM count AND the marginal benefit shrinks (diminishing returns) for
 /// small-grid traces — the Fig 2 mechanism, property-tested.

@@ -57,6 +57,11 @@ fn random_grid(r: &mut Rng) -> GridSpec {
     // and v6 summary paths both stay covered.
     let gang_fracs = vec![[0.0, 0.0, 0.4][r.below(3) as usize]];
     let gang_scope = if r.below(2) == 0 { GangScope::Intra } else { GangScope::Cross };
+    // Scan cap on half the draws, the regret oracle on a quarter: the
+    // capped backfill walk and the schema-v7 oracle digests obey the
+    // same thread-count byte-identity contract as everything else.
+    let backfill_scan_cap = if r.below(2) == 0 { None } else { Some(1 + r.below(8) as usize) };
+    let regret = r.below(4) == 0;
     GridSpec {
         policies,
         mixes: vec![mix],
@@ -79,6 +84,8 @@ fn random_grid(r: &mut Rng) -> GridSpec {
         gang_replicas: 2 + r.below(2) as u32,
         gang_min_replicas: 1,
         gang_scope,
+        backfill_scan_cap,
+        regret,
     }
 }
 
@@ -156,6 +163,8 @@ fn serving_grids_stay_byte_identical_across_thread_counts() {
         gang_replicas: 2,
         gang_min_replicas: 1,
         gang_scope: GangScope::Intra,
+        backfill_scan_cap: None,
+        regret: false,
     };
     let one = run_sweep(&grid, &cal, &SweepOptions::with_threads(1)).unwrap();
     let text = summary_json_text(&grid, &one, &cal);

@@ -53,6 +53,11 @@ fn golden_grid() -> GridSpec {
         gang_replicas: 2,
         gang_min_replicas: 1,
         gang_scope: GangScope::Intra,
+        // Scan cap unset and the regret oracle off: a capless,
+        // regret-free grid must keep these exact v4 bytes (schema v7
+        // only exists when `regret` is on).
+        backfill_scan_cap: None,
+        regret: false,
     }
 }
 
@@ -97,6 +102,12 @@ fn two_cell_sweep_artifacts_match_the_committed_fixtures() {
     assert_eq!(parsed.get("schema_version").unwrap().as_u64(), Some(4));
     assert!(!summary.contains("gang"), "gang keys leaked into the gang-free fixture");
     assert!(!summary.contains("slo_"), "serving keys leaked into the training-only fixture");
+    assert!(!summary.contains("regret"), "oracle keys leaked into the regret-free fixture");
+    assert!(!summary.contains("oracle"), "oracle keys leaked into the regret-free fixture");
+    assert!(
+        !summary.contains("backfill_scan_cap"),
+        "scan-cap key leaked into the capless fixture"
+    );
 
     let dir = TempDir::new().expect("tempdir");
     let artifacts = write_sweep(dir.path(), &grid, &run, &cal).expect("write artifacts");
